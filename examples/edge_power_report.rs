@@ -1,0 +1,101 @@
+//! Edge-deployment power/FPS report: the Table-I style comparison of
+//! 3DGauCIM against the GSCore-class accelerator model and the Jetson AGX
+//! Orin roofline, on both scene classes.
+//!
+//! Run: `cargo run --release --example edge_power_report [-- --gaussians 50000]`
+
+use gaucim::baseline::{gscore, jetson, GscoreModel, JetsonModel};
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::App;
+use gaucim::culling::{GridConfig, GridPartition};
+use gaucim::energy::StageLatency;
+use gaucim::scene::synth::SceneKind;
+use gaucim::scene::DramLayout;
+use gaucim::util::cli::Args;
+use gaucim::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let n = args.get_usize("gaussians", 30_000);
+    let frames = args.get_usize("frames", 8);
+
+    println!("=== Edge power report (workload: {n} gaussians, {frames} frames) ===\n");
+    let mut rows = Vec::new();
+
+    for kind in [SceneKind::StaticLarge, SceneKind::DynamicLarge] {
+        let mut app = App::new(kind, n, 42);
+        app.config = app.config.clone().with_resolution(640, 360);
+        let cond = if kind == SceneKind::DynamicLarge {
+            ViewCondition::Average
+        } else {
+            ViewCondition::Static
+        };
+
+        let rep = app.run_sequence(cond, frames, frames.max(1));
+        println!("{}", rep.report.row());
+        println!(
+            "    PSNR {:.2} dB | SRAM hit {:.1}% | {:.1} visible splats/frame",
+            rep.psnr_db,
+            rep.sram_hit_rate * 100.0,
+            rep.avg_visible
+        );
+
+        // GSCore structural model on the identical scene + trajectory.
+        let grid_cfg = if app.scene.dynamic {
+            GridConfig::new(4)
+        } else {
+            GridConfig::static_scene(4)
+        };
+        let grid = GridPartition::build(&app.scene, grid_cfg);
+        let layout = DramLayout::build(&app.scene, &grid);
+        let model = GscoreModel::new(&app.scene, &layout, 640, 360);
+        let mut g_lat = StageLatency::default();
+        let mut g_energy = 0.0;
+        let traj = app.trajectory(cond, frames.min(4));
+        for (cam, t) in &traj {
+            let f = model.render_frame(cam, *t);
+            g_lat.add(&f.latency);
+            g_energy += f.energy.total_pj();
+        }
+        let g_lat = g_lat.scale(1.0 / traj.len() as f64);
+        let g_fps = 1e9 / g_lat.pipelined_ns();
+        let g_power = (g_energy / traj.len() as f64) * 1e-12 * g_fps + 0.12;
+        println!(
+            "  gscore-class model            {:>7.1} FPS {:>7.3} W  (published: {} FPS / {} W / {} mm² @28nm)",
+            g_fps,
+            g_power,
+            gscore::published::FPS_STATIC_LARGE,
+            gscore::published::POWER_W,
+            gscore::published::AREA_MM2
+        );
+
+        // Jetson Orin roofline on the same per-frame work.
+        let jf = JetsonModel::from_workload(
+            (rep.energy.dcim_pj / 0.033) as u64,
+            rep.avg_dram_bytes as u64,
+        );
+        println!(
+            "  jetson-orin roofline          {:>7.1} FPS {:>7.3} W  (published: {} FPS @ {} W)\n",
+            jf.fps,
+            jetson::published::POWER_W,
+            jetson::published::FPS_DYNAMIC,
+            jetson::published::POWER_W
+        );
+
+        rows.push(
+            Json::obj()
+                .set("scene", app.scene.name.as_str())
+                .set("gaucim_fps", rep.report.fps)
+                .set("gaucim_power_w", rep.report.power_w)
+                .set("gaucim_area_mm2", rep.report.area_mm2)
+                .set("gaucim_psnr_db", rep.psnr_db)
+                .set("gscore_fps", g_fps)
+                .set("jetson_fps", jf.fps),
+        );
+    }
+
+    std::fs::create_dir_all("reports")?;
+    std::fs::write("reports/edge_power_report.json", Json::Arr(rows).pretty())?;
+    println!("wrote reports/edge_power_report.json");
+    Ok(())
+}

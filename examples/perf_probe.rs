@@ -1,0 +1,20 @@
+fn main() {
+    use gaucim::coordinator::App;
+    use gaucim::scene::synth::SceneKind;
+    use gaucim::pipeline::FramePipeline;
+    use gaucim::camera::ViewCondition;
+    use std::time::Instant;
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(600_000);
+    let mut app = App::new(SceneKind::DynamicLarge, n, 42);
+    app.config = app.config.clone().with_resolution(1280, 720);
+    let traj = app.trajectory(ViewCondition::Average, 4);
+    let t0 = Instant::now();
+    let mut p = FramePipeline::new(&app.scene, app.config.clone());
+    eprintln!("build (grid+layout): {:.1} ms", t0.elapsed().as_secs_f64()*1e3);
+    for (i, (cam, t)) in traj.iter().enumerate() {
+        let t0 = Instant::now();
+        let r = p.render_frame(cam, *t, false);
+        eprintln!("frame {i}: {:.1} ms (visible {})", t0.elapsed().as_secs_f64()*1e3, r.n_visible);
+    }
+}

@@ -1,0 +1,39 @@
+//! Quickstart: synthesize a small static scene, render one frame through
+//! the full 3DGauCIM pipeline (DR-FC + ATG + AII-Sort + DD3D-Flow blending),
+//! score it against the exact reference renderer, and print the Table-I
+//! style report.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gaucim::coordinator::App;
+use gaucim::render::ppm;
+use gaucim::scene::synth::SceneKind;
+
+fn main() -> anyhow::Result<()> {
+    // 20 k Gaussians is laptop-friendly; pass the paper scale via the CLI
+    // (`gaucim render --gaussians 1000000`) when you have the minutes.
+    let mut app = App::new(SceneKind::StaticLarge, 20_000, 42);
+    app.config = app.config.clone().with_resolution(640, 360);
+
+    println!("scene: {} ({} gaussians)", app.scene.name, app.scene.len());
+
+    let (img, rep) = app.render_one(0.0);
+    ppm::save(&img, std::path::Path::new("quickstart.ppm"))?;
+
+    println!("wrote quickstart.ppm ({}x{})", img.width, img.height);
+    println!("{}", rep.report.row());
+    println!("PSNR vs exact reference: {:.2} dB", rep.psnr_db);
+    println!(
+        "visible splats: {}   DRAM: {:.2} MB   SRAM hit rate: {:.1}%",
+        rep.avg_visible,
+        rep.avg_dram_bytes / 1e6,
+        rep.sram_hit_rate * 100.0
+    );
+    println!(
+        "modeled latency: preprocess {:.3} ms | sort {:.3} ms | blend {:.3} ms",
+        rep.latency.preprocess_ns / 1e6,
+        rep.latency.sort_ns / 1e6,
+        rep.latency.blend_ns / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Trajectory explorer: quantifies how the posteriori-knowledge techniques
+//! (ATG phase 2, AII-Sort phase 2) respond to viewing conditions — the
+//! user-behavior analysis of paper §2.2 turned into an experiment.
+//!
+//! For static / average / extreme head movement it reports per-frame ATG
+//! regroup work, deformation flags, sort cycles, and SRAM hit rate, showing
+//! the frame-to-frame-correlation exploitation decay as motion grows.
+//!
+//! Run: `cargo run --release --example trajectory_explorer`
+
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::App;
+use gaucim::pipeline::FramePipeline;
+use gaucim::scene::synth::SceneKind;
+use gaucim::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let n = args.get_usize("gaussians", 30_000);
+    let frames = args.get_usize("frames", 12);
+
+    let mut app = App::new(SceneKind::DynamicLarge, n, 42);
+    app.config = app.config.clone().with_resolution(640, 360);
+    println!(
+        "trajectory explorer: {} gaussians, {frames} frames per condition\n",
+        app.scene.len()
+    );
+    println!(
+        "{:<10} {:>12} {:>10} {:>12} {:>10} {:>9}",
+        "condition", "atg ops/frm", "flags/frm", "sort cyc/frm", "sram hit", "minmax"
+    );
+
+    for cond in [
+        ViewCondition::Static,
+        ViewCondition::Average,
+        ViewCondition::Extreme,
+    ] {
+        let seq = app.trajectory(cond, frames);
+        let mut pipeline = FramePipeline::new(&app.scene, app.config.clone());
+        let mut atg_ops = 0u64;
+        let mut flags = 0u64;
+        let mut sort_cycles = 0u64;
+        let mut minmax = 0u64;
+        let mut hits = 0u64;
+        let mut lookups = 0u64;
+        // Skip frame 0 (phase 1) in the averages: steady-state is the story.
+        let mut steady_frames = 0u64;
+        for (i, (cam, t)) in seq.iter().enumerate() {
+            let r = pipeline.render_frame(cam, *t, false);
+            if i == 0 {
+                continue;
+            }
+            steady_frames += 1;
+            atg_ops += r.atg_ops;
+            flags += r.atg_flags;
+            sort_cycles += r.sort.cycles;
+            minmax += r.sort.minmax_scanned;
+            hits += r.traffic.blend_sram.hits;
+            lookups += r.traffic.blend_sram.lookups;
+        }
+        let d = steady_frames.max(1);
+        println!(
+            "{:<10} {:>12} {:>10} {:>12} {:>9.1}% {:>9}",
+            cond.label(),
+            atg_ops / d,
+            flags / d,
+            sort_cycles / d,
+            100.0 * hits as f64 / lookups.max(1) as f64,
+            minmax / d
+        );
+    }
+
+    println!(
+        "\nReading: ATG work and deformation flags grow with head-movement \
+         speed;\nAII-Sort's min/max scans stay at 0 after frame 0 under all \
+         conditions\n(stale-boundary routing degrades balance, never \
+         correctness)."
+    );
+    Ok(())
+}

@@ -1,0 +1,104 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO **text** artifacts for the rust PJRT
+runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published ``xla`` crate binds) rejects; the text parser reassigns ids.
+See /opt/xla-example/gen_hlo.py.
+
+Run via ``make artifacts`` (no-op when artifacts are newer than sources):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import exp_lut
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_preprocess() -> str:
+    k = model.PREPROCESS_CHUNK
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.preprocess_chunk).lower(
+        spec((k, 3), f32),   # mu
+        spec((k, 4), f32),   # rot
+        spec((k, 3), f32),   # scale
+        spec((k,), f32),     # mu_t
+        spec((k,), f32),     # lam
+        spec((k, 3), f32),   # vel
+        spec((k,), f32),     # opa
+        spec((k, 27), f32),  # sh
+        spec((4, 4), f32),   # view
+        spec((4,), f32),     # intr
+        spec((1,), f32),     # t
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_blend() -> str:
+    g = model.BLEND_MAX_G
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.blend_tile).lower(
+        spec((g, 2), f32),
+        spec((g, 3), f32),
+        spec((g, 3), f32),
+        spec((g,), f32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_exp_lut() -> str:
+    n = model.EXP_LUT_N
+    lowered = jax.jit(exp_lut.exp2_lut).lower(
+        jax.ShapeDtypeStruct((n,), jnp.float32)
+    )
+    return to_hlo_text(lowered)
+
+
+ARTIFACTS = {
+    "preprocess.hlo.txt": lower_preprocess,
+    "blend.hlo.txt": lower_blend,
+    "exp_lut.hlo.txt": lower_exp_lut,
+}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", choices=sorted(ARTIFACTS), default=None,
+        help="lower a single artifact",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, fn in ARTIFACTS.items():
+        if args.only and name != args.only:
+            continue
+        text = fn()
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: 16x16-tile alpha blending (paper eqs. 9-10).
+
+Hardware adaptation (DESIGN.md §6): the paper's DCIM evaluates one merged
+exponent per (pixel, splat) pair in gain-cell arrays and accumulates the
+transmittance in NMC units. On the TPU-shaped Pallas model we express the
+same computation as dense [G, P] matrix work resident in VMEM:
+
+* the merged exponent for all 256 pixels x G splats at once (outer-product
+  structured quadratic form -> VPU elementwise);
+* the transmittance as an exclusive cumulative product along the depth axis
+  (the NMC serial accumulation, vectorized as a scan);
+* the weighted color accumulation as a [P, G] x [G, 3] matmul (MXU work).
+
+One tile's splat parameters (G=128 x 9 f32 ~ 4.5 KB) plus the [G, P] alpha
+matrix (128 x 256 x 4 B = 128 KB) fit comfortably in VMEM, mirroring the
+paper's depth-segmented SRAM sizing.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU performance is estimated in DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_PX = ref.TILE_PX
+N_PIX = TILE_PX * TILE_PX
+
+
+def _blend_kernel(means_ref, conics_ref, colors_ref, alphas_ref, out_ref):
+    """Pallas kernel body: blends all splats into the tile's pixels."""
+    means = means_ref[...]  # [G, 2]
+    conics = conics_ref[...]  # [G, 3]
+    colors = colors_ref[...]  # [G, 3]
+    alphas = alphas_ref[...]  # [G]
+
+    # Pixel-center coordinates of the 16x16 tile, flattened row-major.
+    pix = jax.lax.iota(jnp.float32, N_PIX)
+    px = jnp.mod(pix, TILE_PX) + 0.5  # [P]
+    py = jnp.floor(pix / TILE_PX) + 0.5
+
+    # Merged exponent for every (splat, pixel) pair.
+    dx = px[None, :] - means[:, 0:1]  # [G, P]
+    dy = py[None, :] - means[:, 1:2]
+    e = -0.5 * (
+        conics[:, 0:1] * dx * dx
+        + 2.0 * conics[:, 1:2] * dx * dy
+        + conics[:, 2:3] * dy * dy
+    )
+    alpha = jnp.minimum(alphas[:, None] * jnp.exp(e), ref.ALPHA_CLAMP)
+    alpha = jnp.where(e < ref.EXP_CUTOFF, 0.0, alpha)
+    alpha = jnp.where(alpha < ref.ALPHA_CUTOFF, 0.0, alpha)
+
+    # Exclusive transmittance along the (depth-sorted) splat axis.
+    trans = jnp.cumprod(1.0 - alpha, axis=0)
+    trans = jnp.concatenate([jnp.ones_like(trans[:1]), trans[:-1]], axis=0)
+    w = alpha * trans  # [G, P]
+
+    # Weighted color accumulation: [P, G] @ [G, 3] — MXU-shaped.
+    out_ref[...] = jnp.dot(w.T, colors)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def blend_tile(means, conics, colors, alphas):
+    """Blend one tile. Shapes: means[G,2] conics[G,3] colors[G,3] alphas[G]
+    (alpha 0 = padding; splats depth-ordered front-first).
+    Returns rgb[N_PIX, 3]."""
+    g = means.shape[0]
+    return pl.pallas_call(
+        _blend_kernel,
+        out_shape=jax.ShapeDtypeStruct((N_PIX, 3), jnp.float32),
+        interpret=True,
+    )(
+        means.astype(jnp.float32).reshape(g, 2),
+        conics.astype(jnp.float32).reshape(g, 3),
+        colors.astype(jnp.float32).reshape(g, 3),
+        alphas.astype(jnp.float32).reshape(g),
+    )

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: the DD3D-Flow base-2 exponential (paper §3.4).
+
+The DCIM dataflow in kernel form — phase 2 of DD3D-Flow (phase 1, the
+e^x -> 2^(x/ln2) base conversion, is fused offline into the parameters):
+
+1. **SIF decouple**: x = int + frac, frac in [0, 1) (two's-complement
+   handling of negative x falls out of the floor);
+2. **cascaded LUT**: the 12-bit fraction splits into four 3-bit segments;
+   each indexes an 8-entry FP16 table (2^(s*2^-3k)) and the four factors
+   multiply in cascade — exactly the paper's "12-bit LUT divided into four
+   segments, each requiring 8 LUT values ... four cascaded DCIM stages";
+3. `2^int` is an exponent shift (exact).
+
+In the Pallas/TPU mapping the four tables are 32 VMEM words; the gathers are
+the in-memory-LUT analogue. FP16 casts between stages reproduce the DCIM
+arrays' storage precision, so this kernel is bit-comparable to the rust
+`dcim::exp_lut` implementation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+FRAC_BITS = 12
+SEGMENTS = 4
+BPS = FRAC_BITS // SEGMENTS  # 3 bits per segment
+
+
+def _tables():
+    """The four 8-entry FP16 LUTs, as f32 (FP16-quantized values)."""
+    tabs = []
+    for k in range(SEGMENTS):
+        weight = 2.0 ** (-BPS * (k + 1))
+        tabs.append(np.float16(2.0 ** (np.arange(8) * weight)).astype(np.float32))
+    return np.stack(tabs)  # [4, 8]
+
+
+_TABLES = _tables()
+
+
+def _exp2_kernel(x_ref, tables_ref, out_ref):
+    x = x_ref[...]
+    i = jnp.floor(x)
+    frac = x - i
+    scale = float(1 << FRAC_BITS)
+    q = jnp.clip((frac * scale).astype(jnp.int32), 0, (1 << FRAC_BITS) - 1)
+
+    tables = tables_ref[...]
+    acc = jnp.ones_like(x)
+    for k in range(SEGMENTS):
+        shift = FRAC_BITS - BPS * (k + 1)
+        idx = (q >> shift) & ((1 << BPS) - 1)
+        stage = jnp.take(tables[k], idx)
+        # FP16 intermediate product — the DCIM array storage precision.
+        acc = (acc * stage).astype(jnp.float16).astype(jnp.float32)
+    out_ref[...] = acc * jnp.exp2(i)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def exp2_lut(x):
+    """Vector 2^x through the DD3D-Flow LUT path. x: [N] f32 -> [N] f32."""
+    n = x.shape[0]
+    return pl.pallas_call(
+        _exp2_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), jnp.asarray(_TABLES))

@@ -1,0 +1,194 @@
+"""Pure-jnp oracles for the Pallas kernels and the preprocess math.
+
+These are the CORE correctness references: every kernel in this package and
+the rust-side projection/blending are validated against these functions
+(pytest here, parity tests on the rust side through the AOT artifacts).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# Shared constants (must match rust/src/tiles/intersect.rs).
+TILE_PX = 16
+ALPHA_CUTOFF = 1.0 / 255.0
+ALPHA_CLAMP = 0.999
+COV2D_DILATION = 0.3
+# Exponent cutoff shared with the rust renderers (reference.rs EXP_CUTOFF).
+EXP_CUTOFF = -14.0
+
+
+def exp2_exact(x):
+    """Exact base-2 exponential (the oracle for the LUT kernel)."""
+    return jnp.exp2(x)
+
+
+def exp2_lut_ref(x, frac_bits=12):
+    """Bit-faithful model of the DD3D-Flow exp2 (paper §3.4 / Fig. 8(a)).
+
+    SIF decouple, then a 4-segment cascade of 8-entry FP16 LUTs with FP16
+    intermediate products — mirrors rust ``dcim::exp_lut`` exactly.
+    """
+    segments = 4
+    bps = frac_bits // segments
+    x = jnp.asarray(x, jnp.float32)
+    i = jnp.floor(x)
+    frac = x - i
+    scale = float(1 << frac_bits)
+    q = jnp.clip((frac * scale).astype(jnp.int32), 0, (1 << frac_bits) - 1)
+
+    acc = jnp.ones_like(x)
+    for k in range(segments):
+        shift = frac_bits - bps * (k + 1)
+        idx = (q >> shift) & ((1 << bps) - 1)
+        weight = 2.0 ** (-(bps) * (k + 1))
+        # 8-entry table, FP16-quantized entries.
+        table = np.float16(2.0 ** (np.arange(8) * weight)).astype(np.float32)
+        acc = (acc * jnp.asarray(table)[jnp.clip(idx, 0, 7)]).astype(jnp.float16).astype(jnp.float32)
+    return acc * jnp.exp2(i)
+
+
+def blend_tile_ref(means, conics, colors, alphas):
+    """Cumulative front-to-back tile blend (paper eqs. 9–10), no early exit.
+
+    Args:
+      means:  [G, 2] splat centers relative to the tile origin (pixels).
+      conics: [G, 3] inverse-covariance coefficients (a, b, c).
+      colors: [G, 3] RGB.
+      alphas: [G] base opacity (0 = padding); splats are depth-ordered.
+
+    Returns: [TILE_PX * TILE_PX, 3] RGB rows (row-major pixels).
+    """
+    ys, xs = jnp.meshgrid(
+        jnp.arange(TILE_PX, dtype=jnp.float32) + 0.5,
+        jnp.arange(TILE_PX, dtype=jnp.float32) + 0.5,
+        indexing="ij",
+    )
+    px = xs.reshape(-1)  # [P]
+    py = ys.reshape(-1)
+
+    dx = px[None, :] - means[:, 0:1]  # [G, P]
+    dy = py[None, :] - means[:, 1:2]
+    e = -0.5 * (
+        conics[:, 0:1] * dx * dx
+        + 2.0 * conics[:, 1:2] * dx * dy
+        + conics[:, 2:3] * dy * dy
+    )
+    alpha = jnp.minimum(alphas[:, None] * jnp.exp(e), ALPHA_CLAMP)
+    alpha = jnp.where(e < EXP_CUTOFF, 0.0, alpha)
+    alpha = jnp.where(alpha < ALPHA_CUTOFF, 0.0, alpha)  # [G, P]
+
+    # Transmittance before each splat: exclusive cumprod along G.
+    trans = jnp.cumprod(1.0 - alpha, axis=0)
+    trans = jnp.concatenate([jnp.ones_like(trans[:1]), trans[:-1]], axis=0)
+    w = alpha * trans  # [G, P]
+    rgb = jnp.einsum("gp,gc->pc", w, colors)
+    return rgb
+
+
+def quat_to_mat(q):
+    """Unit quaternions (w,x,y,z) [N,4] -> rotation matrices [N,3,3]."""
+    w, x, y, z = q[:, 0], q[:, 1], q[:, 2], q[:, 3]
+    x2, y2, z2 = x + x, y + y, z + z
+    xx, yy, zz = x * x2, y * y2, z * z2
+    xy, xz, yz = x * y2, x * z2, y * z2
+    wx, wy, wz = w * x2, w * y2, w * z2
+    m = jnp.stack(
+        [
+            1.0 - (yy + zz), xy - wz, xz + wy,
+            xy + wz, 1.0 - (xx + zz), yz - wx,
+            xz - wy, yz + wx, 1.0 - (xx + yy),
+        ],
+        axis=-1,
+    )
+    return m.reshape(-1, 3, 3)
+
+
+def sh_basis(dirs):
+    """Real SH basis (degree 2) for unit directions [N,3] -> [N,9].
+
+    Must match rust scene::gaussian::sh_basis.
+    """
+    C0 = 0.2820948
+    C1 = 0.4886025
+    C2 = jnp.asarray([1.0925484, 1.0925484, 0.31539157, 1.0925484, 0.5462742])
+    x, y, z = dirs[:, 0], dirs[:, 1], dirs[:, 2]
+    return jnp.stack(
+        [
+            jnp.full_like(x, C0),
+            -C1 * y,
+            C1 * z,
+            -C1 * x,
+            C2[0] * x * y,
+            C2[1] * y * z,
+            C2[2] * (2.0 * z * z - x * x - y * y),
+            C2[3] * x * z,
+            C2[4] * (x * x - y * y),
+        ],
+        axis=-1,
+    )
+
+
+def preprocess_ref(mu, rot, scale, mu_t, lam, vel, opa, sh, view, intr, t):
+    """Oracle for the L2 preprocess graph (paper eqs. 4–8 + SH color).
+
+    Shapes: mu[K,3] rot[K,4] scale[K,3] mu_t[K] lam[K] vel[K,3] opa[K]
+    sh[K,27] view[4,4] intr[4]=(fx,fy,cx,cy) t scalar.
+    Returns (mean2[K,2], conic[K,3], depth[K], alpha[K], color[K,3]).
+    alpha = 0 flags culled entries (temporal cutoff / behind near plane /
+    sub-cutoff opacity).
+    """
+    fx, fy, cx, cy = intr[0], intr[1], intr[2], intr[3]
+    near = 0.1
+
+    # Temporal slice (eqs. 4–5). λ = 0 ⇒ static (weight 1).
+    dt = t - mu_t
+    w_t = jnp.where(lam > 0.0, jnp.exp(-0.5 * lam * dt * dt), 1.0)
+    alpha0 = opa * w_t
+    mean3 = mu + vel * jnp.where(lam > 0.0, dt, 0.0)[:, None]
+
+    # World -> camera.
+    r_view = view[:3, :3]
+    t_view = view[:3, 3]
+    pc = mean3 @ r_view.T + t_view  # [K,3]
+    depth = pc[:, 2]
+
+    # Conditional 3-D covariance Σ = R diag(s²) Rᵀ (eq. 6).
+    rmat = quat_to_mat(rot)
+    s2 = scale * scale
+    cov3 = jnp.einsum("nij,nj,nkj->nik", rmat, s2, rmat)
+
+    # Projection Jacobian (eq. 8).
+    zc = jnp.maximum(pc[:, 2], 1e-6)
+    zeros = jnp.zeros_like(zc)
+    j = jnp.stack(
+        [
+            fx / zc, zeros, -fx * pc[:, 0] / (zc * zc),
+            zeros, fy / zc, -fy * pc[:, 1] / (zc * zc),
+            zeros, zeros, zeros,
+        ],
+        axis=-1,
+    ).reshape(-1, 3, 3)
+    jw = jnp.einsum("nij,jk->nik", j, r_view)
+    cov2_full = jnp.einsum("nij,njk,nlk->nil", jw, cov3, jw)
+    a = jnp.maximum(cov2_full[:, 0, 0] + COV2D_DILATION, 1e-6)
+    b = cov2_full[:, 0, 1]
+    c = jnp.maximum(cov2_full[:, 1, 1] + COV2D_DILATION, 1e-6)
+    det = a * c - b * b
+    safe_det = jnp.where(det > 0.0, det, 1.0)
+    conic = jnp.stack([c / safe_det, -b / safe_det, a / safe_det], axis=-1)
+
+    mean2 = jnp.stack(
+        [fx * pc[:, 0] / zc + cx, fy * pc[:, 1] / zc + cy], axis=-1
+    )
+
+    # View-dependent color from SH (matches rust Gaussian4D::sh_color).
+    cam_pos = -(r_view.T @ t_view)
+    dirs = mean3 - cam_pos[None, :]
+    dirs = dirs / jnp.maximum(jnp.linalg.norm(dirs, axis=-1, keepdims=True), 1e-9)
+    basis = sh_basis(dirs)  # [K,9]
+    color = jnp.einsum("nk,nkc->nc", basis, sh.reshape(-1, 9, 3)) + 0.5
+    color = jnp.clip(color, 0.0, 1.0)
+
+    valid = (depth >= near) & (det > 0.0) & (alpha0 >= ALPHA_CUTOFF)
+    alpha = jnp.where(valid, alpha0, 0.0)
+    return mean2, conic, depth, alpha, color

@@ -1,0 +1,62 @@
+"""L2 JAX model: the 4DGS preprocessing graph (paper eqs. 4-8) and the tile
+blend entry point that calls the L1 Pallas kernel.
+
+These are the functions `aot.py` lowers to HLO text; the rust runtime
+(`rust/src/runtime/`) loads and executes them via PJRT on the frame path.
+The math here must stay in lock-step with:
+
+* `kernels/ref.py` — the pure-jnp oracle (pytest checks);
+* `rust/src/tiles/intersect.rs` — the rust projection (parity tests through
+  the artifacts).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import blend as blend_kernel
+from .kernels import ref
+
+# Fixed AOT shapes (must match rust/src/runtime/mod.rs).
+PREPROCESS_CHUNK = 1024
+BLEND_MAX_G = 128
+EXP_LUT_N = 4096
+
+
+def preprocess_chunk(mu, rot, scale, mu_t, lam, vel, opa, sh, view, intr, t):
+    """Temporal slice + projection + SH color for a padded Gaussian chunk.
+
+    Inputs (fixed shapes, K = PREPROCESS_CHUNK):
+      mu[K,3] rot[K,4] scale[K,3] mu_t[K] lam[K] vel[K,3] opa[K] sh[K,27]
+      view[4,4] (world->camera, row-major) intr[4] = (fx, fy, cx, cy) t[1].
+
+    Outputs: (mean2[K,2], conic[K,3], depth[K], alpha[K], color[K,3]);
+    alpha = 0 marks culled/padding entries.
+
+    The body IS the oracle — L2 owns this math; `ref.preprocess_ref` and this
+    function are intentionally the same code path so the AOT artifact is the
+    oracle lowered (divergence is impossible by construction). The rust
+    projection is the independent implementation both are tested against.
+    """
+    return ref.preprocess_ref(
+        mu, rot, scale, mu_t, lam, vel, opa, sh, view, intr, t[0]
+    )
+
+
+def blend_tile(means, conics, colors, alphas):
+    """Blend one 16x16 tile over up to BLEND_MAX_G depth-sorted splats.
+
+    Thin L2 wrapper over the L1 Pallas kernel so the lowered HLO contains
+    the kernel's computation.
+    """
+    return blend_kernel.blend_tile(means, conics, colors, alphas)
+
+
+def render_tiles(splat_args, tile_origins):
+    """Demo composition: blend several tiles by shifting splat means to each
+    tile origin. Used by tests to check multi-tile consistency; the real
+    multi-tile loop lives in the rust coordinator."""
+    means, conics, colors, alphas = splat_args
+    outs = []
+    for ox, oy in tile_origins:
+        shifted = means - jnp.asarray([ox, oy], jnp.float32)[None, :]
+        outs.append(blend_tile(shifted, conics, colors, alphas))
+    return jnp.stack(outs)

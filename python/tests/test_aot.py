@@ -1,0 +1,46 @@
+"""AOT lowering: artifacts parse as HLO text with the pinned shapes."""
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return {name: fn() for name, fn in aot.ARTIFACTS.items()}
+
+
+def test_all_artifacts_lower(lowered):
+    assert set(lowered) == {
+        "preprocess.hlo.txt",
+        "blend.hlo.txt",
+        "exp_lut.hlo.txt",
+    }
+    for name, text in lowered.items():
+        assert text.startswith("HloModule"), name
+        assert len(text) > 1000, f"{name} suspiciously small"
+
+
+def test_preprocess_shapes_pinned(lowered):
+    text = lowered["preprocess.hlo.txt"]
+    k = model.PREPROCESS_CHUNK
+    assert f"f32[{k},3]" in text  # mu / scale / vel / colors
+    assert f"f32[{k},27]" in text  # sh
+    assert "f32[4,4]" in text  # view
+
+
+def test_blend_shapes_pinned(lowered):
+    text = lowered["blend.hlo.txt"]
+    g = model.BLEND_MAX_G
+    assert f"f32[{g},2]" in text
+    assert f"f32[256,3]" in text  # output tile
+
+
+def test_exp_lut_shape_pinned(lowered):
+    assert f"f32[{model.EXP_LUT_N}]" in lowered["exp_lut.hlo.txt"]
+
+
+def test_deterministic_lowering():
+    a = aot.lower_exp_lut()
+    b = aot.lower_exp_lut()
+    assert a == b

@@ -1,0 +1,81 @@
+"""L1 Pallas blend kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import blend, ref
+
+
+def random_splats(rng, g):
+    means = rng.uniform(-4.0, 20.0, size=(g, 2)).astype(np.float32)
+    a = rng.uniform(0.01, 0.5, size=g).astype(np.float32)
+    c = rng.uniform(0.01, 0.5, size=g).astype(np.float32)
+    b = (rng.uniform(-0.8, 0.8, size=g) * np.sqrt(a * c)).astype(np.float32)
+    conics = np.stack([a, b, c], axis=-1)
+    colors = rng.uniform(0.0, 1.0, size=(g, 3)).astype(np.float32)
+    alphas = rng.uniform(0.05, 0.95, size=g).astype(np.float32)
+    return means, conics, colors, alphas
+
+
+def test_matches_reference():
+    rng = np.random.default_rng(7)
+    args = random_splats(rng, 64)
+    got = blend.blend_tile(*map(jnp.asarray, args))
+    expect = ref.blend_tile_ref(*map(jnp.asarray, args))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=1e-5, rtol=1e-5)
+
+
+def test_empty_tile_black():
+    g = 16
+    z2 = jnp.zeros((g, 2))
+    z3 = jnp.zeros((g, 3))
+    z1 = jnp.zeros((g,))
+    out = blend.blend_tile(z2, z3 + 0.5, z3 + 0.5, z1)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_padding_is_inert():
+    rng = np.random.default_rng(3)
+    means, conics, colors, alphas = random_splats(rng, 32)
+    # Same splats padded to 64 with alpha=0 garbage.
+    pad_means = np.concatenate([means, rng.uniform(size=(32, 2)).astype(np.float32)])
+    pad_conics = np.concatenate([conics, np.abs(rng.uniform(size=(32, 3))).astype(np.float32)])
+    pad_colors = np.concatenate([colors, rng.uniform(size=(32, 3)).astype(np.float32)])
+    pad_alphas = np.concatenate([alphas, np.zeros(32, np.float32)])
+    a = blend.blend_tile(*map(jnp.asarray, (means, conics, colors, alphas)))
+    b = blend.blend_tile(*map(jnp.asarray, (pad_means, pad_conics, pad_colors, pad_alphas)))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_front_to_back_order_matters():
+    # Two coincident opaque splats: the first one must dominate.
+    means = jnp.asarray([[8.0, 8.0], [8.0, 8.0]], jnp.float32)
+    conics = jnp.asarray([[0.5, 0.0, 0.5]] * 2, jnp.float32)
+    colors = jnp.asarray([[1.0, 0.0, 0.0], [0.0, 1.0, 0.0]], jnp.float32)
+    alphas = jnp.asarray([0.9, 0.9], jnp.float32)
+    out = np.asarray(blend.blend_tile(means, conics, colors, alphas))
+    center = out[8 * ref.TILE_PX + 8]
+    assert center[0] > 4.0 * center[1], center
+
+
+def test_output_bounded():
+    rng = np.random.default_rng(11)
+    args = random_splats(rng, 128)
+    out = np.asarray(blend.blend_tile(*map(jnp.asarray, args)))
+    assert out.shape == (ref.TILE_PX * ref.TILE_PX, 3)
+    assert (out >= -1e-6).all() and (out <= 1.0 + 1e-5).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    g=st.sampled_from([1, 2, 8, 33, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_matches_reference(g, seed):
+    rng = np.random.default_rng(seed)
+    args = random_splats(rng, g)
+    got = blend.blend_tile(*map(jnp.asarray, args))
+    expect = ref.blend_tile_ref(*map(jnp.asarray, args))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), atol=2e-5, rtol=1e-4)

@@ -1,0 +1,62 @@
+"""L1 exp2-LUT kernel vs oracles: bit-level vs ref model, tolerance vs exact."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import exp_lut, ref
+
+
+def test_matches_bitfaithful_reference():
+    x = jnp.linspace(-30.0, 10.0, 4096)
+    got = exp_lut.exp2_lut(x)
+    expect = ref.exp2_lut_ref(x, frac_bits=12)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_close_to_exact_on_blend_range():
+    # Blend exponents live in ~[-30, 0]; the 12-bit claim (paper §3.4).
+    x = jnp.linspace(-30.0, 0.0, 10_000)
+    got = np.asarray(exp_lut.exp2_lut(x))
+    exact = np.exp2(np.asarray(x, dtype=np.float64))
+    rel = np.abs(got - exact) / np.maximum(exact, 1e-300)
+    assert rel.max() < 4e-3, f"max rel error {rel.max()}"
+
+
+def test_integer_exponents_near_exact():
+    x = jnp.arange(-20.0, 21.0)
+    got = np.asarray(exp_lut.exp2_lut(jnp.pad(x, (0, 4096 - x.shape[0]))))[: x.shape[0]]
+    exact = np.exp2(np.asarray(x))
+    np.testing.assert_allclose(got, exact, rtol=1e-3)
+
+
+def test_monotonic_nondecreasing():
+    x = jnp.linspace(-12.0, 4.0, 4096)
+    got = np.asarray(exp_lut.exp2_lut(x))
+    assert (np.diff(got) >= -1e-6 * got[:-1]).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(
+        st.floats(min_value=-40.0, max_value=15.0, width=32),
+        min_size=1,
+        max_size=64,
+    )
+)
+def test_hypothesis_relative_error(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    got = np.asarray(exp_lut.exp2_lut(x), dtype=np.float64)
+    exact = np.exp2(np.asarray(x, dtype=np.float64))
+    ok = np.abs(got - exact) <= 4e-3 * exact + 1e-300
+    assert ok.all(), f"failures at {np.asarray(x)[~ok]}"
+
+
+@pytest.mark.parametrize("n", [1, 7, 256, 4096])
+def test_shapes(n):
+    x = jnp.zeros((n,), jnp.float32)
+    out = exp_lut.exp2_lut(x)
+    assert out.shape == (n,)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-3)

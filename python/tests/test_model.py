@@ -1,0 +1,160 @@
+"""L2 preprocess graph: shape, culling-flag, and geometry checks."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+K = 32  # small chunk for tests (graph is shape-generic; AOT pins 1024)
+
+
+def look_at_view(eye, target, up=(0.0, 1.0, 0.0)):
+    """Row-major world->camera matrix, matching rust Camera::set_pose."""
+    eye = np.asarray(eye, np.float32)
+    target = np.asarray(target, np.float32)
+    up = np.asarray(up, np.float32)
+    f = target - eye
+    f = f / np.linalg.norm(f)
+    r = np.cross(f, up)
+    r = r / np.linalg.norm(r)
+    u = np.cross(r, f)
+    view = np.eye(4, dtype=np.float32)
+    view[0, :3], view[0, 3] = r, -r @ eye
+    view[1, :3], view[1, 3] = u, -u @ eye
+    view[2, :3], view[2, 3] = f, -f @ eye
+    return view
+
+
+def default_inputs(rng, k=K):
+    mu = rng.uniform(-10, 10, size=(k, 3)).astype(np.float32)
+    rot = rng.normal(size=(k, 4)).astype(np.float32)
+    rot /= np.linalg.norm(rot, axis=1, keepdims=True)
+    scale = rng.uniform(0.05, 0.5, size=(k, 3)).astype(np.float32)
+    mu_t = rng.uniform(0, 1, size=k).astype(np.float32)
+    lam = np.zeros(k, np.float32)  # static by default
+    vel = np.zeros((k, 3), np.float32)
+    opa = rng.uniform(0.3, 1.0, size=k).astype(np.float32)
+    sh = np.zeros((k, 27), np.float32)
+    sh[:, 0:3] = rng.uniform(-0.5, 0.5, size=(k, 3)) / 0.2820948
+    view = look_at_view([0, 0, 25], [0, 0, 0])
+    intr = np.asarray([100.0, 100.0, 64.0, 36.0], np.float32)
+    t = np.asarray([0.5], np.float32)
+    return [mu, rot, scale, mu_t, lam, vel, opa, sh, view, intr, t]
+
+
+def run(args):
+    return [np.asarray(o) for o in model.preprocess_chunk(*map(jnp.asarray, args))]
+
+
+def test_output_shapes():
+    rng = np.random.default_rng(1)
+    mean2, conic, depth, alpha, color = run(default_inputs(rng))
+    assert mean2.shape == (K, 2)
+    assert conic.shape == (K, 3)
+    assert depth.shape == (K,)
+    assert alpha.shape == (K,)
+    assert color.shape == (K, 3)
+
+
+def test_center_gaussian_projects_to_principal_point():
+    rng = np.random.default_rng(2)
+    args = default_inputs(rng)
+    args[0][0] = [0.0, 0.0, 0.0]
+    mean2, _, depth, alpha, _ = run(args)
+    assert abs(mean2[0, 0] - 64.0) < 1e-3
+    assert abs(mean2[0, 1] - 36.0) < 1e-3
+    assert abs(depth[0] - 25.0) < 1e-3
+    assert alpha[0] > 0
+
+
+def test_behind_camera_culled():
+    rng = np.random.default_rng(3)
+    args = default_inputs(rng)
+    args[0][0] = [0.0, 0.0, 30.0]  # behind the eye at z=25 looking at -z
+    _, _, _, alpha, _ = run(args)
+    assert alpha[0] == 0.0
+
+
+def test_temporal_slicing_weight_and_motion():
+    rng = np.random.default_rng(4)
+    args = default_inputs(rng)
+    # Dynamic gaussian: sigma_t = 0.1 -> lam = 100; velocity +x.
+    args[0][0] = [0.0, 0.0, 0.0]
+    args[3][0] = 0.3   # mu_t
+    args[4][0] = 100.0  # lam
+    args[5][0] = [5.0, 0.0, 0.0]
+    args[6][0] = 0.9   # opacity
+    mean2, _, _, alpha, _ = run(args)
+    # t = 0.5: dt = 0.2 -> weight exp(-0.5*100*0.04) = exp(-2).
+    expect_alpha = 0.9 * np.exp(-2.0)
+    np.testing.assert_allclose(alpha[0], expect_alpha, rtol=1e-4)
+    # Mean moved +x by 5*0.2 = 1 world unit -> +fx*1/25 = 4 px.
+    np.testing.assert_allclose(mean2[0, 0], 64.0 + 4.0, rtol=1e-3)
+
+
+def test_temporally_dead_culled():
+    rng = np.random.default_rng(5)
+    args = default_inputs(rng)
+    args[3][0] = 0.0
+    args[4][0] = 1.0e4  # sigma_t = 0.01, t = 0.5 -> 50 sigma away
+    _, _, _, alpha, _ = run(args)
+    assert alpha[0] == 0.0
+
+
+def test_conic_is_inverse_of_cov2d():
+    rng = np.random.default_rng(6)
+    args = default_inputs(rng)
+    _, conic, _, alpha, _ = run(args)
+    # conic = [A, B, C] with [A B; B C] = inv(cov2d): positive definite.
+    live = alpha > 0
+    a, b, c = conic[live, 0], conic[live, 1], conic[live, 2]
+    assert (a > 0).all() and (c > 0).all()
+    assert (a * c - b * b > 0).all()
+
+
+def test_dc_only_sh_color_matches():
+    rng = np.random.default_rng(7)
+    args = default_inputs(rng)
+    base = args[7][:, 0:3] * 0.2820948 + 0.5
+    _, _, _, alpha, color = run(args)
+    live = alpha > 0
+    np.testing.assert_allclose(color[live], np.clip(base[live], 0, 1), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_alpha_bounded_and_depth_sign(seed):
+    rng = np.random.default_rng(seed)
+    mean2, conic, depth, alpha, color = run(default_inputs(rng))
+    assert (alpha >= 0).all() and (alpha <= 1.0).all()
+    assert ((alpha == 0) | (depth >= 0.1)).all()
+    assert (color >= 0).all() and (color <= 1).all()
+
+
+def test_blend_tile_entry_point():
+    # The L2 wrapper executes the Pallas kernel.
+    g = 8
+    means = jnp.full((g, 2), 8.0)
+    conics = jnp.tile(jnp.asarray([[0.5, 0.0, 0.5]]), (g, 1))
+    colors = jnp.ones((g, 3)) * 0.5
+    alphas = jnp.ones((g,)) * 0.5
+    out = model.blend_tile(means, conics, colors, alphas)
+    assert out.shape == (ref.TILE_PX * ref.TILE_PX, 3)
+    assert float(out.max()) > 0.1
+
+
+def test_render_tiles_shifts_origins():
+    g = 4
+    means = jnp.asarray([[24.0, 8.0]] * g)
+    conics = jnp.tile(jnp.asarray([[0.5, 0.0, 0.5]]), (g, 1))
+    colors = jnp.ones((g, 3))
+    alphas = jnp.ones((g,)) * 0.7
+    tiles = model.render_tiles((means, conics, colors, alphas), [(0.0, 0.0), (16.0, 0.0)])
+    t0 = np.asarray(tiles[0]).reshape(16, 16, 3)
+    t1 = np.asarray(tiles[1]).reshape(16, 16, 3)
+    # The splat at x=24 lives in the second tile.
+    assert t1.max() > 0.5
+    assert t0[:, :8].max() < 1e-3

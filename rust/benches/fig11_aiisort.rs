@@ -1,0 +1,107 @@
+//! Fig. 11 reproduction: sorting latency, AII-Sort vs conventional
+//! Bucket-Bitonic, for N ∈ {4, 8, 16} buckets under average and extreme
+//! viewing conditions (Tile Blocks = 4, the §4.B operating point).
+//!
+//! Paper: AII reduces latency 2.75×→6.94× (average) and 2.47×→6.57×
+//! (extreme) as N grows 4→16 — more buckets only pay off when the
+//! intervals are balanced, which is exactly what the posteriori
+//! initialization provides.
+
+use gaucim::bench::{bench_scale, section, Bench};
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::App;
+use gaucim::pipeline::{FramePipeline, PipelineConfig};
+use gaucim::scene::synth::SceneKind;
+use gaucim::util::json::Json;
+
+/// Total steady-state sort cycles over a trajectory (frame 0 excluded:
+/// phase 1 is identical for both sorters).
+fn sort_cycles(app: &App, config: PipelineConfig, cond: ViewCondition, frames: usize) -> u64 {
+    let traj = app.trajectory(cond, frames);
+    let mut pipeline = FramePipeline::new(&app.scene, config);
+    let mut cycles = 0u64;
+    for (i, (cam, t)) in traj.iter().enumerate() {
+        let r = pipeline.render_frame(cam, *t, false);
+        if i > 0 {
+            cycles += r.sort.cycles;
+        }
+    }
+    cycles
+}
+
+fn main() {
+    let n = 120_000 / bench_scale();
+    let frames = 5;
+    let mut app = App::new(SceneKind::DynamicLarge, n, 42);
+    app.config = app.config.clone().with_resolution(640, 360);
+
+    section(&format!(
+        "Fig. 11 — sorting latency: AII-Sort vs conventional Bucket-Bitonic ({n} gaussians)"
+    ));
+    println!(
+        "{:<10} {:<4} {:>16} {:>14} {:>11} {:>8}",
+        "condition", "N", "conv cycles", "aii cycles", "reduction", "paper"
+    );
+
+    let paper = [
+        (ViewCondition::Average, 4usize, 2.75),
+        (ViewCondition::Average, 8, 4.5),
+        (ViewCondition::Average, 16, 6.94),
+        (ViewCondition::Extreme, 4, 2.47),
+        (ViewCondition::Extreme, 8, 4.0),
+        (ViewCondition::Extreme, 16, 6.57),
+    ];
+    let mut rows = Vec::new();
+    for &(cond, n_buckets, paper_red) in &paper {
+        let base = PipelineConfig {
+            n_buckets,
+            ..app.config.clone()
+        };
+        let conv = sort_cycles(
+            &app,
+            PipelineConfig { use_aii: false, ..base.clone() },
+            cond,
+            frames,
+        );
+        let aii = sort_cycles(
+            &app,
+            PipelineConfig { use_aii: true, ..base.clone() },
+            cond,
+            frames,
+        );
+        let reduction = conv as f64 / aii.max(1) as f64;
+        println!(
+            "{:<10} {:<4} {:>16} {:>14} {:>10.2}x {:>7.2}x",
+            cond.label(),
+            n_buckets,
+            conv,
+            aii,
+            reduction,
+            paper_red
+        );
+        rows.push(
+            Json::obj()
+                .set("condition", cond.label())
+                .set("n_buckets", n_buckets)
+                .set("conventional_cycles", conv)
+                .set("aii_cycles", aii)
+                .set("reduction", reduction)
+                .set("paper_reduction", paper_red),
+        );
+    }
+
+    section("host timing");
+    let traj = app.trajectory(ViewCondition::Average, 2);
+    let mut pipeline = FramePipeline::new(&app.scene, app.config.clone());
+    // Warm posteriori state, then time a steady-state frame.
+    pipeline.render_frame(&traj[0].0, traj[0].1, false);
+    let (cam, t) = &traj[1];
+    let r = Bench::quick().run("pipeline_frame(aii steady-state)", || {
+        pipeline.render_frame(cam, *t, false)
+    });
+    println!("{}", r.row());
+
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/fig11_aiisort.json", Json::Arr(rows).pretty()).ok();
+    println!("\nwrote reports/fig11_aiisort.json");
+}

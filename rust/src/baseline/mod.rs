@@ -1,0 +1,8 @@
+//! Comparison baselines for Table I: the GSCore accelerator (ASPLOS'24 [4])
+//! and the NVIDIA Jetson AGX Orin edge GPU [23].
+
+pub mod gscore;
+pub mod jetson;
+
+pub use gscore::GscoreModel;
+pub use jetson::JetsonModel;

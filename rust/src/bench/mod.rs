@@ -1,0 +1,147 @@
+//! Minimal criterion-style benchmark harness (the `criterion` crate is
+//! unavailable offline — DESIGN.md §3). Provides warmup, repeated sampling,
+//! robust statistics, and a uniform report format for the `cargo bench`
+//! targets that regenerate the paper's tables and figures.
+
+use crate::math::stats::Running;
+use std::time::Instant;
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} ±{:>9}  ({} samples)",
+            self.name,
+            human_time(self.median_s),
+            human_time(self.mean_s),
+            human_time(self.std_s),
+            self.samples
+        )
+    }
+}
+
+fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, samples: 10 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup: 1, samples: 5 }
+    }
+
+    /// Time `f` and return stats. The closure's return value is consumed
+    /// through `std::hint::black_box` to defeat dead-code elimination.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut stats = Running::new();
+        let mut all = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples.max(1) {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            let dt = t.elapsed().as_secs_f64();
+            stats.push(dt);
+            all.push(dt);
+        }
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = all[all.len() / 2];
+        BenchResult {
+            name: name.to_string(),
+            samples: self.samples.max(1),
+            mean_s: stats.mean(),
+            median_s: median,
+            std_s: stats.std_dev(),
+            min_s: stats.min(),
+            max_s: stats.max(),
+        }
+    }
+}
+
+/// Print a section header in the bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a figure/table row (uniform formatting across benches).
+pub fn metric_row(label: &str, value: f64, unit: &str) {
+    println!("  {label:<52} {value:>12.4} {unit}");
+}
+
+/// Environment knob: `GAUCIM_BENCH_SCALE` divides workload sizes so CI can
+/// run the full suite quickly (default 1 = paper-scale divisors chosen per
+/// bench).
+pub fn bench_scale() -> usize {
+    std::env::var("GAUCIM_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench { warmup: 1, samples: 5 };
+        let r = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(r.samples, 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
+        assert!(r.row().contains("spin"));
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.0).ends_with(" s"));
+        assert!(human_time(2e-3).ends_with(" ms"));
+        assert!(human_time(2e-6).ends_with(" µs"));
+        assert!(human_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn bench_scale_default_one() {
+        std::env::remove_var("GAUCIM_BENCH_SCALE");
+        assert_eq!(bench_scale(), 1);
+    }
+}

@@ -1,0 +1,263 @@
+//! Camera model: intrinsics/extrinsics, view & projection matrices, and the
+//! head-movement trajectory generator used for the paper's *average* /
+//! *extreme* viewing-condition experiments.
+
+pub mod trajectory;
+
+pub use trajectory::{Trajectory, ViewCondition};
+
+use crate::math::{Frustum, Mat3, Mat4, Vec2, Vec3};
+
+/// Pinhole intrinsics.
+#[derive(Debug, Clone, Copy)]
+pub struct Intrinsics {
+    pub fx: f32,
+    pub fy: f32,
+    pub cx: f32,
+    pub cy: f32,
+    pub width: usize,
+    pub height: usize,
+}
+
+impl Intrinsics {
+    /// From a vertical field of view and image size.
+    pub fn from_fov(fov_y: f32, width: usize, height: usize) -> Intrinsics {
+        let fy = height as f32 / (2.0 * (fov_y * 0.5).tan());
+        let fx = fy; // square pixels
+        Intrinsics {
+            fx,
+            fy,
+            cx: width as f32 * 0.5,
+            cy: height as f32 * 0.5,
+            width,
+            height,
+        }
+    }
+
+    pub fn aspect(&self) -> f32 {
+        self.width as f32 / self.height as f32
+    }
+
+    pub fn fov_y(&self) -> f32 {
+        2.0 * (self.height as f32 / (2.0 * self.fy)).atan()
+    }
+}
+
+/// Full camera: pose (world→camera) + intrinsics + clip range.
+///
+/// Camera space follows the 3DGS convention: +z looks *forward* into the
+/// scene after the view transform (we use a right-handed look-at with the
+/// camera looking down −z in world space, mapped to +z depth in camera
+/// space for splatting depth).
+#[derive(Debug, Clone, Copy)]
+pub struct Camera {
+    /// World → camera rigid transform.
+    pub view: Mat4,
+    pub intrinsics: Intrinsics,
+    pub near: f32,
+    pub far: f32,
+    /// Camera position in world space (cached).
+    pub position: Vec3,
+}
+
+impl Camera {
+    /// Construct from eye/target/up plus perspective parameters.
+    #[allow(clippy::too_many_arguments)]
+    pub fn look_at(
+        eye: Vec3,
+        target: Vec3,
+        up: Vec3,
+        fov_y: f32,
+        aspect: f32,
+        near: f32,
+        far: f32,
+    ) -> Camera {
+        let height = 720usize;
+        let width = (height as f32 * aspect).round() as usize;
+        let mut cam = Camera {
+            view: Mat4::IDENTITY,
+            intrinsics: Intrinsics::from_fov(fov_y, width, height),
+            near,
+            far,
+            position: eye,
+        };
+        cam.set_pose(eye, target, up);
+        cam
+    }
+
+    /// Change the image resolution, rebuilding the intrinsics for the same
+    /// vertical field of view.
+    pub fn set_resolution(&mut self, width: usize, height: usize) {
+        let fov = self.intrinsics.fov_y();
+        self.intrinsics = Intrinsics::from_fov(fov, width, height);
+    }
+
+    /// Re-point the camera (keeps intrinsics/clip planes).
+    pub fn set_pose(&mut self, eye: Vec3, target: Vec3, up: Vec3) {
+        // Right-handed basis: f = forward (into scene), r = right, u = true up.
+        let f = (target - eye).normalized();
+        let r = f.cross(up).normalized();
+        let u = r.cross(f);
+        // View matrix maps world → camera with camera looking down +z:
+        // rows are (r, u, f) so depth = f·(p - eye) > 0 in front.
+        self.view = Mat4 {
+            m: [
+                [r.x, r.y, r.z, -r.dot(eye)],
+                [u.x, u.y, u.z, -u.dot(eye)],
+                [f.x, f.y, f.z, -f.dot(eye)],
+                [0.0, 0.0, 0.0, 1.0],
+            ],
+        };
+        self.position = eye;
+    }
+
+    /// Perspective projection matrix (OpenGL-style clip volume, z into [-w,w]).
+    pub fn projection(&self) -> Mat4 {
+        let fov_y = self.intrinsics.fov_y();
+        let aspect = self.intrinsics.aspect();
+        let t = 1.0 / (fov_y * 0.5).tan();
+        let (n, f) = (self.near, self.far);
+        Mat4 {
+            m: [
+                [t / aspect, 0.0, 0.0, 0.0],
+                [0.0, t, 0.0, 0.0],
+                [0.0, 0.0, (f + n) / (f - n), -2.0 * f * n / (f - n)],
+                [0.0, 0.0, 1.0, 0.0],
+            ],
+        }
+    }
+
+    /// Combined view-projection.
+    pub fn view_proj(&self) -> Mat4 {
+        self.projection().mul_mat(&self.view)
+    }
+
+    /// The camera's frustum in world space.
+    pub fn frustum(&self) -> Frustum {
+        Frustum::from_view_proj(&self.view_proj())
+    }
+
+    /// World point → camera space (x right, y up, z = depth into scene).
+    #[inline]
+    pub fn to_camera(&self, p: Vec3) -> Vec3 {
+        self.view.transform_point(p).truncate()
+    }
+
+    /// Camera-space point → pixel coordinates + depth.
+    /// Returns `None` when behind the near plane.
+    #[inline]
+    pub fn project_cam(&self, pc: Vec3) -> Option<(Vec2, f32)> {
+        if pc.z < self.near {
+            return None;
+        }
+        let k = &self.intrinsics;
+        Some((
+            Vec2::new(k.fx * pc.x / pc.z + k.cx, k.fy * pc.y / pc.z + k.cy),
+            pc.z,
+        ))
+    }
+
+    /// World point → pixel coordinates + depth.
+    pub fn project(&self, p: Vec3) -> Option<(Vec2, f32)> {
+        self.project_cam(self.to_camera(p))
+    }
+
+    /// Jacobian of the perspective projection at camera-space point `pc`
+    /// (eq. 8's `J`, the EWA-splatting local affine approximation).
+    pub fn projection_jacobian(&self, pc: Vec3) -> Mat3 {
+        let k = &self.intrinsics;
+        let (x, y, z) = (pc.x, pc.y, pc.z.max(1e-6));
+        Mat3 {
+            m: [
+                [k.fx / z, 0.0, -k.fx * x / (z * z)],
+                [0.0, k.fy / z, -k.fy * y / (z * z)],
+                [0.0, 0.0, 0.0],
+            ],
+        }
+    }
+
+    /// Rotation part of the view transform (eq. 8's `W`).
+    pub fn view_rotation(&self) -> Mat3 {
+        self.view.upper3()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cam() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, 5.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            60f32.to_radians(),
+            16.0 / 9.0,
+            0.1,
+            100.0,
+        )
+    }
+
+    #[test]
+    fn center_projects_to_principal_point() {
+        let c = cam();
+        let (px, depth) = c.project(Vec3::ZERO).unwrap();
+        assert!((px.x - c.intrinsics.cx).abs() < 1e-3);
+        assert!((px.y - c.intrinsics.cy).abs() < 1e-3);
+        assert!((depth - 5.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn behind_camera_is_rejected() {
+        let c = cam();
+        assert!(c.project(Vec3::new(0.0, 0.0, 10.0)).is_none());
+    }
+
+    #[test]
+    fn depth_increases_away_from_camera() {
+        let c = cam();
+        let (_, d1) = c.project(Vec3::new(0.0, 0.0, 0.0)).unwrap();
+        let (_, d2) = c.project(Vec3::new(0.0, 0.0, -10.0)).unwrap();
+        assert!(d2 > d1);
+    }
+
+    #[test]
+    fn jacobian_matches_finite_difference() {
+        let c = cam();
+        let pc = Vec3::new(0.5, -0.3, 4.0);
+        let j = c.projection_jacobian(pc);
+        let eps = 1e-3;
+        let f = |p: Vec3| {
+            let k = &c.intrinsics;
+            Vec2::new(k.fx * p.x / p.z, k.fy * p.y / p.z)
+        };
+        for (axis, dv) in [
+            (0, Vec3::new(eps, 0.0, 0.0)),
+            (1, Vec3::new(0.0, eps, 0.0)),
+            (2, Vec3::new(0.0, 0.0, eps)),
+        ] {
+            let d = (f(pc + dv) - f(pc - dv)) * (1.0 / (2.0 * eps));
+            assert!((j.m[0][axis] - d.x).abs() < 0.05, "J[0][{axis}] {} vs {}", j.m[0][axis], d.x);
+            assert!((j.m[1][axis] - d.y).abs() < 0.05, "J[1][{axis}] {} vs {}", j.m[1][axis], d.y);
+        }
+    }
+
+    #[test]
+    fn view_rotation_orthonormal() {
+        let c = cam();
+        let r = c.view_rotation();
+        let rrt = r.mul_mat(&r.transpose());
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((rrt.m[i][j] - expect).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn intrinsics_fov_roundtrip() {
+        let k = Intrinsics::from_fov(1.0, 1280, 720);
+        assert!((k.fov_y() - 1.0).abs() < 1e-5);
+    }
+}

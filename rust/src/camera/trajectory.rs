@@ -1,0 +1,237 @@
+//! Head-movement camera trajectories.
+//!
+//! The paper's experiments evaluate ATG and AII-Sort under two viewing
+//! conditions derived from the VR-viewport study of Xu, Han & Qian
+//! (CoNEXT'19, 275 users / 156 h):
+//!
+//! * **average** — median angular speeds: 14.8 °/s latitude (pitch),
+//!   27.6 °/s longitude (yaw);
+//! * **extreme** — 180 °/s on both axes (the study's maximum).
+//!
+//! The generator performs an orbital/pan walk around the scene center with
+//! per-frame angular increments drawn around those speeds, giving the
+//! frame-to-frame coherence (average) or near-incoherence (extreme) that the
+//! posteriori-knowledge techniques exploit.
+
+use crate::camera::Camera;
+use crate::math::Vec3;
+use crate::util::Rng;
+
+/// Viewing condition from the user-behavior study (paper §2.2, §4.B/4.C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViewCondition {
+    /// Median head-movement speeds (14.8 °/s pitch, 27.6 °/s yaw).
+    Average,
+    /// Maximum speeds (180 °/s both axes).
+    Extreme,
+    /// No movement at all (upper bound for posteriori reuse).
+    Static,
+}
+
+impl ViewCondition {
+    /// (pitch °/s, yaw °/s)
+    pub fn speeds_deg(self) -> (f32, f32) {
+        match self {
+            ViewCondition::Average => (14.8, 27.6),
+            ViewCondition::Extreme => (180.0, 180.0),
+            ViewCondition::Static => (0.0, 0.0),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ViewCondition::Average => "average",
+            ViewCondition::Extreme => "extreme",
+            ViewCondition::Static => "static",
+        }
+    }
+}
+
+/// Generates a sequence of camera poses (+ scene time) for `frames` frames
+/// at `fps`, orbiting `center` at `radius`.
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    pub condition: ViewCondition,
+    pub frames: usize,
+    pub fps: f32,
+    pub center: Vec3,
+    pub radius: f32,
+    pub seed: u64,
+    /// Scene-time span [t0, t1] of the clip (dynamic scenes).
+    pub time_span: (f32, f32),
+    /// Wall-clock length of the clip in seconds: scene time advances at
+    /// real-time playback rate, (1/fps)/clip_seconds of the span per frame
+    /// (N3V-class clips are ~10 s / 300 frames).
+    pub clip_seconds: f32,
+}
+
+impl Trajectory {
+    pub fn new(condition: ViewCondition, frames: usize) -> Trajectory {
+        Trajectory {
+            condition,
+            frames,
+            fps: 30.0,
+            center: Vec3::ZERO,
+            radius: 12.0,
+            seed: 0x3D6A_0C1A,
+            time_span: (0.0, 1.0),
+            clip_seconds: 10.0,
+        }
+    }
+
+    pub fn with_scene(mut self, center: Vec3, radius: f32) -> Trajectory {
+        self.center = center;
+        self.radius = radius;
+        self
+    }
+
+    pub fn with_time_span(mut self, t0: f32, t1: f32) -> Trajectory {
+        self.time_span = (t0, t1);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Trajectory {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the clip's wall-clock length (controls how fast scene time
+    /// advances per frame).
+    pub fn with_clip_seconds(mut self, secs: f32) -> Trajectory {
+        self.clip_seconds = secs;
+        self
+    }
+
+    /// Generate all (camera, scene-time) pairs.
+    pub fn generate(&self, template: &Camera) -> Vec<(Camera, f32)> {
+        let mut rng = Rng::new(self.seed);
+        let (pitch_speed, yaw_speed) = self.condition.speeds_deg();
+        let dt = 1.0 / self.fps;
+
+        let mut yaw = 0.0f32; // degrees
+        let mut pitch = 10.0f32; // slight downward look
+        // Direction of travel flips occasionally (random walk with momentum),
+        // matching the study's bounded per-frame angular displacement.
+        let mut yaw_dir = 1.0f32;
+        let mut pitch_dir = 1.0f32;
+
+        let mut out = Vec::with_capacity(self.frames);
+        let total_clip_frames = (self.fps * self.clip_seconds).max(1.0);
+        for i in 0..self.frames {
+            // Real-time playback: scene time advances 1/(fps·clip_s) of the
+            // span per frame (clamped at the clip end).
+            let frac = (i as f32 / total_clip_frames).min(1.0);
+            let t = self.time_span.0 + frac * (self.time_span.1 - self.time_span.0);
+
+            let eye = self.center
+                + Vec3::new(
+                    self.radius * yaw.to_radians().cos() * pitch.to_radians().cos(),
+                    self.radius * pitch.to_radians().sin(),
+                    self.radius * yaw.to_radians().sin() * pitch.to_radians().cos(),
+                );
+            let mut cam = *template;
+            cam.set_pose(eye, self.center, Vec3::new(0.0, 1.0, 0.0));
+            out.push((cam, t));
+
+            // Advance angles: jittered speed (±30 %), occasional direction flip.
+            let jitter = 0.7 + 0.6 * rng.f32();
+            yaw += yaw_dir * yaw_speed * dt * jitter;
+            pitch += pitch_dir * pitch_speed * dt * jitter;
+            if rng.chance(0.04) {
+                yaw_dir = -yaw_dir;
+            }
+            if rng.chance(0.06) || !(-35.0..=55.0).contains(&pitch) {
+                pitch_dir = -pitch_dir;
+                pitch = pitch.clamp(-35.0, 55.0);
+            }
+        }
+        out
+    }
+
+    /// Per-frame angular displacement (degrees) implied by the condition —
+    /// used by analytic models and tests.
+    pub fn per_frame_displacement(&self) -> (f32, f32) {
+        let (p, y) = self.condition.speeds_deg();
+        (p / self.fps, y / self.fps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn template() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, 10.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            60f32.to_radians(),
+            16.0 / 9.0,
+            0.1,
+            200.0,
+        )
+    }
+
+    #[test]
+    fn generates_requested_frames_with_realtime_pacing() {
+        let tr = Trajectory::new(ViewCondition::Average, 30).with_time_span(0.0, 2.0);
+        let seq = tr.generate(&template());
+        assert_eq!(seq.len(), 30);
+        assert_eq!(seq[0].1, 0.0);
+        // 30 frames of a 10 s / 30 FPS clip = 29/300 of the 2.0 span.
+        assert!((seq[29].1 - 2.0 * 29.0 / 300.0).abs() < 1e-5, "got {}", seq[29].1);
+        // A full-clip render reaches the end of the span.
+        let full = Trajectory::new(ViewCondition::Average, 301).with_time_span(0.0, 2.0);
+        let seq = full.generate(&template());
+        assert!((seq[300].1 - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn average_moves_less_than_extreme() {
+        let t = template();
+        let avg: Vec<_> = Trajectory::new(ViewCondition::Average, 60).generate(&t);
+        let ext: Vec<_> = Trajectory::new(ViewCondition::Extreme, 60).generate(&t);
+        let disp = |seq: &[(Camera, f32)]| -> f32 {
+            seq.windows(2)
+                .map(|w| (w[1].0.position - w[0].0.position).length())
+                .sum()
+        };
+        assert!(
+            disp(&ext) > 3.0 * disp(&avg),
+            "extreme {} vs average {}",
+            disp(&ext),
+            disp(&avg)
+        );
+    }
+
+    #[test]
+    fn static_condition_does_not_move() {
+        let t = template();
+        let seq = Trajectory::new(ViewCondition::Static, 10).generate(&t);
+        for w in seq.windows(2) {
+            assert!((w[1].0.position - w[0].0.position).length() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cameras_look_at_center() {
+        let t = template();
+        let seq = Trajectory::new(ViewCondition::Average, 20).generate(&t);
+        for (cam, _) in &seq {
+            // Scene center should project near the principal point.
+            let (px, _) = cam.project(Vec3::ZERO).expect("center visible");
+            assert!((px.x - cam.intrinsics.cx).abs() < 1.0);
+            assert!((px.y - cam.intrinsics.cy).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let t = template();
+        let a = Trajectory::new(ViewCondition::Average, 15).generate(&t);
+        let b = Trajectory::new(ViewCondition::Average, 15).generate(&t);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.0.position, y.0.position);
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! The application driver used by the CLI, the examples, and the
+//! table/figure benches.
+
+use crate::camera::{Camera, Trajectory, ViewCondition};
+use crate::energy::{FrameEnergy, PowerReport, StageLatency};
+use crate::math::Vec3;
+use crate::pipeline::{FramePipeline, PipelineConfig};
+use crate::render::{psnr, Image, ReferenceRenderer};
+use crate::scene::synth::{SceneKind, SynthParams};
+use crate::scene::Scene;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Aggregated results of a rendered sequence.
+#[derive(Debug, Clone)]
+pub struct SequenceReport {
+    pub label: String,
+    pub frames: usize,
+    /// Per-frame averages.
+    pub energy: FrameEnergy,
+    pub latency: StageLatency,
+    pub avg_visible: f64,
+    pub avg_dram_accesses: f64,
+    pub avg_dram_bytes: f64,
+    pub sram_hit_rate: f64,
+    pub avg_sort_cycles: f64,
+    pub avg_atg_ops: f64,
+    /// PSNR of the hardware path vs the exact reference (sampled frames);
+    /// NaN when no frames were rendered numerically.
+    pub psnr_db: f64,
+    /// Mean SSIM over the same sampled frames (NaN when none rendered).
+    pub ssim: f64,
+    pub report: PowerReport,
+}
+
+impl SequenceReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("label", self.label.as_str())
+            .set("frames", self.frames)
+            .set("fps", self.report.fps)
+            .set("power_w", self.report.power_w)
+            .set("area_mm2", self.report.area_mm2)
+            .set("psnr_db", self.psnr_db)
+            .set("ssim", self.ssim)
+            .set("avg_visible", self.avg_visible)
+            .set("avg_dram_accesses", self.avg_dram_accesses)
+            .set("avg_dram_bytes", self.avg_dram_bytes)
+            .set("sram_hit_rate", self.sram_hit_rate)
+            .set("avg_sort_cycles", self.avg_sort_cycles)
+            .set("avg_atg_ops", self.avg_atg_ops)
+    }
+}
+
+/// The coordinator application.
+pub struct App {
+    pub scene: Scene,
+    pub config: PipelineConfig,
+    /// Camera orbit radius (scene-dependent).
+    pub orbit_radius: f32,
+}
+
+impl App {
+    /// Synthesize (or load from cache) the scene for `kind` with
+    /// `n_gaussians`, and set the paper configuration.
+    pub fn new(kind: SceneKind, n_gaussians: usize, seed: u64) -> App {
+        let scene = SynthParams::new(kind, n_gaussians).with_seed(seed).generate();
+        let dynamic = kind == SceneKind::DynamicLarge;
+        App {
+            scene,
+            config: PipelineConfig::paper(dynamic),
+            orbit_radius: 26.0,
+        }
+    }
+
+    /// Load the scene from cache if present, else synthesize + persist.
+    pub fn cached(kind: SceneKind, n_gaussians: usize, seed: u64, dir: &PathBuf) -> Result<App> {
+        let path = dir.join(format!("{}-{}-{}.g4d", kind.label(), n_gaussians, seed));
+        let scene = crate::scene::io::ensure_cached(
+            || SynthParams::new(kind, n_gaussians).with_seed(seed).generate(),
+            &path,
+        )?;
+        let dynamic = kind == SceneKind::DynamicLarge;
+        Ok(App {
+            scene,
+            config: PipelineConfig::paper(dynamic),
+            orbit_radius: 26.0,
+        })
+    }
+
+    pub fn with_config(mut self, config: PipelineConfig) -> App {
+        self.config = config;
+        self
+    }
+
+    /// Camera template for the configured resolution.
+    pub fn camera_template(&self) -> Camera {
+        let mut cam = Camera::look_at(
+            Vec3::new(0.0, 5.0, self.orbit_radius),
+            Vec3::new(0.0, 1.0, 0.0),
+            Vec3::new(0.0, 1.0, 0.0),
+            60f32.to_radians(),
+            self.config.width as f32 / self.config.height as f32,
+            0.1,
+            200.0,
+        );
+        cam.set_resolution(self.config.width, self.config.height);
+        cam
+    }
+
+    /// Trajectory for a view condition across the scene's clip.
+    pub fn trajectory(&self, condition: ViewCondition, frames: usize) -> Vec<(Camera, f32)> {
+        let (t0, t1) = self.scene.time_span;
+        Trajectory::new(condition, frames)
+            .with_scene(Vec3::new(0.0, 1.0, 0.0), self.orbit_radius)
+            .with_time_span(t0, t1)
+            .generate(&self.camera_template())
+    }
+
+    /// Run a sequence. `psnr_every` > 0 renders every n-th frame numerically
+    /// and scores it against the exact reference renderer.
+    pub fn run_sequence(
+        &self,
+        condition: ViewCondition,
+        frames: usize,
+        psnr_every: usize,
+    ) -> SequenceReport {
+        let seq = self.trajectory(condition, frames);
+        let mut pipeline = FramePipeline::new(&self.scene, self.config.clone());
+        let reference = ReferenceRenderer::new(self.config.width, self.config.height);
+
+        let mut energy = FrameEnergy::default();
+        let mut latency = StageLatency::default();
+        let mut visible = 0.0;
+        let mut dram_accesses = 0.0;
+        let mut dram_bytes = 0.0;
+        let mut sram_hits = 0u64;
+        let mut sram_lookups = 0u64;
+        let mut sort_cycles = 0.0;
+        let mut atg_ops = 0.0;
+        let mut psnr_sum = 0.0;
+        let mut ssim_sum = 0.0;
+        let mut psnr_count = 0usize;
+
+        for (i, (cam, t)) in seq.iter().enumerate() {
+            let render = psnr_every > 0 && i % psnr_every == 0;
+            let r = pipeline.render_frame(cam, *t, render);
+            energy.add(&r.energy);
+            latency.add(&r.latency);
+            visible += r.n_visible as f64;
+            dram_accesses += r.traffic.total_dram_accesses() as f64;
+            dram_bytes += r.traffic.total_dram_bytes() as f64;
+            sram_hits += r.traffic.blend_sram.hits;
+            sram_lookups += r.traffic.blend_sram.lookups;
+            sort_cycles += r.sort.cycles as f64;
+            atg_ops += r.atg_ops as f64;
+            if let Some(img) = &r.image {
+                let ref_img = reference.render(&self.scene, cam, *t);
+                psnr_sum += psnr(&ref_img, img);
+                ssim_sum += crate::render::ssim(&ref_img, img);
+                psnr_count += 1;
+            }
+        }
+
+        let n = frames.max(1) as f64;
+        let energy = energy.scale(1.0 / n);
+        let latency = latency.scale(1.0 / n);
+        let report = PowerReport::from_frame(
+            format!("{} ({})", self.scene.name, condition.label()),
+            energy,
+            latency,
+            self.config.dcim.area_mm2,
+            self.scene.dynamic,
+        );
+        SequenceReport {
+            label: report.label.clone(),
+            frames,
+            energy,
+            latency,
+            avg_visible: visible / n,
+            avg_dram_accesses: dram_accesses / n,
+            avg_dram_bytes: dram_bytes / n,
+            sram_hit_rate: if sram_lookups > 0 {
+                sram_hits as f64 / sram_lookups as f64
+            } else {
+                0.0
+            },
+            avg_sort_cycles: sort_cycles / n,
+            avg_atg_ops: atg_ops / n,
+            psnr_db: if psnr_count > 0 {
+                psnr_sum / psnr_count as f64
+            } else {
+                f64::NAN
+            },
+            ssim: if psnr_count > 0 {
+                ssim_sum / psnr_count as f64
+            } else {
+                f64::NAN
+            },
+            report,
+        }
+    }
+
+    /// Render a single frame to an image (for the CLI / examples).
+    pub fn render_one(&self, t: f32) -> (Image, SequenceReport) {
+        let mut pipeline = FramePipeline::new(&self.scene, self.config.clone());
+        let cam = self.camera_template();
+        let r = pipeline.render_frame(&cam, t, true);
+        let report = PowerReport::from_frame(
+            self.scene.name.clone(),
+            r.energy,
+            r.latency,
+            self.config.dcim.area_mm2,
+            self.scene.dynamic,
+        );
+        let reference = ReferenceRenderer::new(self.config.width, self.config.height);
+        let ref_img = reference.render(&self.scene, &cam, t);
+        let image = r.image.expect("rendered");
+        let p = psnr(&ref_img, &image);
+        let s = crate::render::ssim(&ref_img, &image);
+        let seq = SequenceReport {
+            label: self.scene.name.clone(),
+            frames: 1,
+            energy: r.energy,
+            latency: r.latency,
+            avg_visible: r.n_visible as f64,
+            avg_dram_accesses: r.traffic.total_dram_accesses() as f64,
+            avg_dram_bytes: r.traffic.total_dram_bytes() as f64,
+            sram_hit_rate: r.traffic.blend_sram.hit_rate(),
+            avg_sort_cycles: r.sort.cycles as f64,
+            avg_atg_ops: r.atg_ops as f64,
+            psnr_db: p,
+            ssim: s,
+            report,
+        };
+        (image, seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_app(kind: SceneKind) -> App {
+        let mut app = App::new(kind, 3000, 7);
+        app.config = app.config.clone().with_resolution(192, 108);
+        app
+    }
+
+    #[test]
+    fn sequence_report_aggregates() {
+        let app = small_app(SceneKind::DynamicLarge);
+        let rep = app.run_sequence(ViewCondition::Average, 3, 0);
+        assert_eq!(rep.frames, 3);
+        assert!(rep.avg_visible > 0.0);
+        assert!(rep.report.fps > 0.0);
+        assert!(rep.psnr_db.is_nan(), "no numeric render requested");
+        let js = rep.to_json().pretty();
+        assert!(js.contains("power_w"));
+    }
+
+    #[test]
+    fn psnr_sampling_produces_high_fidelity() {
+        let app = small_app(SceneKind::StaticLarge);
+        let rep = app.run_sequence(ViewCondition::Static, 2, 1);
+        assert!(
+            rep.psnr_db > 24.0,
+            "hw-vs-reference PSNR should be high: {}",
+            rep.psnr_db
+        );
+    }
+
+    #[test]
+    fn render_one_returns_image() {
+        let app = small_app(SceneKind::StaticLarge);
+        let (img, rep) = app.render_one(0.0);
+        assert_eq!(img.width, 192);
+        assert!(rep.psnr_db > 24.0);
+        assert!(img.mean_luma() > 0.005);
+    }
+}

@@ -1,0 +1,218 @@
+//! Experiment configuration files: a JSON schema describing scene,
+//! trajectory, pipeline knobs, and outputs, so whole runs are launchable
+//! from declarative configs (`gaucim run --config configs/table1.json`).
+
+use crate::camera::ViewCondition;
+use crate::pipeline::PipelineConfig;
+use crate::scene::synth::SceneKind;
+use crate::tiles::atg::AtgConfig;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// A declarative experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub scene_kind: SceneKind,
+    pub gaussians: usize,
+    pub seed: u64,
+    pub width: usize,
+    pub height: usize,
+    pub condition: ViewCondition,
+    pub frames: usize,
+    /// Render every n-th frame numerically for PSNR (0 = never).
+    pub psnr_every: usize,
+    pub pipeline: PipelineConfig,
+    /// Optional output paths.
+    pub report_json: Option<String>,
+    pub frame_ppm: Option<String>,
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON document. Unknown keys are rejected (config typos
+    /// should fail loudly).
+    pub fn from_json(doc: &Json) -> Result<ExperimentConfig> {
+        const KNOWN: &[&str] = &[
+            "name", "scene", "gaussians", "seed", "width", "height",
+            "condition", "frames", "psnr_every", "grid_n", "atg_threshold",
+            "tile_block", "n_buckets", "use_drfc", "use_atg", "use_aii",
+            "sram_kb", "report_json", "frame_ppm",
+        ];
+        if let Json::Obj(m) = doc {
+            for k in m.keys() {
+                if !KNOWN.contains(&k.as_str()) {
+                    bail!("unknown config key '{k}' (known: {KNOWN:?})");
+                }
+            }
+        } else {
+            bail!("config must be a JSON object");
+        }
+
+        let scene_kind = match doc.get("scene").and_then(Json::as_str).unwrap_or("dynamic") {
+            "static" => SceneKind::StaticLarge,
+            "dynamic" => SceneKind::DynamicLarge,
+            other => bail!("scene must be 'static' or 'dynamic', got '{other}'"),
+        };
+        let condition = match doc
+            .get("condition")
+            .and_then(Json::as_str)
+            .unwrap_or("average")
+        {
+            "average" => ViewCondition::Average,
+            "extreme" => ViewCondition::Extreme,
+            "static" => ViewCondition::Static,
+            other => bail!("condition must be average|extreme|static, got '{other}'"),
+        };
+
+        let get_usize = |key: &str, default: usize| -> usize {
+            doc.get(key).and_then(Json::as_usize).unwrap_or(default)
+        };
+        let get_bool = |key: &str, default: bool| -> bool {
+            doc.get(key).and_then(Json::as_bool).unwrap_or(default)
+        };
+
+        let dynamic = scene_kind == SceneKind::DynamicLarge;
+        let mut pipeline = PipelineConfig::paper(dynamic)
+            .with_resolution(get_usize("width", 1280), get_usize("height", 720));
+        pipeline.grid_n = get_usize("grid_n", pipeline.grid_n);
+        pipeline.n_buckets = get_usize("n_buckets", pipeline.n_buckets);
+        pipeline.use_drfc = get_bool("use_drfc", true);
+        pipeline.use_atg = get_bool("use_atg", true);
+        pipeline.use_aii = get_bool("use_aii", true);
+        pipeline.sram_bytes = get_usize("sram_kb", pipeline.sram_bytes / 1024) * 1024;
+        pipeline.atg = AtgConfig {
+            user_threshold: doc
+                .get("atg_threshold")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.5) as f32,
+            tile_block: get_usize("tile_block", 4),
+            ..AtgConfig::default()
+        };
+
+        Ok(ExperimentConfig {
+            name: doc
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("experiment")
+                .to_string(),
+            scene_kind,
+            gaussians: get_usize("gaussians", 100_000),
+            seed: get_usize("seed", 42) as u64,
+            width: pipeline.width,
+            height: pipeline.height,
+            condition,
+            frames: get_usize("frames", 8),
+            psnr_every: get_usize("psnr_every", 0),
+            pipeline,
+            report_json: doc
+                .get("report_json")
+                .and_then(Json::as_str)
+                .map(String::from),
+            frame_ppm: doc
+                .get("frame_ppm")
+                .and_then(Json::as_str)
+                .map(String::from),
+        })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(&doc).with_context(|| format!("in {}", path.display()))
+    }
+
+    /// Execute the experiment: build the app, run the sequence, write
+    /// outputs, and return the report.
+    pub fn run(&self) -> Result<crate::coordinator::SequenceReport> {
+        let mut app =
+            crate::coordinator::App::new(self.scene_kind, self.gaussians, self.seed);
+        app.config = self.pipeline.clone();
+        let rep = app.run_sequence(self.condition, self.frames, self.psnr_every);
+        if let Some(path) = &self.report_json {
+            if let Some(dir) = Path::new(path).parent() {
+                std::fs::create_dir_all(dir).ok();
+            }
+            std::fs::write(path, rep.to_json().pretty())?;
+        }
+        if let Some(path) = &self.frame_ppm {
+            let (img, _) = app.render_one(app.scene.time_span.0);
+            crate::render::ppm::save(&img, Path::new(path))?;
+        }
+        Ok(rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = parse(
+            r#"{
+                "name": "smoke",
+                "scene": "dynamic",
+                "gaussians": 5000,
+                "width": 320, "height": 180,
+                "condition": "extreme",
+                "frames": 3,
+                "grid_n": 8,
+                "atg_threshold": 0.7,
+                "tile_block": 2,
+                "n_buckets": 16,
+                "use_aii": false,
+                "sram_kb": 64
+            }"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.name, "smoke");
+        assert_eq!(cfg.gaussians, 5000);
+        assert_eq!(cfg.pipeline.grid_n, 8);
+        assert_eq!(cfg.pipeline.atg.user_threshold, 0.7);
+        assert_eq!(cfg.pipeline.atg.tile_block, 2);
+        assert_eq!(cfg.pipeline.n_buckets, 16);
+        assert!(!cfg.pipeline.use_aii);
+        assert_eq!(cfg.pipeline.sram_bytes, 64 * 1024);
+        assert_eq!(cfg.condition, ViewCondition::Extreme);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let doc = parse(r#"{"typo_key": 1}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+        let doc = parse(r#"{"scene": "martian"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+        let doc = parse(r#"{"condition": "warp"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn defaults_are_paper_operating_point() {
+        let doc = parse(r#"{"scene": "static"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.pipeline.grid_n, 4);
+        assert_eq!(cfg.pipeline.n_buckets, 8);
+        assert_eq!(cfg.pipeline.atg.user_threshold, 0.5);
+        assert_eq!(cfg.pipeline.atg.tile_block, 4);
+        assert!(cfg.pipeline.use_drfc && cfg.pipeline.use_atg && cfg.pipeline.use_aii);
+    }
+
+    #[test]
+    fn end_to_end_run_from_config() {
+        let doc = parse(
+            r#"{"scene": "static", "gaussians": 2000, "width": 192,
+                "height": 108, "condition": "static", "frames": 2,
+                "psnr_every": 2}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        let rep = cfg.run().unwrap();
+        assert_eq!(rep.frames, 2);
+        assert!(rep.report.fps > 0.0);
+        assert!(rep.psnr_db > 20.0);
+    }
+}

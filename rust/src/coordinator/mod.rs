@@ -1,0 +1,10 @@
+//! L3 coordinator: drives whole rendering sequences — scene synthesis (with
+//! on-disk caching), trajectory generation, the frame pipeline with its
+//! posteriori state, PSNR evaluation against the reference renderer, and
+//! Table-I style report generation.
+
+pub mod app;
+pub mod config;
+
+pub use app::{App, SequenceReport};
+pub use config::ExperimentConfig;

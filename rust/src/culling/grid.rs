@@ -1,0 +1,361 @@
+//! Two-stage coarse grid partition (paper §3.1, Fig. 5(a)).
+//!
+//! Stage 1 distributes Gaussians into `n` coarse 1-D **temporal** grids by
+//! temporal mean; stage 2 partitions each temporal slice into `n×n×n` coarse
+//! **cubic** grids by spatial mean. A Gaussian lives in exactly one *central*
+//! cell (by its means); when its 3σ spatial extent or motion path spans
+//! neighbor cells, those cells hold *pointer references* (Fig. 5(b)).
+//!
+//! Static scenes use a single temporal slice; static Gaussians in dynamic
+//! scenes are replicated by reference across the temporal slices their
+//! (infinite) support covers — we place them centrally in slice 0 and
+//! reference them from every other slice, matching the paper's
+//! pointer-not-copy rule.
+
+use crate::math::{Aabb, Vec3};
+use crate::scene::Scene;
+
+/// Grid resolution: `n` temporal slices × `n³` cubic cells per slice
+/// (the paper's Fig. 9 sweeps n ∈ {4, 8, 16}; "the grid number represents
+/// both the depth of 1D time grids and the dimensions of cubic grids").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridConfig {
+    /// Temporal slices (1 for static scenes).
+    pub n_temporal: usize,
+    /// Cubic cells per axis.
+    pub n_spatial: usize,
+}
+
+impl GridConfig {
+    /// The paper's single-knob configuration.
+    pub fn new(n: usize) -> GridConfig {
+        GridConfig { n_temporal: n, n_spatial: n }
+    }
+
+    /// For static scenes: one temporal slice.
+    pub fn static_scene(n: usize) -> GridConfig {
+        GridConfig { n_temporal: 1, n_spatial: n }
+    }
+
+    pub fn cells_per_slice(&self) -> usize {
+        self.n_spatial * self.n_spatial * self.n_spatial
+    }
+
+    pub fn total_cells(&self) -> usize {
+        self.n_temporal * self.cells_per_slice()
+    }
+}
+
+/// One grid cell's membership lists (original Gaussian indices).
+#[derive(Debug, Clone, Default)]
+pub struct GridCell {
+    /// Gaussians stored centrally in this cell.
+    pub central: Vec<u32>,
+    /// Gaussians referenced by pointer (central elsewhere).
+    pub refs: Vec<u32>,
+}
+
+/// The built partition.
+#[derive(Debug, Clone)]
+pub struct GridPartition {
+    pub config: GridConfig,
+    /// Spatial bounds covered by the cubic grids.
+    pub bounds: Aabb,
+    /// Temporal span covered by the 1-D grids.
+    pub time_span: (f32, f32),
+    /// Cells in `t-major` order: `cell[t * n³ + (z*n + y)*n + x]`.
+    pub cells: Vec<GridCell>,
+}
+
+impl GridPartition {
+    /// Offline partition build (runs once per scene; not on the frame path).
+    pub fn build(scene: &Scene, mut config: GridConfig) -> GridPartition {
+        if !scene.dynamic {
+            config.n_temporal = 1;
+        }
+        let bounds = pad_bounds(scene.bounds());
+        let time_span = scene.time_span;
+        let mut cells = vec![GridCell::default(); config.total_cells()];
+
+        let part = GridPartitionRef {
+            config,
+            bounds,
+            time_span,
+        };
+
+        for (gi, g) in scene.gaussians.iter().enumerate() {
+            let gi = gi as u32;
+            // Central cell from the means.
+            let t_idx = part.temporal_index(if g.is_static() { time_span.0 } else { g.mu_t });
+            let s_idx = part.spatial_index(g.mu);
+            let central_cell = part.cell_of(t_idx, s_idx);
+            cells[central_cell].central.push(gi);
+
+            // Neighbor references: every other (t, cell) the support touches.
+            let r = g.radius3();
+            let (gt0, gt1) = g.time_extent();
+            let t_lo = part.temporal_index(gt0.max(time_span.0));
+            let t_hi = part.temporal_index(gt1.min(time_span.1));
+            for ti in t_lo..=t_hi {
+                // Spatial extent at the slice's representative times: the
+                // mean moves with velocity, so take the AABB of the swept
+                // 3σ sphere across the slice's time range.
+                let (st0, st1) = part.temporal_range(ti);
+                let m0 = g.mean_at(st0.max(gt0));
+                let m1 = g.mean_at(st1.min(gt1));
+                let swept = Aabb::new(m0.min(m1) - Vec3::splat(r), m0.max(m1) + Vec3::splat(r));
+                part.for_each_overlapping_cell(&swept, |si| {
+                    let ci = part.cell_of(ti, si);
+                    if ci != central_cell {
+                        cells[ci].refs.push(gi);
+                    }
+                });
+            }
+        }
+
+        GridPartition {
+            config,
+            bounds,
+            time_span,
+            cells,
+        }
+    }
+
+    #[inline]
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Flat cell index from temporal slice + spatial (x, y, z).
+    #[inline]
+    pub fn cell_of(&self, t: usize, s: usize) -> usize {
+        self.as_ref().cell_of(t, s)
+    }
+
+    /// AABB of a cell (by flat index).
+    pub fn cell_aabb(&self, flat: usize) -> Aabb {
+        let n = self.config.n_spatial;
+        let s = flat % self.config.cells_per_slice();
+        let x = s % n;
+        let y = (s / n) % n;
+        let z = s / (n * n);
+        let ext = self.bounds.extent();
+        let step = Vec3::new(ext.x / n as f32, ext.y / n as f32, ext.z / n as f32);
+        let min = self.bounds.min
+            + Vec3::new(step.x * x as f32, step.y * y as f32, step.z * z as f32);
+        Aabb::new(min, min + step)
+    }
+
+    /// Time range of a cell's temporal slice (by flat index).
+    pub fn cell_time_range(&self, flat: usize) -> (f32, f32) {
+        let t = flat / self.config.cells_per_slice();
+        self.as_ref().temporal_range(t)
+    }
+
+    /// Total stored references (pointer-table size driver).
+    pub fn total_refs(&self) -> usize {
+        self.cells.iter().map(|c| c.refs.len()).sum()
+    }
+
+    fn as_ref(&self) -> GridPartitionRef {
+        GridPartitionRef {
+            config: self.config,
+            bounds: self.bounds,
+            time_span: self.time_span,
+        }
+    }
+}
+
+/// The pure geometry of a partition (no membership) — shared by build and
+/// query code.
+#[derive(Debug, Clone, Copy)]
+struct GridPartitionRef {
+    config: GridConfig,
+    bounds: Aabb,
+    time_span: (f32, f32),
+}
+
+impl GridPartitionRef {
+    #[inline]
+    fn cell_of(&self, t: usize, s: usize) -> usize {
+        t * self.config.cells_per_slice() + s
+    }
+
+    fn temporal_index(&self, t: f32) -> usize {
+        let (t0, t1) = self.time_span;
+        let n = self.config.n_temporal;
+        if n <= 1 || t1 <= t0 {
+            return 0;
+        }
+        let f = ((t - t0) / (t1 - t0)).clamp(0.0, 1.0);
+        ((f * n as f32) as usize).min(n - 1)
+    }
+
+    fn temporal_range(&self, idx: usize) -> (f32, f32) {
+        let (t0, t1) = self.time_span;
+        let n = self.config.n_temporal.max(1);
+        let step = (t1 - t0) / n as f32;
+        (t0 + step * idx as f32, t0 + step * (idx + 1) as f32)
+    }
+
+    fn spatial_index(&self, p: Vec3) -> usize {
+        let n = self.config.n_spatial;
+        let ext = self.bounds.extent();
+        let f = |v: f32, lo: f32, e: f32| -> usize {
+            if e <= 0.0 {
+                return 0;
+            }
+            (((v - lo) / e * n as f32) as usize).min(n - 1)
+        };
+        let x = f(p.x, self.bounds.min.x, ext.x);
+        let y = f(p.y, self.bounds.min.y, ext.y);
+        let z = f(p.z, self.bounds.min.z, ext.z);
+        (z * n + y) * n + x
+    }
+
+    fn for_each_overlapping_cell(&self, b: &Aabb, mut f: impl FnMut(usize)) {
+        let n = self.config.n_spatial;
+        let ext = self.bounds.extent();
+        let idx = |v: f32, lo: f32, e: f32| -> usize {
+            if e <= 0.0 {
+                return 0;
+            }
+            (((v - lo) / e * n as f32).floor().max(0.0) as usize).min(n - 1)
+        };
+        let x0 = idx(b.min.x, self.bounds.min.x, ext.x);
+        let x1 = idx(b.max.x, self.bounds.min.x, ext.x);
+        let y0 = idx(b.min.y, self.bounds.min.y, ext.y);
+        let y1 = idx(b.max.y, self.bounds.min.y, ext.y);
+        let z0 = idx(b.min.z, self.bounds.min.z, ext.z);
+        let z1 = idx(b.max.z, self.bounds.min.z, ext.z);
+        for z in z0..=z1 {
+            for y in y0..=y1 {
+                for x in x0..=x1 {
+                    f((z * n + y) * n + x);
+                }
+            }
+        }
+    }
+}
+
+/// Pad scene bounds by 1 % so boundary means index cleanly.
+fn pad_bounds(b: Aabb) -> Aabb {
+    if b.is_empty() {
+        return Aabb::new(Vec3::ZERO, Vec3::ONE);
+    }
+    let pad = b.extent() * 0.005 + Vec3::splat(1e-4);
+    Aabb::new(b.min - pad, b.max + pad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::synth::{SceneKind, SynthParams};
+
+    #[test]
+    fn every_gaussian_has_exactly_one_central_cell() {
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 3000).generate();
+        let grid = GridPartition::build(&scene, GridConfig::new(4));
+        let total: usize = grid.cells.iter().map(|c| c.central.len()).sum();
+        assert_eq!(total, scene.len());
+    }
+
+    #[test]
+    fn static_scene_collapses_to_one_temporal_slice() {
+        let scene = SynthParams::new(SceneKind::StaticLarge, 1000).generate();
+        let grid = GridPartition::build(&scene, GridConfig::new(8));
+        assert_eq!(grid.config.n_temporal, 1);
+        assert_eq!(grid.n_cells(), 8 * 8 * 8);
+    }
+
+    #[test]
+    fn central_cell_contains_mean() {
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 1000).generate();
+        let grid = GridPartition::build(&scene, GridConfig::new(4));
+        for (ci, cell) in grid.cells.iter().enumerate() {
+            let b = grid.cell_aabb(ci);
+            for &gi in &cell.central {
+                let g = &scene.gaussians[gi as usize];
+                assert!(
+                    b.contains(g.mu),
+                    "gaussian {gi} mean {:?} not inside its central cell {ci} {:?}",
+                    g.mu,
+                    b
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refs_never_duplicate_central() {
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 2000).generate();
+        let grid = GridPartition::build(&scene, GridConfig::new(4));
+        for cell in &grid.cells {
+            for &r in &cell.refs {
+                assert!(!cell.central.contains(&r));
+            }
+        }
+    }
+
+    #[test]
+    fn gaussians_reachable_across_their_temporal_support() {
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 2000).generate();
+        let grid = GridPartition::build(&scene, GridConfig::new(4));
+        let (t0, t1) = grid.time_span;
+        let n_slices = grid.config.n_temporal;
+        let slice_of = |t: f32| -> usize {
+            let f = ((t - t0) / (t1 - t0)).clamp(0.0, 1.0);
+            ((f * n_slices as f32) as usize).min(n_slices - 1)
+        };
+        // Every Gaussian must appear (central or ref) in every temporal
+        // slice its 3σ time extent overlaps — otherwise DR-FC would lose it.
+        for gi in (0..scene.len() as u32).step_by(37) {
+            let g = &scene.gaussians[gi as usize];
+            let (gt0, gt1) = g.time_extent();
+            let lo = slice_of(gt0.max(t0));
+            let hi = slice_of(gt1.min(t1));
+            let mut slices_seen = vec![false; n_slices];
+            for (ci, cell) in grid.cells.iter().enumerate() {
+                if cell.central.contains(&gi) || cell.refs.contains(&gi) {
+                    slices_seen[ci / grid.config.cells_per_slice()] = true;
+                }
+            }
+            for s in lo..=hi {
+                assert!(
+                    slices_seen[s],
+                    "gaussian {gi} with time extent ({gt0},{gt1}) missing from slice {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn finer_grids_have_more_cells_fewer_central_per_cell() {
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 5000).generate();
+        let g4 = GridPartition::build(&scene, GridConfig::new(4));
+        let g8 = GridPartition::build(&scene, GridConfig::new(8));
+        assert!(g8.n_cells() > g4.n_cells());
+        let max4 = g4.cells.iter().map(|c| c.central.len()).max().unwrap();
+        let max8 = g8.cells.iter().map(|c| c.central.len()).max().unwrap();
+        assert!(max8 <= max4);
+    }
+
+    #[test]
+    fn cell_aabbs_tile_bounds() {
+        let scene = SynthParams::new(SceneKind::StaticLarge, 500).generate();
+        let grid = GridPartition::build(&scene, GridConfig::new(4));
+        let mut union = Aabb::EMPTY;
+        let mut volume = 0.0f64;
+        for ci in 0..grid.n_cells() {
+            let b = grid.cell_aabb(ci);
+            union = union.union(&b);
+            let e = b.extent();
+            volume += e.x as f64 * e.y as f64 * e.z as f64;
+        }
+        let be = grid.bounds.extent();
+        let bounds_volume = be.x as f64 * be.y as f64 * be.z as f64;
+        assert!((volume / bounds_volume - 1.0).abs() < 1e-3);
+        assert!((union.min - grid.bounds.min).length() < 1e-3);
+        assert!((union.max - grid.bounds.max).length() < 1e-3);
+    }
+}

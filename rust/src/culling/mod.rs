@@ -1,0 +1,40 @@
+//! Frustum culling: the paper's DR-FC (DRAM-access-reduction frustum
+//! culling, §3.1) and the conventional fetch-everything baseline it is
+//! compared against in Fig. 9.
+
+pub mod conventional;
+pub mod drfc;
+pub mod grid;
+
+pub use drfc::{CullOutput, DrFc};
+pub use grid::{GridCell, GridConfig, GridPartition};
+
+pub use crate::math::frustum::Containment;
+
+use crate::camera::Camera;
+use crate::math::Frustum;
+use crate::scene::Gaussian4D;
+
+/// Exact per-Gaussian visibility at time `t`: temporal support + a
+/// conservative 3σ sphere-vs-frustum test. Both DR-FC and the conventional
+/// path apply this after their respective fetch strategies; they differ in
+/// *which Gaussians reach this test via DRAM*.
+pub fn gaussian_visible(g: &Gaussian4D, cam: &Camera, t: f32) -> bool {
+    gaussian_visible_in(g, &cam.frustum(), t)
+}
+
+/// Hot-path variant with a precomputed frustum (building the frustum is
+/// ~6 plane extractions + normalizations — done once per frame, not once
+/// per Gaussian; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn gaussian_visible_in(g: &Gaussian4D, frustum: &Frustum, t: f32) -> bool {
+    // Temporal cut: beyond 3σₜ the temporal weight < 1.2e-2 — the paper's
+    // temporal slicing treats those as invisible.
+    if !g.is_static() {
+        let (t0, t1) = g.time_extent();
+        if t < t0 || t > t1 {
+            return false;
+        }
+    }
+    frustum.test_sphere(g.mean_at(t), g.radius3())
+}

@@ -1,0 +1,215 @@
+//! DD3D-Flow exponential evaluation (paper §3.4, Fig. 8(a)) — bit-faithful.
+//!
+//! **Phase 1 — base conversion**: `e^x → 2^(x/ln2)`; the 1/ln2 factor is
+//! fused *offline* into the Gaussian parameters, so the hardware only ever
+//! sees base-2 exponents `x'`.
+//!
+//! **Phase 2 — sign-integer-fraction (SIF) decouple**: `x' = int + frac`
+//! with `frac ∈ [0,1)` (for negative `x'` this is exactly the two's-
+//! complement of the fraction with the borrow folded into `int`). `2^int`
+//! is a pure exponent shift; `2^frac` uses a **12-bit LUT split into four
+//! 3-bit segments, each an 8-entry DCIM table**:
+//!
+//! `2^frac = 2^(s₁·2⁻³) · 2^(s₂·2⁻⁶) · 2^(s₃·2⁻⁹) · 2^(s₄·2⁻¹²)`
+//!
+//! — four cascaded DCIM multiply stages, matching the paper's "12-bit LUT
+//! divided into four segments, each requiring 8 LUT values … four cascaded
+//! DCIM stages". LUT entries and the cascade multiplies are FP16-quantized,
+//! as they live in the DCIM arrays.
+
+use crate::math::f16;
+
+/// Number of fraction bits (paper: 12, shown to preserve PSNR).
+pub const DEFAULT_FRAC_BITS: u32 = 12;
+/// Segments and entries: 4 × 3-bit → 8 entries each.
+pub const SEGMENTS: usize = 4;
+pub const ENTRIES_PER_SEGMENT: usize = 8;
+
+/// The LUT-based base-2 exponential unit.
+#[derive(Debug, Clone)]
+pub struct ExpLut {
+    /// `lut[k][v] = fp16(2^(v · 2^-(3(k+1))))`.
+    lut: [[f32; ENTRIES_PER_SEGMENT]; SEGMENTS],
+    /// Fraction bits actually used (ablation knob; paper value 12).
+    pub frac_bits: u32,
+    bits_per_segment: u32,
+}
+
+impl ExpLut {
+    /// Paper configuration: 12 fraction bits in 4×3-bit segments.
+    pub fn paper() -> ExpLut {
+        ExpLut::with_frac_bits(DEFAULT_FRAC_BITS)
+    }
+
+    /// Ablation constructor: `frac_bits` must be a multiple of
+    /// [`SEGMENTS`] (we keep 4 segments and scale the bits per segment).
+    /// 12 bits is the ceiling: 4 segments × 8-entry tables hold at most
+    /// 3 bits each — precisely the paper's chosen geometry.
+    pub fn with_frac_bits(frac_bits: u32) -> ExpLut {
+        assert!(
+            (4..=12).contains(&frac_bits) && frac_bits % SEGMENTS as u32 == 0,
+            "frac_bits must be in 4..=12 and divisible by {SEGMENTS}              (8-entry segments hold at most 3 bits)"
+        );
+        let bps = frac_bits / SEGMENTS as u32;
+        let mut lut = [[0.0f32; ENTRIES_PER_SEGMENT]; SEGMENTS];
+        for (k, seg) in lut.iter_mut().enumerate() {
+            for (v, entry) in seg.iter_mut().enumerate() {
+                let weight = 2.0f64.powi(-(bps as i32) * (k as i32 + 1));
+                *entry = f16::quantize(2.0f64.powf(v as f64 * weight) as f32);
+            }
+        }
+        ExpLut { lut, frac_bits, bits_per_segment: bps }
+    }
+
+    /// `2^x` through the hardware dataflow (shift + 4 cascaded FP16 stages).
+    pub fn exp2(&self, x: f32) -> f32 {
+        if !x.is_finite() {
+            return if x > 0.0 { f32::INFINITY } else { 0.0 };
+        }
+        // SIF decouple.
+        let int = x.floor();
+        let frac = x - int; // ∈ [0,1), two's-complement handling for x < 0
+        let scale = (1u64 << self.frac_bits) as f32;
+        let q = ((frac * scale) as u32).min((1u32 << self.frac_bits) - 1);
+
+        // Cascaded LUT stages (FP16 multiplies, as in the DCIM arrays).
+        let mask = (1u32 << self.bits_per_segment) - 1;
+        let mut acc = 1.0f32;
+        for k in 0..SEGMENTS {
+            let shift = self.frac_bits - self.bits_per_segment * (k as u32 + 1);
+            let idx = ((q >> shift) & mask) as usize;
+            // Entries beyond table width (bps < 3 unused slots) index low.
+            acc = f16::quantize(acc * self.lut[k][idx.min(ENTRIES_PER_SEGMENT - 1)]);
+        }
+
+        // 2^int is an exponent shift (exact in FP until under/overflow).
+        let shifted = libm_exp2i(int as i32);
+        acc * shifted
+    }
+
+    /// `e^x` with the ln2 base conversion applied here (in deployment the
+    /// 1/ln2 is folded into the parameters offline — see `mapping`).
+    pub fn exp(&self, x: f32) -> f32 {
+        self.exp2(x * std::f32::consts::LOG2_E)
+    }
+
+    /// Worst-case relative error of the LUT path over a sample grid —
+    /// used by the precision ablation (paper claim: 12 bits ⇒ no PSNR loss).
+    pub fn max_rel_error(&self, lo: f32, hi: f32, steps: usize) -> f32 {
+        let mut worst = 0.0f32;
+        for i in 0..=steps {
+            let x = lo + (hi - lo) * i as f32 / steps as f32;
+            let approx = self.exp2(x);
+            let exact = 2.0f64.powf(x as f64) as f32;
+            if exact > 0.0 {
+                worst = worst.max(((approx - exact) / exact).abs());
+            }
+        }
+        worst
+    }
+
+    /// LUT storage footprint in DCIM (bits): entries × FP16.
+    pub fn storage_bits(&self) -> usize {
+        SEGMENTS * ENTRIES_PER_SEGMENT * 16
+    }
+}
+
+/// Exact 2^i for integer i via exponent construction (no libm dependency).
+fn libm_exp2i(i: i32) -> f32 {
+    match i {
+        i if i > 127 => f32::INFINITY,
+        i if i >= -126 => f32::from_bits((((i + 127) as u32) << 23) as u32),
+        // Subnormal range: build via division to keep gradual underflow.
+        i if i >= -149 => f32::from_bits(1u32 << (149 + i) as u32),
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, close};
+
+    #[test]
+    fn exact_at_integer_exponents() {
+        let lut = ExpLut::paper();
+        for i in -20..=20 {
+            let got = lut.exp2(i as f32);
+            let exact = 2.0f32.powi(i);
+            assert!(
+                ((got - exact) / exact).abs() < 1e-3,
+                "2^{i}: {got} vs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_12bit_error_small_enough_for_psnr() {
+        let lut = ExpLut::paper();
+        // Blend exponents live in roughly [-30, 0] (alpha cutoff at ~1/255²).
+        let err = lut.max_rel_error(-30.0, 0.0, 20_000);
+        // 2^-12·ln2 ≈ 1.7e-4 from truncation + FP16 cascade ≈ few × 1e-3.
+        assert!(err < 4e-3, "12-bit LUT rel error {err}");
+    }
+
+    #[test]
+    fn fewer_bits_more_error_monotonic() {
+        let e12 = ExpLut::with_frac_bits(12).max_rel_error(-10.0, 0.0, 5000);
+        let e8 = ExpLut::with_frac_bits(8).max_rel_error(-10.0, 0.0, 5000);
+        let e4 = ExpLut::with_frac_bits(4).max_rel_error(-10.0, 0.0, 5000);
+        assert!(e4 > e8, "4-bit {e4} vs 8-bit {e8}");
+        assert!(e8 > e12, "8-bit {e8} vs 12-bit {e12}");
+        // 4 bits is catastrophically coarse — the ablation's bad end.
+        assert!(e4 > 0.02);
+    }
+
+    #[test]
+    fn exp_matches_std_exp() {
+        let lut = ExpLut::paper();
+        for x in [-8.0f32, -2.5, -0.7, 0.0] {
+            let got = lut.exp(x);
+            let exact = x.exp();
+            assert!(
+                ((got - exact) / exact.max(1e-12)).abs() < 5e-3,
+                "exp({x}): {got} vs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn handles_extremes() {
+        let lut = ExpLut::paper();
+        assert_eq!(lut.exp2(f32::NEG_INFINITY), 0.0);
+        assert_eq!(lut.exp2(f32::INFINITY), f32::INFINITY);
+        assert_eq!(lut.exp2(-200.0), 0.0); // underflow
+        assert!(lut.exp2(-126.0) > 0.0);
+    }
+
+    #[test]
+    fn property_relative_error_bounded_on_blend_range() {
+        let lut = ExpLut::paper();
+        check(500, 21, |rng| {
+            let x = -30.0 + 30.0 * rng.f32();
+            let got = lut.exp2(x);
+            let exact = 2.0f64.powf(x as f64) as f32;
+            close(got, exact, 1e-12, 4e-3, "2^x")
+        });
+    }
+
+    #[test]
+    fn storage_matches_paper_geometry() {
+        let lut = ExpLut::paper();
+        // 4 segments × 8 entries × 16 bits = 512 bits of LUT in DCIM.
+        assert_eq!(lut.storage_bits(), 512);
+    }
+
+    #[test]
+    fn exp2i_helper_edges() {
+        assert_eq!(super::libm_exp2i(0), 1.0);
+        assert_eq!(super::libm_exp2i(10), 1024.0);
+        assert_eq!(super::libm_exp2i(-1), 0.5);
+        assert_eq!(super::libm_exp2i(128), f32::INFINITY);
+        assert_eq!(super::libm_exp2i(-150), 0.0);
+        assert!(super::libm_exp2i(-149) > 0.0);
+    }
+}

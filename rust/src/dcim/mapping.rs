@@ -1,0 +1,99 @@
+//! Blend-stage → DCIM operation mapping (DD3D-Flow, paper §3.4).
+//!
+//! For a tile of `pixels` and `gaussians` splats the DCIM tier executes, per
+//! (pixel, splat) pair:
+//!
+//! * the merged exponent `P_i(u,v,t)` — the conic quadratic form
+//!   (dx², dx·dy, dy² products + weighted sum: 6 MACs; the temporal factor
+//!   is pre-merged into the exponent offline, which is exactly why the
+//!   hardware evaluates **one** exponential per pair);
+//! * the exp2 cascade — 4 LUT lookups + 4 multiplies (counted as 4 LUT ops
+//!   + 4 MACs);
+//! * α·RGB weighting — 3 MACs (RGB stored in DCIM, precomputed via SH);
+//!
+//! plus per-splat one-off work: SH color evaluation (degree-2: 9 basis × 3
+//! channels = 27 MACs + ~15 basis-construction MACs).
+//!
+//! Transmittance accumulation happens in the NMC units and is charged there.
+
+use super::macro_model::DcimMacro;
+
+/// MACs per (pixel, splat) pair for the merged exponent.
+pub const MACS_EXPONENT: u64 = 6;
+/// Cascade stages per exponential.
+pub const LUT_STAGES: u64 = 4;
+/// MACs per cascade (one multiply per stage).
+pub const MACS_CASCADE: u64 = 4;
+/// MACs per (pixel, splat) for α·RGB.
+pub const MACS_COLOR: u64 = 3;
+/// Per-splat SH evaluation MACs (basis + projection).
+pub const MACS_SH: u64 = 27 + 15;
+
+/// Operation counts for one tile's blend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlendOpCounts {
+    pub pairs: u64,
+    pub macs: u64,
+    pub lut_lookups: u64,
+}
+
+impl BlendOpCounts {
+    /// Counts for a tile of `pixels` × `gaussians` (upper bound: no early
+    /// termination; pass the post-termination pair count for exact numbers).
+    pub fn for_tile(pixels: u64, gaussians: u64) -> BlendOpCounts {
+        let pairs = pixels * gaussians;
+        BlendOpCounts {
+            pairs,
+            macs: pairs * (MACS_EXPONENT + MACS_CASCADE + MACS_COLOR) + gaussians * MACS_SH,
+            lut_lookups: pairs * LUT_STAGES,
+        }
+    }
+
+    /// Exact counts from measured blended pairs (early termination applied)
+    /// plus the per-splat SH work.
+    pub fn from_pairs(pairs: u64, gaussians: u64) -> BlendOpCounts {
+        BlendOpCounts {
+            pairs,
+            macs: pairs * (MACS_EXPONENT + MACS_CASCADE + MACS_COLOR) + gaussians * MACS_SH,
+            lut_lookups: pairs * LUT_STAGES,
+        }
+    }
+
+    /// Charge these counts to a DCIM macro model.
+    pub fn charge(&self, dcim: &mut DcimMacro) {
+        dcim.macs(self.macs);
+        dcim.lut_lookups(self.lut_lookups);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcim::macro_model::DcimConfig;
+
+    #[test]
+    fn tile_counts_scale_with_pairs() {
+        let c = BlendOpCounts::for_tile(256, 100);
+        assert_eq!(c.pairs, 25_600);
+        assert_eq!(c.lut_lookups, 25_600 * 4);
+        assert_eq!(c.macs, 25_600 * 13 + 100 * 42);
+    }
+
+    #[test]
+    fn early_termination_reduces_work() {
+        let full = BlendOpCounts::for_tile(256, 100);
+        let cut = BlendOpCounts::from_pairs(10_000, 100);
+        assert!(cut.macs < full.macs);
+        assert!(cut.lut_lookups < full.lut_lookups);
+    }
+
+    #[test]
+    fn charge_accumulates_into_macro() {
+        let mut m = DcimMacro::new(DcimConfig::paper_dynamic());
+        let c = BlendOpCounts::for_tile(256, 10);
+        c.charge(&mut m);
+        assert_eq!(m.stats().macs, c.macs);
+        assert_eq!(m.stats().lut_lookups, c.lut_lookups);
+        assert!(m.stats().energy_pj > 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Digital compute-in-memory (DCIM) modeling: the DD3D-Flow exponential
+//! dataflow (paper §3.4), the gain-cell DCIM macro model parameterized from
+//! the measured 16 nm prototype (ISSCC'24 [5]), the near-memory-compute
+//! transmittance accumulator, and the blend→DCIM operation mapping.
+
+pub mod exp_lut;
+pub mod macro_model;
+pub mod mapping;
+pub mod nmc;
+
+pub use exp_lut::ExpLut;
+pub use macro_model::{DcimConfig, DcimMacro, DcimStats};
+pub use mapping::BlendOpCounts;
+pub use nmc::NmcAccumulator;

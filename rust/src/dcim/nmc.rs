@@ -1,0 +1,149 @@
+//! Near-memory-compute (NMC) transmittance accumulation (paper §3.4,
+//! Fig. 8(b)): units at the DCIM periphery receive α values and locally
+//! accumulate the running transmittance Π(1−αⱼ), then combine it with the
+//! DCIM-computed α·RGB to produce the final pixel output (eq. 9).
+
+/// Per-pixel front-to-back blending state kept in an NMC unit.
+#[derive(Debug, Clone, Copy)]
+pub struct PixelState {
+    /// Accumulated RGB.
+    pub rgb: [f32; 3],
+    /// Remaining transmittance Π(1−αⱼ).
+    pub transmittance: f32,
+}
+
+impl Default for PixelState {
+    fn default() -> Self {
+        PixelState { rgb: [0.0; 3], transmittance: 1.0 }
+    }
+}
+
+/// Early-termination threshold: once transmittance falls below this the
+/// pixel is saturated and further splats are skipped (3DGS convention).
+pub const T_MIN: f32 = 1.0 / 255.0;
+
+/// NMC activity counters + energy.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NmcStats {
+    /// blend steps executed (α received).
+    pub blend_ops: u64,
+    /// pixels that early-terminated.
+    pub saturated: u64,
+    pub energy_pj: f64,
+}
+
+/// The accumulator bank: models energy/op and provides the arithmetic used
+/// by the hardware-faithful renderer.
+#[derive(Debug)]
+pub struct NmcAccumulator {
+    /// Energy per blend step (1 mul for T update + 3 MAC for RGB, 16 nm
+    /// digital near-memory logic).
+    pub e_blend_pj: f64,
+    stats: NmcStats,
+}
+
+impl NmcAccumulator {
+    pub fn new() -> NmcAccumulator {
+        NmcAccumulator { e_blend_pj: 0.35, stats: NmcStats::default() }
+    }
+
+    /// One front-to-back blend step: `state` ← state ⊕ (α, rgb).
+    /// Returns `false` once the pixel saturates (caller should stop).
+    #[inline]
+    pub fn blend(&mut self, state: &mut PixelState, alpha: f32, rgb: [f32; 3]) -> bool {
+        self.stats.blend_ops += 1;
+        self.stats.energy_pj += self.e_blend_pj;
+        let a = alpha.clamp(0.0, 0.999);
+        let w = a * state.transmittance;
+        state.rgb[0] += w * rgb[0];
+        state.rgb[1] += w * rgb[1];
+        state.rgb[2] += w * rgb[2];
+        state.transmittance *= 1.0 - a;
+        if state.transmittance < T_MIN {
+            self.stats.saturated += 1;
+            false
+        } else {
+            true
+        }
+    }
+
+    pub fn stats(&self) -> NmcStats {
+        self.stats
+    }
+
+    pub fn reset(&mut self) {
+        self.stats = NmcStats::default();
+    }
+}
+
+impl Default for NmcAccumulator {
+    fn default() -> Self {
+        NmcAccumulator::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_opaque_splat_dominates() {
+        let mut nmc = NmcAccumulator::new();
+        let mut px = PixelState::default();
+        nmc.blend(&mut px, 0.9, [1.0, 0.5, 0.0]);
+        assert!((px.rgb[0] - 0.9).abs() < 1e-6);
+        assert!((px.rgb[1] - 0.45).abs() < 1e-6);
+        assert!((px.transmittance - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn front_to_back_order_matters() {
+        let mut nmc = NmcAccumulator::new();
+        let mut a = PixelState::default();
+        nmc.blend(&mut a, 0.8, [1.0, 0.0, 0.0]);
+        nmc.blend(&mut a, 0.8, [0.0, 1.0, 0.0]);
+        // First (red) splat dominates.
+        assert!(a.rgb[0] > 3.0 * a.rgb[1]);
+    }
+
+    #[test]
+    fn saturation_stops_blending() {
+        let mut nmc = NmcAccumulator::new();
+        let mut px = PixelState::default();
+        let mut steps = 0;
+        for _ in 0..100 {
+            steps += 1;
+            if !nmc.blend(&mut px, 0.9, [0.5; 3]) {
+                break;
+            }
+        }
+        assert!(steps < 10, "0.9-alpha splats saturate quickly: {steps}");
+        assert_eq!(nmc.stats().saturated, 1);
+        assert_eq!(nmc.stats().blend_ops, steps);
+    }
+
+    #[test]
+    fn transmittance_times_color_bounded() {
+        // Blending any number of [0,1] colors keeps rgb in [0,1].
+        let mut nmc = NmcAccumulator::new();
+        let mut px = PixelState::default();
+        for i in 0..50 {
+            let alpha = 0.02 + 0.01 * (i % 7) as f32;
+            if !nmc.blend(&mut px, alpha, [1.0, 1.0, 1.0]) {
+                break;
+            }
+        }
+        for c in px.rgb {
+            assert!((0.0..=1.0 + 1e-5).contains(&c));
+        }
+    }
+
+    #[test]
+    fn energy_per_op() {
+        let mut nmc = NmcAccumulator::new();
+        let mut px = PixelState::default();
+        nmc.blend(&mut px, 0.1, [0.5; 3]);
+        nmc.blend(&mut px, 0.1, [0.5; 3]);
+        assert!((nmc.stats().energy_pj - 0.7).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,135 @@
+//! Energy / power / area accounting (the Table I roll-up).
+//!
+//! Per-op energies for the 16 nm digital blocks come from published 16 nm
+//! op-energy surveys (the paper verifies its digital modules with 16 nm
+//! SPICE; we encode the same class of constants — DESIGN.md §2). DRAM and
+//! SRAM energies are charged inside their models; DCIM inside the macro
+//! model; this module owns the *digital* ops (sorting comparators,
+//! Union-Find, intersection tests, control) and the final roll-up.
+
+pub mod report;
+
+pub use report::{PowerReport, StageLatency};
+
+/// 16 nm digital per-op energies (pJ).
+pub mod ops {
+    /// FP16 comparator (sorting network compare-swap).
+    pub const E_CMP_FP16_PJ: f64 = 0.05;
+    /// Union-Find operation (find/union incl. its SRAM pointer traffic).
+    pub const E_UNIONFIND_PJ: f64 = 2.0;
+    /// Gaussian-tile intersection test (bbox + conic extent, few FP16 ops).
+    pub const E_INTERSECT_PJ: f64 = 0.8;
+    /// Per-Gaussian frustum test (sphere vs 6 planes).
+    pub const E_FRUSTUM_PJ: f64 = 1.2;
+    /// Per-cell coarse grid test (AABB vs 6 planes, runs on metadata only).
+    pub const E_GRID_TEST_PJ: f64 = 1.5;
+    /// Bucket routing decision per element.
+    pub const E_ROUTE_PJ: f64 = 0.08;
+    /// Generic FP16 MAC in plain digital logic (≈ 12× the DCIM MAC —
+    /// the gap that motivates DD3D-Flow).
+    pub const E_MAC_FP16_DIGITAL_PJ: f64 = 0.4;
+}
+
+/// Static (leakage + clock + controller) power of the accelerator (W).
+pub const IDLE_POWER_W: f64 = 0.045;
+
+/// Area constants (mm², 16 nm).
+pub mod area {
+    /// 256 KB SRAM buffer.
+    pub const SRAM_256KB_MM2: f64 = 1.15;
+    /// Digital logic (sorter, culling controller, ATG, NoC) — dynamic config.
+    pub const LOGIC_DYNAMIC_MM2: f64 = 1.05;
+    /// Digital logic — static config (smaller sorter/no temporal path).
+    pub const LOGIC_STATIC_MM2: f64 = 0.55;
+}
+
+/// Energy accumulated over one frame, by component (pJ).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FrameEnergy {
+    pub dram_pj: f64,
+    pub sram_pj: f64,
+    pub dcim_pj: f64,
+    pub nmc_pj: f64,
+    pub sort_pj: f64,
+    pub atg_pj: f64,
+    pub cull_pj: f64,
+    pub intersect_pj: f64,
+}
+
+impl FrameEnergy {
+    pub fn total_pj(&self) -> f64 {
+        self.dram_pj
+            + self.sram_pj
+            + self.dcim_pj
+            + self.nmc_pj
+            + self.sort_pj
+            + self.atg_pj
+            + self.cull_pj
+            + self.intersect_pj
+    }
+
+    pub fn total_mj(&self) -> f64 {
+        self.total_pj() * 1e-9
+    }
+
+    pub fn add(&mut self, o: &FrameEnergy) {
+        self.dram_pj += o.dram_pj;
+        self.sram_pj += o.sram_pj;
+        self.dcim_pj += o.dcim_pj;
+        self.nmc_pj += o.nmc_pj;
+        self.sort_pj += o.sort_pj;
+        self.atg_pj += o.atg_pj;
+        self.cull_pj += o.cull_pj;
+        self.intersect_pj += o.intersect_pj;
+    }
+
+    pub fn scale(&self, s: f64) -> FrameEnergy {
+        FrameEnergy {
+            dram_pj: self.dram_pj * s,
+            sram_pj: self.sram_pj * s,
+            dcim_pj: self.dcim_pj * s,
+            nmc_pj: self.nmc_pj * s,
+            sort_pj: self.sort_pj * s,
+            atg_pj: self.atg_pj * s,
+            cull_pj: self.cull_pj * s,
+            intersect_pj: self.intersect_pj * s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_sums_components() {
+        let e = FrameEnergy {
+            dram_pj: 1.0,
+            sram_pj: 2.0,
+            dcim_pj: 3.0,
+            nmc_pj: 4.0,
+            sort_pj: 5.0,
+            atg_pj: 6.0,
+            cull_pj: 7.0,
+            intersect_pj: 8.0,
+        };
+        assert_eq!(e.total_pj(), 36.0);
+        assert!((e.total_mj() - 36e-9).abs() < 1e-20);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = FrameEnergy { dram_pj: 10.0, ..Default::default() };
+        let b = FrameEnergy { dram_pj: 5.0, sort_pj: 3.0, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.dram_pj, 15.0);
+        assert_eq!(a.sort_pj, 3.0);
+        let h = a.scale(0.5);
+        assert_eq!(h.dram_pj, 7.5);
+    }
+
+    #[test]
+    fn dcim_mac_far_cheaper_than_digital() {
+        assert!(ops::E_MAC_FP16_DIGITAL_PJ > 10.0 * 0.033);
+    }
+}

@@ -1,0 +1,136 @@
+//! FPS / power / area roll-up — produces the rows of Table I.
+
+use super::{area, FrameEnergy, IDLE_POWER_W};
+use crate::util::json::Json;
+
+/// Per-stage latency of one frame (ns). The accelerator pipelines stages
+/// tile-wise, so steady-state throughput is set by the slowest stage; the
+/// first frame pays the sum.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageLatency {
+    pub preprocess_ns: f64,
+    pub sort_ns: f64,
+    pub blend_ns: f64,
+}
+
+impl StageLatency {
+    /// Steady-state frame time under tile-level pipelining.
+    pub fn pipelined_ns(&self) -> f64 {
+        self.preprocess_ns.max(self.sort_ns).max(self.blend_ns)
+    }
+
+    /// Un-pipelined (first-frame / single-buffer) frame time.
+    pub fn sequential_ns(&self) -> f64 {
+        self.preprocess_ns + self.sort_ns + self.blend_ns
+    }
+
+    pub fn add(&mut self, o: &StageLatency) {
+        self.preprocess_ns += o.preprocess_ns;
+        self.sort_ns += o.sort_ns;
+        self.blend_ns += o.blend_ns;
+    }
+
+    pub fn scale(&self, s: f64) -> StageLatency {
+        StageLatency {
+            preprocess_ns: self.preprocess_ns * s,
+            sort_ns: self.sort_ns * s,
+            blend_ns: self.blend_ns * s,
+        }
+    }
+}
+
+/// A Table-I style report for one configuration + scene.
+#[derive(Debug, Clone)]
+pub struct PowerReport {
+    pub label: String,
+    pub fps: f64,
+    pub power_w: f64,
+    pub area_mm2: f64,
+    pub energy_per_frame_mj: f64,
+    pub latency: StageLatency,
+    pub energy: FrameEnergy,
+}
+
+impl PowerReport {
+    /// Build from averaged per-frame energy + latency.
+    /// `dcim_area_mm2` comes from the DCIM config; static/dynamic selects
+    /// the digital-logic area class.
+    pub fn from_frame(
+        label: impl Into<String>,
+        energy: FrameEnergy,
+        latency: StageLatency,
+        dcim_area_mm2: f64,
+        dynamic: bool,
+    ) -> PowerReport {
+        let frame_s = (latency.pipelined_ns() * 1e-9).max(1e-12);
+        let fps = 1.0 / frame_s;
+        let dynamic_power = energy.total_pj() * 1e-12 / frame_s;
+        let logic = if dynamic { area::LOGIC_DYNAMIC_MM2 } else { area::LOGIC_STATIC_MM2 };
+        PowerReport {
+            label: label.into(),
+            fps,
+            power_w: dynamic_power + IDLE_POWER_W,
+            area_mm2: dcim_area_mm2 + area::SRAM_256KB_MM2 + logic,
+            energy_per_frame_mj: energy.total_mj(),
+            latency,
+            energy,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("label", self.label.as_str())
+            .set("fps", self.fps)
+            .set("power_w", self.power_w)
+            .set("area_mm2", self.area_mm2)
+            .set("energy_per_frame_mj", self.energy_per_frame_mj)
+            .set("preprocess_ns", self.latency.preprocess_ns)
+            .set("sort_ns", self.latency.sort_ns)
+            .set("blend_ns", self.latency.blend_ns)
+            .set("dram_pj", self.energy.dram_pj)
+            .set("dcim_pj", self.energy.dcim_pj)
+            .set("sram_pj", self.energy.sram_pj)
+    }
+
+    /// Formatted one-line summary (bench output).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<28} {:>7.1} FPS {:>7.3} W {:>6.2} mm² {:>8.4} mJ/frame",
+            self.label, self.fps, self.power_w, self.area_mm2, self.energy_per_frame_mj
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipelined_is_bottleneck_stage() {
+        let l = StageLatency { preprocess_ns: 1.0e6, sort_ns: 2.0e6, blend_ns: 4.0e6 };
+        assert_eq!(l.pipelined_ns(), 4.0e6);
+        assert_eq!(l.sequential_ns(), 7.0e6);
+    }
+
+    #[test]
+    fn report_math() {
+        let energy = FrameEnergy { dram_pj: 1.0e9, dcim_pj: 1.0e9, ..Default::default() };
+        let latency = StageLatency { preprocess_ns: 1.0e6, sort_ns: 1.0e6, blend_ns: 4.0e6 };
+        let r = PowerReport::from_frame("test", energy, latency, 1.9, true);
+        // 4 ms frame → 250 FPS.
+        assert!((r.fps - 250.0).abs() < 1e-6);
+        // 2 mJ / 4 ms = 0.5 W dynamic + idle.
+        assert!((r.power_w - (0.5 + IDLE_POWER_W)).abs() < 1e-9);
+        assert!(r.area_mm2 > 3.0 && r.area_mm2 < 5.0);
+        assert!(r.row().contains("FPS"));
+    }
+
+    #[test]
+    fn static_logic_smaller_area() {
+        let e = FrameEnergy::default();
+        let l = StageLatency { preprocess_ns: 1.0, sort_ns: 1.0, blend_ns: 1.0 };
+        let d = PowerReport::from_frame("d", e, l, 1.9, true);
+        let s = PowerReport::from_frame("s", e, l, 0.65, false);
+        assert!(s.area_mm2 < d.area_mm2);
+    }
+}

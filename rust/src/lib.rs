@@ -1,0 +1,48 @@
+//! # gaucim — 3DGauCIM reproduction
+//!
+//! Algorithm/hardware co-design framework reproducing *3DGauCIM: Accelerating
+//! Static/Dynamic 3D Gaussian Splatting via Digital CIM for High Frame Rate
+//! Real-Time Edge Rendering* (cs.AR 2025).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas tile-blending / exp2-LUT kernels (build-time Python,
+//!   `python/compile/kernels/`), lowered into
+//! * **L2** — the JAX preprocessing + blending graphs
+//!   (`python/compile/model.py`), AOT-compiled once to HLO text in
+//!   `artifacts/`, and executed from Rust via the PJRT CPU client
+//!   ([`runtime`]).
+//! * **L3** — this crate: the paper's four contributions (DR-FC culling,
+//!   ATG tile grouping, AII-Sort, DD3D-Flow DCIM mapping) plus every
+//!   substrate they need (synthetic 4DGS scenes, LPDDR5 DRAM model, SRAM
+//!   buffer model, DCIM macro model, reference renderer, energy/FPS
+//!   roll-up).
+//!
+//! Every frame runs a **numeric path** (real pixels, bit-faithful DD3D-Flow
+//! exp) and a **performance path** (event counts into the hardware models →
+//! cycles/energy → FPS/W), mirroring the paper's methodology (functional RTL
+//! + measured DCIM-macro statistics + Ramulator).
+//!
+//! Entry points: [`coordinator::App`] drives full renders;
+//! [`pipeline::FramePipeline`] is the per-frame engine; `examples/` and
+//! `rust/benches/` regenerate every paper table and figure.
+
+pub mod baseline;
+pub mod bench;
+pub mod camera;
+pub mod coordinator;
+pub mod culling;
+pub mod dcim;
+pub mod energy;
+pub mod math;
+pub mod memory;
+pub mod pipeline;
+pub mod render;
+pub mod runtime;
+pub mod scene;
+pub mod sorting;
+pub mod tiles;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,224 @@
+//! `gaucim` — CLI for the 3DGauCIM reproduction.
+//!
+//! Subcommands:
+//! * `render`  — render one frame (hardware path), write a PPM + report;
+//! * `sequence`— run a trajectory, print the Table-I style report;
+//! * `profile` — Fig. 2(a) phase breakdown of the baseline pipeline;
+//! * `table1`  — the full Table I comparison (3DGauCIM vs GSCore vs Orin);
+//! * `pjrt`    — smoke-run the AOT artifacts through the PJRT runtime;
+//! * `info`    — environment / configuration dump.
+
+use anyhow::Result;
+use gaucim::baseline::{gscore, jetson, GscoreModel, JetsonModel};
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::App;
+use gaucim::culling::{GridConfig, GridPartition};
+use gaucim::pipeline::{profile_breakdown, PipelineConfig};
+use gaucim::render::ppm;
+use gaucim::runtime::{Artifacts, BlendExecutor, HloExecutor, PreprocessExecutor};
+use gaucim::scene::synth::SceneKind;
+use gaucim::scene::DramLayout;
+use gaucim::util::cli::Args;
+
+const SUBCOMMANDS: &[&str] = &["render", "sequence", "profile", "table1", "pjrt", "run", "info"];
+
+fn main() -> Result<()> {
+    let args = Args::from_env(SUBCOMMANDS);
+    match args.subcommand.as_deref() {
+        Some("render") => cmd_render(&args),
+        Some("sequence") => cmd_sequence(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("table1") => cmd_table1(&args),
+        Some("pjrt") => cmd_pjrt(&args),
+        Some("run") => cmd_run(&args),
+        Some("info") | None => cmd_info(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other}");
+            usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: gaucim <render|sequence|profile|table1|pjrt|run|info> \
+         [--scene static|dynamic] [--gaussians N] [--frames N] \
+         [--width W --height H] [--condition average|extreme|static] \
+         [--seed S] [--out FILE]"
+    );
+}
+
+fn scene_kind(args: &Args) -> SceneKind {
+    match args.get_str("scene", "dynamic").as_str() {
+        "static" => SceneKind::StaticLarge,
+        _ => SceneKind::DynamicLarge,
+    }
+}
+
+fn condition(args: &Args) -> ViewCondition {
+    match args.get_str("condition", "average").as_str() {
+        "extreme" => ViewCondition::Extreme,
+        "static" => ViewCondition::Static,
+        _ => ViewCondition::Average,
+    }
+}
+
+fn build_app(args: &Args) -> App {
+    let kind = scene_kind(args);
+    let n = args.get_usize("gaussians", 20_000);
+    let seed = args.get_u64("seed", 42);
+    let mut app = App::new(kind, n, seed);
+    let w = args.get_usize("width", 640);
+    let h = args.get_usize("height", 360);
+    app.config = app.config.clone().with_resolution(w, h);
+    app
+}
+
+fn cmd_render(args: &Args) -> Result<()> {
+    let app = build_app(args);
+    let t = args.get_f32("time", 0.5);
+    let (img, rep) = app.render_one(t);
+    let out = args.get_str("out", "frame.ppm");
+    ppm::save(&img, std::path::Path::new(&out))?;
+    println!("wrote {out}");
+    println!("{}", rep.report.row());
+    println!("PSNR vs reference: {:.2} dB", rep.psnr_db);
+    Ok(())
+}
+
+fn cmd_sequence(args: &Args) -> Result<()> {
+    let app = build_app(args);
+    let frames = args.get_usize("frames", 16);
+    let rep = app.run_sequence(condition(args), frames, 0);
+    println!("{}", rep.report.row());
+    println!("{}", rep.to_json().pretty());
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let app = build_app(args);
+    let frames = app.trajectory(condition(args), args.get_usize("frames", 4));
+    println!("Fig. 2(a) — baseline dynamic-3DGS latency breakdown");
+    let shares = profile_breakdown(
+        &app.scene,
+        PipelineConfig::baseline(app.scene.dynamic)
+            .with_resolution(app.config.width, app.config.height),
+        &frames,
+    );
+    for s in &shares {
+        println!("  {:<16} {:>10.3} ms  {:>5.1}%", s.phase, s.ns / 1e6, s.share * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    println!("Table I — 3DGauCIM vs baselines (scaled workload)");
+    for kind in [SceneKind::DynamicLarge, SceneKind::StaticLarge] {
+        let mut app = App::new(kind, args.get_usize("gaussians", 20_000), 42);
+        app.config = app
+            .config
+            .clone()
+            .with_resolution(args.get_usize("width", 640), args.get_usize("height", 360));
+        let cond = if kind == SceneKind::DynamicLarge {
+            ViewCondition::Average
+        } else {
+            ViewCondition::Static
+        };
+        let rep = app.run_sequence(cond, args.get_usize("frames", 8), 0);
+        println!("{}", rep.report.row());
+
+        // GSCore comparison on the same scene.
+        let grid = GridPartition::build(
+            &app.scene,
+            if app.scene.dynamic {
+                GridConfig::new(4)
+            } else {
+                GridConfig::static_scene(4)
+            },
+        );
+        let layout = DramLayout::build(&app.scene, &grid);
+        let model = GscoreModel::new(&app.scene, &layout, app.config.width, app.config.height);
+        let traj = app.trajectory(cond, 4);
+        let mut g_lat = gaucim::energy::StageLatency::default();
+        for (cam, t) in &traj {
+            g_lat.add(&model.render_frame(cam, *t).latency);
+        }
+        let g_lat = g_lat.scale(1.0 / traj.len() as f64);
+        println!(
+            "  gscore-model ({})          {:>7.1} FPS (published {} FPS / {} W / {} mm²)",
+            app.scene.name,
+            1e9 / g_lat.pipelined_ns(),
+            gscore::published::FPS_STATIC_LARGE,
+            gscore::published::POWER_W,
+            gscore::published::AREA_MM2,
+        );
+
+        // Jetson roofline on the same workload.
+        let jf = JetsonModel::from_workload(
+            (rep.energy.dcim_pj / 0.033) as u64,
+            rep.avg_dram_bytes as u64,
+        );
+        println!(
+            "  jetson-orin roofline          {:>7.1} FPS @ {} W (published {} FPS)",
+            jf.fps,
+            jetson::published::POWER_W,
+            jetson::published::FPS_DYNAMIC
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pjrt(args: &Args) -> Result<()> {
+    let artifacts = Artifacts::discover()?;
+    artifacts.validate()?;
+    println!("artifacts at {}", artifacts.dir.display());
+    let client = HloExecutor::cpu_client()?;
+
+    // Preprocess smoke.
+    let app = build_app(args);
+    let pre = PreprocessExecutor::load(&client, &artifacts.preprocess_hlo())?;
+    let cam = app.camera_template();
+    let splats = pre.project_chunk(
+        &app.scene.gaussians[..app.scene.len().min(1024)],
+        0,
+        &cam,
+        0.5,
+    )?;
+    println!("preprocess.hlo: {} visible splats from first 1024 gaussians", splats.len());
+
+    // Blend smoke: blend the first tile's worth of splats.
+    let blend = BlendExecutor::load(&client, &artifacts.blend_hlo())?;
+    let rgb = blend.blend_tile(&splats, cam.intrinsics.cx - 8.0, cam.intrinsics.cy - 8.0)?;
+    let mean: f32 = rgb.iter().map(|p| p[0] + p[1] + p[2]).sum::<f32>() / (rgb.len() * 3) as f32;
+    println!("blend.hlo: 16x16 tile rendered, mean value {mean:.4}");
+    println!("pjrt OK");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let path = args
+        .get("config")
+        .map(String::from)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow::anyhow!("usage: gaucim run --config <file.json>"))?;
+    let cfg = gaucim::coordinator::ExperimentConfig::load(std::path::Path::new(&path))?;
+    println!("running '{}' ({} gaussians, {} frames)", cfg.name, cfg.gaussians, cfg.frames);
+    let rep = cfg.run()?;
+    println!("{}", rep.report.row());
+    println!("{}", rep.to_json().pretty());
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    println!("gaucim — 3DGauCIM reproduction (Rust + JAX + Pallas, AOT via PJRT)");
+    println!("paper operating point: grid=4, ATG th=0.5 TB=4, AII N=8, FP16 + 12-bit exp LUT");
+    let artifacts = Artifacts::discover();
+    match artifacts {
+        Ok(a) if a.available() => println!("artifacts: {} (ready)", a.dir.display()),
+        Ok(a) => println!("artifacts: {} (INCOMPLETE — run `make artifacts`)", a.dir.display()),
+        Err(_) => println!("artifacts: not found — run `make artifacts`"),
+    }
+    usage();
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Axis-aligned bounding boxes, used for cubic culling grids and Gaussian
+//! spatial extents (mean ± k·σ per axis).
+
+use super::vec::Vec3;
+
+/// Axis-aligned box `[min, max]` (inclusive).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Aabb {
+    pub min: Vec3,
+    pub max: Vec3,
+}
+
+impl Aabb {
+    /// Empty box (min > max); grows on the first `expand`.
+    pub const EMPTY: Aabb = Aabb {
+        min: Vec3 { x: f32::INFINITY, y: f32::INFINITY, z: f32::INFINITY },
+        max: Vec3 { x: f32::NEG_INFINITY, y: f32::NEG_INFINITY, z: f32::NEG_INFINITY },
+    };
+
+    #[inline]
+    pub fn new(min: Vec3, max: Vec3) -> Self {
+        Aabb { min, max }
+    }
+
+    /// Box centered at `c` with half-extents `h` (per axis).
+    #[inline]
+    pub fn from_center_half(c: Vec3, h: Vec3) -> Self {
+        Aabb { min: c - h, max: c + h }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.min.x > self.max.x || self.min.y > self.max.y || self.min.z > self.max.z
+    }
+
+    #[inline]
+    pub fn center(&self) -> Vec3 {
+        (self.min + self.max) * 0.5
+    }
+
+    #[inline]
+    pub fn extent(&self) -> Vec3 {
+        self.max - self.min
+    }
+
+    /// Grow to include a point.
+    #[inline]
+    pub fn expand(&mut self, p: Vec3) {
+        self.min = self.min.min(p);
+        self.max = self.max.max(p);
+    }
+
+    /// Grow to include another box.
+    #[inline]
+    pub fn union(&self, o: &Aabb) -> Aabb {
+        Aabb { min: self.min.min(o.min), max: self.max.max(o.max) }
+    }
+
+    #[inline]
+    pub fn contains(&self, p: Vec3) -> bool {
+        p.x >= self.min.x
+            && p.x <= self.max.x
+            && p.y >= self.min.y
+            && p.y <= self.max.y
+            && p.z >= self.min.z
+            && p.z <= self.max.z
+    }
+
+    #[inline]
+    pub fn intersects(&self, o: &Aabb) -> bool {
+        self.min.x <= o.max.x
+            && self.max.x >= o.min.x
+            && self.min.y <= o.max.y
+            && self.max.y >= o.min.y
+            && self.min.z <= o.max.z
+            && self.max.z >= o.min.z
+    }
+
+    /// The corner most positive along `n` — used for plane-side tests.
+    #[inline]
+    pub fn positive_vertex(&self, n: Vec3) -> Vec3 {
+        Vec3::new(
+            if n.x >= 0.0 { self.max.x } else { self.min.x },
+            if n.y >= 0.0 { self.max.y } else { self.min.y },
+            if n.z >= 0.0 { self.max.z } else { self.min.z },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_then_expand() {
+        let mut b = Aabb::EMPTY;
+        assert!(b.is_empty());
+        b.expand(Vec3::new(1.0, 2.0, 3.0));
+        assert!(!b.is_empty());
+        assert_eq!(b.min, b.max);
+        b.expand(Vec3::new(-1.0, 5.0, 0.0));
+        assert_eq!(b.min, Vec3::new(-1.0, 2.0, 0.0));
+        assert_eq!(b.max, Vec3::new(1.0, 5.0, 3.0));
+    }
+
+    #[test]
+    fn contains_and_intersects() {
+        let a = Aabb::new(Vec3::ZERO, Vec3::ONE);
+        assert!(a.contains(Vec3::splat(0.5)));
+        assert!(!a.contains(Vec3::splat(1.5)));
+        let b = Aabb::new(Vec3::splat(0.9), Vec3::splat(2.0));
+        let c = Aabb::new(Vec3::splat(1.1), Vec3::splat(2.0));
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c));
+    }
+
+    #[test]
+    fn center_extent_union() {
+        let a = Aabb::from_center_half(Vec3::splat(1.0), Vec3::splat(0.5));
+        assert_eq!(a.center(), Vec3::splat(1.0));
+        assert_eq!(a.extent(), Vec3::splat(1.0));
+        let b = Aabb::new(Vec3::splat(2.0), Vec3::splat(3.0));
+        let u = a.union(&b);
+        assert_eq!(u.min, Vec3::splat(0.5));
+        assert_eq!(u.max, Vec3::splat(3.0));
+    }
+
+    #[test]
+    fn positive_vertex_picks_corner() {
+        let a = Aabb::new(Vec3::ZERO, Vec3::ONE);
+        assert_eq!(a.positive_vertex(Vec3::new(1.0, -1.0, 1.0)), Vec3::new(1.0, 0.0, 1.0));
+    }
+}

@@ -1,0 +1,206 @@
+//! IEEE-754 binary16 (half precision).
+//!
+//! The paper sets the accelerator's numerical precision to FP16 (§4). All
+//! Gaussian parameters stored in DRAM/SRAM are FP16; the hardware-faithful
+//! renderer quantizes through this type so PSNR reflects storage precision.
+//! Implemented in-repo because the `half` crate is unavailable offline;
+//! round-to-nearest-even, with correct subnormal/inf/NaN behavior.
+
+/// A 16-bit IEEE-754 half-precision float stored as its bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    /// Largest finite half value (65504).
+    pub const MAX: F16 = F16(0x7BFF);
+
+    /// Convert from `f32` with round-to-nearest-even.
+    pub fn from_f32(v: f32) -> F16 {
+        let bits = v.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let frac = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN: preserve NaN-ness (quiet bit set).
+            return if frac == 0 {
+                F16(sign | 0x7C00)
+            } else {
+                F16(sign | 0x7E00)
+            };
+        }
+
+        // Unbiased exponent, then re-bias for half (15).
+        let e = exp - 127 + 15;
+        if e >= 0x1F {
+            // Overflow → ±inf.
+            return F16(sign | 0x7C00);
+        }
+        if e <= 0 {
+            // Subnormal half (or zero). Shift includes the implicit bit.
+            if e < -10 {
+                return F16(sign); // Rounds to ±0.
+            }
+            let mant = frac | 0x80_0000;
+            let shift = 14 - e; // 14..24
+            let half_frac = (mant >> shift) as u16;
+            // Round-to-nearest-even on the dropped bits.
+            let rem = mant & ((1 << shift) - 1);
+            let halfway = 1u32 << (shift - 1);
+            let rounded = if rem > halfway || (rem == halfway && (half_frac & 1) == 1) {
+                half_frac + 1
+            } else {
+                half_frac
+            };
+            return F16(sign | rounded);
+        }
+
+        // Normal half. Keep 10 fraction bits, round-to-nearest-even.
+        let half_frac = (frac >> 13) as u16;
+        let rem = frac & 0x1FFF;
+        let base = sign | ((e as u16) << 10) | half_frac;
+        let rounded = if rem > 0x1000 || (rem == 0x1000 && (base & 1) == 1) {
+            base + 1 // May carry into the exponent — that is correct rounding.
+        } else {
+            base
+        };
+        F16(rounded)
+    }
+
+    /// Convert to `f32` (exact).
+    pub fn to_f32(self) -> f32 {
+        let bits = self.0 as u32;
+        let sign = (bits & 0x8000) << 16;
+        let exp = (bits >> 10) & 0x1F;
+        let frac = bits & 0x3FF;
+
+        let out = if exp == 0 {
+            if frac == 0 {
+                sign // ±0
+            } else {
+                // Subnormal: normalize. A half subnormal is frac × 2⁻²⁴;
+                // with the leading bit at position p the value is
+                // 1.xxx × 2^(p−24), i.e. f32 exponent field 113 − shifts.
+                let mut e = 0i32;
+                let mut f = frac;
+                while f & 0x400 == 0 {
+                    f <<= 1;
+                    e -= 1;
+                }
+                let f = f & 0x3FF;
+                sign | (((113 + e) as u32) << 23) | (f << 13)
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (frac << 13) // inf / NaN
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (frac << 13)
+        };
+        f32::from_bits(out)
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+}
+
+/// Quantize an `f32` through FP16 storage and back — what a parameter
+/// experiences on its DRAM→SRAM→datapath round trip.
+#[inline]
+pub fn quantize(v: f32) -> f32 {
+    F16::from_f32(v).to_f32()
+}
+
+/// Quantize a slice in place.
+pub fn quantize_slice(vs: &mut [f32]) {
+    for v in vs.iter_mut() {
+        *v = quantize(*v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -2048..=2048 {
+            let v = i as f32;
+            assert_eq!(quantize(v), v, "half must represent |int| <= 2048 exactly: {v}");
+        }
+    }
+
+    #[test]
+    fn one_and_fractions() {
+        assert_eq!(F16::from_f32(1.0), F16::ONE);
+        assert_eq!(quantize(0.5), 0.5);
+        assert_eq!(quantize(0.25), 0.25);
+        assert_eq!(quantize(1.5), 1.5);
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        assert_eq!(F16::from_f32(1e6), F16::INFINITY);
+        assert_eq!(F16::from_f32(-1e6), F16::NEG_INFINITY);
+        assert_eq!(F16::from_f32(65504.0), F16::MAX);
+        assert!(F16::from_f32(65536.0).is_infinite());
+    }
+
+    #[test]
+    fn subnormals() {
+        // Smallest positive subnormal half = 2^-24.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(quantize(tiny), tiny);
+        // Below half of it rounds to zero.
+        assert_eq!(quantize(tiny / 4.0), 0.0);
+        // Largest subnormal.
+        let lsub = 2.0f32.powi(-14) - 2.0f32.powi(-24);
+        assert_eq!(quantize(lsub), lsub);
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10: ties to even → 1.0.
+        let v = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(quantize(v), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 → ties to even → 1+2^-9.
+        let v = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(quantize(v), 1.0 + 2.0 * 2.0f32.powi(-10));
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        // Relative error of normal halves ≤ 2^-11.
+        let mut x = 1.0e-3f32;
+        while x < 6.0e4 {
+            let q = quantize(x);
+            assert!(((q - x) / x).abs() <= 2.0f32.powi(-11) + 1e-9, "x={x} q={q}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn quantize_slice_works() {
+        let mut v = vec![0.1f32, 0.2, 0.3];
+        quantize_slice(&mut v);
+        for (q, orig) in v.iter().zip([0.1f32, 0.2, 0.3]) {
+            assert!((q - orig).abs() < 1e-3);
+            assert_eq!(*q, quantize(orig));
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! View-frustum representation and AABB/sphere visibility tests.
+//!
+//! DR-FC (paper §3.1) tests whole cubic grids against the frustum before any
+//! DRAM access; per-Gaussian exact culling afterwards uses a conservative
+//! sphere test around the Gaussian's 3σ extent.
+
+use super::aabb::Aabb;
+use super::mat::Mat4;
+use super::vec::Vec3;
+
+/// A plane `n·x + d = 0` with `n` pointing toward the *inside* of the frustum.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Plane {
+    pub n: Vec3,
+    pub d: f32,
+}
+
+impl Plane {
+    /// Normalize so |n| = 1 (keeps signed distances metric).
+    pub fn normalized(self) -> Plane {
+        let l = self.n.length();
+        if l > 0.0 {
+            Plane { n: self.n / l, d: self.d / l }
+        } else {
+            self
+        }
+    }
+
+    /// Signed distance of a point (positive = inside halfspace).
+    #[inline]
+    pub fn distance(&self, p: Vec3) -> f32 {
+        self.n.dot(p) + self.d
+    }
+}
+
+/// Frustum culling verdict for a volume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Containment {
+    Outside,
+    Intersecting,
+    Inside,
+}
+
+/// Six-plane view frustum extracted from a view-projection matrix
+/// (Gribb–Hartmann extraction, row-major `clip = VP * world`).
+#[derive(Debug, Clone, Copy)]
+pub struct Frustum {
+    /// Order: left, right, bottom, top, near, far.
+    pub planes: [Plane; 6],
+}
+
+impl Frustum {
+    /// Extract from a combined view-projection matrix.
+    pub fn from_view_proj(vp: &Mat4) -> Frustum {
+        let r = |i: usize| vp.row(i);
+        let (r0, r1, r2, r3) = (r(0), r(1), r(2), r(3));
+        let mk = |v: super::vec::Vec4| {
+            Plane { n: Vec3::new(v.x, v.y, v.z), d: v.w }.normalized()
+        };
+        Frustum {
+            planes: [
+                mk(r3 + r0), // left:   w + x >= 0
+                mk(r3 - r0), // right:  w - x >= 0
+                mk(r3 + r1), // bottom
+                mk(r3 - r1), // top
+                mk(r3 + r2), // near (z in [-w, w] convention)
+                mk(r3 - r2), // far
+            ],
+        }
+    }
+
+    /// Conservative AABB test (positive-vertex method).
+    pub fn test_aabb(&self, b: &Aabb) -> Containment {
+        let mut inside_all = true;
+        for p in &self.planes {
+            let pv = b.positive_vertex(p.n);
+            if p.distance(pv) < 0.0 {
+                return Containment::Outside;
+            }
+            // Negative vertex = corner least along n.
+            let nv = b.positive_vertex(-p.n);
+            if p.distance(nv) < 0.0 {
+                inside_all = false;
+            }
+        }
+        if inside_all {
+            Containment::Inside
+        } else {
+            Containment::Intersecting
+        }
+    }
+
+    /// Sphere visibility (center + radius), the per-Gaussian exact test.
+    pub fn test_sphere(&self, c: Vec3, r: f32) -> bool {
+        self.planes.iter().all(|p| p.distance(c) >= -r)
+    }
+
+    /// Point visibility.
+    pub fn contains_point(&self, p: Vec3) -> bool {
+        self.test_sphere(p, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::Camera;
+
+    fn test_camera() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(0.0, 0.0, -1.0),
+            Vec3::new(0.0, 1.0, 0.0),
+            60f32.to_radians(),
+            16.0 / 9.0,
+            0.1,
+            100.0,
+        )
+    }
+
+    #[test]
+    fn point_straight_ahead_is_visible() {
+        let cam = test_camera();
+        let f = cam.frustum();
+        assert!(f.contains_point(Vec3::new(0.0, 0.0, -10.0)));
+        assert!(!f.contains_point(Vec3::new(0.0, 0.0, 10.0)), "behind camera");
+        assert!(!f.contains_point(Vec3::new(0.0, 0.0, -200.0)), "beyond far");
+    }
+
+    #[test]
+    fn aabb_containment_levels() {
+        let cam = test_camera();
+        let f = cam.frustum();
+        let inside = Aabb::from_center_half(Vec3::new(0.0, 0.0, -10.0), Vec3::splat(0.5));
+        let outside = Aabb::from_center_half(Vec3::new(0.0, 0.0, 50.0), Vec3::splat(0.5));
+        let straddle = Aabb::from_center_half(Vec3::new(0.0, 0.0, -0.1), Vec3::splat(5.0));
+        assert_eq!(f.test_aabb(&inside), Containment::Inside);
+        assert_eq!(f.test_aabb(&outside), Containment::Outside);
+        assert_eq!(f.test_aabb(&straddle), Containment::Intersecting);
+    }
+
+    #[test]
+    fn sphere_near_edge() {
+        let cam = test_camera();
+        let f = cam.frustum();
+        // A point far off to the side is out, but a big enough sphere pokes in.
+        let p = Vec3::new(30.0, 0.0, -10.0);
+        assert!(!f.contains_point(p));
+        assert!(f.test_sphere(p, 25.0));
+    }
+
+    #[test]
+    fn aabb_test_is_conservative_wrt_points() {
+        // If any sampled point of the box is visible, the box must not be Outside.
+        let cam = test_camera();
+        let f = cam.frustum();
+        let b = Aabb::from_center_half(Vec3::new(3.0, 1.0, -20.0), Vec3::splat(4.0));
+        let mut any_visible = false;
+        for i in 0..5 {
+            for j in 0..5 {
+                for k in 0..5 {
+                    let p = b.min
+                        + Vec3::new(
+                            b.extent().x * i as f32 / 4.0,
+                            b.extent().y * j as f32 / 4.0,
+                            b.extent().z * k as f32 / 4.0,
+                        );
+                    if f.contains_point(p) {
+                        any_visible = true;
+                    }
+                }
+            }
+        }
+        if any_visible {
+            assert_ne!(f.test_aabb(&b), Containment::Outside);
+        }
+    }
+}

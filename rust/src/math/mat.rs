@@ -1,0 +1,328 @@
+//! 3×3 and 4×4 matrices (row-major), used for covariances, rotations, and
+//! camera view/projection transforms.
+
+use super::vec::{Vec3, Vec4};
+
+/// Row-major 3×3 matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat3 {
+    /// `m[row][col]`
+    pub m: [[f32; 3]; 3],
+}
+
+/// Row-major 4×4 matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat4 {
+    /// `m[row][col]`
+    pub m: [[f32; 4]; 4],
+}
+
+impl Mat3 {
+    pub const IDENTITY: Mat3 = Mat3 {
+        m: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]],
+    };
+
+    pub const ZERO: Mat3 = Mat3 { m: [[0.0; 3]; 3] };
+
+    #[inline]
+    pub fn from_rows(r0: Vec3, r1: Vec3, r2: Vec3) -> Self {
+        Mat3 {
+            m: [r0.to_array(), r1.to_array(), r2.to_array()],
+        }
+    }
+
+    #[inline]
+    pub fn from_cols(c0: Vec3, c1: Vec3, c2: Vec3) -> Self {
+        Mat3 {
+            m: [
+                [c0.x, c1.x, c2.x],
+                [c0.y, c1.y, c2.y],
+                [c0.z, c1.z, c2.z],
+            ],
+        }
+    }
+
+    /// Diagonal matrix from a vector.
+    #[inline]
+    pub fn diag(d: Vec3) -> Self {
+        Mat3 {
+            m: [[d.x, 0.0, 0.0], [0.0, d.y, 0.0], [0.0, 0.0, d.z]],
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> Vec3 {
+        Vec3::from_array(self.m[r])
+    }
+
+    #[inline]
+    pub fn col(&self, c: usize) -> Vec3 {
+        Vec3::new(self.m[0][c], self.m[1][c], self.m[2][c])
+    }
+
+    #[inline]
+    pub fn transpose(&self) -> Mat3 {
+        Mat3::from_cols(self.row(0), self.row(1), self.row(2))
+    }
+
+    pub fn mul_mat(&self, o: &Mat3) -> Mat3 {
+        let mut r = Mat3::ZERO;
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += self.m[i][k] * o.m[k][j];
+                }
+                r.m[i][j] = s;
+            }
+        }
+        r
+    }
+
+    #[inline]
+    pub fn mul_vec(&self, v: Vec3) -> Vec3 {
+        Vec3::new(self.row(0).dot(v), self.row(1).dot(v), self.row(2).dot(v))
+    }
+
+    #[inline]
+    pub fn scale(&self, s: f32) -> Mat3 {
+        let mut r = *self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] *= s;
+            }
+        }
+        r
+    }
+
+    #[inline]
+    pub fn add(&self, o: &Mat3) -> Mat3 {
+        let mut r = *self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] += o.m[i][j];
+            }
+        }
+        r
+    }
+
+    #[inline]
+    pub fn sub(&self, o: &Mat3) -> Mat3 {
+        let mut r = *self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] -= o.m[i][j];
+            }
+        }
+        r
+    }
+
+    pub fn determinant(&self) -> f32 {
+        let m = &self.m;
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    }
+
+    /// Inverse; returns `None` when the determinant is (near) zero.
+    pub fn inverse(&self) -> Option<Mat3> {
+        let det = self.determinant();
+        if det.abs() < 1e-20 {
+            return None;
+        }
+        let inv_det = 1.0 / det;
+        let m = &self.m;
+        let mut r = Mat3::ZERO;
+        r.m[0][0] = (m[1][1] * m[2][2] - m[1][2] * m[2][1]) * inv_det;
+        r.m[0][1] = (m[0][2] * m[2][1] - m[0][1] * m[2][2]) * inv_det;
+        r.m[0][2] = (m[0][1] * m[1][2] - m[0][2] * m[1][1]) * inv_det;
+        r.m[1][0] = (m[1][2] * m[2][0] - m[1][0] * m[2][2]) * inv_det;
+        r.m[1][1] = (m[0][0] * m[2][2] - m[0][2] * m[2][0]) * inv_det;
+        r.m[1][2] = (m[0][2] * m[1][0] - m[0][0] * m[1][2]) * inv_det;
+        r.m[2][0] = (m[1][0] * m[2][1] - m[1][1] * m[2][0]) * inv_det;
+        r.m[2][1] = (m[0][1] * m[2][0] - m[0][0] * m[2][1]) * inv_det;
+        r.m[2][2] = (m[0][0] * m[1][1] - m[0][1] * m[1][0]) * inv_det;
+        Some(r)
+    }
+
+    /// `v^T M v` quadratic form.
+    #[inline]
+    pub fn quadratic_form(&self, v: Vec3) -> f32 {
+        v.dot(self.mul_vec(v))
+    }
+
+    /// Is this matrix symmetric within `eps`?
+    pub fn is_symmetric(&self, eps: f32) -> bool {
+        (self.m[0][1] - self.m[1][0]).abs() <= eps
+            && (self.m[0][2] - self.m[2][0]).abs() <= eps
+            && (self.m[1][2] - self.m[2][1]).abs() <= eps
+    }
+}
+
+impl Mat4 {
+    pub const IDENTITY: Mat4 = Mat4 {
+        m: [
+            [1.0, 0.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0, 0.0],
+            [0.0, 0.0, 1.0, 0.0],
+            [0.0, 0.0, 0.0, 1.0],
+        ],
+    };
+
+    pub const ZERO: Mat4 = Mat4 { m: [[0.0; 4]; 4] };
+
+    #[inline]
+    pub fn row(&self, r: usize) -> Vec4 {
+        Vec4::new(self.m[r][0], self.m[r][1], self.m[r][2], self.m[r][3])
+    }
+
+    pub fn mul_mat(&self, o: &Mat4) -> Mat4 {
+        let mut r = Mat4::ZERO;
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut s = 0.0;
+                for k in 0..4 {
+                    s += self.m[i][k] * o.m[k][j];
+                }
+                r.m[i][j] = s;
+            }
+        }
+        r
+    }
+
+    #[inline]
+    pub fn mul_vec(&self, v: Vec4) -> Vec4 {
+        Vec4::new(
+            self.row(0).dot(v),
+            self.row(1).dot(v),
+            self.row(2).dot(v),
+            self.row(3).dot(v),
+        )
+    }
+
+    /// Transform a point (w = 1) without the perspective divide.
+    #[inline]
+    pub fn transform_point(&self, p: Vec3) -> Vec4 {
+        self.mul_vec(p.extend(1.0))
+    }
+
+    /// Upper-left 3×3 block.
+    #[inline]
+    pub fn upper3(&self) -> Mat3 {
+        Mat3 {
+            m: [
+                [self.m[0][0], self.m[0][1], self.m[0][2]],
+                [self.m[1][0], self.m[1][1], self.m[1][2]],
+                [self.m[2][0], self.m[2][1], self.m[2][2]],
+            ],
+        }
+    }
+
+    /// Rigid-transform inverse (rotation + translation only).
+    pub fn rigid_inverse(&self) -> Mat4 {
+        let r = self.upper3().transpose();
+        let t = Vec3::new(self.m[0][3], self.m[1][3], self.m[2][3]);
+        let ti = -r.mul_vec(t);
+        Mat4 {
+            m: [
+                [r.m[0][0], r.m[0][1], r.m[0][2], ti.x],
+                [r.m[1][0], r.m[1][1], r.m[1][2], ti.y],
+                [r.m[2][0], r.m[2][1], r.m[2][2], ti.z],
+                [0.0, 0.0, 0.0, 1.0],
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f32, b: f32) -> bool {
+        (a - b).abs() < 1e-5
+    }
+
+    #[test]
+    fn mat3_identity_mul() {
+        let a = Mat3::from_rows(
+            Vec3::new(1.0, 2.0, 3.0),
+            Vec3::new(4.0, 5.0, 6.0),
+            Vec3::new(7.0, 8.0, 10.0),
+        );
+        assert_eq!(a.mul_mat(&Mat3::IDENTITY), a);
+        assert_eq!(Mat3::IDENTITY.mul_mat(&a), a);
+    }
+
+    #[test]
+    fn mat3_inverse_roundtrip() {
+        let a = Mat3::from_rows(
+            Vec3::new(2.0, 0.5, 0.1),
+            Vec3::new(0.5, 3.0, 0.2),
+            Vec3::new(0.1, 0.2, 1.5),
+        );
+        let inv = a.inverse().unwrap();
+        let prod = a.mul_mat(&inv);
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(approx(prod.m[i][j], expect), "prod[{i}][{j}]={}", prod.m[i][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn mat3_singular_inverse_none() {
+        let a = Mat3::from_rows(
+            Vec3::new(1.0, 2.0, 3.0),
+            Vec3::new(2.0, 4.0, 6.0),
+            Vec3::new(0.0, 1.0, 1.0),
+        );
+        assert!(a.inverse().is_none());
+    }
+
+    #[test]
+    fn mat3_transpose_symmetric() {
+        let a = Mat3::from_rows(
+            Vec3::new(2.0, 0.5, 0.1),
+            Vec3::new(0.5, 3.0, 0.2),
+            Vec3::new(0.1, 0.2, 1.5),
+        );
+        assert_eq!(a.transpose(), a);
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn mat3_quadratic_form_positive_definite() {
+        let a = Mat3::diag(Vec3::new(1.0, 2.0, 3.0));
+        let v = Vec3::new(1.0, 1.0, 1.0);
+        assert!(approx(a.quadratic_form(v), 6.0));
+    }
+
+    #[test]
+    fn mat4_rigid_inverse() {
+        // Rotation about z by 90° plus translation.
+        let m = Mat4 {
+            m: [
+                [0.0, -1.0, 0.0, 3.0],
+                [1.0, 0.0, 0.0, -2.0],
+                [0.0, 0.0, 1.0, 5.0],
+                [0.0, 0.0, 0.0, 1.0],
+            ],
+        };
+        let inv = m.rigid_inverse();
+        let prod = m.mul_mat(&inv);
+        for i in 0..4 {
+            for j in 0..4 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(approx(prod.m[i][j], expect));
+            }
+        }
+    }
+
+    #[test]
+    fn mat4_transform_point() {
+        let m = Mat4::IDENTITY;
+        let p = Vec3::new(1.0, 2.0, 3.0);
+        assert_eq!(m.transform_point(p).truncate(), p);
+    }
+}

@@ -1,0 +1,21 @@
+//! Linear algebra and numeric substrate.
+//!
+//! Everything the splatting pipeline needs and the offline registry does not
+//! provide: small fixed-size vectors/matrices, quaternions, IEEE-754 half
+//! precision (the paper stores all Gaussian parameters as FP16), axis-aligned
+//! bounding boxes, view-frustum plane tests, and streaming statistics.
+
+pub mod aabb;
+pub mod f16;
+pub mod frustum;
+pub mod mat;
+pub mod quat;
+pub mod stats;
+pub mod vec;
+
+pub use aabb::Aabb;
+pub use f16::F16;
+pub use frustum::Frustum;
+pub use mat::{Mat3, Mat4};
+pub use quat::Quat;
+pub use vec::{Vec2, Vec3, Vec4};

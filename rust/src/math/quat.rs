@@ -1,0 +1,130 @@
+//! Unit quaternions for Gaussian orientation.
+//!
+//! 4DGS parameterizes Σ⁴ᴰ = U S Sᵀ Uᵀ with U built from a *pair* of unit
+//! quaternions (left/right isoclinic rotations of SO(4)); for the 3-D spatial
+//! block we only need the classic quaternion → rotation-matrix map.
+
+use super::mat::Mat3;
+use super::vec::Vec3;
+
+/// Quaternion `w + xi + yj + zk`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quat {
+    pub w: f32,
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Quat {
+    pub const IDENTITY: Quat = Quat { w: 1.0, x: 0.0, y: 0.0, z: 0.0 };
+
+    #[inline]
+    pub fn new(w: f32, x: f32, y: f32, z: f32) -> Self {
+        Quat { w, x, y, z }
+    }
+
+    /// Rotation of `angle` radians about `axis` (need not be normalized).
+    pub fn from_axis_angle(axis: Vec3, angle: f32) -> Self {
+        let a = axis.normalized();
+        let (s, c) = (angle * 0.5).sin_cos();
+        Quat::new(c, a.x * s, a.y * s, a.z * s)
+    }
+
+    #[inline]
+    pub fn norm(self) -> f32 {
+        (self.w * self.w + self.x * self.x + self.y * self.y + self.z * self.z).sqrt()
+    }
+
+    pub fn normalized(self) -> Quat {
+        let n = self.norm();
+        if n > 0.0 {
+            Quat::new(self.w / n, self.x / n, self.y / n, self.z / n)
+        } else {
+            Quat::IDENTITY
+        }
+    }
+
+    /// Hamilton product.
+    pub fn mul(self, o: Quat) -> Quat {
+        Quat::new(
+            self.w * o.w - self.x * o.x - self.y * o.y - self.z * o.z,
+            self.w * o.x + self.x * o.w + self.y * o.z - self.z * o.y,
+            self.w * o.y - self.x * o.z + self.y * o.w + self.z * o.x,
+            self.w * o.z + self.x * o.y - self.y * o.x + self.z * o.w,
+        )
+    }
+
+    /// Rotation matrix of the (assumed unit) quaternion.
+    pub fn to_mat3(self) -> Mat3 {
+        let Quat { w, x, y, z } = self;
+        let (x2, y2, z2) = (x + x, y + y, z + z);
+        let (xx, yy, zz) = (x * x2, y * y2, z * z2);
+        let (xy, xz, yz) = (x * y2, x * z2, y * z2);
+        let (wx, wy, wz) = (w * x2, w * y2, w * z2);
+        Mat3 {
+            m: [
+                [1.0 - (yy + zz), xy - wz, xz + wy],
+                [xy + wz, 1.0 - (xx + zz), yz - wx],
+                [xz - wy, yz + wx, 1.0 - (xx + yy)],
+            ],
+        }
+    }
+
+    /// Rotate a vector.
+    #[inline]
+    pub fn rotate(self, v: Vec3) -> Vec3 {
+        self.to_mat3().mul_vec(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx_vec(a: Vec3, b: Vec3) -> bool {
+        (a - b).length() < 1e-5
+    }
+
+    #[test]
+    fn identity_rotation() {
+        let v = Vec3::new(1.0, 2.0, 3.0);
+        assert!(approx_vec(Quat::IDENTITY.rotate(v), v));
+    }
+
+    #[test]
+    fn z_axis_quarter_turn() {
+        let q = Quat::from_axis_angle(Vec3::new(0.0, 0.0, 1.0), std::f32::consts::FRAC_PI_2);
+        let v = q.rotate(Vec3::new(1.0, 0.0, 0.0));
+        assert!(approx_vec(v, Vec3::new(0.0, 1.0, 0.0)), "got {v:?}");
+    }
+
+    #[test]
+    fn rotation_matrix_is_orthogonal() {
+        let q = Quat::from_axis_angle(Vec3::new(1.0, 2.0, -0.5), 1.234).normalized();
+        let r = q.to_mat3();
+        let rrt = r.mul_mat(&r.transpose());
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((rrt.m[i][j] - expect).abs() < 1e-5);
+            }
+        }
+        assert!((r.determinant() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hamilton_product_composes_rotations() {
+        let qa = Quat::from_axis_angle(Vec3::new(0.0, 0.0, 1.0), 0.7);
+        let qb = Quat::from_axis_angle(Vec3::new(0.0, 1.0, 0.0), -0.4);
+        let v = Vec3::new(0.3, -1.0, 2.0);
+        let ab = qa.mul(qb);
+        assert!(approx_vec(ab.rotate(v), qa.rotate(qb.rotate(v))));
+    }
+
+    #[test]
+    fn normalize_handles_zero() {
+        let q = Quat::new(0.0, 0.0, 0.0, 0.0).normalized();
+        assert_eq!(q, Quat::IDENTITY);
+    }
+}

@@ -1,0 +1,261 @@
+//! Event-based LPDDR5 DRAM model (stand-in for Ramulator 2.0 — DESIGN.md §2).
+//!
+//! Models the properties the paper's experiments measure: access counts,
+//! burst efficiency of contiguous ranges, row-buffer locality, per-access
+//! energy, and channel busy time. Timing/energy constants follow published
+//! LPDDR5-6400 figures.
+
+/// LPDDR5 channel configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DramConfig {
+    /// Bytes transferred per burst (BL16 × 16-bit channel = 32 B).
+    pub burst_bytes: u64,
+    /// Row (page) size in bytes.
+    pub row_bytes: u64,
+    /// Burst transfer time at 6400 MT/s on a ×16 channel (ns).
+    pub t_burst_ns: f64,
+    /// Row activate-to-read (tRCD, ns).
+    pub t_rcd_ns: f64,
+    /// Precharge (tRP, ns).
+    pub t_rp_ns: f64,
+    /// Access energy per bit (pJ/bit, incl. I/O) for data on an open row.
+    pub e_access_pj_per_bit: f64,
+    /// Extra energy per row activation (pJ).
+    pub e_activate_pj: f64,
+    /// Number of independent channels (accesses are striped round-robin).
+    pub channels: usize,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        DramConfig {
+            burst_bytes: 32,
+            row_bytes: 2048,
+            t_burst_ns: 2.5,
+            t_rcd_ns: 18.0,
+            t_rp_ns: 18.0,
+            e_access_pj_per_bit: 4.5,
+            e_activate_pj: 1500.0,
+            channels: 2,
+        }
+    }
+}
+
+/// Accumulated statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DramStats {
+    /// Read request count (one per `read` call).
+    pub reads: u64,
+    /// Bytes actually transferred (rounded up to bursts).
+    pub bytes: u64,
+    /// Burst transactions issued.
+    pub bursts: u64,
+    /// Row-buffer hits / misses (per burst).
+    pub row_hits: u64,
+    pub row_misses: u64,
+    /// Total access energy (pJ).
+    pub energy_pj: f64,
+    /// Channel busy time (ns), after striping across channels.
+    pub busy_ns: f64,
+}
+
+impl DramStats {
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_pj * 1e-9
+    }
+
+    /// Row-buffer hit rate over all bursts.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+
+    pub fn add(&mut self, o: &DramStats) {
+        self.reads += o.reads;
+        self.bytes += o.bytes;
+        self.bursts += o.bursts;
+        self.row_hits += o.row_hits;
+        self.row_misses += o.row_misses;
+        self.energy_pj += o.energy_pj;
+        self.busy_ns += o.busy_ns;
+    }
+}
+
+/// The DRAM model: tracks per-bank open rows and accumulates stats.
+#[derive(Debug)]
+pub struct DramModel {
+    pub config: DramConfig,
+    stats: DramStats,
+    /// Open row per channel (we model one bank group per channel — the
+    /// locality signal the experiments need is sequential-vs-scattered).
+    open_row: Vec<Option<u64>>,
+}
+
+impl DramModel {
+    pub fn new(config: DramConfig) -> DramModel {
+        DramModel {
+            open_row: vec![None; config.channels],
+            config,
+            stats: DramStats::default(),
+        }
+    }
+
+    pub fn default_lpddr5() -> DramModel {
+        DramModel::new(DramConfig::default())
+    }
+
+    /// Read `bytes` starting at `addr`. Contiguous ranges amortize row
+    /// activations; scattered single-record reads mostly miss.
+    pub fn read(&mut self, addr: u64, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let cfg = self.config;
+        let first_burst = addr / cfg.burst_bytes;
+        let last_burst = (addr + bytes - 1) / cfg.burst_bytes;
+        let n_bursts = last_burst - first_burst + 1;
+        let bursts_per_row = cfg.row_bytes / cfg.burst_bytes;
+
+        let mut ns;
+        let mut pj;
+        if n_bursts > 4 * bursts_per_row {
+            // Analytic fast path for long contiguous sweeps (equivalent to
+            // the per-burst walk: one activation per row touched) — the
+            // per-burst loop was a host hot spot on multi-MB reads
+            // (EXPERIMENTS.md §Perf).
+            let first_row = (first_burst * cfg.burst_bytes) / cfg.row_bytes;
+            let last_row = (last_burst * cfg.burst_bytes) / cfg.row_bytes;
+            let rows = last_row - first_row + 1;
+            self.stats.row_misses += rows;
+            self.stats.row_hits += n_bursts - rows;
+            for ch in 0..cfg.channels {
+                // Leave each channel's open row as the last row it serves.
+                let r = last_row.saturating_sub(ch as u64);
+                if r >= first_row {
+                    let ch_idx = (r as usize) % cfg.channels;
+                    self.open_row[ch_idx] = Some(r);
+                }
+            }
+            ns = rows as f64 * (cfg.t_rp_ns + cfg.t_rcd_ns)
+                + n_bursts as f64 * cfg.t_burst_ns;
+            pj = rows as f64 * cfg.e_activate_pj
+                + n_bursts as f64 * cfg.e_access_pj_per_bit * (cfg.burst_bytes * 8) as f64;
+        } else {
+            ns = 0.0;
+            pj = 0.0;
+            for b in first_burst..=last_burst {
+                let byte_addr = b * cfg.burst_bytes;
+                let row = byte_addr / cfg.row_bytes;
+                let ch = (row as usize) % cfg.channels;
+                if self.open_row[ch] == Some(row) {
+                    self.stats.row_hits += 1;
+                } else {
+                    self.stats.row_misses += 1;
+                    self.open_row[ch] = Some(row);
+                    ns += cfg.t_rp_ns + cfg.t_rcd_ns;
+                    pj += cfg.e_activate_pj;
+                }
+                ns += cfg.t_burst_ns;
+                pj += cfg.e_access_pj_per_bit * (cfg.burst_bytes * 8) as f64;
+            }
+        }
+
+        self.stats.reads += 1;
+        self.stats.bursts += n_bursts;
+        self.stats.bytes += n_bursts * cfg.burst_bytes;
+        self.stats.energy_pj += pj;
+        // Channel-level parallelism: striped traffic divides busy time.
+        self.stats.busy_ns += ns / cfg.channels as f64;
+    }
+
+    pub fn stats(&self) -> DramStats {
+        self.stats
+    }
+
+    pub fn reset(&mut self) {
+        self.stats = DramStats::default();
+        for r in &mut self.open_row {
+            *r = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_read_counts_bursts() {
+        let mut d = DramModel::default_lpddr5();
+        d.read(0, 1024);
+        let s = d.stats();
+        assert_eq!(s.reads, 1);
+        assert_eq!(s.bursts, 32); // 1024 / 32
+        assert_eq!(s.bytes, 1024);
+    }
+
+    #[test]
+    fn contiguous_has_high_row_hit_rate() {
+        let mut d = DramModel::default_lpddr5();
+        d.read(0, 64 * 1024);
+        assert!(d.stats().hit_rate() > 0.9, "hit rate {}", d.stats().hit_rate());
+    }
+
+    #[test]
+    fn scattered_reads_mostly_miss() {
+        let mut d = DramModel::default_lpddr5();
+        // Stride row-sized: every read opens a new row.
+        for i in 0..256u64 {
+            d.read(i * 2048 * 7, 32);
+        }
+        assert!(d.stats().hit_rate() < 0.1);
+    }
+
+    #[test]
+    fn scattered_costs_more_energy_per_byte() {
+        let mut seq = DramModel::default_lpddr5();
+        seq.read(0, 8192);
+        let e_seq = seq.stats().energy_pj / seq.stats().bytes as f64;
+
+        let mut sc = DramModel::default_lpddr5();
+        for i in 0..256u64 {
+            sc.read(i * 2048 * 3, 32);
+        }
+        let e_sc = sc.stats().energy_pj / sc.stats().bytes as f64;
+        assert!(e_sc > 2.0 * e_seq, "scattered {e_sc} vs sequential {e_seq}");
+    }
+
+    #[test]
+    fn partial_burst_rounds_up() {
+        let mut d = DramModel::default_lpddr5();
+        d.read(10, 8); // spans a single burst
+        assert_eq!(d.stats().bursts, 1);
+        assert_eq!(d.stats().bytes, 32);
+        let mut d2 = DramModel::default_lpddr5();
+        d2.read(30, 8); // straddles a burst boundary
+        assert_eq!(d2.stats().bursts, 2);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut d = DramModel::default_lpddr5();
+        d.read(0, 4096);
+        d.reset();
+        assert_eq!(d.stats(), DramStats::default());
+    }
+
+    #[test]
+    fn stats_add_accumulates() {
+        let mut a = DramStats::default();
+        let mut d = DramModel::default_lpddr5();
+        d.read(0, 1024);
+        a.add(&d.stats());
+        a.add(&d.stats());
+        assert_eq!(a.bytes, 2048);
+        assert_eq!(a.reads, 2);
+    }
+}

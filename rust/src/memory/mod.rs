@@ -1,0 +1,11 @@
+//! Memory-system models: off-chip LPDDR5 DRAM (Ramulator-2.0 stand-in, see
+//! DESIGN.md §2) and the 256 KB on-chip SRAM buffer with the depth-segmented
+//! 2-way associative organization of paper §3.3-III.
+
+pub mod dram;
+pub mod sram;
+pub mod traffic;
+
+pub use dram::{DramConfig, DramModel, DramStats};
+pub use sram::{SramBuffer, SramConfig, SramStats};
+pub use traffic::TrafficLog;

@@ -1,0 +1,102 @@
+//! Frame-level traffic bookkeeping: one place where culling / blending /
+//! sorting stages deposit their DRAM & SRAM statistics so the energy/FPS
+//! roll-up and the per-figure benches can read consistent numbers.
+
+use super::dram::DramStats;
+use super::sram::SramStats;
+use crate::util::json::Json;
+
+/// Aggregated memory traffic for one frame (or one experiment run).
+#[derive(Debug, Clone, Default)]
+pub struct TrafficLog {
+    /// DRAM traffic during preprocessing (culling fetches).
+    pub preprocess_dram: DramStats,
+    /// DRAM traffic during blending (buffer miss fills).
+    pub blend_dram: DramStats,
+    /// SRAM buffer activity during blending.
+    pub blend_sram: SramStats,
+    /// Gaussian parameter records fetched from DRAM (count, dedup applied).
+    pub gaussians_fetched: u64,
+    /// Gaussian records that passed exact culling.
+    pub gaussians_visible: u64,
+}
+
+impl TrafficLog {
+    pub fn new() -> TrafficLog {
+        TrafficLog::default()
+    }
+
+    /// Total DRAM bytes across stages.
+    pub fn total_dram_bytes(&self) -> u64 {
+        self.preprocess_dram.bytes + self.blend_dram.bytes
+    }
+
+    /// Total DRAM energy (pJ).
+    pub fn total_dram_energy_pj(&self) -> f64 {
+        self.preprocess_dram.energy_pj + self.blend_dram.energy_pj
+    }
+
+    /// Total DRAM *access count* — the Fig. 9 / Fig. 10(a) metric. The paper
+    /// counts parameter-fetch transactions; we count bursts, which is what a
+    /// DRAM controller issues.
+    pub fn total_dram_accesses(&self) -> u64 {
+        self.preprocess_dram.bursts + self.blend_dram.bursts
+    }
+
+    pub fn add(&mut self, o: &TrafficLog) {
+        self.preprocess_dram.add(&o.preprocess_dram);
+        self.blend_dram.add(&o.blend_dram);
+        self.blend_sram.add(&o.blend_sram);
+        self.gaussians_fetched += o.gaussians_fetched;
+        self.gaussians_visible += o.gaussians_visible;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("preprocess_dram_bytes", self.preprocess_dram.bytes)
+            .set("preprocess_dram_bursts", self.preprocess_dram.bursts)
+            .set("blend_dram_bytes", self.blend_dram.bytes)
+            .set("blend_dram_bursts", self.blend_dram.bursts)
+            .set("sram_hit_rate", self.blend_sram.hit_rate())
+            .set("sram_lookups", self.blend_sram.lookups)
+            .set("gaussians_fetched", self.gaussians_fetched)
+            .set("gaussians_visible", self.gaussians_visible)
+            .set("total_dram_energy_pj", self.total_dram_energy_pj())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_combine_stages() {
+        let mut t = TrafficLog::new();
+        t.preprocess_dram.bytes = 100;
+        t.preprocess_dram.bursts = 4;
+        t.blend_dram.bytes = 50;
+        t.blend_dram.bursts = 2;
+        assert_eq!(t.total_dram_bytes(), 150);
+        assert_eq!(t.total_dram_accesses(), 6);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = TrafficLog::new();
+        a.gaussians_fetched = 10;
+        let mut b = TrafficLog::new();
+        b.gaussians_fetched = 5;
+        b.blend_sram.lookups = 7;
+        a.add(&b);
+        assert_eq!(a.gaussians_fetched, 15);
+        assert_eq!(a.blend_sram.lookups, 7);
+    }
+
+    #[test]
+    fn json_has_expected_keys() {
+        let t = TrafficLog::new();
+        let s = t.to_json().pretty();
+        assert!(s.contains("sram_hit_rate"));
+        assert!(s.contains("gaussians_visible"));
+    }
+}

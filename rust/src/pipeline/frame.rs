@@ -1,0 +1,617 @@
+//! Frame pipeline: orchestrates culling, projection, intersection testing,
+//! ATG, AII-Sort, and DCIM blending for one frame, producing both pixels
+//! (optional) and hardware statistics.
+
+use crate::camera::Camera;
+use crate::culling::conventional::ConventionalCulling;
+use crate::culling::{CullOutput, DrFc, GridConfig, GridPartition};
+use crate::dcim::mapping::BlendOpCounts;
+use crate::dcim::nmc::NmcAccumulator;
+use crate::dcim::{DcimConfig, DcimMacro};
+use crate::energy::{ops, FrameEnergy, StageLatency};
+use crate::memory::dram::DramModel;
+use crate::memory::sram::{SramBuffer, SramConfig};
+use crate::memory::TrafficLog;
+use crate::render::{HwRenderer, Image};
+use crate::scene::{DramLayout, Gaussian4D, Scene};
+use crate::sorting::{
+    conventional_bucket_bitonic, AiiSort, SortHwConfig, SortStats,
+};
+use crate::tiles::atg::{Atg, AtgConfig};
+use crate::tiles::connection::ConnectionGraph;
+use crate::tiles::intersect::{bin_splats, Splat2D, TileGrid};
+use crate::tiles::raster::raster_order;
+
+/// Per-Gaussian preprocessing MACs on the DCIM tier: temporal slice (eq. 5:
+/// 6), covariance transform J·W·Σ·Wᵀ·Jᵀ (2 × 3×3×3 matmuls ≈ 54), conic
+/// inversion + projection (≈ 12), SH color (42).
+pub const PREPROCESS_MACS_PER_GAUSSIAN: u64 = 6 + 54 + 12 + 42;
+
+/// Digital clock for the sorter / controller blocks (GHz).
+pub const DIGITAL_FREQ_GHZ: f64 = 1.0;
+
+/// Initial early-termination factor used to estimate blend pairs before the
+/// first numeric render has calibrated it: fraction of (pixel × splat)
+/// pairs actually blended before saturation/cutoffs. Every numerically
+/// rendered frame re-calibrates the pipeline's live factor from the exact
+/// NMC blend count, so perf-only frames after any rendered frame use a
+/// measured value.
+pub const EARLY_TERMINATION_FACTOR: f64 = 0.25;
+
+/// Full pipeline configuration (defaults = the paper's chosen operating
+/// point: grid 4, threshold 0.5, Tile Blocks 4, N = 8 buckets).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub width: usize,
+    pub height: usize,
+    /// DR-FC grid number (Fig. 9 knob).
+    pub grid_n: usize,
+    pub atg: AtgConfig,
+    /// AII-Sort / buffer-segment bucket count N (Fig. 11 knob).
+    pub n_buckets: usize,
+    /// Feature switches (ablations / baselines).
+    pub use_drfc: bool,
+    pub use_atg: bool,
+    pub use_aii: bool,
+    pub dcim: DcimConfig,
+    pub sort_hw: SortHwConfig,
+    /// On-chip blend-buffer capacity (bytes). Paper hardware: 256 KB.
+    /// Scaled-workload benches shrink it proportionally so the
+    /// working-set/capacity ratio matches the paper-scale scenes
+    /// (DESIGN.md §7).
+    pub sram_bytes: usize,
+}
+
+impl PipelineConfig {
+    /// The paper's configuration for a given scene class.
+    pub fn paper(dynamic: bool) -> PipelineConfig {
+        PipelineConfig {
+            width: 1280,
+            height: 720,
+            grid_n: 4,
+            atg: AtgConfig::default(),
+            n_buckets: 8,
+            use_drfc: true,
+            use_atg: true,
+            use_aii: true,
+            dcim: if dynamic { DcimConfig::paper_dynamic() } else { DcimConfig::paper_static() },
+            sort_hw: SortHwConfig::default(),
+            sram_bytes: 256 * 1024,
+        }
+    }
+
+    /// All-baseline configuration (conventional culling, raster scan,
+    /// conventional sort) — the Fig. 2(a) profiling subject.
+    pub fn baseline(dynamic: bool) -> PipelineConfig {
+        PipelineConfig {
+            use_drfc: false,
+            use_atg: false,
+            use_aii: false,
+            ..PipelineConfig::paper(dynamic)
+        }
+    }
+
+    /// Scale the image (tests / fast benches).
+    pub fn with_resolution(mut self, w: usize, h: usize) -> PipelineConfig {
+        self.width = w;
+        self.height = h;
+        self
+    }
+}
+
+/// Result of one frame.
+#[derive(Debug, Clone)]
+pub struct FrameResult {
+    pub image: Option<Image>,
+    pub traffic: TrafficLog,
+    pub energy: FrameEnergy,
+    pub latency: StageLatency,
+    pub sort: SortStats,
+    /// ATG work + flags (0 work when ATG disabled).
+    pub atg_ops: u64,
+    pub atg_flags: u64,
+    pub n_visible: usize,
+    /// (pixel × splat) pairs blended (exact when rendered, modeled otherwise).
+    pub blend_pairs: u64,
+    /// Splat-tile intersection pairs.
+    pub intersections: u64,
+}
+
+/// The frame pipeline engine. Owns all hardware models and the posteriori
+/// state (ATG groups, AII boundaries) carried between frames.
+pub struct FramePipeline<'a> {
+    pub config: PipelineConfig,
+    pub scene: &'a Scene,
+    pub grid: GridPartition,
+    pub layout: DramLayout,
+    pub tile_grid: TileGrid,
+    dram: DramModel,
+    sram: SramBuffer,
+    atg: Atg,
+    aii: AiiSort,
+    renderer: HwRenderer,
+    frame_idx: usize,
+    /// Live early-termination factor (calibrated by rendered frames).
+    et_factor: f64,
+    /// Per-frame balanced depth-segment boundaries (§3.3-III).
+    depth_boundaries: Vec<f32>,
+    /// FP16-quantized copy of the scene (what the datapath reads from
+    /// DRAM) — computed once at build instead of per frame (§Perf).
+    quantized: Vec<Gaussian4D>,
+}
+
+impl<'a> FramePipeline<'a> {
+    /// Build (includes the offline grid partition + DRAM layout).
+    pub fn new(scene: &'a Scene, config: PipelineConfig) -> FramePipeline<'a> {
+        let grid_cfg = if scene.dynamic {
+            GridConfig::new(config.grid_n)
+        } else {
+            GridConfig::static_scene(config.grid_n)
+        };
+        let grid = GridPartition::build(scene, grid_cfg);
+        let layout = DramLayout::build(scene, &grid);
+        let tile_grid = TileGrid::new(config.width, config.height);
+        let conn = ConnectionGraph::new(tile_grid.tiles_x, tile_grid.tiles_y, config.atg.tile_block);
+        let n_blocks = conn.n_blocks();
+        let sram = SramBuffer::new(SramConfig {
+            capacity_bytes: config.sram_bytes,
+            ..SramConfig::paper_default(
+                Gaussian4D::dram_bytes(scene.dynamic),
+                config.n_buckets,
+            )
+        });
+        let quantized: Vec<Gaussian4D> =
+            scene.gaussians.iter().map(|g| g.quantized_fp16()).collect();
+        FramePipeline {
+            atg: Atg::new(config.atg),
+            aii: AiiSort::new(config.n_buckets, n_blocks, config.sort_hw),
+            renderer: HwRenderer::new(config.width, config.height),
+            dram: DramModel::default_lpddr5(),
+            sram,
+            grid,
+            layout,
+            tile_grid,
+            config,
+            scene,
+            frame_idx: 0,
+            et_factor: EARLY_TERMINATION_FACTOR,
+            depth_boundaries: Vec::new(),
+            quantized,
+        }
+    }
+
+    /// Reset posteriori state and frame counter (scene cut).
+    pub fn reset(&mut self) {
+        self.atg.reset();
+        self.aii.reset();
+        self.frame_idx = 0;
+    }
+
+    /// Process one frame. `render_image = false` runs only the performance
+    /// path (events + models), which is what the parameter-sweep benches use.
+    pub fn render_frame(&mut self, cam: &Camera, t: f32, render_image: bool) -> FrameResult {
+        let mut energy = FrameEnergy::default();
+        let mut traffic = TrafficLog::new();
+        let mut latency = StageLatency::default();
+
+        // ------------------------------------------------- preprocess ----
+        self.dram.reset();
+        let cull = self.cull(cam, t, &mut energy);
+        traffic.preprocess_dram = self.dram.stats();
+        energy.dram_pj += traffic.preprocess_dram.energy_pj;
+        traffic.gaussians_fetched = cull.fetched;
+        traffic.gaussians_visible = cull.visible.len() as u64;
+
+        // Projection of visible Gaussians (DCIM work).
+        let mut dcim = DcimMacro::new(self.config.dcim);
+        dcim.macs(cull.visible.len() as u64 * PREPROCESS_MACS_PER_GAUSSIAN);
+        let splats: Vec<Splat2D> = cull
+            .visible
+            .iter()
+            .filter_map(|&gi| {
+                crate::tiles::intersect::project_gaussian(
+                    &self.quantized[gi as usize],
+                    gi,
+                    cam,
+                    t,
+                )
+            })
+            .collect();
+
+        // Intersection testing + connection tracking.
+        let mut conn = ConnectionGraph::new(
+            self.tile_grid.tiles_x,
+            self.tile_grid.tiles_y,
+            self.config.atg.tile_block,
+        );
+        let bins = bin_splats(&self.tile_grid, &splats);
+        let mut intersections = 0u64;
+        for s in &splats {
+            if let Some((tx0, ty0, tx1, ty1)) = self.tile_grid.tile_range(s) {
+                intersections += ((tx1 - tx0 + 1) * (ty1 - ty0 + 1)) as u64;
+                conn.record_footprint(tx0, ty0, tx1, ty1);
+            }
+        }
+        energy.intersect_pj += intersections as f64 * ops::E_INTERSECT_PJ;
+
+        // Block-level unique-splat working sets (needed by the sort stage
+        // and by ATG's buffer-capacity calibration below).
+        let mut block_tiles: Vec<Vec<usize>> = vec![Vec::new(); conn.n_blocks()];
+        for tile in 0..bins.len() {
+            let (tx, ty) = self.tile_grid.tile_xy(tile);
+            block_tiles[conn.block_of_tile(tx, ty)].push(tile);
+        }
+        let mut member = vec![false; splats.len()];
+        let mut block_items: Vec<Vec<(f32, u32)>> = Vec::with_capacity(conn.n_blocks());
+        for tiles in &block_tiles {
+            let mut items: Vec<(f32, u32)> = Vec::new();
+            for &tile in tiles {
+                for &si in &bins[tile] {
+                    if !member[si as usize] {
+                        member[si as usize] = true;
+                        items.push((splats[si as usize].depth, si));
+                    }
+                }
+            }
+            for &(_, si) in &items {
+                member[si as usize] = false;
+            }
+            block_items.push(items);
+        }
+
+        // Calibrate ATG's group-size cap to the buffer: a group's combined
+        // working set should fit ~70% of the buffer lines (§3.3: grouping
+        // "optimizes on-chip buffer data reuse" — oversized groups thrash).
+        if self.config.use_atg {
+            let occupied: Vec<usize> = block_items
+                .iter()
+                .map(|b| b.len())
+                .filter(|&l| l > 0)
+                .collect();
+            if !occupied.is_empty() {
+                let avg_unique = occupied.iter().sum::<usize>() as f64 / occupied.len() as f64;
+                // Grouped blocks are grouped *because* they share splats;
+                // the marginal working set per extra block is roughly half
+                // its standalone unique count.
+                let budget = self.sram.capacity_lines() as f64;
+                self.atg.config.max_group_blocks =
+                    ((budget / (0.5 * avg_unique).max(1.0)) as usize).clamp(4, 256);
+            }
+        }
+
+        // Balanced depth-segment boundaries (§3.3-III: the buffer's N depth
+        // segments are co-designed with AII-Sort's buckets — equal-count
+        // intervals over this frame's visible depths).
+        self.calibrate_depth_segments(&splats);
+
+        // ATG (grouping decision feeds the blend tile order).
+        let (tile_order, atg_ops, atg_flags) = if self.config.use_atg {
+            let out = self.atg.update(&conn);
+            energy.atg_pj += out.scan_ops as f64 * ops::E_CMP_FP16_PJ
+                + out.uf_ops as f64 * ops::E_UNIONFIND_PJ;
+            (
+                out.groups.tile_order(
+                    self.tile_grid.tiles_x,
+                    self.tile_grid.tiles_y,
+                    self.config.atg.tile_block,
+                ),
+                out.regroup_ops(),
+                out.flags,
+            )
+        } else {
+            (raster_order(self.tile_grid.tiles_x, self.tile_grid.tiles_y), 0, 0)
+        };
+
+        // Preprocess latency: DRAM fetch ∥ grid tests + projection + binning.
+        let proj_ns = dcim.busy_ns();
+        let test_ns = (cull.fetched as f64 + self.grid.n_cells() as f64
+            + intersections as f64 / 4.0)
+            / DIGITAL_FREQ_GHZ;
+        latency.preprocess_ns =
+            traffic.preprocess_dram.busy_ns.max(proj_ns + test_ns);
+
+        // ------------------------------------------------------- sort ----
+        // Sorting runs at Tile Block granularity (paper §3.2/§3.3-I: the
+        // bucket intervals are tracked per block): each block sorts the
+        // *union* of its tiles' splats once — shared splats are sorted a
+        // single time — and every tile extracts its own ordered list from
+        // the block's result (a stable, order-preserving filter).
+        let mut sort = SortStats::default();
+        let mut sorted_bins: Vec<Vec<u32>> = vec![Vec::new(); bins.len()];
+        let mut in_tile = vec![false; splats.len()];
+        for (block, tiles) in block_tiles.iter().enumerate() {
+            let items = &mut block_items[block];
+            if items.is_empty() {
+                continue;
+            }
+            let items: &mut Vec<(f32, u32)> = items;
+            let stats = if self.config.use_aii {
+                self.aii.sort_tile(block, items)
+            } else {
+                conventional_bucket_bitonic(items, self.config.n_buckets, &self.config.sort_hw)
+            };
+            sort.add(&stats);
+            // Per-tile extraction (stable, order-preserving).
+            for &tile in tiles {
+                for &si in &bins[tile] {
+                    in_tile[si as usize] = true;
+                }
+                for &(_, si) in items.iter() {
+                    if in_tile[si as usize] {
+                        sorted_bins[tile].push(si);
+                    }
+                }
+                for &si in &bins[tile] {
+                    in_tile[si as usize] = false;
+                }
+            }
+        }
+        energy.sort_pj += sort.comparisons as f64 * ops::E_CMP_FP16_PJ
+            + sort.bucketed as f64 * ops::E_ROUTE_PJ;
+        latency.sort_ns = sort.cycles as f64 / DIGITAL_FREQ_GHZ;
+
+        // ------------------------------------------------------ blend ----
+        // SRAM/DRAM reuse simulation over the chosen tile order.
+        self.dram.reset();
+        self.sram.reset();
+        let mut blend_pairs_upper = 0u64;
+        for &tile in &tile_order {
+            let (x0, y0, x1, y1) = self.tile_grid.tile_pixels(tile);
+            let pixels = ((x1 - x0) * (y1 - y0)) as u64;
+            blend_pairs_upper += pixels * sorted_bins[tile].len() as u64;
+            for &si in &sorted_bins[tile] {
+                let s = &splats[si as usize];
+                let segment = self.depth_segment(s.depth);
+                if !self.sram.lookup(segment, s.id as u64) {
+                    self.dram.read(
+                        self.layout.addr[s.id as usize],
+                        self.layout.bytes_per_gaussian,
+                    );
+                    self.sram.insert(segment, s.id as u64);
+                }
+            }
+        }
+        traffic.blend_dram = self.dram.stats();
+        traffic.blend_sram = self.sram.stats();
+        energy.dram_pj += traffic.blend_dram.energy_pj;
+        energy.sram_pj += traffic.blend_sram.energy_pj;
+
+        // Numeric render (optional) gives the exact blended-pair count.
+        let mut nmc = NmcAccumulator::new();
+        let (image, blend_pairs) = if render_image {
+            let img = self
+                .renderer
+                .render_splats_ordered(&splats, &tile_order, &mut nmc);
+            let exact = nmc.stats().blend_ops;
+            if blend_pairs_upper > 0 {
+                // Calibrate the live factor for subsequent perf-only frames.
+                self.et_factor = exact as f64 / blend_pairs_upper as f64;
+            }
+            (Some(img), exact)
+        } else {
+            (None, (blend_pairs_upper as f64 * self.et_factor) as u64)
+        };
+        let counts = BlendOpCounts::from_pairs(blend_pairs, splats.len() as u64);
+        counts.charge(&mut dcim);
+        energy.dcim_pj = dcim.stats().energy_pj;
+        energy.nmc_pj = if render_image {
+            nmc.stats().energy_pj
+        } else {
+            blend_pairs as f64 * nmc.e_blend_pj
+        };
+
+        // Blend latency: DCIM compute vs DRAM miss-fill, overlapped.
+        let blend_dcim_ns = {
+            // Only the blend share of DCIM work (subtract preprocess).
+            let blend_ops = counts.macs + counts.lut_lookups;
+            blend_ops as f64 / self.config.dcim.macs_per_cycle() / self.config.dcim.freq_ghz
+        };
+        latency.blend_ns = blend_dcim_ns.max(traffic.blend_dram.busy_ns);
+
+        self.frame_idx += 1;
+        FrameResult {
+            image,
+            traffic,
+            energy,
+            latency,
+            sort,
+            atg_ops,
+            atg_flags,
+            n_visible: splats.len(),
+            blend_pairs,
+            intersections,
+        }
+    }
+
+    fn cull(&mut self, cam: &Camera, t: f32, energy: &mut FrameEnergy) -> CullOutput {
+        if self.config.use_drfc {
+            let drfc = DrFc::new(self.scene, &self.grid, &self.layout);
+            let out = drfc.cull(cam, t, &mut self.dram);
+            energy.cull_pj += self.grid.n_cells() as f64 * ops::E_GRID_TEST_PJ
+                + out.fetched as f64 * ops::E_FRUSTUM_PJ;
+            out
+        } else {
+            let conv = ConventionalCulling::new(self.scene, &self.layout);
+            let out = conv.cull(cam, t, &mut self.dram);
+            energy.cull_pj += out.fetched as f64 * ops::E_FRUSTUM_PJ;
+            out
+        }
+    }
+
+    /// The live early-termination factor (initially
+    /// [`EARLY_TERMINATION_FACTOR`], re-calibrated by rendered frames).
+    pub fn et_factor(&self) -> f64 {
+        self.et_factor
+    }
+
+    /// Recompute the buffer's depth-segment boundaries as equal-count
+    /// quantiles of this frame's visible depths (§3.3-III co-design with
+    /// AII-Sort: balanced intervals ⇒ balanced segment occupancy).
+    fn calibrate_depth_segments(&mut self, splats: &[Splat2D]) {
+        let n = self.config.n_buckets;
+        if n <= 1 || splats.is_empty() {
+            self.depth_boundaries.clear();
+            return;
+        }
+        let mut depths: Vec<f32> = splats.iter().map(|s| s.depth).collect();
+        depths.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        self.depth_boundaries = (1..n)
+            .map(|i| depths[(i * depths.len() / n).min(depths.len() - 1)])
+            .collect();
+    }
+
+    /// Which depth segment of the SRAM buffer a splat belongs to
+    /// (§3.3-III: buffer partitioned into N segments by depth).
+    fn depth_segment(&self, depth: f32) -> usize {
+        let mut seg = 0;
+        while seg < self.depth_boundaries.len() && depth >= self.depth_boundaries[seg] {
+            seg += 1;
+        }
+        seg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Trajectory, ViewCondition};
+    use crate::math::Vec3;
+    use crate::scene::synth::{SceneKind, SynthParams};
+
+    fn small_scene() -> Scene {
+        SynthParams::new(SceneKind::DynamicLarge, 4000).generate()
+    }
+
+    fn template(w: usize, h: usize) -> Camera {
+        let mut c = Camera::look_at(
+            Vec3::new(0.0, 4.0, 20.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            60f32.to_radians(),
+            w as f32 / h as f32,
+            0.1,
+            200.0,
+        );
+        c.set_resolution(w, h);
+        c
+    }
+
+    #[test]
+    fn frame_produces_consistent_stats() {
+        let scene = small_scene();
+        let cfg = PipelineConfig::paper(true).with_resolution(320, 180);
+        let mut p = FramePipeline::new(&scene, cfg);
+        let cam = template(320, 180);
+        let r = p.render_frame(&cam, 0.3, false);
+        assert!(r.n_visible > 0);
+        assert!(r.traffic.gaussians_fetched >= r.traffic.gaussians_visible);
+        assert!(r.energy.total_pj() > 0.0);
+        assert!(r.latency.pipelined_ns() > 0.0);
+        assert!(r.blend_pairs > 0);
+    }
+
+    #[test]
+    fn rendered_and_perf_only_agree_on_traffic() {
+        let scene = small_scene();
+        let cfg = PipelineConfig::paper(true).with_resolution(160, 96);
+        let cam = template(160, 96);
+        let mut p1 = FramePipeline::new(&scene, cfg.clone());
+        let r1 = p1.render_frame(&cam, 0.3, true);
+        let mut p2 = FramePipeline::new(&scene, cfg);
+        let r2 = p2.render_frame(&cam, 0.3, false);
+        assert!(r1.image.is_some());
+        assert!(r2.image.is_none());
+        assert_eq!(r1.traffic.gaussians_fetched, r2.traffic.gaussians_fetched);
+        assert_eq!(r1.traffic.blend_sram.lookups, r2.traffic.blend_sram.lookups);
+        assert_eq!(r1.n_visible, r2.n_visible);
+    }
+
+    #[test]
+    fn early_termination_factor_calibrates_from_rendered_frames() {
+        let scene = small_scene();
+        let cfg = PipelineConfig::paper(true).with_resolution(160, 96);
+        let cam = template(160, 96);
+        let mut p = FramePipeline::new(&scene, cfg);
+        assert_eq!(p.et_factor(), EARLY_TERMINATION_FACTOR);
+        let exact = p.render_frame(&cam, 0.3, true);
+        let calibrated = p.et_factor();
+        assert!(calibrated > 0.0 && calibrated <= 1.0, "factor {calibrated}");
+        // A perf-only frame right after must model pairs near the exact
+        // count of the same view (identical frame → same upper bound).
+        let modeled = p.render_frame(&cam, 0.3, false);
+        let ratio = modeled.blend_pairs as f64 / exact.blend_pairs.max(1) as f64;
+        assert!(
+            (0.8..=1.25).contains(&ratio),
+            "calibrated model {} vs exact {} (ratio {ratio})",
+            modeled.blend_pairs,
+            exact.blend_pairs
+        );
+    }
+
+    #[test]
+    fn drfc_reduces_preprocess_dram_vs_baseline() {
+        let scene = small_scene();
+        let cam = template(320, 180);
+        let mut with = FramePipeline::new(
+            &scene,
+            PipelineConfig::paper(true).with_resolution(320, 180),
+        );
+        let mut without = FramePipeline::new(
+            &scene,
+            PipelineConfig {
+                use_drfc: false,
+                ..PipelineConfig::paper(true).with_resolution(320, 180)
+            },
+        );
+        let rw = with.render_frame(&cam, 0.2, false);
+        let ro = without.render_frame(&cam, 0.2, false);
+        assert!(
+            rw.traffic.preprocess_dram.bytes < ro.traffic.preprocess_dram.bytes,
+            "DR-FC {} vs conventional {}",
+            rw.traffic.preprocess_dram.bytes,
+            ro.traffic.preprocess_dram.bytes
+        );
+        // Both see the same visible set.
+        assert_eq!(rw.n_visible, ro.n_visible);
+    }
+
+    #[test]
+    fn posteriori_frames_cost_less_atg_and_sort() {
+        let scene = small_scene();
+        let cfg = PipelineConfig::paper(true).with_resolution(320, 180);
+        let mut p = FramePipeline::new(&scene, cfg);
+        let cam_t = template(320, 180);
+        // A fully static viewing sequence (no head motion, frozen scene
+        // time): phase 2 must reuse the grouping wholesale.
+        let traj = Trajectory::new(ViewCondition::Static, 4)
+            .with_scene(Vec3::ZERO, 22.0)
+            .with_time_span(0.3, 0.3);
+        let frames = traj.generate(&cam_t);
+        let mut results = Vec::new();
+        for (cam, t) in &frames {
+            results.push(p.render_frame(cam, *t, false));
+        }
+        let first = &results[0];
+        let later = &results[3];
+        assert!(
+            later.atg_ops < first.atg_ops,
+            "posteriori ATG {} vs frame-0 {}",
+            later.atg_ops,
+            first.atg_ops
+        );
+        assert_eq!(later.atg_flags, 0, "static sequence raises no flags");
+        assert_eq!(later.sort.minmax_scanned, 0, "AII skips min/max after frame 0");
+    }
+
+    #[test]
+    fn static_scene_pipeline_works() {
+        let scene = SynthParams::new(SceneKind::StaticLarge, 3000).generate();
+        let cfg = PipelineConfig::paper(false).with_resolution(256, 144);
+        let mut p = FramePipeline::new(&scene, cfg);
+        let cam = template(256, 144);
+        let r = p.render_frame(&cam, 0.0, true);
+        assert!(r.n_visible > 0);
+        let img = r.image.unwrap();
+        assert!(img.mean_luma() > 0.01, "rendered something: {}", img.mean_luma());
+    }
+}

@@ -1,0 +1,10 @@
+//! The per-frame rendering engine: preprocess → sort → blend, with the
+//! paper's four techniques as switchable features, dual-tracked as a
+//! numeric path (real pixels) and a performance path (hardware events →
+//! cycles/energy). See DESIGN.md §3.
+
+pub mod frame;
+pub mod profile;
+
+pub use frame::{FramePipeline, FrameResult, PipelineConfig};
+pub use profile::{profile_breakdown, PhaseShare};

@@ -1,0 +1,87 @@
+//! Fig. 2(a) reproduction: latency breakdown of the (baseline) dynamic-3DGS
+//! pipeline into preprocessing / sorting / rasterization, from the modeled
+//! stage latencies.
+
+use super::frame::{FramePipeline, PipelineConfig};
+use crate::camera::Camera;
+use crate::scene::Scene;
+
+/// One phase's share of frame latency.
+#[derive(Debug, Clone)]
+pub struct PhaseShare {
+    pub phase: &'static str,
+    pub ns: f64,
+    pub share: f64,
+}
+
+/// Run `frames` frames of the given configuration and return the averaged
+/// breakdown (preprocessing / sorting / rasterization shares).
+pub fn profile_breakdown(
+    scene: &Scene,
+    config: PipelineConfig,
+    frames: &[(Camera, f32)],
+) -> Vec<PhaseShare> {
+    let mut pipeline = FramePipeline::new(scene, config);
+    let mut pre = 0.0;
+    let mut sort = 0.0;
+    let mut blend = 0.0;
+    for (cam, t) in frames {
+        let r = pipeline.render_frame(cam, *t, false);
+        pre += r.latency.preprocess_ns;
+        sort += r.latency.sort_ns;
+        blend += r.latency.blend_ns;
+    }
+    let total = (pre + sort + blend).max(1e-12);
+    vec![
+        PhaseShare { phase: "preprocessing", ns: pre, share: pre / total },
+        PhaseShare { phase: "sorting", ns: sort, share: sort / total },
+        PhaseShare { phase: "rasterization", ns: blend, share: blend / total },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Trajectory, ViewCondition};
+    use crate::math::Vec3;
+    use crate::scene::synth::{SceneKind, SynthParams};
+
+    #[test]
+    fn baseline_preprocessing_dominated_by_culling_fetch() {
+        // The paper's Fig. 2(a): in the unoptimized dynamic pipeline,
+        // preprocessing (frustum-culling DRAM sweep) is a major phase.
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 60_000).generate();
+        let mut cam = Camera::look_at(
+            Vec3::new(0.0, 4.0, 20.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            60f32.to_radians(),
+            16.0 / 9.0,
+            0.1,
+            200.0,
+        );
+        cam.set_resolution(160, 90);
+        let frames = Trajectory::new(ViewCondition::Average, 3)
+            .with_scene(Vec3::ZERO, 22.0)
+            .generate(&cam);
+        let shares = profile_breakdown(
+            &scene,
+            PipelineConfig::baseline(true).with_resolution(160, 90),
+            &frames,
+        );
+        assert_eq!(shares.len(), 3);
+        let total: f64 = shares.iter().map(|s| s.share).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // All three phases must register (their balance shifts with scale —
+        // the fig2 bench runs the paper-scale version).
+        for s in &shares {
+            let floor = if s.phase == "sorting" { 0.01 } else { 0.05 };
+            assert!(
+                s.share > floor,
+                "phase must be significant in the baseline: {} = {}",
+                s.phase,
+                s.share
+            );
+        }
+    }
+}

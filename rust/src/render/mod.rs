@@ -1,0 +1,77 @@
+//! Rendering: the exact f32 CPU reference rasterizer (the PSNR oracle), the
+//! hardware-faithful rasterizer (FP16 parameters + DD3D-Flow LUT
+//! exponential), PSNR computation, and PPM image output.
+
+pub mod hw;
+pub mod ppm;
+pub mod psnr;
+pub mod reference;
+
+pub use hw::HwRenderer;
+pub use psnr::{mse, psnr, ssim};
+pub use reference::ReferenceRenderer;
+
+/// A linear-RGB f32 image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    /// Row-major RGB triples.
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Image {
+        Image { width, height, data: vec![0.0; width * height * 3] }
+    }
+
+    #[inline]
+    pub fn pixel(&self, x: usize, y: usize) -> [f32; 3] {
+        let i = (y * self.width + x) * 3;
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    #[inline]
+    pub fn set_pixel(&mut self, x: usize, y: usize, rgb: [f32; 3]) {
+        let i = (y * self.width + x) * 3;
+        self.data[i] = rgb[0];
+        self.data[i + 1] = rgb[1];
+        self.data[i + 2] = rgb[2];
+    }
+
+    /// Mean luminance (diagnostics).
+    pub fn mean_luma(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let mut sum = 0.0f64;
+        for px in self.data.chunks_exact(3) {
+            sum += (0.2126 * px[0] + 0.7152 * px[1] + 0.0722 * px[2]) as f64;
+        }
+        (sum / (self.width * self.height) as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixel_roundtrip() {
+        let mut img = Image::new(4, 3);
+        img.set_pixel(2, 1, [0.1, 0.2, 0.3]);
+        assert_eq!(img.pixel(2, 1), [0.1, 0.2, 0.3]);
+        assert_eq!(img.pixel(0, 0), [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn mean_luma_of_white() {
+        let mut img = Image::new(2, 2);
+        for y in 0..2 {
+            for x in 0..2 {
+                img.set_pixel(x, y, [1.0, 1.0, 1.0]);
+            }
+        }
+        assert!((img.mean_luma() - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,72 @@
+//! Binary PPM (P6) image output with sRGB-ish gamma — lets examples dump
+//! inspectable frames without an image-crate dependency.
+
+use super::Image;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Encode with gamma 1/2.2 and 8-bit quantization.
+pub fn encode(img: &Image) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + img.data.len());
+    out.extend_from_slice(format!("P6\n{} {}\n255\n", img.width, img.height).as_bytes());
+    for &v in &img.data {
+        let g = v.clamp(0.0, 1.0).powf(1.0 / 2.2);
+        out.push((g * 255.0 + 0.5) as u8);
+    }
+    out
+}
+
+/// Write to a file.
+pub fn save(img: &Image, path: &Path) -> Result<()> {
+    let bytes = encode(img);
+    let mut f =
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_and_size() {
+        let img = Image::new(3, 2);
+        let bytes = encode(&img);
+        assert!(bytes.starts_with(b"P6\n3 2\n255\n"));
+        assert_eq!(bytes.len(), 11 + 3 * 2 * 3);
+    }
+
+    #[test]
+    fn white_maps_to_255_black_to_0() {
+        let mut img = Image::new(1, 1);
+        img.set_pixel(0, 0, [1.0, 0.0, 1.0]);
+        let bytes = encode(&img);
+        let px = &bytes[bytes.len() - 3..];
+        assert_eq!(px[0], 255);
+        assert_eq!(px[1], 0);
+        assert_eq!(px[2], 255);
+    }
+
+    #[test]
+    fn values_clamped() {
+        let mut img = Image::new(1, 1);
+        img.set_pixel(0, 0, [2.0, -1.0, 0.5]);
+        let bytes = encode(&img);
+        let px = &bytes[bytes.len() - 3..];
+        assert_eq!(px[0], 255);
+        assert_eq!(px[1], 0);
+        assert!(px[2] > 100 && px[2] < 255);
+    }
+
+    #[test]
+    fn save_roundtrip() {
+        let img = Image::new(4, 4);
+        let path = std::env::temp_dir().join("gaucim_test.ppm");
+        save(&img, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(bytes, encode(&img));
+    }
+}

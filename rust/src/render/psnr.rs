@@ -1,0 +1,174 @@
+//! PSNR / MSE between rendered images (Table I's quality metric).
+
+use super::Image;
+
+/// Mean squared error over all channels (images must match in size).
+pub fn mse(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.width, b.width, "image width mismatch");
+    assert_eq!(a.height, b.height, "image height mismatch");
+    if a.data.is_empty() {
+        return 0.0;
+    }
+    let mut sum = 0.0f64;
+    for (&x, &y) in a.data.iter().zip(&b.data) {
+        let d = (x - y) as f64;
+        sum += d * d;
+    }
+    sum / a.data.len() as f64
+}
+
+/// Peak signal-to-noise ratio in dB for a peak value of 1.0 (linear RGB).
+/// Identical images return +inf.
+pub fn psnr(a: &Image, b: &Image) -> f64 {
+    let m = mse(a, b);
+    if m <= 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (1.0 / m).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_images_infinite_psnr() {
+        let img = Image::new(8, 8);
+        assert_eq!(psnr(&img, &img), f64::INFINITY);
+        assert_eq!(mse(&img, &img), 0.0);
+    }
+
+    #[test]
+    fn known_mse() {
+        let a = Image::new(2, 1);
+        let mut b = Image::new(2, 1);
+        // One channel off by 0.5 across 6 values → MSE = 0.25/6.
+        b.data[0] = 0.5;
+        assert!((mse(&a, &b) - 0.25 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn psnr_decreases_with_noise() {
+        let a = Image::new(4, 4);
+        let mut slight = a.clone();
+        let mut heavy = a.clone();
+        for (i, v) in slight.data.iter_mut().enumerate() {
+            *v += if i % 2 == 0 { 0.01 } else { -0.01 };
+        }
+        for (i, v) in heavy.data.iter_mut().enumerate() {
+            *v += if i % 2 == 0 { 0.2 } else { -0.2 };
+        }
+        assert!(psnr(&a, &slight) > psnr(&a, &heavy));
+        assert!((psnr(&a, &slight) - 40.0).abs() < 1e-6); // 20·log10(1/0.01)
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn size_mismatch_panics() {
+        mse(&Image::new(2, 2), &Image::new(3, 2));
+    }
+}
+
+/// Mean SSIM (structural similarity) over 8×8 windows on luma — the
+/// second quality metric common in the 3DGS literature. Returns 1.0 for
+/// identical images.
+pub fn ssim(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.width, b.width, "image width mismatch");
+    assert_eq!(a.height, b.height, "image height mismatch");
+    const C1: f64 = 0.01 * 0.01;
+    const C2: f64 = 0.03 * 0.03;
+    const W: usize = 8;
+
+    let luma = |img: &Image, x: usize, y: usize| -> f64 {
+        let p = img.pixel(x, y);
+        (0.2126 * p[0] + 0.7152 * p[1] + 0.0722 * p[2]) as f64
+    };
+
+    let mut sum = 0.0;
+    let mut windows = 0usize;
+    let mut wy = 0;
+    while wy + W <= a.height.max(W).min(a.height + W) && wy < a.height {
+        let mut wx = 0;
+        while wx < a.width {
+            let x1 = (wx + W).min(a.width);
+            let y1 = (wy + W).min(a.height);
+            let n = ((x1 - wx) * (y1 - wy)) as f64;
+            let (mut ma, mut mb) = (0.0, 0.0);
+            for y in wy..y1 {
+                for x in wx..x1 {
+                    ma += luma(a, x, y);
+                    mb += luma(b, x, y);
+                }
+            }
+            ma /= n;
+            mb /= n;
+            let (mut va, mut vb, mut cov) = (0.0, 0.0, 0.0);
+            for y in wy..y1 {
+                for x in wx..x1 {
+                    let da = luma(a, x, y) - ma;
+                    let db = luma(b, x, y) - mb;
+                    va += da * da;
+                    vb += db * db;
+                    cov += da * db;
+                }
+            }
+            va /= n;
+            vb /= n;
+            cov /= n;
+            sum += ((2.0 * ma * mb + C1) * (2.0 * cov + C2))
+                / ((ma * ma + mb * mb + C1) * (va + vb + C2));
+            windows += 1;
+            wx += W;
+        }
+        wy += W;
+    }
+    if windows == 0 {
+        1.0
+    } else {
+        sum / windows as f64
+    }
+}
+
+#[cfg(test)]
+mod ssim_tests {
+    use super::*;
+
+    #[test]
+    fn identical_images_ssim_one() {
+        let mut img = Image::new(32, 24);
+        for y in 0..24 {
+            for x in 0..32 {
+                img.set_pixel(x, y, [(x as f32) / 32.0, 0.5, (y as f32) / 24.0]);
+            }
+        }
+        assert!((ssim(&img, &img) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_reduces_ssim_monotonically() {
+        let mut base = Image::new(32, 32);
+        for y in 0..32 {
+            for x in 0..32 {
+                base.set_pixel(x, y, [((x + y) % 7) as f32 / 7.0; 3]);
+            }
+        }
+        let noisy = |amp: f32| {
+            let mut img = base.clone();
+            // Per-pixel alternating sign so the luma perturbation does not
+            // collapse into a uniform shift.
+            for (i, px) in img.data.chunks_exact_mut(3).enumerate() {
+                let s = if i % 2 == 0 { amp } else { -amp };
+                for v in px {
+                    *v += s;
+                }
+            }
+            img
+        };
+        let s_small = ssim(&base, &noisy(0.02));
+        let s_big = ssim(&base, &noisy(0.3));
+        assert!(s_small > s_big, "{s_small} vs {s_big}");
+        assert!(s_small > 0.9, "small noise keeps structure: {s_small}");
+        assert!(s_big < 0.7, "large noise destroys structure: {s_big}");
+    }
+}

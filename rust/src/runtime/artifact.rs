@@ -1,0 +1,97 @@
+//! Artifact discovery: locates the `artifacts/` directory holding the AOT
+//! HLO text files and validates their presence.
+
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+/// The compiled-artifact set.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+}
+
+impl Artifacts {
+    /// Use an explicit directory.
+    pub fn at(dir: impl Into<PathBuf>) -> Artifacts {
+        Artifacts { dir: dir.into() }
+    }
+
+    /// Locate `artifacts/` relative to the current dir or the repo root
+    /// (walks up from cwd; honors `GAUCIM_ARTIFACTS` env).
+    pub fn discover() -> Result<Artifacts> {
+        if let Ok(dir) = std::env::var("GAUCIM_ARTIFACTS") {
+            let p = PathBuf::from(dir);
+            if p.is_dir() {
+                return Ok(Artifacts::at(p));
+            }
+            bail!("GAUCIM_ARTIFACTS={} is not a directory", p.display());
+        }
+        let mut cur = std::env::current_dir()?;
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.is_dir() {
+                return Ok(Artifacts::at(cand));
+            }
+            if !cur.pop() {
+                bail!(
+                    "artifacts/ not found — run `make artifacts` first \
+                     (or set GAUCIM_ARTIFACTS)"
+                );
+            }
+        }
+    }
+
+    pub fn preprocess_hlo(&self) -> PathBuf {
+        self.dir.join("preprocess.hlo.txt")
+    }
+
+    pub fn blend_hlo(&self) -> PathBuf {
+        self.dir.join("blend.hlo.txt")
+    }
+
+    pub fn exp_lut_hlo(&self) -> PathBuf {
+        self.dir.join("exp_lut.hlo.txt")
+    }
+
+    /// Check that every artifact exists.
+    pub fn validate(&self) -> Result<()> {
+        for p in [self.preprocess_hlo(), self.blend_hlo(), self.exp_lut_hlo()] {
+            if !p.is_file() {
+                bail!("missing artifact {} — run `make artifacts`", p.display());
+            }
+        }
+        Ok(())
+    }
+
+    fn exists(p: &Path) -> bool {
+        p.is_file()
+    }
+
+    /// True when all artifacts are present (non-fatal probe for tests that
+    /// skip gracefully when `make artifacts` has not run).
+    pub fn available(&self) -> bool {
+        Self::exists(&self.preprocess_hlo())
+            && Self::exists(&self.blend_hlo())
+            && Self::exists(&self.exp_lut_hlo())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths_join_correctly() {
+        let a = Artifacts::at("/tmp/x");
+        assert_eq!(a.preprocess_hlo(), PathBuf::from("/tmp/x/preprocess.hlo.txt"));
+        assert_eq!(a.blend_hlo(), PathBuf::from("/tmp/x/blend.hlo.txt"));
+        assert_eq!(a.exp_lut_hlo(), PathBuf::from("/tmp/x/exp_lut.hlo.txt"));
+    }
+
+    #[test]
+    fn validate_fails_on_missing() {
+        let a = Artifacts::at("/nonexistent-dir-gaucim");
+        assert!(a.validate().is_err());
+        assert!(!a.available());
+    }
+}

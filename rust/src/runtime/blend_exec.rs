@@ -1,0 +1,184 @@
+//! Tile-blend executor: runs the AOT-compiled L1 Pallas blend kernel
+//! (`artifacts/blend.hlo.txt`) for one 16×16 tile over up to
+//! [`BLEND_MAX_G`](super::BLEND_MAX_G) depth-sorted splats.
+//!
+//! Interface (must match `python/compile/aot.py::lower_blend`):
+//! inputs `means[G,2]` (pixel coords relative to the tile origin),
+//! `conics[G,3]`, `colors[G,3]`, `alphas[G]` (0 ⇒ padding); output tuple
+//! `(rgb[256,3],)` row-major over the tile's 16×16 pixels.
+
+use super::executor::{literal_f32, to_vec_f32, HloExecutor};
+use super::BLEND_MAX_G;
+use crate::tiles::intersect::Splat2D;
+use crate::tiles::TILE_PX;
+use anyhow::Result;
+use std::path::Path;
+use xla::PjRtClient;
+
+/// The compiled blend kernel.
+pub struct BlendExecutor {
+    exec: HloExecutor,
+}
+
+impl BlendExecutor {
+    pub fn load(client: &PjRtClient, path: &Path) -> Result<BlendExecutor> {
+        Ok(BlendExecutor { exec: HloExecutor::load(client, path)? })
+    }
+
+    /// Blend `splats` (already depth-sorted, front first) into the tile with
+    /// pixel origin `(x0, y0)`. Splats beyond [`BLEND_MAX_G`] are blended in
+    /// consecutive invocations is NOT supported here — callers chunk instead
+    /// (chunking changes transmittance state; for the demo path we clamp).
+    /// Returns 16×16 RGB rows.
+    pub fn blend_tile(
+        &self,
+        splats: &[Splat2D],
+        x0: f32,
+        y0: f32,
+    ) -> Result<Vec<[f32; 3]>> {
+        let g = splats.len().min(BLEND_MAX_G);
+        let mut means = vec![0.0f32; BLEND_MAX_G * 2];
+        let mut conics = vec![0.0f32; BLEND_MAX_G * 3];
+        let mut colors = vec![0.0f32; BLEND_MAX_G * 3];
+        let mut alphas = vec![0.0f32; BLEND_MAX_G];
+        for (i, s) in splats.iter().take(g).enumerate() {
+            means[i * 2] = s.mean.x - x0;
+            means[i * 2 + 1] = s.mean.y - y0;
+            conics[i * 3] = s.conic[0];
+            conics[i * 3 + 1] = s.conic[1];
+            conics[i * 3 + 2] = s.conic[2];
+            colors[i * 3] = s.color.x;
+            colors[i * 3 + 1] = s.color.y;
+            colors[i * 3 + 2] = s.color.z;
+            alphas[i] = s.alpha_base;
+        }
+
+        let outputs = self.exec.run(&[
+            literal_f32(&means, &[BLEND_MAX_G as i64, 2])?,
+            literal_f32(&conics, &[BLEND_MAX_G as i64, 3])?,
+            literal_f32(&colors, &[BLEND_MAX_G as i64, 3])?,
+            literal_f32(&alphas, &[BLEND_MAX_G as i64])?,
+        ])?;
+        let rgb = to_vec_f32(&outputs[0])?;
+        anyhow::ensure!(
+            rgb.len() == TILE_PX * TILE_PX * 3,
+            "blend output size {} != {}",
+            rgb.len(),
+            TILE_PX * TILE_PX * 3
+        );
+        Ok(rgb.chunks_exact(3).map(|c| [c[0], c[1], c[2]]).collect())
+    }
+}
+
+/// Reference cumulative blend in plain Rust with the *same* no-early-exit
+/// formulation the vectorized kernel uses — the parity oracle for tests.
+pub fn cumulative_blend_reference(
+    splats: &[Splat2D],
+    x0: f32,
+    y0: f32,
+) -> Vec<[f32; 3]> {
+    let mut out = vec![[0.0f32; 3]; TILE_PX * TILE_PX];
+    for py in 0..TILE_PX {
+        for px in 0..TILE_PX {
+            let (fx, fy) = (x0 + px as f32 + 0.5, y0 + py as f32 + 0.5);
+            let mut t = 1.0f32;
+            let mut rgb = [0.0f32; 3];
+            for s in splats.iter().take(BLEND_MAX_G) {
+                let e = crate::tiles::intersect::splat_exponent(s, fx, fy);
+                let mut a = (s.alpha_base * e.exp()).min(0.999);
+                if a < 1.0 / 255.0 {
+                    a = 0.0;
+                }
+                let w = a * t;
+                rgb[0] += w * s.color.x;
+                rgb[1] += w * s.color.y;
+                rgb[2] += w * s.color.z;
+                t *= 1.0 - a;
+            }
+            out[py * TILE_PX + px] = rgb;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::{Vec2, Vec3};
+    use crate::runtime::Artifacts;
+    use crate::util::Rng;
+
+    fn random_splats(n: usize, seed: u64) -> Vec<Splat2D> {
+        let mut rng = Rng::new(seed);
+        (0..n as u32)
+            .map(|i| Splat2D {
+                id: i,
+                mean: Vec2::new(rng.range_f32(-4.0, 20.0), rng.range_f32(-4.0, 20.0)),
+                conic: {
+                    // Positive-definite conic.
+                    let a = rng.range_f32(0.01, 0.5);
+                    let c = rng.range_f32(0.01, 0.5);
+                    let b = rng.range_f32(-0.05, 0.05).min((a * c).sqrt() * 0.8);
+                    [a, b, c]
+                },
+                radius: 10.0,
+                rx: 10.0,
+                ry: 10.0,
+                depth: rng.range_f32(1.0, 50.0),
+                alpha_base: rng.range_f32(0.05, 0.95),
+                color: Vec3::new(rng.f32(), rng.f32(), rng.f32()),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pjrt_blend_matches_reference() {
+        let artifacts = match Artifacts::discover() {
+            Ok(a) if a.available() => a,
+            _ => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        };
+        let client = HloExecutor::cpu_client().unwrap();
+        let blend = BlendExecutor::load(&client, &artifacts.blend_hlo()).unwrap();
+        let splats = random_splats(40, 7);
+        let got = blend.blend_tile(&splats, 0.0, 0.0).unwrap();
+        let expect = cumulative_blend_reference(&splats, 0.0, 0.0);
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            for c in 0..3 {
+                assert!(
+                    (g[c] - e[c]).abs() < 2e-2,
+                    "pixel {i} ch {c}: pjrt {} vs rust {}",
+                    g[c],
+                    e[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_tile_is_black() {
+        let artifacts = match Artifacts::discover() {
+            Ok(a) if a.available() => a,
+            _ => return,
+        };
+        let client = HloExecutor::cpu_client().unwrap();
+        let blend = BlendExecutor::load(&client, &artifacts.blend_hlo()).unwrap();
+        let got = blend.blend_tile(&[], 0.0, 0.0).unwrap();
+        assert!(got.iter().all(|px| px.iter().all(|&v| v.abs() < 1e-6)));
+    }
+
+    #[test]
+    fn reference_blend_front_to_back() {
+        let mut splats = random_splats(2, 3);
+        splats[0].mean = Vec2::new(8.0, 8.0);
+        splats[1].mean = Vec2::new(8.0, 8.0);
+        splats[0].alpha_base = 0.9;
+        splats[0].color = Vec3::new(1.0, 0.0, 0.0);
+        splats[1].color = Vec3::new(0.0, 1.0, 0.0);
+        let out = cumulative_blend_reference(&splats, 0.0, 0.0);
+        let center = out[8 * TILE_PX + 8];
+        assert!(center[0] > center[1], "front red dominates: {center:?}");
+    }
+}

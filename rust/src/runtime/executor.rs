@@ -1,0 +1,86 @@
+//! Generic HLO-text → PJRT executor (the pattern from
+//! /opt/xla-example/load_hlo): parse HLO text, compile on the CPU client,
+//! execute with f32 literals, unwrap the tuple outputs.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// One compiled computation bound to a PJRT client.
+pub struct HloExecutor {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl HloExecutor {
+    /// Load + compile an HLO text file on an existing client.
+    pub fn load(client: &PjRtClient, path: &Path) -> Result<HloExecutor> {
+        let proto = HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(HloExecutor {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().to_string())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Create the shared CPU client.
+    pub fn cpu_client() -> Result<PjRtClient> {
+        PjRtClient::cpu().context("creating PJRT CPU client")
+    }
+
+    /// Execute with the given inputs; returns the flattened tuple outputs.
+    /// (aot.py lowers with `return_tuple=True`, so the single result literal
+    /// is always a tuple.)
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "literal shape {:?} needs {} elements, got {}",
+        dims,
+        expect,
+        data.len()
+    );
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+/// Extract a literal's f32 payload.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+}

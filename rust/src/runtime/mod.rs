@@ -1,0 +1,29 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py` → HLO **text**, see aot recipe in
+//! /opt/xla-example) and executes them on the PJRT CPU client from the
+//! frame path. Python is never needed at runtime.
+//!
+//! Executors wrap fixed-shape entry points:
+//! * [`PreprocessExecutor`] — L2 graph: temporal slice + projection + SH for
+//!   a padded chunk of [`PREPROCESS_CHUNK`] Gaussians;
+//! * [`BlendExecutor`] — L1 Pallas tile kernel: 16×16-pixel tile ×
+//!   [`BLEND_MAX_G`] depth-sorted splats;
+//! * [`ExpLutExecutor`] — the standalone DD3D-Flow exp2 kernel (parity
+//!   checks against the Rust [`crate::dcim::ExpLut`]).
+
+pub mod artifact;
+pub mod blend_exec;
+pub mod executor;
+pub mod preprocess_exec;
+
+pub use artifact::Artifacts;
+pub use blend_exec::BlendExecutor;
+pub use executor::HloExecutor;
+pub use preprocess_exec::PreprocessExecutor;
+
+/// Gaussians per preprocess invocation (matches aot.py).
+pub const PREPROCESS_CHUNK: usize = 1024;
+/// Max splats per blend tile invocation (matches aot.py).
+pub const BLEND_MAX_G: usize = 128;
+/// Elements per exp-LUT invocation (matches aot.py).
+pub const EXP_LUT_N: usize = 4096;

@@ -1,0 +1,206 @@
+//! Preprocess executor: runs the AOT-compiled L2 JAX graph
+//! (`artifacts/preprocess.hlo.txt`) — temporal slicing (eq. 5–6),
+//! 3D→2D projection (eq. 7–8) and SH color — for a padded chunk of
+//! [`PREPROCESS_CHUNK`](super::PREPROCESS_CHUNK) Gaussians.
+//!
+//! Interface (must match `python/compile/aot.py::lower_preprocess`):
+//! inputs `mu[K,3] rot[K,4] scale[K,3] mu_t[K] lam[K] vel[K,3] opa[K]
+//! sh[K,27] view[4,4] intr[4](fx,fy,cx,cy) t[1]`;
+//! outputs `(mean2[K,2], conic[K,3], depth[K], alpha[K], color[K,3])`,
+//! `alpha = 0` marks culled/padding entries.
+
+use super::executor::{literal_f32, to_vec_f32, HloExecutor};
+use super::PREPROCESS_CHUNK;
+use crate::camera::Camera;
+use crate::math::{Vec2, Vec3};
+use crate::scene::Gaussian4D;
+use crate::tiles::intersect::{Splat2D, ALPHA_CUTOFF};
+use anyhow::Result;
+use std::path::Path;
+use xla::PjRtClient;
+
+/// The compiled preprocess graph.
+pub struct PreprocessExecutor {
+    exec: HloExecutor,
+}
+
+impl PreprocessExecutor {
+    pub fn load(client: &PjRtClient, path: &Path) -> Result<PreprocessExecutor> {
+        Ok(PreprocessExecutor { exec: HloExecutor::load(client, path)? })
+    }
+
+    /// Project up to [`PREPROCESS_CHUNK`] Gaussians at scene time `t`.
+    /// Returns splats with `alpha_base ≥` cutoff; ids are `id_base + i`.
+    pub fn project_chunk(
+        &self,
+        gaussians: &[Gaussian4D],
+        id_base: u32,
+        cam: &Camera,
+        t: f32,
+    ) -> Result<Vec<Splat2D>> {
+        let k = PREPROCESS_CHUNK;
+        let n = gaussians.len().min(k);
+        let mut mu = vec![0.0f32; k * 3];
+        let mut rot = vec![0.0f32; k * 4];
+        let mut scale = vec![1e-6f32; k * 3];
+        let mut mu_t = vec![0.0f32; k];
+        let mut lam = vec![0.0f32; k];
+        let mut vel = vec![0.0f32; k * 3];
+        let mut opa = vec![0.0f32; k];
+        let mut sh = vec![0.0f32; k * 27];
+        for (i, g) in gaussians.iter().take(n).enumerate() {
+            mu[i * 3..i * 3 + 3].copy_from_slice(&g.mu.to_array());
+            rot[i * 4..i * 4 + 4].copy_from_slice(&[g.rot.w, g.rot.x, g.rot.y, g.rot.z]);
+            scale[i * 3..i * 3 + 3].copy_from_slice(&g.scale.to_array());
+            mu_t[i] = g.mu_t;
+            lam[i] = g.lambda();
+            vel[i * 3..i * 3 + 3].copy_from_slice(&g.velocity.to_array());
+            opa[i] = g.opacity;
+            for (c, coeff) in g.sh.iter().enumerate() {
+                sh[i * 27 + c * 3] = coeff.x;
+                sh[i * 27 + c * 3 + 1] = coeff.y;
+                sh[i * 27 + c * 3 + 2] = coeff.z;
+            }
+        }
+
+        let mut view = vec![0.0f32; 16];
+        for r in 0..4 {
+            for c in 0..4 {
+                view[r * 4 + c] = cam.view.m[r][c];
+            }
+        }
+        let intr = [
+            cam.intrinsics.fx,
+            cam.intrinsics.fy,
+            cam.intrinsics.cx,
+            cam.intrinsics.cy,
+        ];
+
+        let ki = k as i64;
+        let outputs = self.exec.run(&[
+            literal_f32(&mu, &[ki, 3])?,
+            literal_f32(&rot, &[ki, 4])?,
+            literal_f32(&scale, &[ki, 3])?,
+            literal_f32(&mu_t, &[ki])?,
+            literal_f32(&lam, &[ki])?,
+            literal_f32(&vel, &[ki, 3])?,
+            literal_f32(&opa, &[ki])?,
+            literal_f32(&sh, &[ki, 27])?,
+            literal_f32(&view, &[4, 4])?,
+            literal_f32(&intr, &[4])?,
+            literal_f32(&[t], &[1])?,
+        ])?;
+
+        let mean2 = to_vec_f32(&outputs[0])?;
+        let conic = to_vec_f32(&outputs[1])?;
+        let depth = to_vec_f32(&outputs[2])?;
+        let alpha = to_vec_f32(&outputs[3])?;
+        let color = to_vec_f32(&outputs[4])?;
+
+        let mut out = Vec::new();
+        for i in 0..n {
+            if alpha[i] < ALPHA_CUTOFF {
+                continue;
+            }
+            let a = conic[i * 3];
+            let b = conic[i * 3 + 1];
+            let c = conic[i * 3 + 2];
+            // Radius from conic eigenvalues (conic = inverse covariance).
+            let det = (a * c - b * b).max(1e-12);
+            let (ca, cb, cc) = (c / det, -b / det, a / det);
+            let mid = 0.5 * (ca + cc);
+            let disc = (mid * mid - (ca * cc - cb * cb)).max(0.0).sqrt();
+            let radius = 3.0 * (mid + disc).sqrt();
+            out.push(Splat2D {
+                id: id_base + i as u32,
+                mean: Vec2::new(mean2[i * 2], mean2[i * 2 + 1]),
+                conic: [a, b, c],
+                radius,
+                rx: 3.0 * ca.max(0.0).sqrt(),
+                ry: 3.0 * cc.max(0.0).sqrt(),
+                depth: depth[i],
+                alpha_base: alpha[i],
+                color: Vec3::new(color[i * 3], color[i * 3 + 1], color[i * 3 + 2]),
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Artifacts;
+    use crate::scene::synth::{SceneKind, SynthParams};
+    use crate::tiles::intersect::project_gaussian;
+
+    fn camera() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 4.0, 22.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            60f32.to_radians(),
+            16.0 / 9.0,
+            0.1,
+            200.0,
+        )
+    }
+
+    #[test]
+    fn pjrt_preprocess_matches_rust_projection() {
+        let artifacts = match Artifacts::discover() {
+            Ok(a) if a.available() => a,
+            _ => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        };
+        let client = HloExecutor::cpu_client().unwrap();
+        let pre = PreprocessExecutor::load(&client, &artifacts.preprocess_hlo()).unwrap();
+
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 300).generate();
+        let cam = camera();
+        let t = 0.4;
+        let got = pre
+            .project_chunk(&scene.gaussians, 0, &cam, t)
+            .unwrap();
+
+        // Rust-side oracle over the same chunk.
+        let expect: Vec<Splat2D> = scene
+            .gaussians
+            .iter()
+            .enumerate()
+            .filter_map(|(i, g)| project_gaussian(g, i as u32, &cam, t))
+            .collect();
+
+        let by_id: std::collections::HashMap<u32, &Splat2D> =
+            expect.iter().map(|s| (s.id, s)).collect();
+        assert!(!got.is_empty());
+        let mut matched = 0;
+        for s in &got {
+            if let Some(e) = by_id.get(&s.id) {
+                matched += 1;
+                assert!((s.mean.x - e.mean.x).abs() < 0.5, "id {} mean.x {} vs {}", s.id, s.mean.x, e.mean.x);
+                assert!((s.mean.y - e.mean.y).abs() < 0.5);
+                assert!((s.depth - e.depth).abs() < 1e-2);
+                assert!((s.alpha_base - e.alpha_base).abs() < 1e-3);
+                for c in 0..3 {
+                    assert!(
+                        (s.conic[c] - e.conic[c]).abs() < 0.05 * e.conic[c].abs().max(0.1),
+                        "id {} conic[{c}] {} vs {}",
+                        s.id,
+                        s.conic[c],
+                        e.conic[c]
+                    );
+                }
+                assert!((s.color - e.color).length() < 2e-2);
+            }
+        }
+        // The overwhelming majority must agree on visibility.
+        assert!(
+            matched as f64 >= 0.95 * got.len() as f64,
+            "{matched}/{} matched",
+            got.len()
+        );
+    }
+}

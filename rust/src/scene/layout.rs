@@ -1,0 +1,198 @@
+//! DRAM placement of Gaussian parameters (paper §3.1, Fig. 5(b)).
+//!
+//! Gaussians are stored **contiguously per central grid cell** so a visible
+//! cell is one burst-friendly DRAM range; cells keep only `(start, end)`
+//! addresses on-chip. Gaussians that span into neighbor cells are placed at
+//! the *front* of their central cell's run and referenced from neighbors by
+//! pointer, so neighbor-driven fetches touch a compact prefix.
+
+use super::Scene;
+use crate::culling::grid::GridPartition;
+use crate::scene::gaussian::Gaussian4D;
+
+/// Byte-level DRAM layout of a scene under a given grid partition.
+#[derive(Debug, Clone)]
+pub struct DramLayout {
+    /// Gaussian indices in DRAM order.
+    pub order: Vec<u32>,
+    /// Byte address of each Gaussian (indexed by original Gaussian index).
+    pub addr: Vec<u64>,
+    /// Per-cell `(start, end)` byte range (end exclusive); the only grid
+    /// metadata the on-chip buffer must hold.
+    pub cell_ranges: Vec<(u64, u64)>,
+    /// Per-cell pointer table: Gaussians referenced from this cell but
+    /// stored centrally elsewhere (original indices).
+    pub cell_refs: Vec<Vec<u32>>,
+    /// Record stride in bytes.
+    pub bytes_per_gaussian: u64,
+    /// DRAM start address of each cell's pointer table (tables are laid out
+    /// contiguously after the parameter data).
+    ptr_table_start: Vec<u64>,
+}
+
+impl DramLayout {
+    /// Build the layout. Spanning Gaussians (those with neighbor references
+    /// anywhere) are sorted to the front of their central cell's run.
+    pub fn build(scene: &Scene, grid: &GridPartition) -> DramLayout {
+        let stride = Gaussian4D::dram_bytes(scene.dynamic) as u64;
+        let n = scene.len();
+
+        // Mark which Gaussians are referenced by some non-central cell.
+        let mut spanning = vec![false; n];
+        for cell in &grid.cells {
+            for &gi in &cell.refs {
+                spanning[gi as usize] = true;
+            }
+        }
+
+        let mut order = Vec::with_capacity(n);
+        let mut addr = vec![0u64; n];
+        let mut cell_ranges = Vec::with_capacity(grid.cells.len());
+        let mut cursor = 0u64;
+        for cell in &grid.cells {
+            let start = cursor;
+            // Spanning prefix first (paper: "Gaussians spanning adjacent
+            // cubic grids are stored contiguously ... for efficient access
+            // when referenced from neighboring grids").
+            for pass in [true, false] {
+                for &gi in &cell.central {
+                    if spanning[gi as usize] == pass {
+                        addr[gi as usize] = cursor;
+                        order.push(gi);
+                        cursor += stride;
+                    }
+                }
+            }
+            cell_ranges.push((start, cursor));
+        }
+
+        let cell_refs: Vec<Vec<u32>> = grid.cells.iter().map(|c| c.refs.clone()).collect();
+        // Pointer tables live in DRAM right after the parameter data.
+        let mut ptr_table_start = Vec::with_capacity(cell_refs.len());
+        let mut ptr_cursor = cursor;
+        for refs in &cell_refs {
+            ptr_table_start.push(ptr_cursor);
+            ptr_cursor += refs.len() as u64 * 4;
+        }
+
+        DramLayout {
+            order,
+            addr,
+            cell_ranges,
+            cell_refs,
+            bytes_per_gaussian: stride,
+            ptr_table_start,
+        }
+    }
+
+    /// Total DRAM footprint in bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.order.len() as u64 * self.bytes_per_gaussian
+    }
+
+    /// On-chip metadata footprint: one `(start, end)` pair per cell for the
+    /// central run plus one `(start, count)` pair per cell locating its
+    /// pointer table in DRAM. This is the buffer cost the Fig. 9 trade-off
+    /// discussion refers to — the pointer tables themselves stay in DRAM
+    /// (see [`DramLayout::pointer_table_bytes`]).
+    pub fn metadata_bytes(&self) -> u64 {
+        self.cell_ranges.len() as u64 * (16 + 8)
+    }
+
+    /// DRAM footprint of the per-cell neighbor pointer tables (4 B/pointer).
+    pub fn pointer_table_bytes(&self) -> u64 {
+        self.cell_refs.iter().map(|r| r.len() as u64 * 4).sum()
+    }
+
+    /// DRAM byte range of cell `ci`'s pointer table.
+    pub fn pointer_table_range(&self, ci: usize) -> (u64, u64) {
+        let start = self.ptr_table_start[ci];
+        (start, start + self.cell_refs[ci].len() as u64 * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::culling::grid::{GridConfig, GridPartition};
+    use crate::scene::synth::{SceneKind, SynthParams};
+
+    fn build(n: usize, grid_n: usize) -> (Scene, GridPartition, DramLayout) {
+        let scene = SynthParams::new(SceneKind::DynamicLarge, n).generate();
+        let grid = GridPartition::build(&scene, GridConfig::new(grid_n));
+        let layout = DramLayout::build(&scene, &grid);
+        (scene, grid, layout)
+    }
+
+    #[test]
+    fn every_gaussian_placed_exactly_once() {
+        let (scene, _, layout) = build(2000, 4);
+        assert_eq!(layout.order.len(), scene.len());
+        let mut seen = vec![false; scene.len()];
+        for &gi in &layout.order {
+            assert!(!seen[gi as usize], "duplicate placement of {gi}");
+            seen[gi as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn cell_ranges_are_contiguous_and_cover() {
+        let (_, grid, layout) = build(2000, 4);
+        let mut cursor = 0u64;
+        for (i, &(s, e)) in layout.cell_ranges.iter().enumerate() {
+            assert_eq!(s, cursor, "cell {i} range must start where previous ended");
+            assert!(e >= s);
+            let count = grid.cells[i].central.len() as u64;
+            assert_eq!(e - s, count * layout.bytes_per_gaussian);
+            cursor = e;
+        }
+        assert_eq!(cursor, layout.total_bytes());
+    }
+
+    #[test]
+    fn addresses_fall_inside_central_cell_range() {
+        let (_, grid, layout) = build(1000, 4);
+        for (ci, cell) in grid.cells.iter().enumerate() {
+            let (s, e) = layout.cell_ranges[ci];
+            for &gi in &cell.central {
+                let a = layout.addr[gi as usize];
+                assert!(a >= s && a < e, "gaussian {gi} at {a} outside cell [{s},{e})");
+            }
+        }
+    }
+
+    #[test]
+    fn spanning_gaussians_form_prefix() {
+        let (scene, grid, layout) = build(3000, 4);
+        let mut spanning = vec![false; scene.len()];
+        for cell in &grid.cells {
+            for &gi in &cell.refs {
+                spanning[gi as usize] = true;
+            }
+        }
+        for (ci, cell) in grid.cells.iter().enumerate() {
+            let (s, _) = layout.cell_ranges[ci];
+            // Collect cell members in address order; spanning must come first.
+            let mut members: Vec<u32> = cell.central.clone();
+            members.sort_by_key(|&gi| layout.addr[gi as usize]);
+            let mut seen_non_spanning = false;
+            for &gi in &members {
+                if spanning[gi as usize] {
+                    assert!(
+                        !seen_non_spanning,
+                        "cell {ci}: spanning gaussian {gi} after non-spanning (start {s})"
+                    );
+                } else {
+                    seen_non_spanning = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn metadata_far_smaller_than_data() {
+        let (_, _, layout) = build(5000, 4);
+        assert!(layout.metadata_bytes() * 10 < layout.total_bytes());
+    }
+}

@@ -1,0 +1,60 @@
+//! 4D Gaussian-splatting scenes: the primitive representation (§2.1 of the
+//! paper), deterministic synthetic large-scale scene generators (the
+//! stand-ins for Neural-3D-Video / Tanks-and-Temples captures — see
+//! DESIGN.md §2), binary scene I/O, and the DRAM placement layout used by
+//! DR-FC.
+
+pub mod gaussian;
+pub mod io;
+pub mod layout;
+pub mod synth;
+
+pub use gaussian::{Gaussian4D, SH_COEFFS};
+pub use layout::DramLayout;
+pub use synth::{SceneKind, SynthParams};
+
+use crate::math::Aabb;
+
+/// A complete scene: primitives + metadata.
+#[derive(Debug, Clone)]
+pub struct Scene {
+    pub name: String,
+    pub gaussians: Vec<Gaussian4D>,
+    /// Whether any primitive carries temporal extent/motion.
+    pub dynamic: bool,
+    /// Scene time span (0..=1 for static).
+    pub time_span: (f32, f32),
+}
+
+impl Scene {
+    pub fn new(name: impl Into<String>, gaussians: Vec<Gaussian4D>, dynamic: bool) -> Scene {
+        Scene {
+            name: name.into(),
+            gaussians,
+            dynamic,
+            time_span: (0.0, 1.0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.gaussians.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gaussians.is_empty()
+    }
+
+    /// Spatial bounds of all means (not extents).
+    pub fn bounds(&self) -> Aabb {
+        let mut b = Aabb::EMPTY;
+        for g in &self.gaussians {
+            b.expand(g.mu);
+        }
+        b
+    }
+
+    /// Bytes per Gaussian in FP16 DRAM storage (see [`Gaussian4D::dram_bytes`]).
+    pub fn dram_bytes(&self) -> u64 {
+        self.gaussians.len() as u64 * Gaussian4D::dram_bytes(self.dynamic) as u64
+    }
+}

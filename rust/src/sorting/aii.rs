@@ -1,0 +1,200 @@
+//! Adaptive-Interval-Initialization Bucket-Bitonic Sort with posteriori
+//! knowledge (AII-Sort, paper §3.2).
+//!
+//! **Phase 1** (frame 0): min/max scan → uniform intervals (same as the
+//! conventional sorter).
+//!
+//! **Phase 2** (frames 1..N): the bucket boundaries are initialized from the
+//! *previous frame's sorted output* (equal-count quantiles), exploiting
+//! frame-to-frame depth coherence. This (a) skips the min/max scan entirely
+//! and (b) yields near-uniform occupancy, so the bitonic stage runs on many
+//! small buckets instead of one dominant one — amortized O(N).
+//!
+//! Boundaries are tracked **per tile block** (implementation consideration I:
+//! "group adjacent tiles into Tile Blocks and store the average bucket
+//! interval value for each tile group").
+
+use super::bucket::{quantile_boundaries, uniform_boundaries};
+use super::{sort_with_boundaries, SortHwConfig, SortItem, SortStats};
+
+/// The AII-Sort engine; owns per-block posteriori boundaries.
+#[derive(Debug)]
+pub struct AiiSort {
+    pub n_buckets: usize,
+    pub hw: SortHwConfig,
+    /// Per-tile-block boundaries carried from the previous frame.
+    boundaries: Vec<Option<Vec<f32>>>,
+}
+
+impl AiiSort {
+    /// `n_blocks` = number of tile blocks tracked (boundaries are averaged
+    /// at block granularity).
+    pub fn new(n_buckets: usize, n_blocks: usize, hw: SortHwConfig) -> AiiSort {
+        AiiSort {
+            n_buckets: n_buckets.max(1),
+            hw,
+            boundaries: vec![None; n_blocks.max(1)],
+        }
+    }
+
+    /// Drop all posteriori state (scene cut).
+    pub fn reset(&mut self) {
+        for b in &mut self.boundaries {
+            *b = None;
+        }
+    }
+
+    /// Does block `block` have carried boundaries?
+    pub fn has_posteriori(&self, block: usize) -> bool {
+        self.boundaries
+            .get(block)
+            .map(|b| b.is_some())
+            .unwrap_or(false)
+    }
+
+    /// Sort one tile's items (ascending depth), updating the block's
+    /// boundaries from the sorted result for the next frame.
+    pub fn sort_tile(&mut self, block: usize, items: &mut Vec<SortItem>) -> SortStats {
+        let mut stats = SortStats::default();
+        let n = items.len();
+        let block = block.min(self.boundaries.len() - 1);
+        if n <= 1 {
+            return stats;
+        }
+
+        let boundaries = match &self.boundaries[block] {
+            Some(b) => b.clone(),
+            None => {
+                // Phase 1: pay the min/max scan once.
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for &(d, _) in items.iter() {
+                    lo = lo.min(d);
+                    hi = hi.max(d);
+                }
+                stats.minmax_scanned += n as u64;
+                stats.cycles += (n as u64).div_ceil(self.hw.scan_lanes as u64);
+                uniform_boundaries(lo, hi, self.n_buckets)
+            }
+        };
+
+        sort_with_boundaries(items, &boundaries, &self.hw, &mut stats);
+
+        // Posteriori update: equal-count quantiles of this frame's sorted
+        // result become next frame's intervals.
+        self.boundaries[block] = Some(quantile_boundaries(items, self.n_buckets));
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sorting::{conventional_bucket_bitonic, is_sorted};
+    use crate::util::proptest::{check, ensure};
+    use crate::util::Rng;
+
+    /// Skewed depth samples with slight frame-to-frame drift (the coherence
+    /// AII exploits).
+    fn frame_items(rng: &mut Rng, n: usize, drift: f32) -> Vec<SortItem> {
+        (0..n as u32)
+            .map(|i| (rng.log_normal(1.0, 0.8) + drift, i))
+            .collect()
+    }
+
+    #[test]
+    fn sorts_correctly_all_frames() {
+        let mut aii = AiiSort::new(8, 4, SortHwConfig::default());
+        let mut rng = Rng::new(1);
+        for f in 0..5 {
+            let mut items = frame_items(&mut rng, 800, f as f32 * 0.05);
+            aii.sort_tile(0, &mut items);
+            assert!(is_sorted(&items), "frame {f}");
+            assert_eq!(items.len(), 800);
+        }
+    }
+
+    #[test]
+    fn frame0_scans_minmax_later_frames_do_not() {
+        let mut aii = AiiSort::new(8, 4, SortHwConfig::default());
+        let mut rng = Rng::new(2);
+        let mut items = frame_items(&mut rng, 500, 0.0);
+        let s0 = aii.sort_tile(0, &mut items);
+        assert_eq!(s0.minmax_scanned, 500);
+        let mut items = frame_items(&mut rng, 500, 0.02);
+        let s1 = aii.sort_tile(0, &mut items);
+        assert_eq!(s1.minmax_scanned, 0, "posteriori boundaries skip the scan");
+    }
+
+    #[test]
+    fn blocks_track_independent_boundaries() {
+        let mut aii = AiiSort::new(8, 2, SortHwConfig::default());
+        let mut rng = Rng::new(3);
+        let mut items = frame_items(&mut rng, 300, 0.0);
+        aii.sort_tile(0, &mut items);
+        assert!(aii.has_posteriori(0));
+        assert!(!aii.has_posteriori(1));
+    }
+
+    #[test]
+    fn steady_state_beats_conventional_on_skewed_data() {
+        let hw = SortHwConfig::default();
+        let mut aii = AiiSort::new(16, 1, hw);
+        let mut rng = Rng::new(4);
+
+        // Warm up posteriori state.
+        let mut items = frame_items(&mut rng, 3000, 0.0);
+        aii.sort_tile(0, &mut items);
+
+        // Steady state vs conventional on statistically identical frames.
+        let mut aii_cycles = 0u64;
+        let mut conv_cycles = 0u64;
+        for f in 1..6 {
+            let drift = f as f32 * 0.02;
+            let mut a = frame_items(&mut rng, 3000, drift);
+            let mut c = a.clone();
+            aii_cycles += aii.sort_tile(0, &mut a).cycles;
+            conv_cycles += conventional_bucket_bitonic(&mut c, 16, &hw).cycles;
+            assert_eq!(a, c, "both sorters must agree on the result");
+        }
+        assert!(
+            (conv_cycles as f64) > 1.5 * aii_cycles as f64,
+            "conventional {conv_cycles} vs AII {aii_cycles}"
+        );
+    }
+
+    #[test]
+    fn reset_forgets_posteriori() {
+        let mut aii = AiiSort::new(8, 1, SortHwConfig::default());
+        let mut rng = Rng::new(5);
+        let mut items = frame_items(&mut rng, 200, 0.0);
+        aii.sort_tile(0, &mut items);
+        assert!(aii.has_posteriori(0));
+        aii.reset();
+        assert!(!aii.has_posteriori(0));
+        let mut items = frame_items(&mut rng, 200, 0.0);
+        let s = aii.sort_tile(0, &mut items);
+        assert_eq!(s.minmax_scanned, 200);
+    }
+
+    #[test]
+    fn property_always_sorted_and_permutation() {
+        check(60, 11, |rng| {
+            let mut aii = AiiSort::new(1 + rng.below(16), 1 + rng.below(4), SortHwConfig::default());
+            for _ in 0..3 {
+                let n = rng.range_usize(0, 400);
+                let mut items: Vec<SortItem> =
+                    (0..n as u32).map(|i| (rng.log_normal(0.0, 1.2), i)).collect();
+                let block = rng.below(4);
+                let mut ids: Vec<u32> = items.iter().map(|x| x.1).collect();
+                aii.sort_tile(block, &mut items);
+                ensure(is_sorted(&items), "sorted")?;
+                let mut out: Vec<u32> = items.iter().map(|x| x.1).collect();
+                ids.sort_unstable();
+                out.sort_unstable();
+                ensure(ids == out, "permutation")?;
+            }
+            Ok(())
+        });
+    }
+}

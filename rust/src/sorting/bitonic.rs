@@ -1,0 +1,149 @@
+//! Bitonic sorting network (Batcher 1968) with a hardware cycle model.
+//!
+//! The on-chip sort engine is a fixed array of `comparators` compare-swap
+//! units; a network over n (padded to a power of two) elements has
+//! k(k+1)/2 stage-passes (k = log₂ n), each pass issuing n/2 compare-swaps
+//! that the array executes in ⌈(n/2)/comparators⌉ cycles. The model counts
+//! exactly the compare-swaps the real network executes, so the
+//! O(n log² n) superlinearity that punishes unbalanced buckets is real.
+
+use super::SortItem;
+
+/// Comparator-array parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BitonicHw {
+    pub comparators: usize,
+}
+
+/// Work performed by one network invocation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BitonicStats {
+    pub cycles: u64,
+    pub comparisons: u64,
+    /// Stage-passes executed.
+    pub passes: u64,
+}
+
+/// Sort `items` ascending by key with a bitonic network; returns the
+/// hardware work. Non-power-of-two inputs are padded with +∞ sentinels
+/// (removed before returning), exactly as the hardware pads its buffer.
+pub fn bitonic_sort(items: &mut Vec<SortItem>, hw: &BitonicHw) -> BitonicStats {
+    let n = items.len();
+    let mut stats = BitonicStats::default();
+    if n <= 1 {
+        return stats;
+    }
+    let padded = n.next_power_of_two();
+    items.resize(padded, (f32::INFINITY, u32::MAX));
+
+    let mut k = 2usize;
+    while k <= padded {
+        let mut j = k / 2;
+        while j > 0 {
+            // One stage-pass: padded/2 compare-swap slots.
+            let compares = (padded / 2) as u64;
+            stats.passes += 1;
+            stats.comparisons += compares;
+            stats.cycles += compares.div_ceil(hw.comparators as u64);
+            for i in 0..padded {
+                let l = i ^ j;
+                if l > i {
+                    let ascending = (i & k) == 0;
+                    let (a, b) = (items[i].0, items[l].0);
+                    if (ascending && a > b) || (!ascending && a < b) {
+                        items.swap(i, l);
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+
+    items.truncate(n);
+    stats
+}
+
+/// Closed-form pass count for a bucket of `n` elements (used by analytic
+/// latency projections without running the network).
+pub fn network_passes(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let k = n.next_power_of_two().trailing_zeros() as u64;
+    k * (k + 1) / 2
+}
+
+/// Closed-form cycle count for `n` elements on `comparators` units.
+pub fn network_cycles(n: usize, comparators: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let padded = n.next_power_of_two() as u64;
+    network_passes(n) * (padded / 2).div_ceil(comparators as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sorting::is_sorted;
+    use crate::util::proptest::{check, ensure};
+    use crate::util::Rng;
+
+    const HW: BitonicHw = BitonicHw { comparators: 64 };
+
+    #[test]
+    fn sorts_random_inputs() {
+        let mut rng = Rng::new(1);
+        for n in [0, 1, 2, 3, 7, 8, 100, 255, 256, 1000] {
+            let mut v: Vec<SortItem> = (0..n as u32).map(|i| (rng.f32() * 100.0, i)).collect();
+            bitonic_sort(&mut v, &HW);
+            assert!(is_sorted(&v), "n={n}");
+            assert_eq!(v.len(), n);
+        }
+    }
+
+    #[test]
+    fn property_sorts_and_preserves_multiset() {
+        check(100, 42, |rng| {
+            let n = rng.range_usize(0, 300);
+            let mut v: Vec<SortItem> =
+                (0..n as u32).map(|i| (rng.log_normal(0.0, 1.0), i)).collect();
+            let mut ids: Vec<u32> = v.iter().map(|x| x.1).collect();
+            bitonic_sort(&mut v, &HW);
+            ensure(is_sorted(&v), "sorted")?;
+            let mut out: Vec<u32> = v.iter().map(|x| x.1).collect();
+            ids.sort_unstable();
+            out.sort_unstable();
+            ensure(ids == out, "same ids")
+        });
+    }
+
+    #[test]
+    fn stats_match_closed_form() {
+        let mut rng = Rng::new(3);
+        for n in [2, 5, 64, 100, 512] {
+            let mut v: Vec<SortItem> = (0..n as u32).map(|i| (rng.f32(), i)).collect();
+            let s = bitonic_sort(&mut v, &HW);
+            assert_eq!(s.passes, network_passes(n), "passes n={n}");
+            assert_eq!(s.cycles, network_cycles(n, HW.comparators), "cycles n={n}");
+        }
+    }
+
+    #[test]
+    fn superlinear_in_bucket_size() {
+        // One big bucket of 4096 costs more than 16 buckets of 256.
+        let big = network_cycles(4096, 64);
+        let small = 16 * network_cycles(256, 64);
+        assert!(big > small, "big {big} vs 16×small {small}");
+    }
+
+    #[test]
+    fn closed_form_edge_cases() {
+        assert_eq!(network_passes(0), 0);
+        assert_eq!(network_passes(1), 0);
+        assert_eq!(network_passes(2), 1);
+        assert_eq!(network_passes(4), 3);
+        assert_eq!(network_cycles(1, 64), 0);
+    }
+}

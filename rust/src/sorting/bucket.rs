@@ -1,0 +1,106 @@
+//! Bucket partitioning primitives shared by the conventional sorter and
+//! AII-Sort: boundary construction (uniform / quantile) and routing.
+
+use super::SortItem;
+
+/// `n_buckets − 1` interior boundaries splitting `[lo, hi]` uniformly
+/// (the conventional initialization the paper's Challenge 3 criticizes).
+pub fn uniform_boundaries(lo: f32, hi: f32, n_buckets: usize) -> Vec<f32> {
+    let n = n_buckets.max(1);
+    if n == 1 || hi <= lo {
+        return vec![];
+    }
+    let step = (hi - lo) / n as f32;
+    (1..n).map(|i| lo + step * i as f32).collect()
+}
+
+/// Equal-count boundaries from **sorted** items — the "near-perfect interval"
+/// a balanced previous frame hands to the next (AII-Sort phase 2).
+pub fn quantile_boundaries(sorted: &[SortItem], n_buckets: usize) -> Vec<f32> {
+    let n = n_buckets.max(1);
+    if n == 1 || sorted.is_empty() {
+        return vec![];
+    }
+    (1..n)
+        .map(|i| {
+            let idx = (i * sorted.len()) / n;
+            sorted[idx.min(sorted.len() - 1)].0
+        })
+        .collect()
+}
+
+/// Route items into `boundaries.len() + 1` buckets. Items below the first
+/// boundary go to bucket 0; at/above the last go to the final bucket — so
+/// stale boundaries (posteriori reuse) degrade balance, never correctness.
+pub fn assign_buckets(items: &[SortItem], boundaries: &[f32]) -> Vec<Vec<SortItem>> {
+    let n_buckets = boundaries.len() + 1;
+    let mut buckets: Vec<Vec<SortItem>> = vec![Vec::new(); n_buckets];
+    for &it in items {
+        let mut b = 0;
+        while b < boundaries.len() && it.0 >= boundaries[b] {
+            b += 1;
+        }
+        buckets[b].push(it);
+    }
+    buckets
+}
+
+/// Bucket occupancy counts (balance diagnostics; Fig. 6's motivation).
+pub fn occupancies(buckets: &[Vec<SortItem>]) -> Vec<usize> {
+    buckets.iter().map(|b| b.len()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::stats::occupancy_cv;
+    use crate::util::Rng;
+
+    #[test]
+    fn uniform_boundaries_are_even() {
+        let b = uniform_boundaries(0.0, 100.0, 4);
+        assert_eq!(b, vec![25.0, 50.0, 75.0]);
+        assert!(uniform_boundaries(0.0, 100.0, 1).is_empty());
+        assert!(uniform_boundaries(5.0, 5.0, 4).is_empty());
+    }
+
+    #[test]
+    fn assignment_respects_boundaries() {
+        let items = vec![(1.0, 0), (26.0, 1), (50.0, 2), (99.0, 3), (-5.0, 4), (200.0, 5)];
+        let buckets = assign_buckets(&items, &[25.0, 50.0, 75.0]);
+        assert_eq!(buckets.len(), 4);
+        assert_eq!(buckets[0], vec![(1.0, 0), (-5.0, 4)]);
+        assert_eq!(buckets[1], vec![(26.0, 1)]);
+        assert_eq!(buckets[2], vec![(50.0, 2)]); // boundary value goes up
+        assert_eq!(buckets[3], vec![(99.0, 3), (200.0, 5)]);
+    }
+
+    #[test]
+    fn quantile_boundaries_balance_skewed_data() {
+        let mut rng = Rng::new(7);
+        let mut items: Vec<SortItem> =
+            (0..4000u32).map(|i| (rng.log_normal(1.0, 0.9), i)).collect();
+        items.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let lo = items.first().unwrap().0;
+        let hi = items.last().unwrap().0;
+        let uni = assign_buckets(&items, &uniform_boundaries(lo, hi, 8));
+        let qtl = assign_buckets(&items, &quantile_boundaries(&items, 8));
+
+        let cv_uni = occupancy_cv(&occupancies(&uni));
+        let cv_qtl = occupancy_cv(&occupancies(&qtl));
+        assert!(
+            cv_qtl < 0.25 && cv_uni > 1.0,
+            "quantile cv {cv_qtl} must beat uniform cv {cv_uni} on skewed data"
+        );
+    }
+
+    #[test]
+    fn all_items_land_somewhere() {
+        let mut rng = Rng::new(9);
+        let items: Vec<SortItem> = (0..777u32).map(|i| (rng.normal(), i)).collect();
+        let buckets = assign_buckets(&items, &[-1.0, 0.0, 1.0]);
+        let total: usize = buckets.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 777);
+    }
+}

@@ -1,0 +1,284 @@
+//! Tile-block connection-strength graph (ATG phase 1, paper §3.3-A).
+//!
+//! During intersection testing, a Gaussian overlapping several tiles
+//! **strengthens** the boundaries interior to its footprint and **weakens**
+//! the boundaries it crosses out of — enhancing Gaussian-tile intersection
+//! features. Tiles are aggregated into `block × block` **Tile Blocks**
+//! (implementation consideration I) and the graph lives on block-level
+//! horizontal/vertical boundaries.
+//!
+//! The grouping threshold follows eq. 11: per graph, take the K highest and
+//! K lowest strengths, use their medians as `upper`/`lower`, and set
+//! `threshold = (upper − lower) × user_th + lower`.
+
+use crate::math::stats::median;
+
+/// Strength added to interior boundaries per overlapping Gaussian.
+const ENHANCE: f32 = 1.0;
+/// Strength removed from crossed-out boundaries per overlapping Gaussian.
+const SUPPRESS: f32 = 0.25;
+
+/// Connection graph over tile blocks.
+#[derive(Debug, Clone)]
+pub struct ConnectionGraph {
+    /// Blocks per row / column.
+    pub bx: usize,
+    pub by: usize,
+    /// Tiles per block edge.
+    pub block: usize,
+    /// Horizontal boundaries: between (x,y) and (x+1,y); len (bx−1)·by.
+    h: Vec<f32>,
+    /// Vertical boundaries: between (x,y) and (x,y+1); len bx·(by−1).
+    v: Vec<f32>,
+}
+
+impl ConnectionGraph {
+    /// Build for a tile grid of `tiles_x × tiles_y` tiles with the given
+    /// Tile Block edge (paper sweeps block ∈ {1, 2, 4, 8}).
+    pub fn new(tiles_x: usize, tiles_y: usize, block: usize) -> ConnectionGraph {
+        let block = block.max(1);
+        let bx = tiles_x.div_ceil(block).max(1);
+        let by = tiles_y.div_ceil(block).max(1);
+        ConnectionGraph {
+            bx,
+            by,
+            block,
+            h: vec![0.0; bx.saturating_sub(1) * by],
+            v: vec![0.0; bx * by.saturating_sub(1)],
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.bx * self.by
+    }
+
+    #[inline]
+    pub fn block_of_tile(&self, tx: usize, ty: usize) -> usize {
+        (ty / self.block).min(self.by - 1) * self.bx + (tx / self.block).min(self.bx - 1)
+    }
+
+    #[inline]
+    fn h_idx(&self, x: usize, y: usize) -> usize {
+        y * (self.bx - 1) + x
+    }
+
+    #[inline]
+    fn v_idx(&self, x: usize, y: usize) -> usize {
+        y * self.bx + x
+    }
+
+    /// Reset strengths (frame 0 of a fresh sequence).
+    pub fn clear(&mut self) {
+        self.h.iter_mut().for_each(|e| *e = 0.0);
+        self.v.iter_mut().for_each(|e| *e = 0.0);
+    }
+
+    /// Record one Gaussian's footprint given its inclusive tile rect.
+    /// Boundaries interior to the rect are enhanced; boundaries on the rect's
+    /// border (crossing out of the footprint) are suppressed.
+    pub fn record_footprint(&mut self, tx0: usize, ty0: usize, tx1: usize, ty1: usize) {
+        // Convert to block coordinates (inclusive).
+        let bx0 = (tx0 / self.block).min(self.bx - 1);
+        let bx1 = (tx1 / self.block).min(self.bx - 1);
+        let by0 = (ty0 / self.block).min(self.by - 1);
+        let by1 = (ty1 / self.block).min(self.by - 1);
+
+        // Interior horizontal boundaries.
+        for y in by0..=by1 {
+            for x in bx0..bx1 {
+                let i = self.h_idx(x, y);
+                self.h[i] += ENHANCE;
+            }
+        }
+        // Interior vertical boundaries.
+        for y in by0..by1 {
+            for x in bx0..=bx1 {
+                let i = self.v_idx(x, y);
+                self.v[i] += ENHANCE;
+            }
+        }
+        // Suppressed border boundaries: left/right edges of the rect.
+        for y in by0..=by1 {
+            if bx0 > 0 {
+                let i = self.h_idx(bx0 - 1, y);
+                self.h[i] -= SUPPRESS;
+            }
+            if bx1 + 1 < self.bx {
+                let i = self.h_idx(bx1, y);
+                self.h[i] -= SUPPRESS;
+            }
+        }
+        // Top/bottom edges.
+        for x in bx0..=bx1 {
+            if by0 > 0 {
+                let i = self.v_idx(x, by0 - 1);
+                self.v[i] -= SUPPRESS;
+            }
+            if by1 + 1 < self.by {
+                let i = self.v_idx(x, by1);
+                self.v[i] -= SUPPRESS;
+            }
+        }
+    }
+
+    /// All boundary strengths (h then v).
+    pub fn strengths(&self) -> Vec<f32> {
+        let mut s = self.h.clone();
+        s.extend_from_slice(&self.v);
+        s
+    }
+
+    /// Eq. 11 threshold from the K highest / K lowest strengths.
+    pub fn threshold(&self, user_th: f32, k: usize) -> f32 {
+        let mut s = self.strengths();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let k = k.max(1).min(s.len());
+        let lower = median(&s[..k]);
+        let upper = median(&s[s.len() - k..]);
+        (upper - lower) * user_th + lower
+    }
+
+    /// Visit every boundary at-or-above `threshold` as a block pair `(a, b)`.
+    pub fn edges_above(&self, threshold: f32, mut f: impl FnMut(usize, usize)) {
+        for y in 0..self.by {
+            for x in 0..self.bx.saturating_sub(1) {
+                if self.h[self.h_idx(x, y)] >= threshold {
+                    f(y * self.bx + x, y * self.bx + x + 1);
+                }
+            }
+        }
+        for y in 0..self.by.saturating_sub(1) {
+            for x in 0..self.bx {
+                if self.v[self.v_idx(x, y)] >= threshold {
+                    f(y * self.bx + x, (y + 1) * self.bx + x);
+                }
+            }
+        }
+    }
+
+    /// Boolean on/off state of every boundary under `threshold`
+    /// (h boundaries then v) — the signal phase 2 diffs for deformation flags.
+    pub fn edge_states(&self, threshold: f32) -> Vec<bool> {
+        let mut out = Vec::with_capacity(self.h.len() + self.v.len());
+        out.extend(self.h.iter().map(|&e| e >= threshold));
+        out.extend(self.v.iter().map(|&e| e >= threshold));
+        out
+    }
+
+    /// Blocks adjacent to boundary `edge_idx` (in `edge_states` numbering).
+    pub fn edge_blocks(&self, edge_idx: usize) -> (usize, usize) {
+        if edge_idx < self.h.len() {
+            let y = edge_idx / (self.bx - 1).max(1);
+            let x = edge_idx % (self.bx - 1).max(1);
+            (y * self.bx + x, y * self.bx + x + 1)
+        } else {
+            let i = edge_idx - self.h.len();
+            let y = i / self.bx;
+            let x = i % self.bx;
+            (y * self.bx + x, (y + 1) * self.bx + x)
+        }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.h.len() + self.v.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_from_tiles() {
+        let g = ConnectionGraph::new(80, 45, 4);
+        assert_eq!(g.bx, 20);
+        assert_eq!(g.by, 12);
+        assert_eq!(g.n_blocks(), 240);
+        assert_eq!(g.n_edges(), 19 * 12 + 20 * 11);
+    }
+
+    #[test]
+    fn block_of_tile_maps_correctly() {
+        let g = ConnectionGraph::new(8, 8, 4);
+        assert_eq!(g.block_of_tile(0, 0), 0);
+        assert_eq!(g.block_of_tile(3, 3), 0);
+        assert_eq!(g.block_of_tile(4, 0), 1);
+        assert_eq!(g.block_of_tile(0, 4), 2);
+        assert_eq!(g.block_of_tile(7, 7), 3);
+    }
+
+    #[test]
+    fn vertical_footprint_strengthens_vertical_boundary() {
+        // Blocks are 1 tile (block=1); a footprint spanning tiles (2,1)-(2,3)
+        // strengthens the two vertical boundaries inside it.
+        let mut g = ConnectionGraph::new(6, 6, 1);
+        g.record_footprint(2, 1, 2, 3);
+        let th = 0.5;
+        let mut edges = Vec::new();
+        g.edges_above(th, |a, b| edges.push((a, b)));
+        // Interior vertical boundaries: (2,1)-(2,2) and (2,2)-(2,3).
+        assert!(edges.contains(&(1 * 6 + 2, 2 * 6 + 2)));
+        assert!(edges.contains(&(2 * 6 + 2, 3 * 6 + 2)));
+        assert_eq!(edges.len(), 2);
+    }
+
+    #[test]
+    fn suppression_lowers_border_boundaries() {
+        let mut g = ConnectionGraph::new(6, 6, 1);
+        g.record_footprint(2, 2, 3, 3);
+        // The boundary left of the rect was suppressed below zero.
+        let strengths = g.strengths();
+        assert!(strengths.iter().any(|&s| s < 0.0));
+        assert!(strengths.iter().any(|&s| s >= 1.0));
+    }
+
+    #[test]
+    fn threshold_between_extremes() {
+        let mut g = ConnectionGraph::new(8, 8, 1);
+        for _ in 0..10 {
+            g.record_footprint(1, 1, 1, 4);
+        }
+        g.record_footprint(5, 5, 6, 5);
+        let th_lo = g.threshold(0.0, 4);
+        let th_mid = g.threshold(0.5, 4);
+        let th_hi = g.threshold(1.0, 4);
+        assert!(th_lo <= th_mid && th_mid <= th_hi);
+        assert!(th_hi > 1.0, "upper median should reflect the strong boundary");
+    }
+
+    #[test]
+    fn edge_states_and_blocks_roundtrip() {
+        let mut g = ConnectionGraph::new(4, 4, 1);
+        g.record_footprint(0, 0, 1, 0);
+        let states = g.edge_states(0.5);
+        assert_eq!(states.len(), g.n_edges());
+        let on: Vec<usize> = states
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(on.len(), 1);
+        let (a, b) = g.edge_blocks(on[0]);
+        assert_eq!((a, b), (0, 1));
+    }
+
+    #[test]
+    fn tile_block_aggregation_merges_footprints() {
+        // With block=4, a footprint inside one block touches no boundary.
+        let mut g = ConnectionGraph::new(8, 8, 4);
+        g.record_footprint(0, 0, 2, 2);
+        assert!(g.strengths().iter().all(|&s| s <= 0.0));
+        // Spanning two blocks strengthens the block boundary.
+        g.record_footprint(2, 0, 5, 0);
+        let mut found = false;
+        g.edges_above(0.5, |a, b| {
+            assert_eq!((a, b), (0, 1));
+            found = true;
+        });
+        assert!(found);
+    }
+}

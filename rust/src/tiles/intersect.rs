@@ -1,0 +1,334 @@
+//! Gaussian → screen-space splat projection (paper eqs. 7–8, 10) and
+//! splat–tile intersection testing.
+//!
+//! This is the canonical projection used by both the L3 performance models
+//! and the CPU reference renderer; the L2 JAX graph implements the same math
+//! (checked against each other in `rust/tests/` and `python/tests/`).
+
+use super::TILE_PX;
+use crate::camera::Camera;
+use crate::math::{Vec2, Vec3};
+use crate::scene::Gaussian4D;
+
+/// Minimum contribution before a splat is discarded (1/255 of opacity).
+pub const ALPHA_CUTOFF: f32 = 1.0 / 255.0;
+
+/// EWA low-pass dilation added to the 2-D covariance diagonal (3DGS uses
+/// 0.3 px² so splats never fall between pixels).
+pub const COV2D_DILATION: f32 = 0.3;
+
+/// A projected 2-D Gaussian ready for sorting/blending.
+#[derive(Debug, Clone, Copy)]
+pub struct Splat2D {
+    /// Original Gaussian index.
+    pub id: u32,
+    /// Pixel-space mean.
+    pub mean: Vec2,
+    /// Conic (inverse 2-D covariance): `[a, b, c]` of a·dx² + 2b·dx·dy + c·dy².
+    pub conic: [f32; 3],
+    /// Conservative pixel radius (3σ of the major axis).
+    pub radius: f32,
+    /// Axis-aligned 3σ extents of the screen-space ellipse (tight bbox —
+    /// what the intersection-testing stage bins with; a thin vertical splat
+    /// has rx ≪ ry, the paper's Challenge-2 shape).
+    pub rx: f32,
+    pub ry: f32,
+    /// View depth (camera-space z).
+    pub depth: f32,
+    /// Base opacity × temporal weight — eq. 10's o·G(t) factor, merged
+    /// offline so the blend evaluates one exponential per pixel (DD3D-Flow).
+    pub alpha_base: f32,
+    /// View-dependent RGB from SH.
+    pub color: Vec3,
+}
+
+/// Project one 4-D Gaussian at scene time `t`. Returns `None` when culled
+/// (temporally dead, behind the camera, degenerate, or sub-cutoff alpha).
+pub fn project_gaussian(g: &Gaussian4D, id: u32, cam: &Camera, t: f32) -> Option<Splat2D> {
+    let w_t = g.temporal_weight(t);
+    let alpha_base = g.opacity * w_t;
+    if alpha_base < ALPHA_CUTOFF {
+        return None;
+    }
+
+    let mean3 = g.mean_at(t);
+    let pc = cam.to_camera(mean3);
+    let (mean2, depth) = cam.project_cam(pc)?;
+
+    // Σ²ᴰ = (J W Σ³ᴰ|ᵗ Wᵀ Jᵀ)₁:₂,₁:₂  (eq. 8)
+    let w = cam.view_rotation();
+    let j = cam.projection_jacobian(pc);
+    let jw = j.mul_mat(&w);
+    let cov2d_full = jw.mul_mat(&g.cov3d()).mul_mat(&jw.transpose());
+    let mut a = cov2d_full.m[0][0] + COV2D_DILATION;
+    let b = cov2d_full.m[0][1];
+    let mut c = cov2d_full.m[1][1] + COV2D_DILATION;
+    // Guard degenerate covariances.
+    a = a.max(1e-6);
+    c = c.max(1e-6);
+
+    let det = a * c - b * b;
+    if det <= 0.0 {
+        return None;
+    }
+    let inv_det = 1.0 / det;
+    let conic = [c * inv_det, -b * inv_det, a * inv_det];
+
+    // 3σ of the major axis: eigenvalues of [[a,b],[b,c]], plus the exact
+    // axis-aligned extents (marginal std-devs √a, √c).
+    let mid = 0.5 * (a + c);
+    let disc = (mid * mid - det).max(0.0).sqrt();
+    let lambda_max = mid + disc;
+    let radius = 3.0 * lambda_max.sqrt();
+    let rx = 3.0 * a.sqrt();
+    let ry = 3.0 * c.sqrt();
+
+    // View-dependent color.
+    let dir = (mean3 - cam.position).normalized();
+    let color = g.sh_color(dir);
+
+    Some(Splat2D {
+        id,
+        mean: mean2,
+        conic,
+        radius,
+        rx,
+        ry,
+        depth,
+        alpha_base,
+        color,
+    })
+}
+
+/// Evaluate the splat's Gaussian falloff at pixel `(px, py)` — the spatial
+/// part of eq. 10's merged exponent.
+#[inline]
+pub fn splat_exponent(s: &Splat2D, px: f32, py: f32) -> f32 {
+    let dx = px - s.mean.x;
+    let dy = py - s.mean.y;
+    -0.5 * (s.conic[0] * dx * dx + 2.0 * s.conic[1] * dx * dy + s.conic[2] * dy * dy)
+}
+
+/// The image's tile decomposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGrid {
+    pub width: usize,
+    pub height: usize,
+    pub tiles_x: usize,
+    pub tiles_y: usize,
+}
+
+impl TileGrid {
+    pub fn new(width: usize, height: usize) -> TileGrid {
+        TileGrid {
+            width,
+            height,
+            tiles_x: width.div_ceil(TILE_PX),
+            tiles_y: height.div_ceil(TILE_PX),
+        }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles_x * self.tiles_y
+    }
+
+    #[inline]
+    pub fn tile_index(&self, tx: usize, ty: usize) -> usize {
+        ty * self.tiles_x + tx
+    }
+
+    #[inline]
+    pub fn tile_xy(&self, idx: usize) -> (usize, usize) {
+        (idx % self.tiles_x, idx / self.tiles_x)
+    }
+
+    /// Pixel rectangle of tile `idx`: (x0, y0, x1, y1), exclusive ends,
+    /// clipped to the image.
+    pub fn tile_pixels(&self, idx: usize) -> (usize, usize, usize, usize) {
+        let (tx, ty) = self.tile_xy(idx);
+        let x0 = tx * TILE_PX;
+        let y0 = ty * TILE_PX;
+        (x0, y0, (x0 + TILE_PX).min(self.width), (y0 + TILE_PX).min(self.height))
+    }
+
+    /// Inclusive tile-coordinate range covered by a splat's radius, or
+    /// `None` when fully off-screen.
+    pub fn tile_range(&self, s: &Splat2D) -> Option<(usize, usize, usize, usize)> {
+        let x0 = s.mean.x - s.rx;
+        let x1 = s.mean.x + s.rx;
+        let y0 = s.mean.y - s.ry;
+        let y1 = s.mean.y + s.ry;
+        if x1 < 0.0 || y1 < 0.0 || x0 >= self.width as f32 || y0 >= self.height as f32 {
+            return None;
+        }
+        let tx0 = (x0.max(0.0) as usize) / TILE_PX;
+        let ty0 = (y0.max(0.0) as usize) / TILE_PX;
+        let tx1 = ((x1 as usize).min(self.width - 1)) / TILE_PX;
+        let ty1 = ((y1 as usize).min(self.height - 1)) / TILE_PX;
+        Some((tx0, ty0, tx1.min(self.tiles_x - 1), ty1.min(self.tiles_y - 1)))
+    }
+
+    /// Enumerate tile indices a splat intersects.
+    pub fn splat_tiles(&self, s: &Splat2D, mut f: impl FnMut(usize)) {
+        if let Some((tx0, ty0, tx1, ty1)) = self.tile_range(s) {
+            for ty in ty0..=ty1 {
+                for tx in tx0..=tx1 {
+                    f(self.tile_index(tx, ty));
+                }
+            }
+        }
+    }
+}
+
+/// Build per-tile splat lists for a frame (the "intersection testing" stage;
+/// counts are the duplication factor the sorting stage must handle).
+pub fn bin_splats(grid: &TileGrid, splats: &[Splat2D]) -> Vec<Vec<u32>> {
+    let mut bins: Vec<Vec<u32>> = vec![Vec::new(); grid.n_tiles()];
+    for (si, s) in splats.iter().enumerate() {
+        grid.splat_tiles(s, |tile| bins[tile].push(si as u32));
+    }
+    bins
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec3;
+
+    fn cam() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, 10.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            60f32.to_radians(),
+            16.0 / 9.0,
+            0.1,
+            100.0,
+        )
+    }
+
+    fn centered_gaussian(sigma: f32) -> Gaussian4D {
+        Gaussian4D::isotropic(Vec3::ZERO, sigma, 0.9, Vec3::splat(0.3))
+    }
+
+    #[test]
+    fn center_gaussian_projects_to_image_center() {
+        let c = cam();
+        let s = project_gaussian(&centered_gaussian(0.5), 0, &c, 0.0).unwrap();
+        assert!((s.mean.x - c.intrinsics.cx).abs() < 1e-2);
+        assert!((s.mean.y - c.intrinsics.cy).abs() < 1e-2);
+        assert!((s.depth - 10.0).abs() < 1e-3);
+        assert!((s.alpha_base - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn behind_camera_returns_none() {
+        let c = cam();
+        let g = Gaussian4D::isotropic(Vec3::new(0.0, 0.0, 20.0), 0.5, 0.9, Vec3::ONE);
+        assert!(project_gaussian(&g, 0, &c, 0.0).is_none());
+    }
+
+    #[test]
+    fn temporally_dead_returns_none() {
+        let c = cam();
+        let mut g = centered_gaussian(0.5);
+        g.sigma_t = 0.01;
+        g.mu_t = 0.0;
+        g.velocity = Vec3::ZERO;
+        assert!(project_gaussian(&g, 0, &c, 0.5).is_none(), "50σ away in time");
+        assert!(project_gaussian(&g, 0, &c, 0.0).is_some());
+    }
+
+    #[test]
+    fn radius_scales_with_sigma_and_distance() {
+        let c = cam();
+        let s_small = project_gaussian(&centered_gaussian(0.2), 0, &c, 0.0).unwrap();
+        let s_big = project_gaussian(&centered_gaussian(1.0), 0, &c, 0.0).unwrap();
+        assert!(s_big.radius > 2.0 * s_small.radius);
+    }
+
+    #[test]
+    fn exponent_is_zero_at_mean_negative_away() {
+        let c = cam();
+        let s = project_gaussian(&centered_gaussian(0.5), 0, &c, 0.0).unwrap();
+        assert!(splat_exponent(&s, s.mean.x, s.mean.y).abs() < 1e-9);
+        assert!(splat_exponent(&s, s.mean.x + 30.0, s.mean.y) < -0.1);
+    }
+
+    #[test]
+    fn tile_grid_covers_image() {
+        let g = TileGrid::new(1280, 720);
+        assert_eq!(g.tiles_x, 80);
+        assert_eq!(g.tiles_y, 45);
+        assert_eq!(g.n_tiles(), 3600);
+        let (x0, y0, x1, y1) = g.tile_pixels(g.n_tiles() - 1);
+        assert_eq!((x1, y1), (1280, 720));
+        assert_eq!((x0, y0), (1264, 704));
+    }
+
+    #[test]
+    fn tile_grid_handles_non_multiple_sizes() {
+        let g = TileGrid::new(100, 50);
+        assert_eq!(g.tiles_x, 7);
+        assert_eq!(g.tiles_y, 4);
+        let (_, _, x1, y1) = g.tile_pixels(g.n_tiles() - 1);
+        assert_eq!((x1, y1), (100, 50));
+    }
+
+    #[test]
+    fn offscreen_splat_has_no_tiles() {
+        let grid = TileGrid::new(640, 360);
+        let s = Splat2D {
+            id: 0,
+            mean: Vec2::new(-100.0, -100.0),
+            conic: [1.0, 0.0, 1.0],
+            radius: 10.0,
+            rx: 10.0,
+            ry: 10.0,
+            depth: 1.0,
+            alpha_base: 0.5,
+            color: Vec3::ONE,
+        };
+        assert!(grid.tile_range(&s).is_none());
+    }
+
+    #[test]
+    fn bin_splats_puts_center_splat_in_center_tile() {
+        let grid = TileGrid::new(640, 360);
+        let s = Splat2D {
+            id: 7,
+            mean: Vec2::new(320.0, 180.0),
+            conic: [1.0, 0.0, 1.0],
+            radius: 4.0,
+            rx: 4.0,
+            ry: 4.0,
+            depth: 1.0,
+            alpha_base: 0.5,
+            color: Vec3::ONE,
+        };
+        let bins = bin_splats(&grid, &[s]);
+        let center_tile = grid.tile_index(320 / TILE_PX, 180 / TILE_PX);
+        assert!(bins[center_tile].contains(&0));
+        let total: usize = bins.iter().map(|b| b.len()).sum();
+        assert!(total >= 1 && total <= 9, "small splat touches few tiles: {total}");
+    }
+
+    #[test]
+    fn big_splat_touches_many_tiles() {
+        let grid = TileGrid::new(640, 360);
+        let s = Splat2D {
+            id: 0,
+            mean: Vec2::new(320.0, 180.0),
+            conic: [0.001, 0.0, 0.001],
+            radius: 100.0,
+            rx: 100.0,
+            ry: 100.0,
+            depth: 1.0,
+            alpha_base: 0.5,
+            color: Vec3::ONE,
+        };
+        let mut count = 0;
+        grid.splat_tiles(&s, |_| count += 1);
+        assert!(count > 100, "200px-diameter splat covers many 16px tiles: {count}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Tile-space processing: Gaussian→2D projection and tile intersection
+//! testing, the connection-strength graph, Union-Find, and Adaptive Tile
+//! Grouping with posteriori knowledge (ATG, paper §3.3) plus the raster-scan
+//! baseline ordering.
+
+pub mod atg;
+pub mod connection;
+pub mod intersect;
+pub mod raster;
+pub mod unionfind;
+
+pub use atg::{Atg, AtgConfig, TileGroups};
+pub use connection::ConnectionGraph;
+pub use intersect::{project_gaussian, Splat2D, TileGrid};
+pub use unionfind::UnionFind;
+
+/// Rendering tile edge in pixels (3DGS convention: 16×16).
+pub const TILE_PX: usize = 16;

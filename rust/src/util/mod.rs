@@ -1,0 +1,14 @@
+//! Offline-friendly utilities replacing crates unavailable in this
+//! environment's registry (see DESIGN.md §3 "Offline-dependency note"):
+//! deterministic RNG (`rand`), arg parsing (`clap`), JSON emission
+//! (`serde_json`), wall-clock timers, and a seeded property-testing harness
+//! (`proptest`).
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,80 @@
+//! Seeded randomized property testing (offline replacement for `proptest`).
+//!
+//! `check(cases, seed, |rng| ...)` runs a property over `cases` random
+//! inputs; on failure it reports the case index and the per-case fork seed so
+//! the exact failing input can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Outcome of a property over one generated case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` over `cases` deterministic random cases. Panics with a
+/// replayable diagnostic on the first failure.
+pub fn check<F>(cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> CaseResult,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let fork_label = case as u64;
+        let mut rng = root.fork(fork_label);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} (seed={seed}, fork={fork_label}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 values are close (absolute + relative tolerance), property
+/// style: returns a `CaseResult` for use inside `check` closures.
+pub fn close(a: f32, b: f32, atol: f32, rtol: f32, what: &str) -> CaseResult {
+    let tol = atol + rtol * b.abs().max(a.abs());
+    if (a - b).abs() <= tol || (a.is_nan() && b.is_nan()) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Assert a boolean condition.
+pub fn ensure(cond: bool, what: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(50, 1, |rng| {
+            n += 1;
+            let x = rng.f32();
+            ensure((0.0..1.0).contains(&x), "unit interval")
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, 2, |rng| {
+            let x = rng.f32();
+            ensure(x < 0.5, format!("x={x} not < 0.5"))
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-6, 0.0, "t").is_ok());
+        assert!(close(100.0, 100.1, 0.0, 1e-2, "t").is_ok());
+        assert!(close(1.0, 2.0, 1e-6, 1e-6, "t").is_err());
+    }
+}

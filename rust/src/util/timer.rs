@@ -1,0 +1,105 @@
+//! Wall-clock phase timers for the Fig. 2(a) latency breakdown and for the
+//! host-side performance profiling pass.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A simple start/stop timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates named phase durations across frames — the instrumentation
+/// behind the Fig. 2(a) profiling reproduction.
+#[derive(Debug, Default)]
+pub struct PhaseProfile {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a phase name.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(phase, t.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        *self.totals.entry(phase.to_string()).or_default() += d;
+        *self.counts.entry(phase.to_string()).or_default() += 1;
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.totals.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn grand_total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    /// (phase, total seconds, share of grand total) sorted by share desc.
+    pub fn breakdown(&self) -> Vec<(String, f64, f64)> {
+        let grand = self.grand_total().as_secs_f64().max(1e-12);
+        let mut rows: Vec<(String, f64, f64)> = self
+            .totals
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_secs_f64(), v.as_secs_f64() / grand))
+            .collect();
+        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn phase_profile_accumulates() {
+        let mut p = PhaseProfile::new();
+        p.add("sort", Duration::from_millis(30));
+        p.add("sort", Duration::from_millis(30));
+        p.add("blend", Duration::from_millis(40));
+        assert_eq!(p.total("sort"), Duration::from_millis(60));
+        assert_eq!(p.grand_total(), Duration::from_millis(100));
+        let rows = p.breakdown();
+        assert_eq!(rows[0].0, "sort");
+        assert!((rows[0].2 - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut p = PhaseProfile::new();
+        let v = p.time("work", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(p.total("work") > Duration::ZERO);
+    }
+}

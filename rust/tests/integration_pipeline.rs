@@ -1,0 +1,166 @@
+//! Cross-module integration tests: the full frame pipeline against its
+//! baselines and invariants that span culling + tiles + sorting + memory +
+//! render.
+
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::App;
+use gaucim::pipeline::{FramePipeline, PipelineConfig};
+use gaucim::scene::synth::{SceneKind, SynthParams};
+
+fn app(kind: SceneKind, n: usize, w: usize, h: usize) -> App {
+    let mut app = App::new(kind, n, 99);
+    app.config = app.config.clone().with_resolution(w, h);
+    app
+}
+
+#[test]
+fn optimized_pipeline_renders_same_image_as_baseline() {
+    // DR-FC + ATG + AII only change *what is fetched and in which order*,
+    // never the pixels.
+    let app = app(SceneKind::DynamicLarge, 6000, 256, 144);
+    let cam = app.camera_template();
+    let t = 0.4;
+
+    let mut opt = FramePipeline::new(&app.scene, app.config.clone());
+    let mut base = FramePipeline::new(
+        &app.scene,
+        PipelineConfig::baseline(true).with_resolution(256, 144),
+    );
+    let img_opt = opt.render_frame(&cam, t, true).image.unwrap();
+    let img_base = base.render_frame(&cam, t, true).image.unwrap();
+    assert_eq!(img_opt, img_base, "optimizations must be pixel-exact");
+}
+
+#[test]
+fn all_optimizations_reduce_traffic_or_work() {
+    let app = app(SceneKind::DynamicLarge, 8000, 320, 180);
+    let frames = app.trajectory(ViewCondition::Average, 4);
+
+    let run = |config: PipelineConfig| {
+        let mut p = FramePipeline::new(&app.scene, config);
+        let mut pre_bytes = 0u64;
+        let mut blend_bursts = 0u64;
+        let mut sort_cycles = 0u64;
+        for (cam, t) in &frames {
+            let r = p.render_frame(cam, *t, false);
+            pre_bytes += r.traffic.preprocess_dram.bytes;
+            blend_bursts += r.traffic.blend_dram.bursts;
+            sort_cycles += r.sort.cycles;
+        }
+        (pre_bytes, blend_bursts, sort_cycles)
+    };
+
+    let full = run(app.config.clone());
+    let no_drfc = run(PipelineConfig { use_drfc: false, ..app.config.clone() });
+    let no_atg = run(PipelineConfig { use_atg: false, ..app.config.clone() });
+    let no_aii = run(PipelineConfig { use_aii: false, ..app.config.clone() });
+
+    assert!(
+        full.0 < no_drfc.0,
+        "DR-FC must cut preprocess DRAM: {} vs {}",
+        full.0,
+        no_drfc.0
+    );
+    assert!(
+        full.1 <= no_atg.1,
+        "ATG must not increase blend DRAM bursts: {} vs {}",
+        full.1,
+        no_atg.1
+    );
+    assert!(
+        full.2 < no_aii.2,
+        "AII must cut sort cycles: {} vs {}",
+        full.2,
+        no_aii.2
+    );
+}
+
+#[test]
+fn scene_roundtrip_preserves_frame_results() {
+    let scene = SynthParams::new(SceneKind::DynamicLarge, 3000).generate();
+    let path = std::env::temp_dir().join("gaucim_integration_roundtrip.g4d");
+    gaucim::scene::io::save(&scene, &path).unwrap();
+    let loaded = gaucim::scene::io::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let config = PipelineConfig::paper(true).with_resolution(192, 108);
+    let mut cam = gaucim::camera::Camera::look_at(
+        gaucim::math::Vec3::new(0.0, 4.0, 22.0),
+        gaucim::math::Vec3::ZERO,
+        gaucim::math::Vec3::new(0.0, 1.0, 0.0),
+        60f32.to_radians(),
+        16.0 / 9.0,
+        0.1,
+        200.0,
+    );
+    cam.set_resolution(192, 108);
+
+    let r1 = FramePipeline::new(&scene, config.clone()).render_frame(&cam, 0.3, true);
+    let r2 = FramePipeline::new(&loaded, config).render_frame(&cam, 0.3, true);
+    assert_eq!(r1.image.unwrap(), r2.image.unwrap());
+    assert_eq!(r1.n_visible, r2.n_visible);
+    assert_eq!(r1.traffic.gaussians_fetched, r2.traffic.gaussians_fetched);
+}
+
+#[test]
+fn dynamic_costs_more_at_paper_scale_ratio() {
+    // Paper workloads: dynamic scenes carry ~2x the primitives of static
+    // ones (temporal expansion), a larger per-record footprint, and a
+    // bigger DCIM tier — at that ratio the dynamic config costs more per
+    // frame (Table I: 0.63 W vs 0.28 W) even though temporal culling keeps
+    // its *visible* fraction small.
+    let d = app(SceneKind::DynamicLarge, 20_000, 320, 180);
+    let s = app(SceneKind::StaticLarge, 8_000, 320, 180);
+    let rd = d.run_sequence(ViewCondition::Average, 3, 0);
+    let rs = s.run_sequence(ViewCondition::Static, 3, 0);
+    assert!(
+        rd.avg_dram_bytes > rs.avg_dram_bytes * 0.5,
+        "dynamic {} B vs static {} B",
+        rd.avg_dram_bytes,
+        rs.avg_dram_bytes
+    );
+    assert!(rd.report.area_mm2 > rs.report.area_mm2);
+    // Per fetched gaussian, dynamic records are strictly larger.
+    assert!(
+        gaucim::scene::Gaussian4D::dram_bytes(true)
+            > gaucim::scene::Gaussian4D::dram_bytes(false)
+    );
+}
+
+#[test]
+fn sequence_determinism() {
+    let a1 = app(SceneKind::DynamicLarge, 4000, 256, 144);
+    let a2 = app(SceneKind::DynamicLarge, 4000, 256, 144);
+    let r1 = a1.run_sequence(ViewCondition::Average, 3, 0);
+    let r2 = a2.run_sequence(ViewCondition::Average, 3, 0);
+    assert_eq!(r1.avg_dram_accesses, r2.avg_dram_accesses);
+    assert_eq!(r1.avg_sort_cycles, r2.avg_sort_cycles);
+    assert!((r1.report.fps - r2.report.fps).abs() < 1e-9);
+}
+
+#[test]
+fn posteriori_state_survives_and_helps_across_sequence() {
+    let app = app(SceneKind::DynamicLarge, 20_000, 320, 180);
+    let frames = app.trajectory(ViewCondition::Average, 6);
+    let mut p = FramePipeline::new(&app.scene, app.config.clone());
+    let mut first_sort = 0u64;
+    let mut rest_sort = 0u64;
+    let mut rest_frames = 0u64;
+    for (i, (cam, t)) in frames.iter().enumerate() {
+        let r = p.render_frame(cam, *t, false);
+        if i == 0 {
+            first_sort = r.sort.minmax_scanned;
+        } else {
+            rest_sort += r.sort.minmax_scanned;
+            rest_frames += 1;
+        }
+    }
+    assert!(first_sort > 0, "frame 0 pays the min/max scan");
+    // Later frames only pay phase 1 for tile blocks that were empty so far;
+    // the overwhelming majority of elements ride the posteriori boundaries.
+    let per_frame_later = rest_sort as f64 / rest_frames.max(1) as f64;
+    assert!(
+        per_frame_later < 0.25 * first_sort as f64,
+        "posteriori must eliminate most min/max scans: frame0 {first_sort},          later {per_frame_later}/frame"
+    );
+}

@@ -1,0 +1,131 @@
+//! End-to-end integration through the PJRT runtime: AOT artifacts
+//! (L2 preprocess + L1 Pallas blend) driven from the L3 coordinator's data
+//! structures, cross-checked against the native pipeline.
+//!
+//! Skips gracefully (with a note) when `make artifacts` has not run.
+
+use gaucim::coordinator::App;
+use gaucim::runtime::{Artifacts, BlendExecutor, HloExecutor, PreprocessExecutor};
+use gaucim::scene::synth::SceneKind;
+use gaucim::tiles::intersect::project_gaussian;
+
+fn artifacts() -> Option<Artifacts> {
+    match Artifacts::discover() {
+        Ok(a) if a.available() => Some(a),
+        _ => {
+            eprintln!("skipping PJRT integration: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn full_chunked_preprocess_matches_native() {
+    let Some(artifacts) = artifacts() else { return };
+    let client = HloExecutor::cpu_client().unwrap();
+    let pre = PreprocessExecutor::load(&client, &artifacts.preprocess_hlo()).unwrap();
+
+    let mut app = App::new(SceneKind::DynamicLarge, 2500, 5);
+    app.config = app.config.clone().with_resolution(320, 180);
+    let cam = app.camera_template();
+    let t = 0.42;
+
+    // Chunked PJRT preprocessing over the whole scene.
+    let mut pjrt_splats = Vec::new();
+    for (ci, chunk) in app.scene.gaussians.chunks(1024).enumerate() {
+        let out = pre
+            .project_chunk(chunk, (ci * 1024) as u32, &cam, t)
+            .unwrap();
+        pjrt_splats.extend(out);
+    }
+
+    // Native projection over the same primitives.
+    let native: Vec<_> = app
+        .scene
+        .gaussians
+        .iter()
+        .enumerate()
+        .filter_map(|(i, g)| project_gaussian(g, i as u32, &cam, t))
+        .collect();
+
+    let native_ids: std::collections::HashSet<u32> = native.iter().map(|s| s.id).collect();
+    let pjrt_ids: std::collections::HashSet<u32> = pjrt_splats.iter().map(|s| s.id).collect();
+    let agree = native_ids.intersection(&pjrt_ids).count();
+    assert!(
+        agree as f64 >= 0.97 * native_ids.len().max(1) as f64,
+        "visibility agreement {agree}/{}",
+        native_ids.len()
+    );
+}
+
+#[test]
+fn pjrt_blend_composes_with_sorted_pipeline_output() {
+    let Some(artifacts) = artifacts() else { return };
+    let client = HloExecutor::cpu_client().unwrap();
+    let pre = PreprocessExecutor::load(&client, &artifacts.preprocess_hlo()).unwrap();
+    let blend = BlendExecutor::load(&client, &artifacts.blend_hlo()).unwrap();
+
+    let mut app = App::new(SceneKind::StaticLarge, 1500, 5);
+    app.config = app.config.clone().with_resolution(320, 180);
+    let cam = app.camera_template();
+
+    let mut splats = pre
+        .project_chunk(&app.scene.gaussians, 0, &cam, 0.0)
+        .unwrap();
+    splats.sort_by(|a, b| a.depth.partial_cmp(&b.depth).unwrap());
+    // Center tile of the image.
+    let x0 = (cam.intrinsics.cx - 8.0).floor();
+    let y0 = (cam.intrinsics.cy - 8.0).floor();
+    let tile_splats: Vec<_> = splats
+        .iter()
+        .filter(|s| {
+            s.mean.x + s.radius >= x0
+                && s.mean.x - s.radius < x0 + 16.0
+                && s.mean.y + s.radius >= y0
+                && s.mean.y - s.radius < y0 + 16.0
+        })
+        .cloned()
+        .collect();
+
+    let pjrt_tile = blend.blend_tile(&tile_splats, x0, y0).unwrap();
+    let native = gaucim::runtime::blend_exec::cumulative_blend_reference(&tile_splats, x0, y0);
+    for (i, (a, b)) in pjrt_tile.iter().zip(&native).enumerate() {
+        for c in 0..3 {
+            assert!(
+                (a[c] - b[c]).abs() < 2e-2,
+                "pixel {i} ch {c}: {} vs {}",
+                a[c],
+                b[c]
+            );
+        }
+    }
+    // The tile must contain actual content (scene center is populated).
+    let max = pjrt_tile
+        .iter()
+        .flat_map(|p| p.iter().copied())
+        .fold(0.0f32, f32::max);
+    assert!(max > 0.05, "center tile should not be empty: max {max}");
+}
+
+#[test]
+fn exp_lut_artifact_matches_rust_dcim_model() {
+    let Some(artifacts) = artifacts() else { return };
+    let client = HloExecutor::cpu_client().unwrap();
+    let exe = HloExecutor::load(&client, &artifacts.exp_lut_hlo()).unwrap();
+
+    let n = gaucim::runtime::EXP_LUT_N;
+    let xs: Vec<f32> = (0..n).map(|i| -30.0 + 40.0 * i as f32 / n as f32).collect();
+    let lit = gaucim::runtime::executor::literal_f32(&xs, &[n as i64]).unwrap();
+    let out = exe.run(&[lit]).unwrap();
+    let got = gaucim::runtime::executor::to_vec_f32(&out[0]).unwrap();
+
+    let lut = gaucim::dcim::ExpLut::paper();
+    for (i, (&x, &g)) in xs.iter().zip(&got).enumerate() {
+        let expect = lut.exp2(x);
+        let tol = 2e-3 * expect.abs() + 1e-12;
+        assert!(
+            (g - expect).abs() <= tol,
+            "i={i} x={x}: pjrt {g} vs rust lut {expect}"
+        );
+    }
+}
