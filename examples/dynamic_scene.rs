@@ -13,7 +13,6 @@ use gaucim::camera::ViewCondition;
 use gaucim::coordinator::App;
 use gaucim::pipeline::FramePipeline;
 use gaucim::render::ppm;
-use gaucim::runtime::{Artifacts, BlendExecutor, HloExecutor, PreprocessExecutor};
 use gaucim::scene::synth::SceneKind;
 use gaucim::util::cli::Args;
 
@@ -31,34 +30,42 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- PJRT cross-check on frame 0 (proves L1/L2/L3 compose) -----------
-    match Artifacts::discover() {
-        Ok(artifacts) if artifacts.available() => {
-            let client = HloExecutor::cpu_client()?;
-            let pre = PreprocessExecutor::load(&client, &artifacts.preprocess_hlo())?;
-            let blend = BlendExecutor::load(&client, &artifacts.blend_hlo())?;
-            let cam = app.camera_template();
-            let splats =
-                pre.project_chunk(&app.scene.gaussians[..1024.min(app.scene.len())], 0, &cam, 0.5)?;
-            let mut sorted = splats.clone();
-            sorted.sort_by(|a, b| a.depth.partial_cmp(&b.depth).unwrap());
-            let x0 = cam.intrinsics.cx - 8.0;
-            let y0 = cam.intrinsics.cy - 8.0;
-            let pjrt_tile = blend.blend_tile(&sorted, x0, y0)?;
-            let native_tile =
-                gaucim::runtime::blend_exec::cumulative_blend_reference(&sorted, x0, y0);
-            let max_err = pjrt_tile
-                .iter()
-                .zip(&native_tile)
-                .flat_map(|(a, b)| (0..3).map(move |c| (a[c] - b[c]).abs()))
-                .fold(0.0f32, f32::max);
-            println!(
-                "PJRT cross-check: {} splats through preprocess.hlo + blend.hlo, max |Δ| = {max_err:.5}",
-                sorted.len()
-            );
-            anyhow::ensure!(max_err < 2e-2, "PJRT/native divergence {max_err}");
+    #[cfg(feature = "xla")]
+    {
+        use gaucim::runtime::{Artifacts, BlendExecutor, HloExecutor, PreprocessExecutor};
+        match Artifacts::discover() {
+            Ok(artifacts) if artifacts.available() => {
+                let client = HloExecutor::cpu_client()?;
+                let pre = PreprocessExecutor::load(&client, &artifacts.preprocess_hlo())?;
+                let blend = BlendExecutor::load(&client, &artifacts.blend_hlo())?;
+                let cam = app.camera_template();
+                let n_chunk = 1024.min(app.scene.len());
+                let splats = pre.project_chunk(&app.scene.gaussians[..n_chunk], 0, &cam, 0.5)?;
+                let mut sorted = splats.clone();
+                sorted.sort_by(|a, b| a.depth.partial_cmp(&b.depth).unwrap());
+                let x0 = cam.intrinsics.cx - 8.0;
+                let y0 = cam.intrinsics.cy - 8.0;
+                let pjrt_tile = blend.blend_tile(&sorted, x0, y0)?;
+                let native_tile =
+                    gaucim::runtime::blend_exec::cumulative_blend_reference(&sorted, x0, y0);
+                let max_err = pjrt_tile
+                    .iter()
+                    .zip(&native_tile)
+                    .flat_map(|(a, b)| (0..3).map(move |c| (a[c] - b[c]).abs()))
+                    .fold(0.0f32, f32::max);
+                println!(
+                    "PJRT cross-check: {} splats through the AOT kernels, max |Δ| = {max_err:.5}",
+                    sorted.len()
+                );
+                anyhow::ensure!(max_err < 2e-2, "PJRT/native divergence {max_err}");
+            }
+            _ => println!(
+                "(artifacts not built — `make artifacts` to enable the PJRT cross-check)"
+            ),
         }
-        _ => println!("(artifacts not built — `make artifacts` to enable the PJRT cross-check)"),
     }
+    #[cfg(not(feature = "xla"))]
+    println!("(built without the `xla` feature — PJRT cross-check skipped)");
 
     // --- full trajectory through the pipeline ----------------------------
     let seq = app.trajectory(ViewCondition::Average, frames);

@@ -1,0 +1,97 @@
+//! Multi-viewer serving demo: N concurrent viewer sessions over one shared
+//! scene preparation, batched through the [`RenderServer`].
+//!
+//! Measures host simulation throughput (viewers × frames / wall-clock) for
+//! the sequential baseline vs the parallel batch, prints the per-viewer
+//! Table-I style rows, and writes `BENCH_server.json` so future PRs have a
+//! perf trajectory to beat.
+//!
+//! Run: `cargo run --release --example multi_viewer [-- --viewers 4 --frames 8]`
+
+use gaucim::bench::write_bench_json;
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::{RenderServer, ViewerSpec};
+use gaucim::pipeline::PipelineConfig;
+use gaucim::scene::synth::{SceneKind, SynthParams};
+use gaucim::util::cli::Args;
+use gaucim::util::json::Json;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let n = args.get_usize("gaussians", 20_000);
+    let n_viewers = args.get_usize("viewers", 4);
+    let frames = args.get_usize("frames", 8);
+    let width = args.get_usize("width", 640);
+    let height = args.get_usize("height", 360);
+
+    let scene = SynthParams::new(SceneKind::DynamicLarge, n).with_seed(42).generate();
+    let config = PipelineConfig::paper(true).with_resolution(width, height);
+    let server = RenderServer::new(scene, config);
+    println!(
+        "multi-viewer server: {} gaussians, {n_viewers} viewers × {frames} frames @ {width}x{height}",
+        server.shared.scene.len()
+    );
+
+    // Mixed viewing conditions, like a real audience.
+    let conditions =
+        [ViewCondition::Average, ViewCondition::Static, ViewCondition::Extreme];
+    let specs: Vec<ViewerSpec> = (0..n_viewers)
+        .map(|i| ViewerSpec::perf(conditions[i % conditions.len()], frames))
+        .collect();
+
+    // Warm-up (page in the shared preparation, stabilize timing).
+    server.render_viewer(0, &specs[0]);
+
+    // Sequential baseline: the same sessions one after another.
+    let t0 = Instant::now();
+    let sequential: Vec<_> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| server.render_viewer(i, s))
+        .collect();
+    let seq_wall_s = t0.elapsed().as_secs_f64();
+
+    // Parallel batch.
+    let batch = server.render_batch(&specs);
+
+    println!("\nper-viewer reports (modeled accelerator FPS/W):");
+    for rep in &batch.viewers {
+        println!("  {}", rep.report.row());
+    }
+    for (seq_rep, par_rep) in sequential.iter().zip(&batch.viewers) {
+        assert_eq!(
+            seq_rep.avg_dram_accesses, par_rep.avg_dram_accesses,
+            "parallel viewer stats must match sequential runs"
+        );
+    }
+
+    let total_frames = batch.total_frames;
+    let seq_fps = total_frames as f64 / seq_wall_s.max(1e-12);
+    let speedup = seq_wall_s / batch.wall_s.max(1e-12);
+    println!("\nhost throughput (frames across all viewers per second):");
+    println!("  sequential: {total_frames} frames in {seq_wall_s:.3} s  → {seq_fps:.1} frames/s");
+    println!(
+        "  batched:    {total_frames} frames in {:.3} s  → {:.1} frames/s  ({speedup:.2}x)",
+        batch.wall_s, batch.aggregate_frames_per_s
+    );
+
+    let record = Json::obj()
+        .set("gaussians", server.shared.scene.len())
+        .set("viewers", n_viewers)
+        .set("frames_per_viewer", frames)
+        .set("width", width)
+        .set("height", height)
+        .set("sequential_wall_s", seq_wall_s)
+        .set("batch_wall_s", batch.wall_s)
+        .set("sequential_frames_per_s", seq_fps)
+        .set("aggregate_frames_per_s", batch.aggregate_frames_per_s)
+        .set("speedup", speedup)
+        .set(
+            "host_parallelism",
+            std::thread::available_parallelism().map(usize::from).unwrap_or(1),
+        );
+    write_bench_json("BENCH_server.json", &record)?;
+    println!("\nwrote BENCH_server.json");
+    Ok(())
+}

@@ -4,6 +4,7 @@
 //! targets that regenerate the paper's tables and figures.
 
 use crate::math::stats::Running;
+use crate::util::json::Json;
 use std::time::Instant;
 
 /// One benchmark's timing summary.
@@ -98,6 +99,13 @@ pub fn section(title: &str) {
 /// Print a figure/table row (uniform formatting across benches).
 pub fn metric_row(label: &str, value: f64, unit: &str) {
     println!("  {label:<52} {value:>12.4} {unit}");
+}
+
+/// Persist a benchmark record as pretty JSON (the `BENCH_*.json` convention:
+/// one file per perf surface at the repository root, so successive PRs have
+/// a throughput trajectory to compare against).
+pub fn write_bench_json(path: &str, json: &Json) -> std::io::Result<()> {
+    std::fs::write(path, json.pretty())
 }
 
 /// Environment knob: `GAUCIM_BENCH_SCALE` divides workload sizes so CI can

@@ -96,26 +96,12 @@ impl App {
 
     /// Camera template for the configured resolution.
     pub fn camera_template(&self) -> Camera {
-        let mut cam = Camera::look_at(
-            Vec3::new(0.0, 5.0, self.orbit_radius),
-            Vec3::new(0.0, 1.0, 0.0),
-            Vec3::new(0.0, 1.0, 0.0),
-            60f32.to_radians(),
-            self.config.width as f32 / self.config.height as f32,
-            0.1,
-            200.0,
-        );
-        cam.set_resolution(self.config.width, self.config.height);
-        cam
+        camera_template(&self.config, self.orbit_radius)
     }
 
     /// Trajectory for a view condition across the scene's clip.
     pub fn trajectory(&self, condition: ViewCondition, frames: usize) -> Vec<(Camera, f32)> {
-        let (t0, t1) = self.scene.time_span;
-        Trajectory::new(condition, frames)
-            .with_scene(Vec3::new(0.0, 1.0, 0.0), self.orbit_radius)
-            .with_time_span(t0, t1)
-            .generate(&self.camera_template())
+        scene_trajectory(&self.scene, &self.config, self.orbit_radius, condition, frames)
     }
 
     /// Run a sequence. `psnr_every` > 0 renders every n-th frame numerically
@@ -128,78 +114,13 @@ impl App {
     ) -> SequenceReport {
         let seq = self.trajectory(condition, frames);
         let mut pipeline = FramePipeline::new(&self.scene, self.config.clone());
-        let reference = ReferenceRenderer::new(self.config.width, self.config.height);
-
-        let mut energy = FrameEnergy::default();
-        let mut latency = StageLatency::default();
-        let mut visible = 0.0;
-        let mut dram_accesses = 0.0;
-        let mut dram_bytes = 0.0;
-        let mut sram_hits = 0u64;
-        let mut sram_lookups = 0u64;
-        let mut sort_cycles = 0.0;
-        let mut atg_ops = 0.0;
-        let mut psnr_sum = 0.0;
-        let mut ssim_sum = 0.0;
-        let mut psnr_count = 0usize;
-
-        for (i, (cam, t)) in seq.iter().enumerate() {
-            let render = psnr_every > 0 && i % psnr_every == 0;
-            let r = pipeline.render_frame(cam, *t, render);
-            energy.add(&r.energy);
-            latency.add(&r.latency);
-            visible += r.n_visible as f64;
-            dram_accesses += r.traffic.total_dram_accesses() as f64;
-            dram_bytes += r.traffic.total_dram_bytes() as f64;
-            sram_hits += r.traffic.blend_sram.hits;
-            sram_lookups += r.traffic.blend_sram.lookups;
-            sort_cycles += r.sort.cycles as f64;
-            atg_ops += r.atg_ops as f64;
-            if let Some(img) = &r.image {
-                let ref_img = reference.render(&self.scene, cam, *t);
-                psnr_sum += psnr(&ref_img, img);
-                ssim_sum += crate::render::ssim(&ref_img, img);
-                psnr_count += 1;
-            }
-        }
-
-        let n = frames.max(1) as f64;
-        let energy = energy.scale(1.0 / n);
-        let latency = latency.scale(1.0 / n);
-        let report = PowerReport::from_frame(
+        run_frames_report(
+            &self.scene,
+            &mut pipeline,
+            &seq,
+            psnr_every,
             format!("{} ({})", self.scene.name, condition.label()),
-            energy,
-            latency,
-            self.config.dcim.area_mm2,
-            self.scene.dynamic,
-        );
-        SequenceReport {
-            label: report.label.clone(),
-            frames,
-            energy,
-            latency,
-            avg_visible: visible / n,
-            avg_dram_accesses: dram_accesses / n,
-            avg_dram_bytes: dram_bytes / n,
-            sram_hit_rate: if sram_lookups > 0 {
-                sram_hits as f64 / sram_lookups as f64
-            } else {
-                0.0
-            },
-            avg_sort_cycles: sort_cycles / n,
-            avg_atg_ops: atg_ops / n,
-            psnr_db: if psnr_count > 0 {
-                psnr_sum / psnr_count as f64
-            } else {
-                f64::NAN
-            },
-            ssim: if psnr_count > 0 {
-                ssim_sum / psnr_count as f64
-            } else {
-                f64::NAN
-            },
-            report,
-        }
+        )
     }
 
     /// Render a single frame to an image (for the CLI / examples).
@@ -235,6 +156,123 @@ impl App {
             report,
         };
         (image, seq)
+    }
+}
+
+/// Camera template for a configuration + orbit radius (shared by [`App`]
+/// and [`super::RenderServer`] so single- and multi-viewer paths see the
+/// identical pose).
+pub(crate) fn camera_template(config: &PipelineConfig, orbit_radius: f32) -> Camera {
+    let mut cam = Camera::look_at(
+        Vec3::new(0.0, 5.0, orbit_radius),
+        Vec3::new(0.0, 1.0, 0.0),
+        Vec3::new(0.0, 1.0, 0.0),
+        60f32.to_radians(),
+        config.width as f32 / config.height as f32,
+        0.1,
+        200.0,
+    );
+    cam.set_resolution(config.width, config.height);
+    cam
+}
+
+/// Viewing trajectory across the scene's clip (shared single-/multi-viewer).
+pub(crate) fn scene_trajectory(
+    scene: &Scene,
+    config: &PipelineConfig,
+    orbit_radius: f32,
+    condition: ViewCondition,
+    frames: usize,
+) -> Vec<(Camera, f32)> {
+    let (t0, t1) = scene.time_span;
+    Trajectory::new(condition, frames)
+        .with_scene(Vec3::new(0.0, 1.0, 0.0), orbit_radius)
+        .with_time_span(t0, t1)
+        .generate(&camera_template(config, orbit_radius))
+}
+
+/// Drive `pipeline` over `seq` and aggregate the per-frame results into a
+/// [`SequenceReport`] — the single sequence-execution path shared by
+/// [`App::run_sequence`] and every [`super::RenderServer`] viewer session
+/// (which is what makes batched per-viewer stats identical to sequential
+/// single-viewer runs by construction).
+pub(crate) fn run_frames_report(
+    scene: &Scene,
+    pipeline: &mut FramePipeline<'_>,
+    seq: &[(Camera, f32)],
+    psnr_every: usize,
+    label: String,
+) -> SequenceReport {
+    let frames = seq.len();
+    let width = pipeline.config.width;
+    let height = pipeline.config.height;
+    let dcim_area_mm2 = pipeline.config.dcim.area_mm2;
+    let reference = ReferenceRenderer::new(width, height);
+
+    let mut energy = FrameEnergy::default();
+    let mut latency = StageLatency::default();
+    let mut visible = 0.0;
+    let mut dram_accesses = 0.0;
+    let mut dram_bytes = 0.0;
+    let mut sram_hits = 0u64;
+    let mut sram_lookups = 0u64;
+    let mut sort_cycles = 0.0;
+    let mut atg_ops = 0.0;
+    let mut psnr_sum = 0.0;
+    let mut ssim_sum = 0.0;
+    let mut psnr_count = 0usize;
+
+    for (i, (cam, t)) in seq.iter().enumerate() {
+        let render = psnr_every > 0 && i % psnr_every == 0;
+        let r = pipeline.render_frame(cam, *t, render);
+        energy.add(&r.energy);
+        latency.add(&r.latency);
+        visible += r.n_visible as f64;
+        dram_accesses += r.traffic.total_dram_accesses() as f64;
+        dram_bytes += r.traffic.total_dram_bytes() as f64;
+        sram_hits += r.traffic.blend_sram.hits;
+        sram_lookups += r.traffic.blend_sram.lookups;
+        sort_cycles += r.sort.cycles as f64;
+        atg_ops += r.atg_ops as f64;
+        if let Some(img) = &r.image {
+            let ref_img = reference.render(scene, cam, *t);
+            psnr_sum += psnr(&ref_img, img);
+            ssim_sum += crate::render::ssim(&ref_img, img);
+            psnr_count += 1;
+        }
+    }
+
+    let n = frames.max(1) as f64;
+    let energy = energy.scale(1.0 / n);
+    let latency = latency.scale(1.0 / n);
+    let report =
+        PowerReport::from_frame(label, energy, latency, dcim_area_mm2, scene.dynamic);
+    SequenceReport {
+        label: report.label.clone(),
+        frames,
+        energy,
+        latency,
+        avg_visible: visible / n,
+        avg_dram_accesses: dram_accesses / n,
+        avg_dram_bytes: dram_bytes / n,
+        sram_hit_rate: if sram_lookups > 0 {
+            sram_hits as f64 / sram_lookups as f64
+        } else {
+            0.0
+        },
+        avg_sort_cycles: sort_cycles / n,
+        avg_atg_ops: atg_ops / n,
+        psnr_db: if psnr_count > 0 {
+            psnr_sum / psnr_count as f64
+        } else {
+            f64::NAN
+        },
+        ssim: if psnr_count > 0 {
+            ssim_sum / psnr_count as f64
+        } else {
+            f64::NAN
+        },
+        report,
     }
 }
 

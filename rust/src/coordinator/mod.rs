@@ -1,10 +1,14 @@
-//! L3 coordinator: drives whole rendering sequences — scene synthesis (with
-//! on-disk caching), trajectory generation, the frame pipeline with its
-//! posteriori state, PSNR evaluation against the reference renderer, and
-//! Table-I style report generation.
+//! L3 coordinator: drives whole rendering sequences and viewer fleets —
+//! scene synthesis (with on-disk caching), trajectory generation, the
+//! stage-graph frame pipeline with its posteriori state, PSNR evaluation
+//! against the reference renderer, Table-I style report generation, and the
+//! multi-viewer [`RenderServer`] that shares one immutable scene
+//! preparation across N concurrent per-viewer sessions.
 
 pub mod app;
 pub mod config;
+pub mod server;
 
 pub use app::{App, SequenceReport};
 pub use config::ExperimentConfig;
+pub use server::{RenderServer, ServerReport, SharedScene, ViewerSpec};

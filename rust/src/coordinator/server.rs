@@ -1,0 +1,209 @@
+//! Multi-viewer render server: one immutable scene preparation, N
+//! concurrent per-viewer frame pipelines.
+//!
+//! [`SharedScene`] owns the scene plus its offline
+//! [`ScenePrep`](crate::pipeline::ScenePrep) (grid partition, DRAM layout,
+//! FP16-quantized copy) behind `Arc`s. [`RenderServer::render_batch`] fans
+//! a batch of [`ViewerSpec`]s out over `std::thread::scope` — every viewer
+//! gets its own [`FramePipeline`] (hardware models + posteriori state are
+//! per-session) borrowing the shared preparation — and reports both the
+//! per-viewer [`SequenceReport`]s and the batch's aggregate host
+//! throughput.
+//!
+//! Two throughput numbers must not be confused:
+//! * `SequenceReport::report.fps` — the **modeled accelerator** frame rate
+//!   (hardware cycles/energy roll-up), independent of the host machine;
+//! * [`ServerReport::aggregate_frames_per_s`] — the **host simulation**
+//!   throughput across all viewers (total frames / wall-clock), the number
+//!   multi-viewer parallelism improves.
+//!
+//! Determinism contract (enforced by the `render_server` test): a batch of
+//! N viewers produces per-viewer stats identical to N sequential
+//! single-viewer runs — both paths execute the exact same shared
+//! sequence-runner over the exact same trajectories.
+
+use crate::camera::{Camera, ViewCondition};
+use crate::pipeline::{FramePipeline, PipelineConfig, ScenePrep};
+use crate::scene::Scene;
+use crate::util::json::Json;
+use std::time::Instant;
+
+use super::app::{camera_template, run_frames_report, scene_trajectory};
+use super::SequenceReport;
+
+/// A scene plus its shared, immutable preparation.
+#[derive(Debug, Clone)]
+pub struct SharedScene {
+    pub scene: Scene,
+    pub prep: ScenePrep,
+}
+
+impl SharedScene {
+    /// Build the preparation once for `scene` under `config`.
+    pub fn prepare(scene: Scene, config: &PipelineConfig) -> SharedScene {
+        let prep = ScenePrep::build(&scene, config);
+        SharedScene { scene, prep }
+    }
+
+    /// A per-viewer pipeline borrowing this preparation (cheap: three `Arc`
+    /// clones + per-session hardware-model state).
+    pub fn pipeline(&self, config: PipelineConfig) -> FramePipeline<'_> {
+        FramePipeline::with_prep(&self.scene, self.prep.clone(), config)
+    }
+}
+
+/// One viewer session request.
+#[derive(Debug, Clone, Copy)]
+pub struct ViewerSpec {
+    pub condition: ViewCondition,
+    pub frames: usize,
+    /// Render every n-th frame numerically for PSNR (0 = perf path only).
+    pub psnr_every: usize,
+}
+
+impl ViewerSpec {
+    pub fn perf(condition: ViewCondition, frames: usize) -> ViewerSpec {
+        ViewerSpec { condition, frames, psnr_every: 0 }
+    }
+}
+
+/// Result of one viewer batch.
+#[derive(Debug, Clone)]
+pub struct ServerReport {
+    /// Per-viewer reports, in `specs` order.
+    pub viewers: Vec<SequenceReport>,
+    /// Wall-clock time of the whole batch (host seconds).
+    pub wall_s: f64,
+    /// Frames rendered across all viewers.
+    pub total_frames: usize,
+    /// Host simulation throughput: `total_frames / wall_s`.
+    pub aggregate_frames_per_s: f64,
+}
+
+impl ServerReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("viewers", self.viewers.len())
+            .set("total_frames", self.total_frames)
+            .set("wall_s", self.wall_s)
+            .set("aggregate_frames_per_s", self.aggregate_frames_per_s)
+            .set(
+                "viewer_reports",
+                Json::Arr(self.viewers.iter().map(SequenceReport::to_json).collect()),
+            )
+    }
+}
+
+/// The multi-viewer server.
+pub struct RenderServer {
+    pub shared: SharedScene,
+    pub config: PipelineConfig,
+    /// Camera orbit radius (matches [`super::App`]'s default so viewer
+    /// trajectories are identical to single-viewer runs).
+    pub orbit_radius: f32,
+}
+
+impl RenderServer {
+    /// Build a server for `scene` under `config` (prepares the shared
+    /// state once).
+    pub fn new(scene: Scene, config: PipelineConfig) -> RenderServer {
+        let shared = SharedScene::prepare(scene, &config);
+        RenderServer { shared, config, orbit_radius: 26.0 }
+    }
+
+    /// Promote a single-viewer [`super::App`] into a server, reusing its
+    /// scene, configuration, and orbit radius.
+    pub fn from_app(app: super::App) -> RenderServer {
+        let orbit_radius = app.orbit_radius;
+        let config = app.config.clone();
+        let shared = SharedScene::prepare(app.scene, &config);
+        RenderServer { shared, config, orbit_radius }
+    }
+
+    /// The camera template every viewer starts from.
+    pub fn camera_template(&self) -> Camera {
+        camera_template(&self.config, self.orbit_radius)
+    }
+
+    /// The trajectory a given spec resolves to.
+    pub fn trajectory(&self, spec: &ViewerSpec) -> Vec<(Camera, f32)> {
+        scene_trajectory(
+            &self.shared.scene,
+            &self.config,
+            self.orbit_radius,
+            spec.condition,
+            spec.frames,
+        )
+    }
+
+    /// Run one viewer session to completion (sequentially, on the calling
+    /// thread). This is the exact unit of work `render_batch` parallelizes.
+    pub fn render_viewer(&self, viewer_idx: usize, spec: &ViewerSpec) -> SequenceReport {
+        let seq = self.trajectory(spec);
+        let mut pipeline = self.shared.pipeline(self.config.clone());
+        run_frames_report(
+            &self.shared.scene,
+            &mut pipeline,
+            &seq,
+            spec.psnr_every,
+            format!(
+                "viewer-{viewer_idx} {} ({})",
+                self.shared.scene.name,
+                spec.condition.label()
+            ),
+        )
+    }
+
+    /// Render a batch of viewer sessions in parallel (one scoped thread per
+    /// viewer, all borrowing the shared scene preparation). Reports are
+    /// returned in `specs` order; a panicking viewer thread propagates.
+    pub fn render_batch(&self, specs: &[ViewerSpec]) -> ServerReport {
+        let t0 = Instant::now();
+        let viewers: Vec<SequenceReport> = std::thread::scope(|scope| {
+            let handles: Vec<_> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, spec)| scope.spawn(move || self.render_viewer(i, spec)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("viewer session panicked"))
+                .collect()
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        let total_frames: usize = specs.iter().map(|s| s.frames).sum();
+        ServerReport {
+            viewers,
+            wall_s,
+            total_frames,
+            aggregate_frames_per_s: total_frames as f64 / wall_s.max(1e-12),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::synth::{SceneKind, SynthParams};
+
+    #[test]
+    fn batch_reports_come_back_in_spec_order() {
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 1500).generate();
+        let config = PipelineConfig::paper(true).with_resolution(128, 72);
+        let server = RenderServer::new(scene, config);
+        let specs = [
+            ViewerSpec::perf(ViewCondition::Average, 2),
+            ViewerSpec::perf(ViewCondition::Static, 3),
+        ];
+        let report = server.render_batch(&specs);
+        assert_eq!(report.viewers.len(), 2);
+        assert_eq!(report.viewers[0].frames, 2);
+        assert_eq!(report.viewers[1].frames, 3);
+        assert_eq!(report.total_frames, 5);
+        assert!(report.viewers[0].label.starts_with("viewer-0"));
+        assert!(report.viewers[1].label.starts_with("viewer-1"));
+        assert!(report.aggregate_frames_per_s > 0.0);
+        let js = report.to_json().pretty();
+        assert!(js.contains("aggregate_frames_per_s"));
+    }
+}

@@ -11,19 +11,30 @@
 //! * **L2** — the JAX preprocessing + blending graphs
 //!   (`python/compile/model.py`), AOT-compiled once to HLO text in
 //!   `artifacts/`, and executed from Rust via the PJRT CPU client
-//!   ([`runtime`]).
+//!   ([`runtime`], behind the off-by-default `xla` feature).
 //! * **L3** — this crate: the paper's four contributions (DR-FC culling,
 //!   ATG tile grouping, AII-Sort, DD3D-Flow DCIM mapping) plus every
 //!   substrate they need (synthetic 4DGS scenes, LPDDR5 DRAM model, SRAM
 //!   buffer model, DCIM macro model, reference renderer, energy/FPS
 //!   roll-up).
 //!
-//! Every frame runs a **numeric path** (real pixels, bit-faithful DD3D-Flow
-//! exp) and a **performance path** (event counts into the hardware models →
-//! cycles/energy → FPS/W), mirroring the paper's methodology (functional RTL
-//! + measured DCIM-macro statistics + Ramulator).
+//! The per-frame engine is an explicit **stage graph**
+//! ([`pipeline::FramePipeline`]): `CullStage → ProjectStage →
+//! IntersectStage → GroupStage → SortStage → BlendStage`, every stage
+//! reading/writing a pooled [`pipeline::FrameCtx`] so steady-state frames
+//! allocate no scratch vectors. Every frame runs a **numeric path** (real
+//! pixels, bit-faithful DD3D-Flow exp) and a **performance path** (event
+//! counts into the hardware models → cycles/energy → FPS/W), mirroring the
+//! paper's methodology (functional RTL + measured DCIM-macro statistics +
+//! Ramulator).
 //!
-//! Entry points: [`coordinator::App`] drives full renders;
+//! Above the frame engine, [`coordinator::RenderServer`] shares one
+//! immutable scene preparation (grid partition, DRAM layout, FP16-quantized
+//! copy) across N concurrent per-viewer sessions and renders whole viewer
+//! batches in parallel — the serving-at-scale entry point.
+//!
+//! Entry points: [`coordinator::App`] drives single-viewer renders;
+//! [`coordinator::RenderServer`] drives multi-viewer batches;
 //! [`pipeline::FramePipeline`] is the per-frame engine; `examples/` and
 //! `rust/benches/` regenerate every paper table and figure.
 
@@ -38,6 +49,7 @@ pub mod math;
 pub mod memory;
 pub mod pipeline;
 pub mod render;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod scene;
 pub mod sorting;

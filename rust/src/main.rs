@@ -15,7 +15,6 @@ use gaucim::coordinator::App;
 use gaucim::culling::{GridConfig, GridPartition};
 use gaucim::pipeline::{profile_breakdown, PipelineConfig};
 use gaucim::render::ppm;
-use gaucim::runtime::{Artifacts, BlendExecutor, HloExecutor, PreprocessExecutor};
 use gaucim::scene::synth::SceneKind;
 use gaucim::scene::DramLayout;
 use gaucim::util::cli::Args;
@@ -169,7 +168,10 @@ fn cmd_table1(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_pjrt(args: &Args) -> Result<()> {
+    use gaucim::runtime::{Artifacts, BlendExecutor, HloExecutor, PreprocessExecutor};
+
     let artifacts = Artifacts::discover()?;
     artifacts.validate()?;
     println!("artifacts at {}", artifacts.dir.display());
@@ -196,6 +198,14 @@ fn cmd_pjrt(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_pjrt(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "the `pjrt` subcommand requires the PJRT runtime — rebuild with \
+         `--features xla` (needs the toolchain-provided xla crate)"
+    )
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let path = args
         .get("config")
@@ -213,12 +223,18 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_info(_args: &Args) -> Result<()> {
     println!("gaucim — 3DGauCIM reproduction (Rust + JAX + Pallas, AOT via PJRT)");
     println!("paper operating point: grid=4, ATG th=0.5 TB=4, AII N=8, FP16 + 12-bit exp LUT");
-    let artifacts = Artifacts::discover();
-    match artifacts {
-        Ok(a) if a.available() => println!("artifacts: {} (ready)", a.dir.display()),
-        Ok(a) => println!("artifacts: {} (INCOMPLETE — run `make artifacts`)", a.dir.display()),
-        Err(_) => println!("artifacts: not found — run `make artifacts`"),
+    #[cfg(feature = "xla")]
+    {
+        match gaucim::runtime::Artifacts::discover() {
+            Ok(a) if a.available() => println!("artifacts: {} (ready)", a.dir.display()),
+            Ok(a) => {
+                println!("artifacts: {} (INCOMPLETE — run `make artifacts`)", a.dir.display())
+            }
+            Err(_) => println!("artifacts: not found — run `make artifacts`"),
+        }
     }
+    #[cfg(not(feature = "xla"))]
+    println!("artifacts: n/a (built without the `xla` feature)");
     usage();
     Ok(())
 }

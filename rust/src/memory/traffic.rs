@@ -7,7 +7,7 @@ use super::sram::SramStats;
 use crate::util::json::Json;
 
 /// Aggregated memory traffic for one frame (or one experiment run).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TrafficLog {
     /// DRAM traffic during preprocessing (culling fetches).
     pub preprocess_dram: DramStats,
@@ -24,6 +24,13 @@ pub struct TrafficLog {
 impl TrafficLog {
     pub fn new() -> TrafficLog {
         TrafficLog::default()
+    }
+
+    /// Zero every counter in place (per-frame reuse in the pooled
+    /// `FrameCtx`; the log holds no heap storage, so this is allocation-free
+    /// by construction).
+    pub fn clear(&mut self) {
+        *self = TrafficLog::default();
     }
 
     /// Total DRAM bytes across stages.
@@ -90,6 +97,16 @@ mod tests {
         a.add(&b);
         assert_eq!(a.gaussians_fetched, 15);
         assert_eq!(a.blend_sram.lookups, 7);
+    }
+
+    #[test]
+    fn clear_zeroes_everything() {
+        let mut t = TrafficLog::new();
+        t.gaussians_fetched = 9;
+        t.preprocess_dram.bytes = 512;
+        t.blend_sram.lookups = 3;
+        t.clear();
+        assert_eq!(t, TrafficLog::default());
     }
 
     #[test]

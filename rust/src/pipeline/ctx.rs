@@ -1,0 +1,174 @@
+//! The stage-graph frame context: everything the pipeline stages
+//! communicate through.
+//!
+//! [`FrameCtx`] owns two kinds of state:
+//!
+//! * **per-frame outputs** (energy/latency/traffic accumulators, the DCIM
+//!   event counter, the cull result, stat scalars, the optional image) —
+//!   zeroed by [`FrameCtx::begin_frame`] at the top of every frame;
+//! * **pooled scratch buffers** (projected splats, per-tile bins, block
+//!   working sets, sorted bins, visit order, the connection graph, depth
+//!   boundaries) — `clear()`ed, never dropped, so their capacities survive
+//!   across frames and **steady-state frames allocate no scratch vectors**
+//!   (asserted by the capacity-reuse test via
+//!   [`FrameCtx::scratch_capacities`]).
+//!
+//! [`FrameBind`] is the borrowed, immutable per-frame view of the shared
+//! scene preparation (scene, grid partition, DRAM layout, quantized copy,
+//! configuration, tile grid) handed to every stage alongside the context —
+//! the same preparation a [`crate::coordinator::RenderServer`] shares across
+//! N concurrent viewer sessions.
+
+use crate::culling::{CullOutput, GridPartition};
+use crate::dcim::{DcimConfig, DcimMacro};
+use crate::energy::{FrameEnergy, StageLatency};
+use crate::memory::TrafficLog;
+use crate::pipeline::PipelineConfig;
+use crate::render::Image;
+use crate::scene::{DramLayout, Gaussian4D, Scene};
+use crate::sorting::{SortItem, SortStats};
+use crate::tiles::connection::ConnectionGraph;
+use crate::tiles::intersect::{Splat2D, TileGrid};
+
+/// Borrowed immutable frame inputs: the scene and its offline preparation.
+/// Cheap to construct per frame (all references); shared unchanged between
+/// every stage and, through `Arc`s in the pipeline, between viewers.
+pub struct FrameBind<'s> {
+    pub scene: &'s Scene,
+    pub grid: &'s GridPartition,
+    pub layout: &'s DramLayout,
+    /// FP16-quantized copy of the scene (what the datapath reads from DRAM).
+    pub quantized: &'s [Gaussian4D],
+    pub config: &'s PipelineConfig,
+    pub tile_grid: &'s TileGrid,
+}
+
+/// Shared mutable frame state: stage outputs + pooled scratch.
+#[derive(Debug)]
+pub struct FrameCtx {
+    // ---- per-frame outputs (reset by `begin_frame`) ---------------------
+    pub energy: FrameEnergy,
+    pub traffic: TrafficLog,
+    pub latency: StageLatency,
+    pub sort: SortStats,
+    /// Per-frame DCIM event counter (preprocess MACs charged by the project
+    /// stage, blend ops by the blend stage). Stats reset per frame; the
+    /// configuration is fixed at pipeline build.
+    pub dcim: DcimMacro,
+    /// Culling result of the current frame (the cull models build their
+    /// output vectors themselves; modest size next to the pooled scratch).
+    pub cull: CullOutput,
+    pub atg_ops: u64,
+    pub atg_flags: u64,
+    pub intersections: u64,
+    pub blend_pairs: u64,
+    pub image: Option<Image>,
+
+    // ---- pooled scratch (cleared, never dropped) ------------------------
+    /// Projected visible splats.
+    pub splats: Vec<Splat2D>,
+    /// Per-tile splat index lists (intersection binning).
+    pub bins: Vec<Vec<u32>>,
+    /// Tiles belonging to each tile block.
+    pub block_tiles: Vec<Vec<usize>>,
+    /// Per-block unique (depth, splat) working sets — the sort inputs.
+    pub block_items: Vec<Vec<SortItem>>,
+    /// Per-tile depth-ordered splat lists extracted from the block sorts.
+    pub sorted_bins: Vec<Vec<u32>>,
+    /// Splat membership flags (working-set dedup).
+    pub member: Vec<bool>,
+    /// Splat-in-tile flags (per-tile extraction filter).
+    pub in_tile: Vec<bool>,
+    /// Tile visit order (ATG groups or raster).
+    pub tile_order: Vec<usize>,
+    /// Per-group block sort scratch for the ATG tile order.
+    pub block_scratch: Vec<u32>,
+    /// Depth sample scratch for the §3.3-III boundary calibration.
+    pub depth_scratch: Vec<f32>,
+    /// Balanced depth-segment boundaries (§3.3-III).
+    pub depth_boundaries: Vec<f32>,
+    /// Tile-block connection-strength graph, rebuilt (cleared) per frame —
+    /// hoisted out of the old per-frame `ConnectionGraph::new` allocation.
+    pub conn: ConnectionGraph,
+}
+
+impl FrameCtx {
+    /// Build the context for a pipeline with the given connection-graph
+    /// geometry and DCIM configuration. `n_blocks`/`n_tiles` size the
+    /// block- and tile-indexed pools once, up front.
+    pub fn new(
+        conn: ConnectionGraph,
+        dcim: DcimConfig,
+        n_blocks: usize,
+        n_tiles: usize,
+    ) -> FrameCtx {
+        FrameCtx {
+            energy: FrameEnergy::default(),
+            traffic: TrafficLog::new(),
+            latency: StageLatency::default(),
+            sort: SortStats::default(),
+            dcim: DcimMacro::new(dcim),
+            cull: CullOutput::default(),
+            atg_ops: 0,
+            atg_flags: 0,
+            intersections: 0,
+            blend_pairs: 0,
+            image: None,
+            splats: Vec::new(),
+            bins: vec![Vec::new(); n_tiles],
+            block_tiles: vec![Vec::new(); n_blocks],
+            block_items: vec![Vec::new(); n_blocks],
+            sorted_bins: vec![Vec::new(); n_tiles],
+            member: Vec::new(),
+            in_tile: Vec::new(),
+            tile_order: Vec::new(),
+            block_scratch: Vec::new(),
+            depth_scratch: Vec::new(),
+            depth_boundaries: Vec::new(),
+            conn,
+        }
+    }
+
+    /// Zero the per-frame outputs. Pooled scratch is *not* touched here —
+    /// each stage clears exactly the buffers it refills, so capacities are
+    /// preserved end to end.
+    pub fn begin_frame(&mut self) {
+        self.energy = FrameEnergy::default();
+        self.traffic.clear();
+        self.latency = StageLatency::default();
+        self.sort = SortStats::default();
+        self.dcim.reset();
+        self.atg_ops = 0;
+        self.atg_flags = 0;
+        self.intersections = 0;
+        self.blend_pairs = 0;
+        self.image = None;
+    }
+
+    /// Capacities of every pooled scratch buffer (outer capacity plus the
+    /// sum of inner capacities for nested pools). Steady-state frames must
+    /// leave this signature unchanged — the zero-allocation assertion used
+    /// by the determinism tests.
+    pub fn scratch_capacities(&self) -> Vec<usize> {
+        fn nested<T>(v: &[Vec<T>]) -> usize {
+            v.iter().map(Vec::capacity).sum()
+        }
+        vec![
+            self.splats.capacity(),
+            self.bins.capacity(),
+            nested(&self.bins),
+            self.block_tiles.capacity(),
+            nested(&self.block_tiles),
+            self.block_items.capacity(),
+            nested(&self.block_items),
+            self.sorted_bins.capacity(),
+            nested(&self.sorted_bins),
+            self.member.capacity(),
+            self.in_tile.capacity(),
+            self.tile_order.capacity(),
+            self.block_scratch.capacity(),
+            self.depth_scratch.capacity(),
+            self.depth_boundaries.capacity(),
+        ]
+    }
+}

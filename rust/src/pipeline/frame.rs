@@ -1,26 +1,31 @@
-//! Frame pipeline: orchestrates culling, projection, intersection testing,
-//! ATG, AII-Sort, and DCIM blending for one frame, producing both pixels
-//! (optional) and hardware statistics.
+//! Frame pipeline: the stage-graph engine orchestrating culling,
+//! projection, intersection testing, ATG, AII-Sort, and DCIM blending for
+//! one frame, producing both pixels (optional) and hardware statistics.
+//!
+//! [`FramePipeline::render_frame`] is a linear composition of the six stage
+//! units in [`super::stages`] over a pooled [`FrameCtx`]; the offline scene
+//! preparation ([`ScenePrep`]) is held behind `Arc`s so N per-viewer
+//! pipelines can share it without copying (see
+//! [`crate::coordinator::RenderServer`]).
+
+use std::sync::Arc;
 
 use crate::camera::Camera;
-use crate::culling::conventional::ConventionalCulling;
-use crate::culling::{CullOutput, DrFc, GridConfig, GridPartition};
-use crate::dcim::mapping::BlendOpCounts;
-use crate::dcim::nmc::NmcAccumulator;
-use crate::dcim::{DcimConfig, DcimMacro};
-use crate::energy::{ops, FrameEnergy, StageLatency};
+use crate::culling::{GridConfig, GridPartition};
+use crate::dcim::DcimConfig;
+use crate::energy::{FrameEnergy, StageLatency};
 use crate::memory::dram::DramModel;
 use crate::memory::sram::{SramBuffer, SramConfig};
 use crate::memory::TrafficLog;
 use crate::render::{HwRenderer, Image};
 use crate::scene::{DramLayout, Gaussian4D, Scene};
-use crate::sorting::{
-    conventional_bucket_bitonic, AiiSort, SortHwConfig, SortStats,
-};
+use crate::sorting::{SortEngine, SortHwConfig, SortStats};
 use crate::tiles::atg::{Atg, AtgConfig};
 use crate::tiles::connection::ConnectionGraph;
-use crate::tiles::intersect::{bin_splats, Splat2D, TileGrid};
-use crate::tiles::raster::raster_order;
+use crate::tiles::intersect::TileGrid;
+
+use super::ctx::{FrameBind, FrameCtx};
+use super::stages::{BlendStage, CullStage, GroupStage, IntersectStage, ProjectStage, SortStage};
 
 /// Per-Gaussian preprocessing MACs on the DCIM tier: temporal slice (eq. 5:
 /// 6), covariance transform J·W·Σ·Wᵀ·Jᵀ (2 × 3×3×3 matmuls ≈ 54), conic
@@ -117,41 +122,72 @@ pub struct FrameResult {
     pub intersections: u64,
 }
 
-/// The frame pipeline engine. Owns all hardware models and the posteriori
-/// state (ATG groups, AII boundaries) carried between frames.
-pub struct FramePipeline<'a> {
-    pub config: PipelineConfig,
-    pub scene: &'a Scene,
-    pub grid: GridPartition,
-    pub layout: DramLayout,
-    pub tile_grid: TileGrid,
-    dram: DramModel,
-    sram: SramBuffer,
-    atg: Atg,
-    aii: AiiSort,
-    renderer: HwRenderer,
-    frame_idx: usize,
-    /// Live early-termination factor (calibrated by rendered frames).
-    et_factor: f64,
-    /// Per-frame balanced depth-segment boundaries (§3.3-III).
-    depth_boundaries: Vec<f32>,
-    /// FP16-quantized copy of the scene (what the datapath reads from
-    /// DRAM) — computed once at build instead of per frame (§Perf).
-    quantized: Vec<Gaussian4D>,
+/// The offline, immutable scene preparation: grid partition, DRAM layout,
+/// and the FP16-quantized parameter copy. Built once per scene and shared
+/// (`Arc`) by every pipeline rendering it — one viewer or many.
+#[derive(Debug, Clone)]
+pub struct ScenePrep {
+    pub grid: Arc<GridPartition>,
+    pub layout: Arc<DramLayout>,
+    pub quantized: Arc<Vec<Gaussian4D>>,
 }
 
-impl<'a> FramePipeline<'a> {
-    /// Build (includes the offline grid partition + DRAM layout).
-    pub fn new(scene: &'a Scene, config: PipelineConfig) -> FramePipeline<'a> {
+impl ScenePrep {
+    /// Build the preparation (grid partition + DRAM layout + quantized copy).
+    pub fn build(scene: &Scene, config: &PipelineConfig) -> ScenePrep {
         let grid_cfg = if scene.dynamic {
             GridConfig::new(config.grid_n)
         } else {
             GridConfig::static_scene(config.grid_n)
         };
-        let grid = GridPartition::build(scene, grid_cfg);
-        let layout = DramLayout::build(scene, &grid);
+        let grid = Arc::new(GridPartition::build(scene, grid_cfg));
+        let layout = Arc::new(DramLayout::build(scene, &grid));
+        let quantized: Arc<Vec<Gaussian4D>> =
+            Arc::new(scene.gaussians.iter().map(|g| g.quantized_fp16()).collect());
+        ScenePrep { grid, layout, quantized }
+    }
+}
+
+/// The frame pipeline engine: the stage graph plus its pooled context.
+/// Stages own all hardware models and the posteriori state (ATG groups,
+/// AII boundaries, early-termination calibration) carried between frames.
+pub struct FramePipeline<'a> {
+    pub config: PipelineConfig,
+    pub scene: &'a Scene,
+    pub grid: Arc<GridPartition>,
+    pub layout: Arc<DramLayout>,
+    pub tile_grid: TileGrid,
+    /// FP16-quantized copy of the scene (what the datapath reads from
+    /// DRAM) — computed once at build instead of per frame (§Perf).
+    quantized: Arc<Vec<Gaussian4D>>,
+    cull_stage: CullStage,
+    project_stage: ProjectStage,
+    intersect_stage: IntersectStage,
+    group_stage: GroupStage,
+    sort_stage: SortStage,
+    blend_stage: BlendStage,
+    ctx: FrameCtx,
+    frame_idx: usize,
+}
+
+impl<'a> FramePipeline<'a> {
+    /// Build, including the offline grid partition + DRAM layout (use
+    /// [`FramePipeline::with_prep`] to share an existing preparation).
+    pub fn new(scene: &'a Scene, config: PipelineConfig) -> FramePipeline<'a> {
+        let prep = ScenePrep::build(scene, &config);
+        FramePipeline::with_prep(scene, prep, config)
+    }
+
+    /// Build on a shared scene preparation (multi-viewer serving: N
+    /// pipelines, one grid/layout/quantized copy).
+    pub fn with_prep(
+        scene: &'a Scene,
+        prep: ScenePrep,
+        config: PipelineConfig,
+    ) -> FramePipeline<'a> {
         let tile_grid = TileGrid::new(config.width, config.height);
-        let conn = ConnectionGraph::new(tile_grid.tiles_x, tile_grid.tiles_y, config.atg.tile_block);
+        let conn =
+            ConnectionGraph::new(tile_grid.tiles_x, tile_grid.tiles_y, config.atg.tile_block);
         let n_blocks = conn.n_blocks();
         let sram = SramBuffer::new(SramConfig {
             capacity_bytes: config.sram_bytes,
@@ -160,314 +196,92 @@ impl<'a> FramePipeline<'a> {
                 config.n_buckets,
             )
         });
-        let quantized: Vec<Gaussian4D> =
-            scene.gaussians.iter().map(|g| g.quantized_fp16()).collect();
+        let buffer_lines = sram.capacity_lines();
+        let ctx = FrameCtx::new(conn, config.dcim, n_blocks, tile_grid.n_tiles());
         FramePipeline {
-            atg: Atg::new(config.atg),
-            aii: AiiSort::new(config.n_buckets, n_blocks, config.sort_hw),
-            renderer: HwRenderer::new(config.width, config.height),
-            dram: DramModel::default_lpddr5(),
-            sram,
-            grid,
-            layout,
+            cull_stage: CullStage { dram: DramModel::default_lpddr5() },
+            project_stage: ProjectStage,
+            intersect_stage: IntersectStage,
+            group_stage: GroupStage { atg: Atg::new(config.atg), buffer_lines },
+            sort_stage: SortStage {
+                engine: SortEngine::new(
+                    config.use_aii,
+                    config.n_buckets,
+                    n_blocks,
+                    config.sort_hw,
+                ),
+            },
+            blend_stage: BlendStage::new(
+                DramModel::default_lpddr5(),
+                sram,
+                HwRenderer::new(config.width, config.height),
+            ),
+            ctx,
             tile_grid,
+            grid: prep.grid,
+            layout: prep.layout,
+            quantized: prep.quantized,
             config,
             scene,
             frame_idx: 0,
-            et_factor: EARLY_TERMINATION_FACTOR,
-            depth_boundaries: Vec::new(),
-            quantized,
         }
     }
 
     /// Reset posteriori state and frame counter (scene cut).
     pub fn reset(&mut self) {
-        self.atg.reset();
-        self.aii.reset();
+        self.group_stage.atg.reset();
+        self.sort_stage.engine.reset();
         self.frame_idx = 0;
     }
 
     /// Process one frame. `render_image = false` runs only the performance
     /// path (events + models), which is what the parameter-sweep benches use.
+    ///
+    /// The body is the stage graph: every stage reads/writes the pooled
+    /// [`FrameCtx`] through the shared [`FrameBind`] view.
     pub fn render_frame(&mut self, cam: &Camera, t: f32, render_image: bool) -> FrameResult {
-        let mut energy = FrameEnergy::default();
-        let mut traffic = TrafficLog::new();
-        let mut latency = StageLatency::default();
-
-        // ------------------------------------------------- preprocess ----
-        self.dram.reset();
-        let cull = self.cull(cam, t, &mut energy);
-        traffic.preprocess_dram = self.dram.stats();
-        energy.dram_pj += traffic.preprocess_dram.energy_pj;
-        traffic.gaussians_fetched = cull.fetched;
-        traffic.gaussians_visible = cull.visible.len() as u64;
-
-        // Projection of visible Gaussians (DCIM work).
-        let mut dcim = DcimMacro::new(self.config.dcim);
-        dcim.macs(cull.visible.len() as u64 * PREPROCESS_MACS_PER_GAUSSIAN);
-        let splats: Vec<Splat2D> = cull
-            .visible
-            .iter()
-            .filter_map(|&gi| {
-                crate::tiles::intersect::project_gaussian(
-                    &self.quantized[gi as usize],
-                    gi,
-                    cam,
-                    t,
-                )
-            })
-            .collect();
-
-        // Intersection testing + connection tracking.
-        let mut conn = ConnectionGraph::new(
-            self.tile_grid.tiles_x,
-            self.tile_grid.tiles_y,
-            self.config.atg.tile_block,
-        );
-        let bins = bin_splats(&self.tile_grid, &splats);
-        let mut intersections = 0u64;
-        for s in &splats {
-            if let Some((tx0, ty0, tx1, ty1)) = self.tile_grid.tile_range(s) {
-                intersections += ((tx1 - tx0 + 1) * (ty1 - ty0 + 1)) as u64;
-                conn.record_footprint(tx0, ty0, tx1, ty1);
-            }
-        }
-        energy.intersect_pj += intersections as f64 * ops::E_INTERSECT_PJ;
-
-        // Block-level unique-splat working sets (needed by the sort stage
-        // and by ATG's buffer-capacity calibration below).
-        let mut block_tiles: Vec<Vec<usize>> = vec![Vec::new(); conn.n_blocks()];
-        for tile in 0..bins.len() {
-            let (tx, ty) = self.tile_grid.tile_xy(tile);
-            block_tiles[conn.block_of_tile(tx, ty)].push(tile);
-        }
-        let mut member = vec![false; splats.len()];
-        let mut block_items: Vec<Vec<(f32, u32)>> = Vec::with_capacity(conn.n_blocks());
-        for tiles in &block_tiles {
-            let mut items: Vec<(f32, u32)> = Vec::new();
-            for &tile in tiles {
-                for &si in &bins[tile] {
-                    if !member[si as usize] {
-                        member[si as usize] = true;
-                        items.push((splats[si as usize].depth, si));
-                    }
-                }
-            }
-            for &(_, si) in &items {
-                member[si as usize] = false;
-            }
-            block_items.push(items);
-        }
-
-        // Calibrate ATG's group-size cap to the buffer: a group's combined
-        // working set should fit ~70% of the buffer lines (§3.3: grouping
-        // "optimizes on-chip buffer data reuse" — oversized groups thrash).
-        if self.config.use_atg {
-            let occupied: Vec<usize> = block_items
-                .iter()
-                .map(|b| b.len())
-                .filter(|&l| l > 0)
-                .collect();
-            if !occupied.is_empty() {
-                let avg_unique = occupied.iter().sum::<usize>() as f64 / occupied.len() as f64;
-                // Grouped blocks are grouped *because* they share splats;
-                // the marginal working set per extra block is roughly half
-                // its standalone unique count.
-                let budget = self.sram.capacity_lines() as f64;
-                self.atg.config.max_group_blocks =
-                    ((budget / (0.5 * avg_unique).max(1.0)) as usize).clamp(4, 256);
-            }
-        }
-
-        // Balanced depth-segment boundaries (§3.3-III: the buffer's N depth
-        // segments are co-designed with AII-Sort's buckets — equal-count
-        // intervals over this frame's visible depths).
-        self.calibrate_depth_segments(&splats);
-
-        // ATG (grouping decision feeds the blend tile order).
-        let (tile_order, atg_ops, atg_flags) = if self.config.use_atg {
-            let out = self.atg.update(&conn);
-            energy.atg_pj += out.scan_ops as f64 * ops::E_CMP_FP16_PJ
-                + out.uf_ops as f64 * ops::E_UNIONFIND_PJ;
-            (
-                out.groups.tile_order(
-                    self.tile_grid.tiles_x,
-                    self.tile_grid.tiles_y,
-                    self.config.atg.tile_block,
-                ),
-                out.regroup_ops(),
-                out.flags,
-            )
-        } else {
-            (raster_order(self.tile_grid.tiles_x, self.tile_grid.tiles_y), 0, 0)
+        let bind = FrameBind {
+            scene: self.scene,
+            grid: &self.grid,
+            layout: &self.layout,
+            quantized: self.quantized.as_slice(),
+            config: &self.config,
+            tile_grid: &self.tile_grid,
         };
-
-        // Preprocess latency: DRAM fetch ∥ grid tests + projection + binning.
-        let proj_ns = dcim.busy_ns();
-        let test_ns = (cull.fetched as f64 + self.grid.n_cells() as f64
-            + intersections as f64 / 4.0)
-            / DIGITAL_FREQ_GHZ;
-        latency.preprocess_ns =
-            traffic.preprocess_dram.busy_ns.max(proj_ns + test_ns);
-
-        // ------------------------------------------------------- sort ----
-        // Sorting runs at Tile Block granularity (paper §3.2/§3.3-I: the
-        // bucket intervals are tracked per block): each block sorts the
-        // *union* of its tiles' splats once — shared splats are sorted a
-        // single time — and every tile extracts its own ordered list from
-        // the block's result (a stable, order-preserving filter).
-        let mut sort = SortStats::default();
-        let mut sorted_bins: Vec<Vec<u32>> = vec![Vec::new(); bins.len()];
-        let mut in_tile = vec![false; splats.len()];
-        for (block, tiles) in block_tiles.iter().enumerate() {
-            let items = &mut block_items[block];
-            if items.is_empty() {
-                continue;
-            }
-            let items: &mut Vec<(f32, u32)> = items;
-            let stats = if self.config.use_aii {
-                self.aii.sort_tile(block, items)
-            } else {
-                conventional_bucket_bitonic(items, self.config.n_buckets, &self.config.sort_hw)
-            };
-            sort.add(&stats);
-            // Per-tile extraction (stable, order-preserving).
-            for &tile in tiles {
-                for &si in &bins[tile] {
-                    in_tile[si as usize] = true;
-                }
-                for &(_, si) in items.iter() {
-                    if in_tile[si as usize] {
-                        sorted_bins[tile].push(si);
-                    }
-                }
-                for &si in &bins[tile] {
-                    in_tile[si as usize] = false;
-                }
-            }
-        }
-        energy.sort_pj += sort.comparisons as f64 * ops::E_CMP_FP16_PJ
-            + sort.bucketed as f64 * ops::E_ROUTE_PJ;
-        latency.sort_ns = sort.cycles as f64 / DIGITAL_FREQ_GHZ;
-
-        // ------------------------------------------------------ blend ----
-        // SRAM/DRAM reuse simulation over the chosen tile order.
-        self.dram.reset();
-        self.sram.reset();
-        let mut blend_pairs_upper = 0u64;
-        for &tile in &tile_order {
-            let (x0, y0, x1, y1) = self.tile_grid.tile_pixels(tile);
-            let pixels = ((x1 - x0) * (y1 - y0)) as u64;
-            blend_pairs_upper += pixels * sorted_bins[tile].len() as u64;
-            for &si in &sorted_bins[tile] {
-                let s = &splats[si as usize];
-                let segment = self.depth_segment(s.depth);
-                if !self.sram.lookup(segment, s.id as u64) {
-                    self.dram.read(
-                        self.layout.addr[s.id as usize],
-                        self.layout.bytes_per_gaussian,
-                    );
-                    self.sram.insert(segment, s.id as u64);
-                }
-            }
-        }
-        traffic.blend_dram = self.dram.stats();
-        traffic.blend_sram = self.sram.stats();
-        energy.dram_pj += traffic.blend_dram.energy_pj;
-        energy.sram_pj += traffic.blend_sram.energy_pj;
-
-        // Numeric render (optional) gives the exact blended-pair count.
-        let mut nmc = NmcAccumulator::new();
-        let (image, blend_pairs) = if render_image {
-            let img = self
-                .renderer
-                .render_splats_ordered(&splats, &tile_order, &mut nmc);
-            let exact = nmc.stats().blend_ops;
-            if blend_pairs_upper > 0 {
-                // Calibrate the live factor for subsequent perf-only frames.
-                self.et_factor = exact as f64 / blend_pairs_upper as f64;
-            }
-            (Some(img), exact)
-        } else {
-            (None, (blend_pairs_upper as f64 * self.et_factor) as u64)
-        };
-        let counts = BlendOpCounts::from_pairs(blend_pairs, splats.len() as u64);
-        counts.charge(&mut dcim);
-        energy.dcim_pj = dcim.stats().energy_pj;
-        energy.nmc_pj = if render_image {
-            nmc.stats().energy_pj
-        } else {
-            blend_pairs as f64 * nmc.e_blend_pj
-        };
-
-        // Blend latency: DCIM compute vs DRAM miss-fill, overlapped.
-        let blend_dcim_ns = {
-            // Only the blend share of DCIM work (subtract preprocess).
-            let blend_ops = counts.macs + counts.lut_lookups;
-            blend_ops as f64 / self.config.dcim.macs_per_cycle() / self.config.dcim.freq_ghz
-        };
-        latency.blend_ns = blend_dcim_ns.max(traffic.blend_dram.busy_ns);
-
+        self.ctx.begin_frame();
+        self.cull_stage.run(&bind, cam, t, &mut self.ctx);
+        self.project_stage.run(&bind, cam, t, &mut self.ctx);
+        self.intersect_stage.run(&bind, &mut self.ctx);
+        self.group_stage.run(&bind, &mut self.ctx);
+        self.sort_stage.run(&bind, &mut self.ctx);
+        self.blend_stage.run(&bind, render_image, &mut self.ctx);
         self.frame_idx += 1;
-        FrameResult {
-            image,
-            traffic,
-            energy,
-            latency,
-            sort,
-            atg_ops,
-            atg_flags,
-            n_visible: splats.len(),
-            blend_pairs,
-            intersections,
-        }
-    }
 
-    fn cull(&mut self, cam: &Camera, t: f32, energy: &mut FrameEnergy) -> CullOutput {
-        if self.config.use_drfc {
-            let drfc = DrFc::new(self.scene, &self.grid, &self.layout);
-            let out = drfc.cull(cam, t, &mut self.dram);
-            energy.cull_pj += self.grid.n_cells() as f64 * ops::E_GRID_TEST_PJ
-                + out.fetched as f64 * ops::E_FRUSTUM_PJ;
-            out
-        } else {
-            let conv = ConventionalCulling::new(self.scene, &self.layout);
-            let out = conv.cull(cam, t, &mut self.dram);
-            energy.cull_pj += out.fetched as f64 * ops::E_FRUSTUM_PJ;
-            out
+        FrameResult {
+            image: self.ctx.image.take(),
+            traffic: self.ctx.traffic.clone(),
+            energy: self.ctx.energy,
+            latency: self.ctx.latency,
+            sort: self.ctx.sort,
+            atg_ops: self.ctx.atg_ops,
+            atg_flags: self.ctx.atg_flags,
+            n_visible: self.ctx.splats.len(),
+            blend_pairs: self.ctx.blend_pairs,
+            intersections: self.ctx.intersections,
         }
     }
 
     /// The live early-termination factor (initially
     /// [`EARLY_TERMINATION_FACTOR`], re-calibrated by rendered frames).
     pub fn et_factor(&self) -> f64 {
-        self.et_factor
+        self.blend_stage.et_factor
     }
 
-    /// Recompute the buffer's depth-segment boundaries as equal-count
-    /// quantiles of this frame's visible depths (§3.3-III co-design with
-    /// AII-Sort: balanced intervals ⇒ balanced segment occupancy).
-    fn calibrate_depth_segments(&mut self, splats: &[Splat2D]) {
-        let n = self.config.n_buckets;
-        if n <= 1 || splats.is_empty() {
-            self.depth_boundaries.clear();
-            return;
-        }
-        let mut depths: Vec<f32> = splats.iter().map(|s| s.depth).collect();
-        depths.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-        self.depth_boundaries = (1..n)
-            .map(|i| depths[(i * depths.len() / n).min(depths.len() - 1)])
-            .collect();
-    }
-
-    /// Which depth segment of the SRAM buffer a splat belongs to
-    /// (§3.3-III: buffer partitioned into N segments by depth).
-    fn depth_segment(&self, depth: f32) -> usize {
-        let mut seg = 0;
-        while seg < self.depth_boundaries.len() && depth >= self.depth_boundaries[seg] {
-            seg += 1;
-        }
-        seg
+    /// Capacities of the pooled scratch buffers (see
+    /// [`FrameCtx::scratch_capacities`]) — steady-state frames must leave
+    /// this unchanged (the zero-allocation contract).
+    pub fn scratch_capacities(&self) -> Vec<usize> {
+        self.ctx.scratch_capacities()
     }
 }
 
@@ -613,5 +427,23 @@ mod tests {
         assert!(r.n_visible > 0);
         let img = r.image.unwrap();
         assert!(img.mean_luma() > 0.01, "rendered something: {}", img.mean_luma());
+    }
+
+    #[test]
+    fn shared_prep_matches_private_build() {
+        let scene = small_scene();
+        let cfg = PipelineConfig::paper(true).with_resolution(192, 108);
+        let cam = template(192, 108);
+        let prep = ScenePrep::build(&scene, &cfg);
+        let mut shared_a = FramePipeline::with_prep(&scene, prep.clone(), cfg.clone());
+        let mut shared_b = FramePipeline::with_prep(&scene, prep, cfg.clone());
+        let mut private = FramePipeline::new(&scene, cfg);
+        let ra = shared_a.render_frame(&cam, 0.4, false);
+        let rb = shared_b.render_frame(&cam, 0.4, false);
+        let rp = private.render_frame(&cam, 0.4, false);
+        assert_eq!(ra.traffic, rb.traffic);
+        assert_eq!(ra.traffic, rp.traffic);
+        assert_eq!(ra.sort, rp.sort);
+        assert_eq!(ra.n_visible, rp.n_visible);
     }
 }

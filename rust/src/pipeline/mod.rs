@@ -1,10 +1,48 @@
-//! The per-frame rendering engine: preprocess → sort → blend, with the
-//! paper's four techniques as switchable features, dual-tracked as a
-//! numeric path (real pixels) and a performance path (hardware events →
-//! cycles/energy). See DESIGN.md §3.
+//! The per-frame rendering engine, structured as an explicit **stage
+//! graph** (mirroring how streaming 3DGS accelerators organize their
+//! datapath into stages with reusable on-chip state):
+//!
+//! ```text
+//!            ┌──────────── FrameBind (shared, immutable) ────────────┐
+//!            │ scene · grid partition · DRAM layout · FP16 copy ·    │
+//!            │ pipeline config · tile grid                           │
+//!            └───────────────────────────────────────────────────────┘
+//!   CullStage → ProjectStage → IntersectStage → GroupStage → SortStage → BlendStage
+//!     DR-FC      eq. 7–8 +       tile binning +    ATG +      AII-Sort    SRAM/DRAM
+//!     §3.1       DCIM MACs       connection graph  posteriori  §3.2       reuse + NMC
+//!            ┌───────────────────────────────────────────────────────┐
+//!            │ FrameCtx (shared, mutable): energy/latency/traffic    │
+//!            │ accumulators + pooled scratch (splats, bins, block    │
+//!            │ working sets, sorted bins, tile order, conn graph)    │
+//!            └───────────────────────────────────────────────────────┘
+//! ```
+//!
+//! * [`FramePipeline::render_frame`] is a linear composition of the six
+//!   stage calls over the pooled [`FrameCtx`]; **steady-state frames
+//!   allocate no scratch vectors** (buffers are `clear()`ed, never dropped
+//!   — asserted by the capacity-reuse test via
+//!   [`FramePipeline::scratch_capacities`]).
+//! * Stages own the persistent hardware models and posteriori state they
+//!   simulate (DRAM channels, the SRAM buffer, ATG groups, AII boundaries,
+//!   early-termination calibration), so ablations swap stage internals —
+//!   never the graph.
+//! * The offline scene preparation ([`ScenePrep`]) sits behind `Arc`s:
+//!   [`crate::coordinator::RenderServer`] builds it once and shares it
+//!   across N concurrent per-viewer pipelines.
+//! * [`oracle::MonolithPipeline`] is the frozen pre-refactor single-call
+//!   engine; the `stage_graph_determinism` test asserts the stage graph's
+//!   per-frame stat outputs stay **bit-identical** to it.
+//!
+//! Every frame is dual-tracked as a numeric path (real pixels) and a
+//! performance path (hardware events → cycles/energy). See DESIGN.md §3.
 
+pub mod ctx;
 pub mod frame;
+pub mod oracle;
 pub mod profile;
+pub mod stages;
 
-pub use frame::{FramePipeline, FrameResult, PipelineConfig};
+pub use ctx::{FrameBind, FrameCtx};
+pub use frame::{FramePipeline, FrameResult, PipelineConfig, ScenePrep};
 pub use profile::{profile_breakdown, PhaseShare};
+pub use stages::{BlendStage, CullStage, GroupStage, IntersectStage, ProjectStage, SortStage};

@@ -1,0 +1,462 @@
+//! The six stage units of the frame graph (paper pipeline order):
+//!
+//! ```text
+//! CullStage → ProjectStage → IntersectStage → GroupStage → SortStage → BlendStage
+//!   DR-FC       eq. 7–8        tile binning      ATG        AII-Sort    DCIM+NMC
+//! ```
+//!
+//! Stages communicate exclusively through the pooled
+//! [`FrameCtx`](super::FrameCtx) and the borrowed
+//! [`FrameBind`](super::FrameBind); each stage owns the *persistent*
+//! hardware state it models (DRAM channel, SRAM buffer, ATG/AII posteriori
+//! state, renderer, early-termination calibration), so a
+//! [`FramePipeline`](super::FramePipeline) is just the linear composition of
+//! the six `run` calls. Per-frame stat outputs are bit-identical to the
+//! pre-refactor monolithic `render_frame` (enforced against
+//! [`super::oracle::MonolithPipeline`] by the determinism suite).
+
+use super::ctx::{FrameBind, FrameCtx};
+use super::frame::{DIGITAL_FREQ_GHZ, EARLY_TERMINATION_FACTOR, PREPROCESS_MACS_PER_GAUSSIAN};
+use crate::camera::Camera;
+use crate::culling::conventional::ConventionalCulling;
+use crate::culling::DrFc;
+use crate::dcim::mapping::BlendOpCounts;
+use crate::dcim::nmc::NmcAccumulator;
+use crate::energy::ops;
+use crate::memory::dram::DramModel;
+use crate::memory::sram::SramBuffer;
+use crate::render::HwRenderer;
+use crate::sorting::SortEngine;
+use crate::tiles::atg::Atg;
+use crate::tiles::intersect::{bin_splats_into, project_gaussian, Splat2D};
+use crate::tiles::raster::raster_order_into;
+
+/// Stage 1 — frustum culling (DR-FC or the conventional full fetch) and its
+/// DRAM traffic. Owns the preprocess DRAM channel model.
+#[derive(Debug)]
+pub struct CullStage {
+    pub dram: DramModel,
+}
+
+impl CullStage {
+    pub fn run(&mut self, bind: &FrameBind, cam: &Camera, t: f32, ctx: &mut FrameCtx) {
+        self.dram.reset();
+        let out = if bind.config.use_drfc {
+            let drfc = DrFc::new(bind.scene, bind.grid, bind.layout);
+            let out = drfc.cull(cam, t, &mut self.dram);
+            ctx.energy.cull_pj += bind.grid.n_cells() as f64 * ops::E_GRID_TEST_PJ
+                + out.fetched as f64 * ops::E_FRUSTUM_PJ;
+            out
+        } else {
+            let conv = ConventionalCulling::new(bind.scene, bind.layout);
+            let out = conv.cull(cam, t, &mut self.dram);
+            ctx.energy.cull_pj += out.fetched as f64 * ops::E_FRUSTUM_PJ;
+            out
+        };
+        ctx.traffic.preprocess_dram = self.dram.stats();
+        ctx.energy.dram_pj += ctx.traffic.preprocess_dram.energy_pj;
+        ctx.traffic.gaussians_fetched = out.fetched;
+        ctx.traffic.gaussians_visible = out.visible.len() as u64;
+        ctx.cull = out;
+    }
+}
+
+/// Stage 2 — projection of the visible set to screen-space splats
+/// (quantized FP16 parameters, DCIM preprocess MACs). Stateless.
+#[derive(Debug)]
+pub struct ProjectStage;
+
+impl ProjectStage {
+    pub fn run(&self, bind: &FrameBind, cam: &Camera, t: f32, ctx: &mut FrameCtx) {
+        ctx.dcim
+            .macs(ctx.cull.visible.len() as u64 * PREPROCESS_MACS_PER_GAUSSIAN);
+        let FrameCtx { splats, cull, .. } = ctx;
+        splats.clear();
+        splats.extend(
+            cull.visible
+                .iter()
+                .filter_map(|&gi| project_gaussian(&bind.quantized[gi as usize], gi, cam, t)),
+        );
+    }
+}
+
+/// Stage 3 — splat–tile intersection testing: per-tile bins, the
+/// connection-strength graph, and the block-level unique-splat working sets
+/// consumed by grouping and sorting. Stateless (scratch lives in the ctx).
+#[derive(Debug)]
+pub struct IntersectStage;
+
+impl IntersectStage {
+    pub fn run(&self, bind: &FrameBind, ctx: &mut FrameCtx) {
+        // Binning + connection tracking.
+        ctx.conn.clear();
+        {
+            let FrameCtx { splats, bins, .. } = ctx;
+            bin_splats_into(bind.tile_grid, splats, bins);
+        }
+        let mut intersections = 0u64;
+        for s in &ctx.splats {
+            if let Some((tx0, ty0, tx1, ty1)) = bind.tile_grid.tile_range(s) {
+                intersections += ((tx1 - tx0 + 1) * (ty1 - ty0 + 1)) as u64;
+                ctx.conn.record_footprint(tx0, ty0, tx1, ty1);
+            }
+        }
+        ctx.intersections = intersections;
+        ctx.energy.intersect_pj += intersections as f64 * ops::E_INTERSECT_PJ;
+
+        // Block-level unique-splat working sets (needed by the sort stage
+        // and by ATG's buffer-capacity calibration).
+        let FrameCtx {
+            splats,
+            bins,
+            block_tiles,
+            block_items,
+            member,
+            conn,
+            ..
+        } = ctx;
+        for v in block_tiles.iter_mut() {
+            v.clear();
+        }
+        for tile in 0..bins.len() {
+            let (tx, ty) = bind.tile_grid.tile_xy(tile);
+            let b = conn.block_of_tile(tx, ty);
+            block_tiles[b].push(tile);
+        }
+        member.clear();
+        member.resize(splats.len(), false);
+        for (block, tiles) in block_tiles.iter().enumerate() {
+            let items = &mut block_items[block];
+            items.clear();
+            for &tile in tiles {
+                for &si in &bins[tile] {
+                    if !member[si as usize] {
+                        member[si as usize] = true;
+                        items.push((splats[si as usize].depth, si));
+                    }
+                }
+            }
+            for &(_, si) in items.iter() {
+                member[si as usize] = false;
+            }
+        }
+    }
+}
+
+/// Stage 4 — Adaptive Tile Grouping (or the raster baseline): buffer-aware
+/// group-size calibration, the grouping update with posteriori reuse, the
+/// tile visit order, and the preprocess-latency roll-up that closes the
+/// preprocess superstage. Owns the ATG posteriori state.
+#[derive(Debug)]
+pub struct GroupStage {
+    pub atg: Atg,
+    /// SRAM buffer line capacity, snapshotted at build (the buffer geometry
+    /// is fixed) for the §3.3 group-size calibration.
+    pub buffer_lines: usize,
+}
+
+impl GroupStage {
+    pub fn run(&mut self, bind: &FrameBind, ctx: &mut FrameCtx) {
+        if bind.config.use_atg {
+            // Calibrate ATG's group-size cap to the buffer: a group's
+            // combined working set should fit ~70% of the buffer lines
+            // (§3.3: grouping "optimizes on-chip buffer data reuse" —
+            // oversized groups thrash).
+            let mut occupied_sum = 0usize;
+            let mut occupied_cnt = 0usize;
+            for b in &ctx.block_items {
+                if !b.is_empty() {
+                    occupied_sum += b.len();
+                    occupied_cnt += 1;
+                }
+            }
+            if occupied_cnt > 0 {
+                let avg_unique = occupied_sum as f64 / occupied_cnt as f64;
+                // Grouped blocks are grouped *because* they share splats;
+                // the marginal working set per extra block is roughly half
+                // its standalone unique count.
+                let budget = self.buffer_lines as f64;
+                self.atg.config.max_group_blocks =
+                    ((budget / (0.5 * avg_unique).max(1.0)) as usize).clamp(4, 256);
+            }
+
+            let out = self.atg.update(&ctx.conn);
+            ctx.energy.atg_pj += out.scan_ops as f64 * ops::E_CMP_FP16_PJ
+                + out.uf_ops as f64 * ops::E_UNIONFIND_PJ;
+            out.groups.tile_order_into(
+                bind.tile_grid.tiles_x,
+                bind.tile_grid.tiles_y,
+                bind.config.atg.tile_block,
+                &mut ctx.tile_order,
+                &mut ctx.block_scratch,
+            );
+            ctx.atg_ops = out.regroup_ops();
+            ctx.atg_flags = out.flags;
+        } else {
+            raster_order_into(bind.tile_grid.tiles_x, bind.tile_grid.tiles_y, &mut ctx.tile_order);
+            ctx.atg_ops = 0;
+            ctx.atg_flags = 0;
+        }
+
+        // Preprocess latency: DRAM fetch ∥ grid tests + projection + binning.
+        let proj_ns = ctx.dcim.busy_ns();
+        let test_ns = (ctx.cull.fetched as f64
+            + bind.grid.n_cells() as f64
+            + ctx.intersections as f64 / 4.0)
+            / DIGITAL_FREQ_GHZ;
+        ctx.latency.preprocess_ns = ctx.traffic.preprocess_dram.busy_ns.max(proj_ns + test_ns);
+    }
+}
+
+/// Stage 5 — depth sorting at Tile Block granularity (paper §3.2/§3.3-I):
+/// each block sorts the *union* of its tiles' splats once — shared splats
+/// are sorted a single time — and every tile extracts its own ordered list
+/// from the block's result (a stable, order-preserving filter). Owns the
+/// sort engine (AII posteriori boundaries or the conventional baseline).
+#[derive(Debug)]
+pub struct SortStage {
+    pub engine: SortEngine,
+}
+
+impl SortStage {
+    pub fn run(&mut self, bind: &FrameBind, ctx: &mut FrameCtx) {
+        let FrameCtx {
+            splats,
+            bins,
+            block_tiles,
+            block_items,
+            sorted_bins,
+            in_tile,
+            sort,
+            energy,
+            latency,
+            ..
+        } = ctx;
+        for v in sorted_bins.iter_mut() {
+            v.clear();
+        }
+        in_tile.clear();
+        in_tile.resize(splats.len(), false);
+        for (block, tiles) in block_tiles.iter().enumerate() {
+            let items = &mut block_items[block];
+            if items.is_empty() {
+                continue;
+            }
+            let stats =
+                self.engine
+                    .sort_block(block, items, bind.config.n_buckets, &bind.config.sort_hw);
+            sort.add(&stats);
+            // Per-tile extraction (stable, order-preserving).
+            for &tile in tiles {
+                for &si in &bins[tile] {
+                    in_tile[si as usize] = true;
+                }
+                for &(_, si) in items.iter() {
+                    if in_tile[si as usize] {
+                        sorted_bins[tile].push(si);
+                    }
+                }
+                for &si in &bins[tile] {
+                    in_tile[si as usize] = false;
+                }
+            }
+        }
+        energy.sort_pj += sort.comparisons as f64 * ops::E_CMP_FP16_PJ
+            + sort.bucketed as f64 * ops::E_ROUTE_PJ;
+        latency.sort_ns = sort.cycles as f64 / DIGITAL_FREQ_GHZ;
+    }
+}
+
+/// Stage 6 — blending: §3.3-III depth-segment calibration, the SRAM/DRAM
+/// reuse simulation over the chosen tile order, the optional numeric render
+/// (NMC arithmetic), DCIM blend charging, early-termination calibration,
+/// and the blend-latency roll-up. Owns the blend DRAM channel, the SRAM
+/// buffer, the hardware renderer, and the live early-termination factor.
+#[derive(Debug)]
+pub struct BlendStage {
+    pub dram: DramModel,
+    pub sram: SramBuffer,
+    pub renderer: HwRenderer,
+    /// Live early-termination factor (calibrated by rendered frames).
+    pub et_factor: f64,
+}
+
+impl BlendStage {
+    pub fn new(dram: DramModel, sram: SramBuffer, renderer: HwRenderer) -> BlendStage {
+        BlendStage { dram, sram, renderer, et_factor: EARLY_TERMINATION_FACTOR }
+    }
+
+    pub fn run(&mut self, bind: &FrameBind, render_image: bool, ctx: &mut FrameCtx) {
+        // Balanced depth-segment boundaries (§3.3-III: the buffer's N depth
+        // segments are co-designed with AII-Sort's buckets — equal-count
+        // intervals over this frame's visible depths).
+        {
+            let FrameCtx { splats, depth_scratch, depth_boundaries, .. } = ctx;
+            calibrate_depth_segments(
+                bind.config.n_buckets,
+                splats,
+                depth_scratch,
+                depth_boundaries,
+            );
+        }
+
+        // SRAM/DRAM reuse simulation over the chosen tile order.
+        self.dram.reset();
+        self.sram.reset();
+        let mut blend_pairs_upper = 0u64;
+        for &tile in &ctx.tile_order {
+            let (x0, y0, x1, y1) = bind.tile_grid.tile_pixels(tile);
+            let pixels = ((x1 - x0) * (y1 - y0)) as u64;
+            blend_pairs_upper += pixels * ctx.sorted_bins[tile].len() as u64;
+            for &si in &ctx.sorted_bins[tile] {
+                let s = &ctx.splats[si as usize];
+                let segment = depth_segment(&ctx.depth_boundaries, s.depth);
+                if !self.sram.lookup(segment, s.id as u64) {
+                    self.dram.read(
+                        bind.layout.addr[s.id as usize],
+                        bind.layout.bytes_per_gaussian,
+                    );
+                    self.sram.insert(segment, s.id as u64);
+                }
+            }
+        }
+        ctx.traffic.blend_dram = self.dram.stats();
+        ctx.traffic.blend_sram = self.sram.stats();
+        ctx.energy.dram_pj += ctx.traffic.blend_dram.energy_pj;
+        ctx.energy.sram_pj += ctx.traffic.blend_sram.energy_pj;
+
+        // Numeric render (optional) gives the exact blended-pair count.
+        let mut nmc = NmcAccumulator::new();
+        let (image, blend_pairs) = if render_image {
+            let img = self
+                .renderer
+                .render_splats_ordered(&ctx.splats, &ctx.tile_order, &mut nmc);
+            let exact = nmc.stats().blend_ops;
+            if blend_pairs_upper > 0 {
+                // Calibrate the live factor for subsequent perf-only frames.
+                self.et_factor = exact as f64 / blend_pairs_upper as f64;
+            }
+            (Some(img), exact)
+        } else {
+            (None, (blend_pairs_upper as f64 * self.et_factor) as u64)
+        };
+        let counts = BlendOpCounts::from_pairs(blend_pairs, ctx.splats.len() as u64);
+        counts.charge(&mut ctx.dcim);
+        ctx.energy.dcim_pj = ctx.dcim.stats().energy_pj;
+        ctx.energy.nmc_pj = if render_image {
+            nmc.stats().energy_pj
+        } else {
+            blend_pairs as f64 * nmc.e_blend_pj
+        };
+
+        // Blend latency: DCIM compute vs DRAM miss-fill, overlapped.
+        let blend_dcim_ns = {
+            // Only the blend share of DCIM work (subtract preprocess).
+            let blend_ops = counts.macs + counts.lut_lookups;
+            blend_ops as f64 / bind.config.dcim.macs_per_cycle() / bind.config.dcim.freq_ghz
+        };
+        ctx.latency.blend_ns = blend_dcim_ns.max(ctx.traffic.blend_dram.busy_ns);
+        ctx.image = image;
+        ctx.blend_pairs = blend_pairs;
+    }
+}
+
+/// Recompute the buffer's depth-segment boundaries as equal-count quantiles
+/// of this frame's visible depths (§3.3-III co-design with AII-Sort:
+/// balanced intervals ⇒ balanced segment occupancy). Pooled: both vectors
+/// keep their capacity across frames.
+pub(crate) fn calibrate_depth_segments(
+    n_buckets: usize,
+    splats: &[Splat2D],
+    depths: &mut Vec<f32>,
+    boundaries: &mut Vec<f32>,
+) {
+    boundaries.clear();
+    if n_buckets <= 1 || splats.is_empty() {
+        return;
+    }
+    depths.clear();
+    depths.extend(splats.iter().map(|s| s.depth));
+    depths.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    boundaries.extend(
+        (1..n_buckets).map(|i| depths[(i * depths.len() / n_buckets).min(depths.len() - 1)]),
+    );
+}
+
+/// Which depth segment of the SRAM buffer a splat belongs to (§3.3-III:
+/// buffer partitioned into N segments by depth). Binary search over the
+/// sorted boundaries — equivalent to (and replacing) the old linear scan:
+/// both return the count of boundaries ≤ `depth`.
+#[inline]
+pub(crate) fn depth_segment(boundaries: &[f32], depth: f32) -> usize {
+    boundaries.partition_point(|&b| depth >= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The pre-refactor linear scan, kept as the oracle for the
+    /// `partition_point` replacement.
+    fn depth_segment_linear(boundaries: &[f32], depth: f32) -> usize {
+        let mut seg = 0;
+        while seg < boundaries.len() && depth >= boundaries[seg] {
+            seg += 1;
+        }
+        seg
+    }
+
+    #[test]
+    fn binary_depth_segment_matches_linear_scan() {
+        let cases: &[&[f32]] = &[
+            &[],
+            &[1.0],
+            &[1.0, 2.5, 7.0],
+            &[1.0, 1.0, 2.0, 2.0, 9.5],
+            &[0.5, 0.5, 0.5],
+        ];
+        for boundaries in cases {
+            let mut probes = vec![f32::MIN, 0.0, f32::MAX];
+            for &b in boundaries.iter() {
+                probes.extend([b - 1e-3, b, b + 1e-3]);
+            }
+            for d in probes {
+                assert_eq!(
+                    depth_segment(boundaries, d),
+                    depth_segment_linear(boundaries, d),
+                    "boundaries {boundaries:?} depth {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_produces_sorted_boundaries() {
+        use crate::math::{Vec2, Vec3};
+        let splat = |depth: f32| Splat2D {
+            id: 0,
+            mean: Vec2::new(0.0, 0.0),
+            conic: [1.0, 0.0, 1.0],
+            radius: 1.0,
+            rx: 1.0,
+            ry: 1.0,
+            depth,
+            alpha_base: 0.5,
+            color: Vec3::ONE,
+        };
+        let splats: Vec<Splat2D> = [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0, 4.0]
+            .iter()
+            .map(|&d| splat(d))
+            .collect();
+        let mut depths = Vec::new();
+        let mut boundaries = Vec::new();
+        calibrate_depth_segments(4, &splats, &mut depths, &mut boundaries);
+        assert_eq!(boundaries.len(), 3);
+        assert!(boundaries.windows(2).all(|w| w[0] <= w[1]));
+        // Empty / single-bucket cases clear the boundaries.
+        calibrate_depth_segments(1, &splats, &mut depths, &mut boundaries);
+        assert!(boundaries.is_empty());
+        calibrate_depth_segments(4, &[], &mut depths, &mut boundaries);
+        assert!(boundaries.is_empty());
+    }
+}

@@ -22,6 +22,7 @@ use crate::tiles::intersect::{bin_splats, project_gaussian, splat_exponent, Spla
 use super::reference::EXP_CUTOFF;
 
 /// The hardware-model renderer.
+#[derive(Debug)]
 pub struct HwRenderer {
     pub grid: TileGrid,
     pub exp: ExpLut,

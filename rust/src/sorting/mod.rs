@@ -85,6 +85,53 @@ impl SortHwConfig {
     }
 }
 
+/// Sorter selection for the stage-graph sort stage: the paper's AII-Sort
+/// (posteriori interval initialization, per-block state) or the
+/// conventional uniform-interval Bucket-Bitonic baseline. Owning the choice
+/// here keeps the pipeline's sort stage a single dispatch instead of an
+/// ablation `if` in the frame loop.
+#[derive(Debug)]
+pub enum SortEngine {
+    /// AII-Sort with per-tile-block posteriori boundaries.
+    Aii(AiiSort),
+    /// Conventional min/max-scan + uniform intervals every frame.
+    Conventional,
+}
+
+impl SortEngine {
+    /// Build the engine matching a pipeline configuration.
+    pub fn new(use_aii: bool, n_buckets: usize, n_blocks: usize, hw: SortHwConfig) -> SortEngine {
+        if use_aii {
+            SortEngine::Aii(AiiSort::new(n_buckets, n_blocks, hw))
+        } else {
+            SortEngine::Conventional
+        }
+    }
+
+    /// Sort one tile block's working set (ascending depth). The conventional
+    /// arm reads `n_buckets`/`hw` live from the caller's configuration,
+    /// matching the pre-refactor frame loop exactly.
+    pub fn sort_block(
+        &mut self,
+        block: usize,
+        items: &mut Vec<SortItem>,
+        n_buckets: usize,
+        hw: &SortHwConfig,
+    ) -> SortStats {
+        match self {
+            SortEngine::Aii(aii) => aii.sort_tile(block, items),
+            SortEngine::Conventional => conventional_bucket_bitonic(items, n_buckets, hw),
+        }
+    }
+
+    /// Drop posteriori state (scene cut); no-op for the conventional arm.
+    pub fn reset(&mut self) {
+        if let SortEngine::Aii(aii) = self {
+            aii.reset();
+        }
+    }
+}
+
 /// Conventional Bucket-Bitonic sort (the Fig. 11 baseline): every frame
 /// scans min/max depth, splits `[min, max]` into `n_buckets` **uniform**
 /// intervals, routes, and bitonic-sorts each bucket.
@@ -197,6 +244,34 @@ mod tests {
         let mut one = vec![(3.0, 0)];
         conventional_bucket_bitonic(&mut one, 8, &hw);
         assert_eq!(one, vec![(3.0, 0)]);
+    }
+
+    #[test]
+    fn sort_engine_dispatches_to_both_arms() {
+        let hw = SortHwConfig::default();
+        let items_src = random_items(3, 600, true);
+
+        let mut conv_engine = SortEngine::new(false, 8, 4, hw);
+        let mut a = items_src.clone();
+        let sa = conv_engine.sort_block(0, &mut a, 8, &hw);
+        let mut b = items_src.clone();
+        let sb = conventional_bucket_bitonic(&mut b, 8, &hw);
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        conv_engine.reset(); // no-op, must not panic
+
+        let mut aii_engine = SortEngine::new(true, 8, 4, hw);
+        let mut c = items_src.clone();
+        let sc = aii_engine.sort_block(0, &mut c, 8, &hw);
+        assert!(is_sorted(&c));
+        assert_eq!(sc.minmax_scanned, 600, "phase 1 pays the scan");
+        let mut d = items_src.clone();
+        let sd = aii_engine.sort_block(0, &mut d, 8, &hw);
+        assert_eq!(sd.minmax_scanned, 0, "posteriori boundaries skip it");
+        aii_engine.reset();
+        let mut e = items_src.clone();
+        let se = aii_engine.sort_block(0, &mut e, 8, &hw);
+        assert_eq!(se.minmax_scanned, 600, "reset forgets posteriori state");
     }
 
     #[test]

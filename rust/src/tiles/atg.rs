@@ -221,22 +221,39 @@ impl TileGroups {
     /// order, each block's tiles in raster order. `tiles_x/tiles_y` describe
     /// the tile grid; `block` is the Tile Block edge.
     pub fn tile_order(&self, tiles_x: usize, tiles_y: usize, block: usize) -> Vec<usize> {
+        let mut order = Vec::with_capacity(tiles_x * tiles_y);
+        let mut scratch = Vec::new();
+        self.tile_order_into(tiles_x, tiles_y, block, &mut order, &mut scratch);
+        order
+    }
+
+    /// Pooled variant of [`TileGroups::tile_order`]: fills `out` in place and
+    /// uses `scratch` for the per-group block sort, reusing both capacities
+    /// across frames (stage-graph `FrameCtx` scratch contract).
+    pub fn tile_order_into(
+        &self,
+        tiles_x: usize,
+        tiles_y: usize,
+        block: usize,
+        out: &mut Vec<usize>,
+        scratch: &mut Vec<u32>,
+    ) {
         let block = block.max(1);
         let bx = tiles_x.div_ceil(block).max(1);
-        let mut order = Vec::with_capacity(tiles_x * tiles_y);
+        out.clear();
         for group in &self.groups {
-            let mut blocks = group.clone();
-            blocks.sort_unstable();
-            for &blk in &blocks {
+            scratch.clear();
+            scratch.extend_from_slice(group);
+            scratch.sort_unstable();
+            for &blk in scratch.iter() {
                 let (bx_i, by_i) = ((blk as usize) % bx, (blk as usize) / bx);
                 for ty in (by_i * block)..((by_i + 1) * block).min(tiles_y) {
                     for tx in (bx_i * block)..((bx_i + 1) * block).min(tiles_x) {
-                        order.push(ty * tiles_x + tx);
+                        out.push(ty * tiles_x + tx);
                     }
                 }
             }
         }
-        order
     }
 }
 

@@ -183,11 +183,24 @@ impl TileGrid {
 /// Build per-tile splat lists for a frame (the "intersection testing" stage;
 /// counts are the duplication factor the sorting stage must handle).
 pub fn bin_splats(grid: &TileGrid, splats: &[Splat2D]) -> Vec<Vec<u32>> {
-    let mut bins: Vec<Vec<u32>> = vec![Vec::new(); grid.n_tiles()];
+    let mut bins: Vec<Vec<u32>> = Vec::new();
+    bin_splats_into(grid, splats, &mut bins);
+    bins
+}
+
+/// Pooled variant of [`bin_splats`]: reuses `bins`' outer and inner vector
+/// capacities across frames (the stage-graph `FrameCtx` scratch contract —
+/// steady-state frames allocate nothing here).
+pub fn bin_splats_into(grid: &TileGrid, splats: &[Splat2D], bins: &mut Vec<Vec<u32>>) {
+    if bins.len() != grid.n_tiles() {
+        bins.resize_with(grid.n_tiles(), Vec::new);
+    }
+    for b in bins.iter_mut() {
+        b.clear();
+    }
     for (si, s) in splats.iter().enumerate() {
         grid.splat_tiles(s, |tile| bins[tile].push(si as u32));
     }
-    bins
 }
 
 #[cfg(test)]
@@ -311,6 +324,36 @@ mod tests {
         assert!(bins[center_tile].contains(&0));
         let total: usize = bins.iter().map(|b| b.len()).sum();
         assert!(total >= 1 && total <= 9, "small splat touches few tiles: {total}");
+    }
+
+    #[test]
+    fn bin_splats_into_reuses_capacity_and_matches() {
+        let grid = TileGrid::new(320, 180);
+        let mk = |x: f32, y: f32| Splat2D {
+            id: 0,
+            mean: Vec2::new(x, y),
+            conic: [1.0, 0.0, 1.0],
+            radius: 20.0,
+            rx: 20.0,
+            ry: 20.0,
+            depth: 1.0,
+            alpha_base: 0.5,
+            color: Vec3::ONE,
+        };
+        let frame_a = vec![mk(100.0, 90.0), mk(200.0, 40.0)];
+        let frame_b = vec![mk(101.0, 91.0), mk(201.0, 41.0)];
+
+        let mut pooled: Vec<Vec<u32>> = Vec::new();
+        bin_splats_into(&grid, &frame_a, &mut pooled);
+        assert_eq!(pooled, bin_splats(&grid, &frame_a));
+        let caps: Vec<usize> = pooled.iter().map(Vec::capacity).collect();
+
+        bin_splats_into(&grid, &frame_b, &mut pooled);
+        assert_eq!(pooled, bin_splats(&grid, &frame_b));
+        // clear() keeps capacity: the pool never shrinks between frames.
+        for (b, &c) in pooled.iter().zip(&caps) {
+            assert!(b.capacity() >= c);
+        }
     }
 
     #[test]

@@ -8,6 +8,13 @@ pub fn raster_order(tiles_x: usize, tiles_y: usize) -> Vec<usize> {
     (0..tiles_x * tiles_y).collect()
 }
 
+/// Pooled variant of [`raster_order`]: fills `out` in place, reusing its
+/// capacity (stage-graph `FrameCtx` scratch contract).
+pub fn raster_order_into(tiles_x: usize, tiles_y: usize, out: &mut Vec<usize>) {
+    out.clear();
+    out.extend(0..tiles_x * tiles_y);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -16,5 +23,16 @@ mod tests {
     fn raster_is_identity_permutation() {
         let o = raster_order(4, 3);
         assert_eq!(o, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn raster_into_matches_and_reuses() {
+        let mut out = Vec::new();
+        raster_order_into(5, 2, &mut out);
+        assert_eq!(out, raster_order(5, 2));
+        let cap = out.capacity();
+        raster_order_into(5, 2, &mut out);
+        assert_eq!(out, raster_order(5, 2));
+        assert_eq!(out.capacity(), cap);
     }
 }

@@ -3,6 +3,10 @@
 //! structures, cross-checked against the native pipeline.
 //!
 //! Skips gracefully (with a note) when `make artifacts` has not run.
+//! The whole target is gated on the `xla` feature (see Cargo.toml
+//! `required-features`); the inner cfg is belt-and-suspenders.
+
+#![cfg(feature = "xla")]
 
 use gaucim::coordinator::App;
 use gaucim::runtime::{Artifacts, BlendExecutor, HloExecutor, PreprocessExecutor};

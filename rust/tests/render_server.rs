@@ -1,0 +1,100 @@
+//! RenderServer contract: a parallel batch of N viewers over one shared
+//! scene preparation produces per-viewer stats *identical* to N sequential
+//! single-viewer runs (and to the legacy single-viewer `App` path), and the
+//! batch parallelism improves host throughput on multicore hosts.
+//!
+//! Kept as a single #[test] so the timing comparison is not perturbed by
+//! sibling tests running concurrently in the same process.
+
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::{App, RenderServer, SequenceReport, ViewerSpec};
+use gaucim::pipeline::PipelineConfig;
+use gaucim::scene::synth::{SceneKind, SynthParams};
+use std::time::Instant;
+
+fn assert_reports_identical(a: &SequenceReport, b: &SequenceReport) {
+    assert_eq!(a.frames, b.frames);
+    assert_eq!(a.energy, b.energy);
+    assert_eq!(a.latency, b.latency);
+    assert_eq!(a.avg_visible, b.avg_visible);
+    assert_eq!(a.avg_dram_accesses, b.avg_dram_accesses);
+    assert_eq!(a.avg_dram_bytes, b.avg_dram_bytes);
+    assert_eq!(a.sram_hit_rate, b.sram_hit_rate);
+    assert_eq!(a.avg_sort_cycles, b.avg_sort_cycles);
+    assert_eq!(a.avg_atg_ops, b.avg_atg_ops);
+    assert_eq!(a.report.fps, b.report.fps);
+    assert_eq!(a.report.power_w, b.report.power_w);
+}
+
+#[test]
+fn four_viewers_match_sequential_runs_and_scale() {
+    // The ISSUE's acceptance scene: 4 viewers on a 4k-Gaussian synthetic
+    // dynamic scene.
+    let scene = SynthParams::new(SceneKind::DynamicLarge, 4000).with_seed(17).generate();
+    let config = PipelineConfig::paper(true).with_resolution(256, 144);
+    let frames = 6;
+    let server = RenderServer::new(scene.clone(), config.clone());
+    let specs = [
+        ViewerSpec::perf(ViewCondition::Average, frames),
+        ViewerSpec::perf(ViewCondition::Static, frames),
+        ViewerSpec::perf(ViewCondition::Extreme, frames),
+        ViewerSpec::perf(ViewCondition::Average, frames),
+    ];
+
+    // Warm-up run (JIT-ish noise: page cache, branch predictors, allocator).
+    server.render_batch(&specs);
+
+    // Sequential single-viewer runs of the same sessions.
+    let t0 = Instant::now();
+    let sequential: Vec<_> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| server.render_viewer(i, s))
+        .collect();
+    let seq_wall = t0.elapsed().as_secs_f64();
+
+    // Parallel batch.
+    let batch = server.render_batch(&specs);
+    assert_eq!(batch.viewers.len(), 4);
+    assert_eq!(batch.total_frames, 4 * frames);
+    assert!(batch.aggregate_frames_per_s > 0.0);
+
+    // 1) Per-viewer stats identical to sequential runs — determinism across
+    //    thread scheduling and shared-prep reuse.
+    for (seq_rep, par_rep) in sequential.iter().zip(&batch.viewers) {
+        assert_reports_identical(seq_rep, par_rep);
+        assert_eq!(seq_rep.label, par_rep.label);
+    }
+
+    // 2) Identical to the legacy single-viewer App path (its own private
+    //    scene preparation): the server changes *where* prep lives, never
+    //    the numbers.
+    let app = App {
+        scene,
+        config,
+        orbit_radius: server.orbit_radius,
+    };
+    let app_rep = app.run_sequence(ViewCondition::Average, frames, 0);
+    assert_reports_identical(&app_rep, &batch.viewers[0]);
+
+    // 3) Aggregate throughput: 4 viewers in a batch must beat one viewer's
+    //    host throughput. Single-viewer throughput is seq_wall / 4 per
+    //    session → frames*4/seq_wall ≈ one viewer's rate. Gated on ≥4
+    //    hardware threads: with fewer (or heavily shared) cores a parallel
+    //    speedup is not physically guaranteed and the assertion would be
+    //    timing-flaky; the multi_viewer example still reports the measured
+    //    speedup (BENCH_server.json) on any host.
+    let cores = std::thread::available_parallelism().map(usize::from).unwrap_or(1);
+    if cores >= 4 {
+        let single_viewer_fps = batch.total_frames as f64 / seq_wall;
+        assert!(
+            batch.aggregate_frames_per_s > single_viewer_fps,
+            "batch {:.1} frames/s should beat sequential {:.1} frames/s on {cores} cores \
+             (wall: batch {:.3}s vs sequential {:.3}s)",
+            batch.aggregate_frames_per_s,
+            single_viewer_fps,
+            batch.wall_s,
+            seq_wall
+        );
+    }
+}
