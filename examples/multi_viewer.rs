@@ -2,9 +2,12 @@
 //! scene preparation, batched through the [`RenderServer`].
 //!
 //! Measures host simulation throughput (viewers × frames / wall-clock) for
-//! the sequential baseline vs the parallel batch, prints the per-viewer
-//! Table-I style rows, and writes `BENCH_server.json` so future PRs have a
-//! perf trajectory to beat.
+//! the sequential baseline vs the parallel batch, then runs the same specs
+//! through the **shared, contended event-queue memory system**
+//! (`render_batch_contended`) and reports per-stage simulated latency and
+//! channel-utilization percentiles. Everything lands in
+//! `BENCH_server.json` (including the `contended_mem` block) so future PRs
+//! have a perf trajectory to beat.
 //!
 //! Run: `cargo run --release --example multi_viewer [-- --viewers 4 --frames 8]`
 
@@ -76,6 +79,50 @@ fn main() -> anyhow::Result<()> {
         batch.wall_s, batch.aggregate_frames_per_s
     );
 
+    // Contended memory mode: the same specs on one shared event-queue
+    // MemorySystem, stepped in deterministic lockstep rounds.
+    let contended = server.render_batch_contended(&specs);
+    let mem = contended
+        .contended_mem
+        .as_ref()
+        .expect("contended batch must produce a memory roll-up");
+    for (seq_rep, con_rep) in sequential.iter().zip(&contended.viewers) {
+        assert_eq!(
+            seq_rep.avg_dram_accesses, con_rep.avg_dram_accesses,
+            "contention must never change what is transferred, only when"
+        );
+    }
+    println!("\ncontended memory system ({} channels, {} shards):", mem.channels, mem.shards);
+    println!(
+        "  makespan {:.1} µs, fairness {:.3}, channel util p50/p90/p99 = {:.2}/{:.2}/{:.2}",
+        mem.makespan_ns / 1e3,
+        mem.fairness,
+        mem.channel_util_pctl.p50,
+        mem.channel_util_pctl.p90,
+        mem.channel_util_pctl.p99
+    );
+    println!(
+        "  simulated preprocess latency p50/p90/p99 = {:.1}/{:.1}/{:.1} µs",
+        mem.preprocess_latency_pctl.p50 / 1e3,
+        mem.preprocess_latency_pctl.p90 / 1e3,
+        mem.preprocess_latency_pctl.p99 / 1e3
+    );
+    println!(
+        "  simulated blend latency p50/p90/p99 = {:.1}/{:.1}/{:.1} µs",
+        mem.blend_latency_pctl.p50 / 1e3,
+        mem.blend_latency_pctl.p90 / 1e3,
+        mem.blend_latency_pctl.p99 / 1e3
+    );
+    for v in &mem.viewers {
+        println!(
+            "  viewer-{}: busy {:.1} µs (wait {:.1} µs, {} stalls)",
+            v.viewer,
+            v.total_busy_ns() / 1e3,
+            v.total_wait_ns() / 1e3,
+            v.preprocess.stalls + v.blend.stalls
+        );
+    }
+
     let record = Json::obj()
         .set("gaussians", server.shared.scene.len())
         .set("viewers", n_viewers)
@@ -90,8 +137,9 @@ fn main() -> anyhow::Result<()> {
         .set(
             "host_parallelism",
             std::thread::available_parallelism().map(usize::from).unwrap_or(1),
-        );
+        )
+        .set("contended_mem", mem.to_json());
     write_bench_json("BENCH_server.json", &record)?;
-    println!("\nwrote BENCH_server.json");
+    println!("\nwrote BENCH_server.json (with contended_mem block)");
     Ok(())
 }

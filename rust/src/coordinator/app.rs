@@ -191,6 +191,106 @@ pub(crate) fn scene_trajectory(
         .generate(&camera_template(config, orbit_radius))
 }
 
+/// Streaming aggregator of per-frame [`FrameResult`]s into a
+/// [`SequenceReport`]. The sequential runner ([`run_frames_report`]) and
+/// the lockstep contended batch (`RenderServer::render_batch_contended`)
+/// both push into this, which is what keeps their per-viewer reports
+/// structurally identical.
+pub(crate) struct SequenceAgg {
+    frames: usize,
+    energy: FrameEnergy,
+    latency: StageLatency,
+    visible: f64,
+    dram_accesses: f64,
+    dram_bytes: f64,
+    sram_hits: u64,
+    sram_lookups: u64,
+    sort_cycles: f64,
+    atg_ops: f64,
+    psnr_sum: f64,
+    ssim_sum: f64,
+    psnr_count: usize,
+}
+
+impl SequenceAgg {
+    pub(crate) fn new() -> SequenceAgg {
+        SequenceAgg {
+            frames: 0,
+            energy: FrameEnergy::default(),
+            latency: StageLatency::default(),
+            visible: 0.0,
+            dram_accesses: 0.0,
+            dram_bytes: 0.0,
+            sram_hits: 0,
+            sram_lookups: 0,
+            sort_cycles: 0.0,
+            atg_ops: 0.0,
+            psnr_sum: 0.0,
+            ssim_sum: 0.0,
+            psnr_count: 0,
+        }
+    }
+
+    /// Fold one frame in. `scored` carries (PSNR, SSIM) when the frame was
+    /// rendered numerically and compared against the reference.
+    pub(crate) fn push(&mut self, r: &crate::pipeline::FrameResult, scored: Option<(f64, f64)>) {
+        self.frames += 1;
+        self.energy.add(&r.energy);
+        self.latency.add(&r.latency);
+        self.visible += r.n_visible as f64;
+        self.dram_accesses += r.traffic.total_dram_accesses() as f64;
+        self.dram_bytes += r.traffic.total_dram_bytes() as f64;
+        self.sram_hits += r.traffic.blend_sram.hits;
+        self.sram_lookups += r.traffic.blend_sram.lookups;
+        self.sort_cycles += r.sort.cycles as f64;
+        self.atg_ops += r.atg_ops as f64;
+        if let Some((p, s)) = scored {
+            self.psnr_sum += p;
+            self.ssim_sum += s;
+            self.psnr_count += 1;
+        }
+    }
+
+    pub(crate) fn finish(
+        self,
+        label: String,
+        dcim_area_mm2: f64,
+        dynamic: bool,
+    ) -> SequenceReport {
+        let n = self.frames.max(1) as f64;
+        let energy = self.energy.scale(1.0 / n);
+        let latency = self.latency.scale(1.0 / n);
+        let report = PowerReport::from_frame(label, energy, latency, dcim_area_mm2, dynamic);
+        SequenceReport {
+            label: report.label.clone(),
+            frames: self.frames,
+            energy,
+            latency,
+            avg_visible: self.visible / n,
+            avg_dram_accesses: self.dram_accesses / n,
+            avg_dram_bytes: self.dram_bytes / n,
+            sram_hit_rate: if self.sram_lookups > 0 {
+                self.sram_hits as f64 / self.sram_lookups as f64
+            } else {
+                0.0
+            },
+            avg_sort_cycles: self.sort_cycles / n,
+            avg_atg_ops: self.atg_ops / n,
+            psnr_db: if self.psnr_count > 0 {
+                self.psnr_sum / self.psnr_count as f64
+            } else {
+                f64::NAN
+            },
+            ssim: if self.psnr_count > 0 {
+                self.ssim_sum / self.psnr_count as f64
+            } else {
+                f64::NAN
+            },
+            report,
+        }
+    }
+}
+
 /// Drive `pipeline` over `seq` and aggregate the per-frame results into a
 /// [`SequenceReport`] — the single sequence-execution path shared by
 /// [`App::run_sequence`] and every [`super::RenderServer`] viewer session
@@ -203,77 +303,22 @@ pub(crate) fn run_frames_report(
     psnr_every: usize,
     label: String,
 ) -> SequenceReport {
-    let frames = seq.len();
     let width = pipeline.config.width;
     let height = pipeline.config.height;
     let dcim_area_mm2 = pipeline.config.dcim.area_mm2;
     let reference = ReferenceRenderer::new(width, height);
 
-    let mut energy = FrameEnergy::default();
-    let mut latency = StageLatency::default();
-    let mut visible = 0.0;
-    let mut dram_accesses = 0.0;
-    let mut dram_bytes = 0.0;
-    let mut sram_hits = 0u64;
-    let mut sram_lookups = 0u64;
-    let mut sort_cycles = 0.0;
-    let mut atg_ops = 0.0;
-    let mut psnr_sum = 0.0;
-    let mut ssim_sum = 0.0;
-    let mut psnr_count = 0usize;
-
+    let mut agg = SequenceAgg::new();
     for (i, (cam, t)) in seq.iter().enumerate() {
         let render = psnr_every > 0 && i % psnr_every == 0;
         let r = pipeline.render_frame(cam, *t, render);
-        energy.add(&r.energy);
-        latency.add(&r.latency);
-        visible += r.n_visible as f64;
-        dram_accesses += r.traffic.total_dram_accesses() as f64;
-        dram_bytes += r.traffic.total_dram_bytes() as f64;
-        sram_hits += r.traffic.blend_sram.hits;
-        sram_lookups += r.traffic.blend_sram.lookups;
-        sort_cycles += r.sort.cycles as f64;
-        atg_ops += r.atg_ops as f64;
-        if let Some(img) = &r.image {
+        let scored = r.image.as_ref().map(|img| {
             let ref_img = reference.render(scene, cam, *t);
-            psnr_sum += psnr(&ref_img, img);
-            ssim_sum += crate::render::ssim(&ref_img, img);
-            psnr_count += 1;
-        }
+            (psnr(&ref_img, img), crate::render::ssim(&ref_img, img))
+        });
+        agg.push(&r, scored);
     }
-
-    let n = frames.max(1) as f64;
-    let energy = energy.scale(1.0 / n);
-    let latency = latency.scale(1.0 / n);
-    let report =
-        PowerReport::from_frame(label, energy, latency, dcim_area_mm2, scene.dynamic);
-    SequenceReport {
-        label: report.label.clone(),
-        frames,
-        energy,
-        latency,
-        avg_visible: visible / n,
-        avg_dram_accesses: dram_accesses / n,
-        avg_dram_bytes: dram_bytes / n,
-        sram_hit_rate: if sram_lookups > 0 {
-            sram_hits as f64 / sram_lookups as f64
-        } else {
-            0.0
-        },
-        avg_sort_cycles: sort_cycles / n,
-        avg_atg_ops: atg_ops / n,
-        psnr_db: if psnr_count > 0 {
-            psnr_sum / psnr_count as f64
-        } else {
-            f64::NAN
-        },
-        ssim: if psnr_count > 0 {
-            ssim_sum / psnr_count as f64
-        } else {
-            f64::NAN
-        },
-        report,
-    }
+    agg.finish(label, dcim_area_mm2, scene.dynamic)
 }
 
 #[cfg(test)]

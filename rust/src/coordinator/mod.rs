@@ -3,7 +3,10 @@
 //! stage-graph frame pipeline with its posteriori state, PSNR evaluation
 //! against the reference renderer, Table-I style report generation, and the
 //! multi-viewer [`RenderServer`] that shares one immutable scene
-//! preparation across N concurrent per-viewer sessions.
+//! preparation across N concurrent per-viewer sessions — in parallel with
+//! private memory systems (host throughput) or in deterministic lockstep
+//! on one shared, contended event-queue memory system
+//! ([`RenderServer::render_batch_contended`]).
 
 pub mod app;
 pub mod config;
@@ -11,4 +14,7 @@ pub mod server;
 
 pub use app::{App, SequenceReport};
 pub use config::ExperimentConfig;
-pub use server::{RenderServer, ServerReport, SharedScene, ViewerSpec};
+pub use server::{
+    ContendedMemReport, Percentiles, RenderServer, ServerReport, SharedScene, ViewerMemStats,
+    ViewerSpec,
+};

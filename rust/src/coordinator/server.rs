@@ -3,12 +3,22 @@
 //!
 //! [`SharedScene`] owns the scene plus its offline
 //! [`ScenePrep`](crate::pipeline::ScenePrep) (grid partition, DRAM layout,
-//! FP16-quantized copy) behind `Arc`s. [`RenderServer::render_batch`] fans
-//! a batch of [`ViewerSpec`]s out over `std::thread::scope` — every viewer
-//! gets its own [`FramePipeline`] (hardware models + posteriori state are
-//! per-session) borrowing the shared preparation — and reports both the
-//! per-viewer [`SequenceReport`]s and the batch's aggregate host
-//! throughput.
+//! FP16-quantized copy, shard map) behind `Arc`s.
+//! [`RenderServer::render_batch`] fans a batch of [`ViewerSpec`]s out over
+//! `std::thread::scope` — every viewer gets its own [`FramePipeline`]
+//! (hardware models + posteriori state are per-session) borrowing the
+//! shared preparation — and reports both the per-viewer
+//! [`SequenceReport`]s and the batch's aggregate host throughput.
+//!
+//! [`RenderServer::render_batch_contended`] is the *memory-fidelity* mode:
+//! all viewers register ports on **one shared event-queue
+//! [`MemorySystem`]** and are stepped frame-round by frame-round in
+//! lockstep (rotating issue order for fairness) on the calling thread.
+//! Contention is a simulated-time property, so lockstep keeps it exactly
+//! deterministic: per-viewer byte/burst counts stay identical to isolated
+//! runs while per-viewer `busy_ns` rises with queueing behind the other
+//! viewers' traffic. The per-viewer fairness and channel-utilization
+//! roll-up lands in [`ContendedMemReport`].
 //!
 //! Two throughput numbers must not be confused:
 //! * `SequenceReport::report.fps` — the **modeled accelerator** frame rate
@@ -23,12 +33,15 @@
 //! sequence-runner over the exact same trajectories.
 
 use crate::camera::{Camera, ViewCondition};
+use crate::memory::{DramStats, MemMode, MemStage, MemorySystem, PortId, ShardMap};
 use crate::pipeline::{FramePipeline, PipelineConfig, ScenePrep};
+use crate::render::{psnr, ReferenceRenderer};
 use crate::scene::Scene;
 use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::app::{camera_template, run_frames_report, scene_trajectory};
+use super::app::{camera_template, run_frames_report, scene_trajectory, SequenceAgg};
 use super::SequenceReport;
 
 /// A scene plus its shared, immutable preparation.
@@ -45,10 +58,30 @@ impl SharedScene {
         SharedScene { scene, prep }
     }
 
-    /// A per-viewer pipeline borrowing this preparation (cheap: three `Arc`
+    /// A per-viewer pipeline borrowing this preparation (cheap: four `Arc`
     /// clones + per-session hardware-model state).
     pub fn pipeline(&self, config: PipelineConfig) -> FramePipeline<'_> {
         FramePipeline::with_prep(&self.scene, self.prep.clone(), config)
+    }
+
+    /// A per-viewer pipeline whose cull/blend ports register on a shared,
+    /// contended event-queue memory system.
+    pub fn pipeline_with_memory(
+        &self,
+        config: PipelineConfig,
+        sys: Arc<Mutex<MemorySystem>>,
+    ) -> FramePipeline<'_> {
+        FramePipeline::with_shared_memory(&self.scene, self.prep.clone(), config, sys)
+    }
+
+    /// Shard-aware address translation of the scene's DRAM layout.
+    pub fn shard_map(&self) -> &ShardMap {
+        &self.prep.shard_map
+    }
+
+    /// Which channel-group shard Gaussian `gi`'s parameter record lives on.
+    pub fn gaussian_shard(&self, gi: usize) -> usize {
+        self.prep.shard_map.shard_of(self.prep.layout.addr[gi])
     }
 }
 
@@ -67,6 +100,110 @@ impl ViewerSpec {
     }
 }
 
+/// Per-viewer DRAM statistics under the shared, contended memory system.
+#[derive(Debug, Clone)]
+pub struct ViewerMemStats {
+    pub viewer: usize,
+    pub preprocess: DramStats,
+    pub blend: DramStats,
+}
+
+impl ViewerMemStats {
+    pub fn total_busy_ns(&self) -> f64 {
+        self.preprocess.busy_ns + self.blend.busy_ns
+    }
+
+    pub fn total_wait_ns(&self) -> f64 {
+        self.preprocess.wait_ns + self.blend.wait_ns
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.preprocess.bytes + self.blend.bytes
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("viewer", self.viewer)
+            .set("preprocess", self.preprocess.to_json())
+            .set("blend", self.blend.to_json())
+            .set("total_busy_ns", self.total_busy_ns())
+            .set("total_wait_ns", self.total_wait_ns())
+    }
+}
+
+/// p50/p90/p99 summary of a sample set (simulated-time quantities).
+#[derive(Debug, Clone, Copy)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    /// Nearest-rank percentiles (same convention as
+    /// `math::stats::percentile`), with a single sort shared by all three
+    /// ranks — the latency vectors grow as viewers × frames.
+    pub fn of(samples: &[f64]) -> Percentiles {
+        if samples.is_empty() {
+            return Percentiles { p50: 0.0, p90: 0.0, p99: 0.0 };
+        }
+        let mut v: Vec<f64> = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let pick = |p: f64| {
+            let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+            v[rank.min(v.len() - 1)]
+        };
+        Percentiles { p50: pick(50.0), p90: pick(90.0), p99: pick(99.0) }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().set("p50", self.p50).set("p90", self.p90).set("p99", self.p99)
+    }
+}
+
+/// Memory-system roll-up of one contended batch: per-viewer fairness,
+/// channel utilization, and per-stage simulated-latency percentiles.
+#[derive(Debug, Clone)]
+pub struct ContendedMemReport {
+    pub shards: usize,
+    pub channels: usize,
+    pub outstanding: usize,
+    /// Simulated completion horizon of the whole batch (ns).
+    pub makespan_ns: f64,
+    /// Jain fairness index over per-viewer total busy time (1 = perfectly
+    /// fair).
+    pub fairness: f64,
+    /// Per-channel occupancy over the makespan.
+    pub channel_util: Vec<f64>,
+    pub channel_util_pctl: Percentiles,
+    /// Per-frame simulated stage latencies across all viewers (ns).
+    pub preprocess_latency_pctl: Percentiles,
+    pub blend_latency_pctl: Percentiles,
+    pub viewers: Vec<ViewerMemStats>,
+}
+
+impl ContendedMemReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("shards", self.shards)
+            .set("channels", self.channels)
+            .set("outstanding", self.outstanding)
+            .set("makespan_ns", self.makespan_ns)
+            .set("fairness", self.fairness)
+            .set(
+                "channel_util",
+                Json::Arr(self.channel_util.iter().map(|&u| Json::from(u)).collect()),
+            )
+            .set("channel_util_pctl", self.channel_util_pctl.to_json())
+            .set("preprocess_latency_ns_pctl", self.preprocess_latency_pctl.to_json())
+            .set("blend_latency_ns_pctl", self.blend_latency_pctl.to_json())
+            .set(
+                "viewers",
+                Json::Arr(self.viewers.iter().map(ViewerMemStats::to_json).collect()),
+            )
+    }
+}
+
 /// Result of one viewer batch.
 #[derive(Debug, Clone)]
 pub struct ServerReport {
@@ -78,11 +215,13 @@ pub struct ServerReport {
     pub total_frames: usize,
     /// Host simulation throughput: `total_frames / wall_s`.
     pub aggregate_frames_per_s: f64,
+    /// Shared-memory contention roll-up (contended batches only).
+    pub contended_mem: Option<ContendedMemReport>,
 }
 
 impl ServerReport {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut js = Json::obj()
             .set("viewers", self.viewers.len())
             .set("total_frames", self.total_frames)
             .set("wall_s", self.wall_s)
@@ -90,7 +229,25 @@ impl ServerReport {
             .set(
                 "viewer_reports",
                 Json::Arr(self.viewers.iter().map(SequenceReport::to_json).collect()),
-            )
+            );
+        if let Some(mem) = &self.contended_mem {
+            js = js.set("contended_mem", mem.to_json());
+        }
+        js
+    }
+}
+
+/// Jain's fairness index over non-negative shares: `(Σx)² / (n·Σx²)`.
+fn jain_fairness(shares: &[f64]) -> f64 {
+    if shares.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = shares.iter().sum();
+    let sq: f64 = shares.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        1.0
+    } else {
+        (sum * sum) / (shares.len() as f64 * sq)
     }
 }
 
@@ -157,6 +314,9 @@ impl RenderServer {
     /// Render a batch of viewer sessions in parallel (one scoped thread per
     /// viewer, all borrowing the shared scene preparation). Reports are
     /// returned in `specs` order; a panicking viewer thread propagates.
+    /// Every viewer keeps a private memory system — the host-throughput
+    /// mode. See [`RenderServer::render_batch_contended`] for the shared,
+    /// contended memory mode.
     pub fn render_batch(&self, specs: &[ViewerSpec]) -> ServerReport {
         let t0 = Instant::now();
         let viewers: Vec<SequenceReport> = std::thread::scope(|scope| {
@@ -177,6 +337,123 @@ impl RenderServer {
             wall_s,
             total_frames,
             aggregate_frames_per_s: total_frames as f64 / wall_s.max(1e-12),
+            contended_mem: None,
+        }
+    }
+
+    /// Render a batch against **one shared, contended event-queue memory
+    /// system**: every viewer's cull/blend ports register on the same
+    /// [`MemorySystem`], and viewers are stepped frame-round by
+    /// frame-round in lockstep on the calling thread (issue order rotates
+    /// each round so no viewer systematically goes first). Deterministic
+    /// by construction — contention lives on the simulated timeline, not
+    /// in host scheduling. Per-viewer byte/burst counts are identical to
+    /// isolated runs; per-viewer `busy_ns` additionally carries the
+    /// queueing behind the other viewers' traffic.
+    pub fn render_batch_contended(&self, specs: &[ViewerSpec]) -> ServerReport {
+        let t0 = Instant::now();
+        let mut config = self.config.clone();
+        config.mem.mode = MemMode::EventQueue;
+        let sys = Arc::new(Mutex::new(MemorySystem::new(
+            config.mem.clone(),
+            *self.shared.prep.shard_map,
+        )));
+
+        let mut pipelines: Vec<FramePipeline<'_>> = specs
+            .iter()
+            .map(|_| self.shared.pipeline_with_memory(config.clone(), Arc::clone(&sys)))
+            .collect();
+        // Each pipeline reports the (cull, blend) port ids it registered —
+        // the report never assumes a registration order.
+        let port_ids: Vec<(PortId, PortId)> = pipelines
+            .iter()
+            .map(|p| p.mem_port_ids().expect("contended pipelines register shared ports"))
+            .collect();
+        let trajectories: Vec<Vec<(Camera, f32)>> =
+            specs.iter().map(|s| self.trajectory(s)).collect();
+        let reference = ReferenceRenderer::new(config.width, config.height);
+
+        let n = specs.len();
+        let max_frames = specs.iter().map(|s| s.frames).max().unwrap_or(0);
+        let mut aggs: Vec<SequenceAgg> = (0..n).map(|_| SequenceAgg::new()).collect();
+        let mut pre_latency: Vec<f64> = Vec::new();
+        let mut blend_latency: Vec<f64> = Vec::new();
+
+        for round in 0..max_frames {
+            // Frame barrier: all in-flight transactions retire, port clocks
+            // align — every viewer's next frame starts at the same epoch
+            // and contends on the channels within the round.
+            sys.lock().expect("memory system lock poisoned").advance_epoch();
+            for k in 0..n {
+                let v = (round + k) % n;
+                if round >= trajectories[v].len() {
+                    continue;
+                }
+                let (cam, t) = &trajectories[v][round];
+                let spec = &specs[v];
+                let render = spec.psnr_every > 0 && round % spec.psnr_every == 0;
+                let r = pipelines[v].render_frame(cam, *t, render);
+                pre_latency.push(r.latency.preprocess_ns);
+                blend_latency.push(r.latency.blend_ns);
+                let scored = r.image.as_ref().map(|img| {
+                    let ref_img = reference.render(&self.shared.scene, cam, *t);
+                    (psnr(&ref_img, img), crate::render::ssim(&ref_img, img))
+                });
+                aggs[v].push(&r, scored);
+            }
+        }
+
+        let viewers: Vec<SequenceReport> = aggs
+            .into_iter()
+            .enumerate()
+            .map(|(i, agg)| {
+                agg.finish(
+                    format!(
+                        "viewer-{i} {} ({})",
+                        self.shared.scene.name,
+                        specs[i].condition.label()
+                    ),
+                    config.dcim.area_mm2,
+                    self.shared.scene.dynamic,
+                )
+            })
+            .collect();
+
+        let contended = {
+            let sys = sys.lock().expect("memory system lock poisoned");
+            let rows: Vec<ViewerMemStats> = port_ids
+                .iter()
+                .enumerate()
+                .map(|(i, &(cull_port, blend_port))| ViewerMemStats {
+                    viewer: i,
+                    preprocess: sys.port_stage_stats(cull_port, MemStage::Preprocess),
+                    blend: sys.port_stage_stats(blend_port, MemStage::Blend),
+                })
+                .collect();
+            let busy: Vec<f64> = rows.iter().map(ViewerMemStats::total_busy_ns).collect();
+            let channel_util = sys.channel_utilization();
+            ContendedMemReport {
+                shards: sys.shard_map.shards,
+                channels: sys.n_channels(),
+                outstanding: config.mem.outstanding,
+                makespan_ns: sys.horizon_ns(),
+                fairness: jain_fairness(&busy),
+                channel_util_pctl: Percentiles::of(&channel_util),
+                channel_util,
+                preprocess_latency_pctl: Percentiles::of(&pre_latency),
+                blend_latency_pctl: Percentiles::of(&blend_latency),
+                viewers: rows,
+            }
+        };
+
+        let wall_s = t0.elapsed().as_secs_f64();
+        let total_frames: usize = specs.iter().map(|s| s.frames).sum();
+        ServerReport {
+            viewers,
+            wall_s,
+            total_frames,
+            aggregate_frames_per_s: total_frames as f64 / wall_s.max(1e-12),
+            contended_mem: Some(contended),
         }
     }
 }
@@ -203,7 +480,58 @@ mod tests {
         assert!(report.viewers[0].label.starts_with("viewer-0"));
         assert!(report.viewers[1].label.starts_with("viewer-1"));
         assert!(report.aggregate_frames_per_s > 0.0);
+        assert!(report.contended_mem.is_none());
         let js = report.to_json().pretty();
         assert!(js.contains("aggregate_frames_per_s"));
+        assert!(!js.contains("contended_mem"));
+    }
+
+    #[test]
+    fn contended_batch_reports_memory_rollup() {
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 1500).generate();
+        let config = PipelineConfig::paper(true).with_resolution(128, 72);
+        let server = RenderServer::new(scene, config);
+        let specs = [
+            ViewerSpec::perf(ViewCondition::Average, 2),
+            ViewerSpec::perf(ViewCondition::Static, 2),
+        ];
+        let report = server.render_batch_contended(&specs);
+        assert_eq!(report.viewers.len(), 2);
+        let mem = report.contended_mem.as_ref().expect("contended roll-up");
+        assert_eq!(mem.viewers.len(), 2);
+        assert!(mem.makespan_ns > 0.0);
+        assert!(mem.fairness > 0.0 && mem.fairness <= 1.0 + 1e-12);
+        assert_eq!(mem.channel_util.len(), mem.channels);
+        assert!(mem.viewers.iter().all(|v| v.total_bytes() > 0));
+        // Both viewers queued behind each other at least once.
+        assert!(
+            mem.viewers.iter().all(|v| v.total_wait_ns() > 0.0),
+            "lockstep rounds must produce contention for every viewer"
+        );
+        let js = report.to_json().pretty();
+        assert!(js.contains("contended_mem"));
+        assert!(js.contains("channel_util_pctl"));
+        assert!(js.contains("preprocess_latency_ns_pctl"));
+    }
+
+    #[test]
+    fn percentiles_match_nearest_rank_convention() {
+        use crate::math::stats::percentile;
+        let xs: Vec<f64> = (0..100).map(|i| (i * 7 % 100) as f64).collect();
+        let p = Percentiles::of(&xs);
+        assert_eq!(p.p50, percentile(&xs, 50.0));
+        assert_eq!(p.p90, percentile(&xs, 90.0));
+        assert_eq!(p.p99, percentile(&xs, 99.0));
+        let empty = Percentiles::of(&[]);
+        assert_eq!(empty.p50, 0.0);
+        assert_eq!(empty.p99, 0.0);
+    }
+
+    #[test]
+    fn jain_fairness_bounds() {
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert!((jain_fairness(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        let skewed = jain_fairness(&[10.0, 0.0, 0.0]);
+        assert!((skewed - 1.0 / 3.0).abs() < 1e-12);
     }
 }

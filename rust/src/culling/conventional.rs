@@ -3,9 +3,8 @@
 //! each frame, then run the exact per-Gaussian test on-chip.
 
 use super::drfc::CullOutput;
-use super::gaussian_visible;
 use crate::camera::Camera;
-use crate::memory::dram::DramModel;
+use crate::memory::dram::{DramModel, MemSink};
 use crate::scene::{DramLayout, Scene};
 
 /// Fetch-everything culling.
@@ -20,25 +19,37 @@ impl<'a> ConventionalCulling<'a> {
     }
 
     /// Cull at time `t`, charging the full-scene parameter fetch to `dram`.
+    /// Convenience wrapper over [`ConventionalCulling::cull_into`].
     pub fn cull(&self, cam: &Camera, t: f32, dram: &mut DramModel) -> CullOutput {
+        let mut out = CullOutput::default();
+        self.cull_into(cam, t, dram, &mut out);
+        out
+    }
+
+    /// Cull into a pooled [`CullOutput`], issuing the full-scene sweep
+    /// through `mem` (a [`MemPort`](crate::memory::MemPort) on the
+    /// pipeline path).
+    pub fn cull_into<M: MemSink>(
+        &self,
+        cam: &Camera,
+        t: f32,
+        mem: &mut M,
+        out: &mut CullOutput,
+    ) {
         // One big sequential sweep over the whole parameter array — the
         // best case for the baseline (maximum burst efficiency), which makes
         // the Fig. 9 comparison conservative in the baseline's favor.
-        dram.read(0, self.layout.total_bytes());
+        mem.read(0, self.layout.total_bytes());
 
-        let mut out = CullOutput {
-            visible_cells: Vec::new(),
-            candidates: (0..self.scene.len() as u32).collect(),
-            visible: Vec::new(),
-            fetched: self.scene.len() as u64,
-        };
+        out.clear();
+        out.candidates.extend(0..self.scene.len() as u32);
+        out.fetched = self.scene.len() as u64;
         let frustum = cam.frustum();
         for gi in 0..self.scene.len() as u32 {
             if super::gaussian_visible_in(&self.scene.gaussians[gi as usize], &frustum, t) {
                 out.visible.push(gi);
             }
         }
-        out
     }
 }
 

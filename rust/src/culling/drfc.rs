@@ -10,10 +10,14 @@ use super::grid::GridPartition;
 use super::{gaussian_visible, Containment};
 use crate::camera::Camera;
 use crate::math::Frustum;
-use crate::memory::dram::DramModel;
+use crate::memory::dram::{DramModel, MemSink};
 use crate::scene::{DramLayout, Scene};
 
-/// Result of one culling pass.
+/// Result of one culling pass. The output vectors *and* the dedup /
+/// coalescing scratch are pooled: [`DrFc::cull_into`] clears and refills
+/// them in place, so a steady-state frame allocates nothing (the
+/// zero-allocation preprocess contract, asserted by the stage-graph
+/// determinism suite through [`CullOutput::scratch_capacities`]).
 #[derive(Debug, Clone, Default)]
 pub struct CullOutput {
     /// Cells whose AABB intersects the frustum (flat indices).
@@ -25,6 +29,32 @@ pub struct CullOutput {
     /// Gaussian records fetched (== candidates.len(), kept for symmetry
     /// with the conventional path where all N are fetched).
     pub fetched: u64,
+    /// Pooled per-Gaussian dedup flags (sized to the scene).
+    seen: Vec<bool>,
+    /// Pooled neighbor-reference address scratch (burst coalescing).
+    ref_addrs: Vec<u64>,
+}
+
+impl CullOutput {
+    /// Reset the per-frame outputs, keeping every buffer's capacity.
+    pub fn clear(&mut self) {
+        self.visible_cells.clear();
+        self.candidates.clear();
+        self.visible.clear();
+        self.fetched = 0;
+    }
+
+    /// Capacities of every pooled buffer — folded into the pipeline's
+    /// zero-allocation signature.
+    pub fn scratch_capacities(&self) -> [usize; 5] {
+        [
+            self.visible_cells.capacity(),
+            self.candidates.capacity(),
+            self.visible.capacity(),
+            self.seen.capacity(),
+            self.ref_addrs.capacity(),
+        ]
+    }
 }
 
 /// The DR-FC engine: borrows the offline-built partition + layout.
@@ -40,33 +70,52 @@ impl<'a> DrFc<'a> {
     }
 
     /// Cull for camera pose + scene time `t`, charging fetches to `dram`.
+    /// Convenience wrapper over [`DrFc::cull_into`] building a fresh
+    /// [`CullOutput`] (benches, baselines, tests).
     pub fn cull(&self, cam: &Camera, t: f32, dram: &mut DramModel) -> CullOutput {
-        let frustum = cam.frustum();
         let mut out = CullOutput::default();
+        self.cull_into(cam, t, dram, &mut out);
+        out
+    }
+
+    /// Cull into a pooled [`CullOutput`], issuing every DRAM request
+    /// through `mem` — a [`MemPort`](crate::memory::MemPort) on the
+    /// pipeline path, the synchronous oracle in the baselines. Request
+    /// order and output contents are identical to the pre-refactor
+    /// allocating path (the stage-graph determinism suite pins this).
+    pub fn cull_into<M: MemSink>(
+        &self,
+        cam: &Camera,
+        t: f32,
+        mem: &mut M,
+        out: &mut CullOutput,
+    ) {
+        let frustum = cam.frustum();
+        out.clear();
+        let CullOutput { visible_cells, candidates, visible, fetched, seen, ref_addrs } = out;
 
         // Pass 1 (no DRAM): find visible cells in the temporal slice of t.
         let slice = self.temporal_slice_of(t);
         let per_slice = self.grid.config.cells_per_slice();
-        let mut cell_scheduled = vec![false; self.grid.n_cells()];
         for s in 0..per_slice {
             let flat = slice * per_slice + s;
             if self.cell_visible(flat, &frustum, t) {
-                out.visible_cells.push(flat);
-                cell_scheduled[flat] = true;
+                visible_cells.push(flat);
             }
         }
 
         // Pass 2: schedule DRAM reads. Central runs as big contiguous reads.
-        let mut fetched = vec![false; self.scene.len()];
-        for &flat in &out.visible_cells {
+        seen.clear();
+        seen.resize(self.scene.len(), false);
+        for &flat in visible_cells.iter() {
             let (start, end) = self.layout.cell_ranges[flat];
             if end > start {
-                dram.read(start, end - start);
+                mem.read(start, end - start);
             }
             for &gi in &self.grid.cells[flat].central {
-                if !fetched[gi as usize] {
-                    fetched[gi as usize] = true;
-                    out.candidates.push(gi);
+                if !seen[gi as usize] {
+                    seen[gi as usize] = true;
+                    candidates.push(gi);
                 }
             }
         }
@@ -76,20 +125,20 @@ impl<'a> DrFc<'a> {
         // their central cell (Fig. 5(b)), referenced records coalesce into
         // few burst-friendly ranges: sort addresses and merge adjacent runs.
         let stride = self.layout.bytes_per_gaussian;
-        let mut ref_addrs: Vec<u64> = Vec::new();
-        for &flat in &out.visible_cells {
+        ref_addrs.clear();
+        for &flat in visible_cells.iter() {
             // The cell's pointer table itself is a contiguous DRAM read.
             let (ps, pe) = self.layout.pointer_table_range(flat);
             if pe > ps {
-                dram.read(ps, pe - ps);
+                mem.read(ps, pe - ps);
             }
             for &gi in &self.layout.cell_refs[flat] {
-                if fetched[gi as usize] {
+                if seen[gi as usize] {
                     continue; // central run already read (or earlier ref)
                 }
-                fetched[gi as usize] = true;
+                seen[gi as usize] = true;
                 ref_addrs.push(self.layout.addr[gi as usize]);
-                out.candidates.push(gi);
+                candidates.push(gi);
             }
         }
         ref_addrs.sort_unstable();
@@ -102,18 +151,17 @@ impl<'a> DrFc<'a> {
                 end = ref_addrs[j] + stride;
                 j += 1;
             }
-            dram.read(start, end - start);
+            mem.read(start, end - start);
             i = j;
         }
-        out.fetched = out.candidates.len() as u64;
+        *fetched = candidates.len() as u64;
 
         // Pass 3: exact per-Gaussian culling on fetched candidates.
-        for &gi in &out.candidates {
+        for &gi in candidates.iter() {
             if super::gaussian_visible_in(&self.scene.gaussians[gi as usize], &frustum, t) {
-                out.visible.push(gi);
+                visible.push(gi);
             }
         }
-        out
     }
 
     /// Which temporal slice contains scene time `t`.
@@ -223,6 +271,32 @@ mod tests {
         let mut dram = DramModel::default_lpddr5();
         drfc.cull(&camera(), 0.1, &mut dram);
         assert!(dram.stats().bytes < scene.dram_bytes());
+    }
+
+    #[test]
+    fn cull_into_reuses_buffers_and_matches_cull() {
+        let (scene, grid, layout) = setup(3000, 4);
+        let drfc = DrFc::new(&scene, &grid, &layout);
+        let cam = camera();
+
+        let mut d1 = DramModel::default_lpddr5();
+        let fresh = drfc.cull(&cam, 0.4, &mut d1);
+
+        let mut out = CullOutput::default();
+        let mut d2 = DramModel::default_lpddr5();
+        drfc.cull_into(&cam, 0.4, &mut d2, &mut out);
+        assert_eq!(out.visible_cells, fresh.visible_cells);
+        assert_eq!(out.candidates, fresh.candidates);
+        assert_eq!(out.visible, fresh.visible);
+        assert_eq!(out.fetched, fresh.fetched);
+        assert_eq!(d1.stats(), d2.stats(), "identical request streams");
+
+        // Re-culling the same view must not grow any pooled buffer.
+        let caps = out.scratch_capacities();
+        let mut d3 = DramModel::default_lpddr5();
+        drfc.cull_into(&cam, 0.4, &mut d3, &mut out);
+        assert_eq!(out.scratch_capacities(), caps, "steady-state reallocation");
+        assert_eq!(out.candidates, fresh.candidates);
     }
 
     #[test]

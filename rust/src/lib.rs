@@ -28,10 +28,20 @@
 //! paper's methodology (functional RTL + measured DCIM-macro statistics +
 //! Ramulator).
 //!
+//! The memory layer has two timing backends behind one statistics
+//! contract: the frozen synchronous oracle
+//! ([`memory::oracle::SyncDramModel`]) and the event-queue
+//! [`memory::MemorySystem`] (per-channel queues, outstanding-transaction
+//! windows, shard channel groups, contention) reached through
+//! [`memory::MemPort`] handles threaded through the frame context — see
+//! `rust/src/memory/README.md`.
+//!
 //! Above the frame engine, [`coordinator::RenderServer`] shares one
 //! immutable scene preparation (grid partition, DRAM layout, FP16-quantized
-//! copy) across N concurrent per-viewer sessions and renders whole viewer
-//! batches in parallel — the serving-at-scale entry point.
+//! copy, shard map) across N concurrent per-viewer sessions and renders
+//! whole viewer batches in parallel (private memory systems) or in
+//! deterministic lockstep on one shared, contended memory system — the
+//! serving-at-scale entry points.
 //!
 //! Entry points: [`coordinator::App`] drives single-viewer renders;
 //! [`coordinator::RenderServer`] drives multi-viewer batches;

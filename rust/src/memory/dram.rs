@@ -1,9 +1,32 @@
-//! Event-based LPDDR5 DRAM model (stand-in for Ramulator 2.0 — DESIGN.md §2).
+//! DRAM front-end: configuration, statistics, and the request-sink
+//! interface shared by every memory backend.
 //!
-//! Models the properties the paper's experiments measure: access counts,
-//! burst efficiency of contiguous ranges, row-buffer locality, per-access
-//! energy, and channel busy time. Timing/energy constants follow published
-//! LPDDR5-6400 figures.
+//! The crate has two DRAM timing backends behind one statistics contract:
+//!
+//! * [`SyncDramModel`](super::oracle::SyncDramModel) — the original
+//!   synchronous-per-read model, frozen in `memory::oracle` as the
+//!   determinism oracle (re-exported here as [`DramModel`] for the frozen
+//!   `pipeline::oracle` monolith and the figure benches);
+//! * [`MemorySystem`](super::event_queue::MemorySystem) — the event-queue
+//!   model with per-channel queues, outstanding-transaction limits, and
+//!   cross-stream contention, reached through a
+//!   [`MemPort`](super::event_queue::MemPort) handle.
+//!
+//! Stage code issues requests through the [`MemSink`] trait so the cull and
+//! blend paths are backend-agnostic; which backend a pipeline uses is a
+//! [`MemSimConfig`](super::event_queue::MemSimConfig) decision.
+
+use crate::util::json::Json;
+
+/// The request interface every DRAM backend implements. Stage code (DR-FC
+/// culling, the conventional sweep, the blend miss-fill) is generic over
+/// this trait, so the same request stream can be charged to the synchronous
+/// oracle or queued into the event-queue [`MemorySystem`]
+/// (`super::event_queue::MemorySystem`).
+pub trait MemSink {
+    /// Read `bytes` starting at byte address `addr`.
+    fn read(&mut self, addr: u64, bytes: u64);
+}
 
 /// LPDDR5 channel configuration.
 #[derive(Debug, Clone, Copy)]
@@ -22,7 +45,9 @@ pub struct DramConfig {
     pub e_access_pj_per_bit: f64,
     /// Extra energy per row activation (pJ).
     pub e_activate_pj: f64,
-    /// Number of independent channels (accesses are striped round-robin).
+    /// Number of independent channels. The synchronous oracle stripes
+    /// accesses round-robin; the event-queue model reads this as *channels
+    /// per shard group*.
     pub channels: usize,
 }
 
@@ -55,8 +80,21 @@ pub struct DramStats {
     pub row_misses: u64,
     /// Total access energy (pJ).
     pub energy_pj: f64,
-    /// Channel busy time (ns), after striping across channels.
+    /// Time the memory system was busy on this stream's behalf (ns). The
+    /// synchronous oracle charges service time striped across channels; the
+    /// event-queue model charges the union of issue→completion intervals,
+    /// which additionally covers contention wait.
     pub busy_ns: f64,
+    /// Simulated time requests spent waiting on channels occupied by
+    /// *other* request streams, beyond this stream's own completion
+    /// horizon (ns). Always 0 under the synchronous oracle — and 0 for any
+    /// isolated single-port stream at any outstanding depth: queueing
+    /// behind one's own in-flight transactions is pipelining, not
+    /// contention.
+    pub wait_ns: f64,
+    /// Requests that paid a nonzero cross-stream wait. Always 0 under the
+    /// synchronous oracle and for isolated streams.
+    pub stalls: u64,
 }
 
 impl DramStats {
@@ -74,6 +112,15 @@ impl DramStats {
         }
     }
 
+    /// Mean contention wait per request (ns); 0 when no requests were made.
+    pub fn avg_wait_ns(&self) -> f64 {
+        if self.reads == 0 {
+            0.0
+        } else {
+            self.wait_ns / self.reads as f64
+        }
+    }
+
     pub fn add(&mut self, o: &DramStats) {
         self.reads += o.reads;
         self.bytes += o.bytes;
@@ -82,180 +129,135 @@ impl DramStats {
         self.row_misses += o.row_misses;
         self.energy_pj += o.energy_pj;
         self.busy_ns += o.busy_ns;
+        self.wait_ns += o.wait_ns;
+        self.stalls += o.stalls;
+    }
+
+    /// Counter-wise difference against an earlier snapshot of the same
+    /// stream (`self` cumulative, `base` the snapshot). Used by shared-mode
+    /// ports to report per-frame deltas without resetting channel state.
+    pub fn delta(&self, base: &DramStats) -> DramStats {
+        DramStats {
+            reads: self.reads - base.reads,
+            bytes: self.bytes - base.bytes,
+            bursts: self.bursts - base.bursts,
+            row_hits: self.row_hits - base.row_hits,
+            row_misses: self.row_misses - base.row_misses,
+            energy_pj: self.energy_pj - base.energy_pj,
+            busy_ns: self.busy_ns - base.busy_ns,
+            wait_ns: self.wait_ns - base.wait_ns,
+            stalls: self.stalls - base.stalls,
+        }
+    }
+
+    /// Full statistics as a JSON object — one schema for every stage block
+    /// in `TrafficLog::to_json` and the server's contended-memory report,
+    /// so benches stop recomputing derived rates.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("reads", self.reads)
+            .set("bytes", self.bytes)
+            .set("bursts", self.bursts)
+            .set("row_hits", self.row_hits)
+            .set("row_misses", self.row_misses)
+            .set("hit_rate", self.hit_rate())
+            .set("energy_pj", self.energy_pj)
+            .set("busy_ns", self.busy_ns)
+            .set("wait_ns", self.wait_ns)
+            .set("stalls", self.stalls)
     }
 }
 
-/// The DRAM model: tracks per-bank open rows and accumulates stats.
-#[derive(Debug)]
-pub struct DramModel {
-    pub config: DramConfig,
-    stats: DramStats,
-    /// Open row per channel (we model one bank group per channel — the
-    /// locality signal the experiments need is sequential-vs-scattered).
-    open_row: Vec<Option<u64>>,
-}
-
-impl DramModel {
-    pub fn new(config: DramConfig) -> DramModel {
-        DramModel {
-            open_row: vec![None; config.channels],
-            config,
-            stats: DramStats::default(),
-        }
-    }
-
-    pub fn default_lpddr5() -> DramModel {
-        DramModel::new(DramConfig::default())
-    }
-
-    /// Read `bytes` starting at `addr`. Contiguous ranges amortize row
-    /// activations; scattered single-record reads mostly miss.
-    pub fn read(&mut self, addr: u64, bytes: u64) {
-        if bytes == 0 {
-            return;
-        }
-        let cfg = self.config;
-        let first_burst = addr / cfg.burst_bytes;
-        let last_burst = (addr + bytes - 1) / cfg.burst_bytes;
-        let n_bursts = last_burst - first_burst + 1;
-        let bursts_per_row = cfg.row_bytes / cfg.burst_bytes;
-
-        let mut ns;
-        let mut pj;
-        if n_bursts > 4 * bursts_per_row {
-            // Analytic fast path for long contiguous sweeps (equivalent to
-            // the per-burst walk: one activation per row touched) — the
-            // per-burst loop was a host hot spot on multi-MB reads
-            // (EXPERIMENTS.md §Perf).
-            let first_row = (first_burst * cfg.burst_bytes) / cfg.row_bytes;
-            let last_row = (last_burst * cfg.burst_bytes) / cfg.row_bytes;
-            let rows = last_row - first_row + 1;
-            self.stats.row_misses += rows;
-            self.stats.row_hits += n_bursts - rows;
-            for ch in 0..cfg.channels {
-                // Leave each channel's open row as the last row it serves.
-                let r = last_row.saturating_sub(ch as u64);
-                if r >= first_row {
-                    let ch_idx = (r as usize) % cfg.channels;
-                    self.open_row[ch_idx] = Some(r);
-                }
-            }
-            ns = rows as f64 * (cfg.t_rp_ns + cfg.t_rcd_ns)
-                + n_bursts as f64 * cfg.t_burst_ns;
-            pj = rows as f64 * cfg.e_activate_pj
-                + n_bursts as f64 * cfg.e_access_pj_per_bit * (cfg.burst_bytes * 8) as f64;
-        } else {
-            ns = 0.0;
-            pj = 0.0;
-            for b in first_burst..=last_burst {
-                let byte_addr = b * cfg.burst_bytes;
-                let row = byte_addr / cfg.row_bytes;
-                let ch = (row as usize) % cfg.channels;
-                if self.open_row[ch] == Some(row) {
-                    self.stats.row_hits += 1;
-                } else {
-                    self.stats.row_misses += 1;
-                    self.open_row[ch] = Some(row);
-                    ns += cfg.t_rp_ns + cfg.t_rcd_ns;
-                    pj += cfg.e_activate_pj;
-                }
-                ns += cfg.t_burst_ns;
-                pj += cfg.e_access_pj_per_bit * (cfg.burst_bytes * 8) as f64;
-            }
-        }
-
-        self.stats.reads += 1;
-        self.stats.bursts += n_bursts;
-        self.stats.bytes += n_bursts * cfg.burst_bytes;
-        self.stats.energy_pj += pj;
-        // Channel-level parallelism: striped traffic divides busy time.
-        self.stats.busy_ns += ns / cfg.channels as f64;
-    }
-
-    pub fn stats(&self) -> DramStats {
-        self.stats
-    }
-
-    pub fn reset(&mut self) {
-        self.stats = DramStats::default();
-        for r in &mut self.open_row {
-            *r = None;
-        }
-    }
-}
+/// The synchronous model under its historical name: the frozen
+/// `pipeline::oracle` monolith and the figure benches construct a
+/// `DramModel` directly, and that behavior must never drift — it *is* the
+/// determinism baseline. New code takes a
+/// [`MemPort`](super::event_queue::MemPort) (or `impl MemSink`) instead.
+pub type DramModel = super::oracle::SyncDramModel;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn contiguous_read_counts_bursts() {
-        let mut d = DramModel::default_lpddr5();
-        d.read(0, 1024);
-        let s = d.stats();
-        assert_eq!(s.reads, 1);
-        assert_eq!(s.bursts, 32); // 1024 / 32
-        assert_eq!(s.bytes, 1024);
+    fn hit_rate_with_zero_bursts_is_zero() {
+        let s = DramStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.avg_wait_ns(), 0.0);
+        // One miss, no hits: rate is well-defined and zero.
+        let s = DramStats { row_misses: 1, ..DramStats::default() };
+        assert_eq!(s.hit_rate(), 0.0);
     }
 
     #[test]
-    fn contiguous_has_high_row_hit_rate() {
-        let mut d = DramModel::default_lpddr5();
-        d.read(0, 64 * 1024);
-        assert!(d.stats().hit_rate() > 0.9, "hit rate {}", d.stats().hit_rate());
+    fn add_accumulates_latency_and_contention_fields() {
+        let mut a = DramStats {
+            reads: 2,
+            busy_ns: 10.0,
+            wait_ns: 3.0,
+            stalls: 1,
+            ..DramStats::default()
+        };
+        let b = DramStats {
+            reads: 3,
+            busy_ns: 5.0,
+            wait_ns: 2.5,
+            stalls: 2,
+            ..DramStats::default()
+        };
+        a.add(&b);
+        assert_eq!(a.reads, 5);
+        assert_eq!(a.busy_ns, 15.0);
+        assert_eq!(a.wait_ns, 5.5);
+        assert_eq!(a.stalls, 3);
+        assert_eq!(a.avg_wait_ns(), 1.1);
     }
 
     #[test]
-    fn scattered_reads_mostly_miss() {
-        let mut d = DramModel::default_lpddr5();
-        // Stride row-sized: every read opens a new row.
-        for i in 0..256u64 {
-            d.read(i * 2048 * 7, 32);
+    fn delta_subtracts_snapshot() {
+        let base = DramStats {
+            reads: 1,
+            bytes: 32,
+            bursts: 1,
+            row_hits: 0,
+            row_misses: 1,
+            energy_pj: 10.0,
+            busy_ns: 4.0,
+            wait_ns: 0.0,
+            stalls: 0,
+        };
+        let mut cum = base;
+        cum.add(&DramStats {
+            reads: 2,
+            bytes: 64,
+            bursts: 2,
+            row_hits: 2,
+            row_misses: 0,
+            energy_pj: 6.0,
+            busy_ns: 2.0,
+            wait_ns: 1.0,
+            stalls: 1,
+        });
+        let d = cum.delta(&base);
+        assert_eq!(d.reads, 2);
+        assert_eq!(d.bytes, 64);
+        assert_eq!(d.bursts, 2);
+        assert_eq!(d.row_hits, 2);
+        assert_eq!(d.row_misses, 0);
+        assert!((d.energy_pj - 6.0).abs() < 1e-12);
+        assert!((d.busy_ns - 2.0).abs() < 1e-12);
+        assert!((d.wait_ns - 1.0).abs() < 1e-12);
+        assert_eq!(d.stalls, 1);
+    }
+
+    #[test]
+    fn stats_json_has_full_schema() {
+        let s = DramStats { row_hits: 3, row_misses: 1, ..DramStats::default() };
+        let js = s.to_json().pretty();
+        for key in
+            ["reads", "bytes", "bursts", "hit_rate", "energy_pj", "busy_ns", "wait_ns", "stalls"]
+        {
+            assert!(js.contains(key), "missing {key} in {js}");
         }
-        assert!(d.stats().hit_rate() < 0.1);
-    }
-
-    #[test]
-    fn scattered_costs_more_energy_per_byte() {
-        let mut seq = DramModel::default_lpddr5();
-        seq.read(0, 8192);
-        let e_seq = seq.stats().energy_pj / seq.stats().bytes as f64;
-
-        let mut sc = DramModel::default_lpddr5();
-        for i in 0..256u64 {
-            sc.read(i * 2048 * 3, 32);
-        }
-        let e_sc = sc.stats().energy_pj / sc.stats().bytes as f64;
-        assert!(e_sc > 2.0 * e_seq, "scattered {e_sc} vs sequential {e_seq}");
-    }
-
-    #[test]
-    fn partial_burst_rounds_up() {
-        let mut d = DramModel::default_lpddr5();
-        d.read(10, 8); // spans a single burst
-        assert_eq!(d.stats().bursts, 1);
-        assert_eq!(d.stats().bytes, 32);
-        let mut d2 = DramModel::default_lpddr5();
-        d2.read(30, 8); // straddles a burst boundary
-        assert_eq!(d2.stats().bursts, 2);
-    }
-
-    #[test]
-    fn reset_clears() {
-        let mut d = DramModel::default_lpddr5();
-        d.read(0, 4096);
-        d.reset();
-        assert_eq!(d.stats(), DramStats::default());
-    }
-
-    #[test]
-    fn stats_add_accumulates() {
-        let mut a = DramStats::default();
-        let mut d = DramModel::default_lpddr5();
-        d.read(0, 1024);
-        a.add(&d.stats());
-        a.add(&d.stats());
-        assert_eq!(a.bytes, 2048);
-        assert_eq!(a.reads, 2);
     }
 }

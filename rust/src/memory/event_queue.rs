@@ -1,0 +1,841 @@
+//! Event-queue memory subsystem: asynchronous DRAM channels with
+//! outstanding-transaction limits, shard-aware channel groups, and
+//! port-attributed contention statistics.
+//!
+//! # Timing model
+//!
+//! The system simulates one global nanosecond timeline. Every *port* (one
+//! per pipeline stage per viewer) carries its own issue clock; every
+//! *channel* carries row-buffer state, a FIFO service horizon (`free_at`),
+//! and cumulative occupancy. A request [`MemRequest`] is split at shard
+//! boundaries (see [`ShardMap`]), its bursts striped row-wise across the
+//! shard's channel group, and each channel serves its share in
+//! simulated-time arrival order:
+//!
+//! ```text
+//! issue      = max(port clock, oldest outstanding completion if the
+//!              per-port outstanding-transaction window is full)
+//! start[ch]  = max(issue, channel free_at)
+//! finish[ch] = start[ch] + service(row walk)
+//! ```
+//!
+//! Because arrival order equals processing order, the per-channel pending
+//! queue collapses to its completion horizon — the queue is implicit in
+//! `free_at`, which is what "retired in simulated-time order" needs while
+//! keeping the hot path allocation-free.
+//!
+//! Per-port statistics separate **service** from **contention**:
+//! `busy_ns` accumulates the union of issue→completion intervals (so
+//! overlapped in-flight transactions are not double counted), while
+//! `wait_ns` / `stalls` meter only *cross-stream* queueing — channel busy
+//! time beyond the port's own completion horizon. An isolated stream
+//! therefore waits for nothing at any outstanding depth (queueing behind
+//! your own in-flight transactions is pipelining, not contention); with
+//! `channels = 1, outstanding = 1, shards = 1` the model reproduces the
+//! synchronous oracle ([`SyncDramModel`](super::oracle::SyncDramModel))
+//! statistics bit-for-bit (the `memory_event_queue` determinism suite).
+//!
+//! Frame pacing: [`MemorySystem::advance_epoch`] aligns every port clock to
+//! the global completion horizon — callers invoke it at frame boundaries
+//! (a private pipeline per frame; the contended `RenderServer` batch per
+//! viewer round) so stale horizons never masquerade as contention.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::dram::{DramConfig, DramStats, MemSink};
+use super::oracle::SyncDramModel;
+use super::shard::ShardMap;
+
+/// Which pipeline stage a request belongs to (per-stage stats + completion
+/// times are what let cull fetch and blend miss-fill overlap in the model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemStage {
+    /// Culling parameter fetch (preprocess superstage).
+    Preprocess,
+    /// Blend-buffer miss fill.
+    Blend,
+}
+
+impl MemStage {
+    #[inline]
+    pub fn idx(self) -> usize {
+        match self {
+            MemStage::Preprocess => 0,
+            MemStage::Blend => 1,
+        }
+    }
+}
+
+/// One memory request as it enters the per-channel queues.
+#[derive(Debug, Clone, Copy)]
+pub struct MemRequest {
+    /// Byte address (global scene address space).
+    pub addr: u64,
+    /// Byte count; must not cross a shard boundary (the port front-end
+    /// splits requests before submission).
+    pub bytes: u64,
+    /// Issuing pipeline stage.
+    pub stage: MemStage,
+    /// Target shard = channel group (from [`ShardMap::shard_of`]).
+    pub shard: usize,
+}
+
+/// Which DRAM timing backend a pipeline simulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemMode {
+    /// The original synchronous-per-read model (the determinism baseline —
+    /// bit-identical to the frozen `pipeline::oracle` monolith).
+    Sync,
+    /// The event-queue model: outstanding transactions, channel queues,
+    /// shard groups, contention.
+    EventQueue,
+}
+
+/// Memory-simulation configuration carried by `PipelineConfig`.
+#[derive(Debug, Clone)]
+pub struct MemSimConfig {
+    pub mode: MemMode,
+    /// Per-channel(-group) LPDDR5 timing. Under [`MemMode::EventQueue`],
+    /// `dram.channels` is the channel count *per shard group*.
+    pub dram: DramConfig,
+    /// Outstanding-transaction window per port (≥ 1).
+    pub outstanding: usize,
+    /// Scene shards = channel groups (≥ 1).
+    pub shards: usize,
+}
+
+impl Default for MemSimConfig {
+    fn default() -> Self {
+        MemSimConfig {
+            mode: MemMode::Sync,
+            dram: DramConfig::default(),
+            outstanding: 4,
+            shards: 1,
+        }
+    }
+}
+
+impl MemSimConfig {
+    /// Event-queue mode at the default LPDDR5 operating point.
+    pub fn event_queue() -> MemSimConfig {
+        MemSimConfig { mode: MemMode::EventQueue, ..MemSimConfig::default() }
+    }
+
+    /// The determinism-suite configuration: one channel, one outstanding
+    /// transaction, one shard — the operating point that must reproduce
+    /// the synchronous oracle bit-for-bit.
+    pub fn oracle_point() -> MemSimConfig {
+        MemSimConfig {
+            mode: MemMode::EventQueue,
+            dram: DramConfig { channels: 1, ..DramConfig::default() },
+            outstanding: 1,
+            shards: 1,
+        }
+    }
+
+    /// Total simulated channels (`shards × channels-per-group`).
+    pub fn total_channels(&self) -> usize {
+        self.shards.max(1) * self.dram.channels.max(1)
+    }
+}
+
+/// Port identifier within one [`MemorySystem`].
+pub type PortId = usize;
+
+#[derive(Debug)]
+struct Channel {
+    open_row: Option<u64>,
+    /// Completion horizon of the implicit FIFO queue.
+    free_at_ns: f64,
+    /// Cumulative service time (occupancy) on this channel.
+    service_ns: f64,
+    /// Requests (or request slices) served.
+    served: u64,
+}
+
+impl Channel {
+    fn new() -> Channel {
+        Channel { open_row: None, free_at_ns: 0.0, service_ns: 0.0, served: 0 }
+    }
+}
+
+#[derive(Debug)]
+struct PortState {
+    /// Port-local issue clock.
+    now_ns: f64,
+    /// Completion times of in-flight transactions, in issue order.
+    inflight: VecDeque<f64>,
+    /// Latest completion observed by this port (any stage).
+    last_completion_ns: f64,
+    /// Cumulative per-stage statistics.
+    stats: [DramStats; 2],
+    /// Per-stage first-issue / last-completion timestamps.
+    first_issue_ns: [f64; 2],
+    last_completion_stage_ns: [f64; 2],
+}
+
+impl PortState {
+    fn new(now_ns: f64) -> PortState {
+        PortState {
+            now_ns,
+            inflight: VecDeque::new(),
+            last_completion_ns: now_ns,
+            stats: [DramStats::default(); 2],
+            first_issue_ns: [f64::INFINITY; 2],
+            last_completion_stage_ns: [0.0; 2],
+        }
+    }
+}
+
+/// The shared, contended event-queue memory system.
+#[derive(Debug)]
+pub struct MemorySystem {
+    pub config: MemSimConfig,
+    pub shard_map: ShardMap,
+    channels: Vec<Channel>,
+    ports: Vec<PortState>,
+    /// Per-request scratch: service time per channel of the active group.
+    svc_ns: Vec<f64>,
+    /// Per-request scratch (fast path): bursts / rows per group channel.
+    svc_bursts: Vec<u64>,
+    svc_rows: Vec<u64>,
+}
+
+impl MemorySystem {
+    /// Build the system over `shard_map`. The map is the single source of
+    /// truth for the shard count: `config.shards` is normalized to it so
+    /// the channel array, the address translation, and every report agree.
+    pub fn new(mut config: MemSimConfig, shard_map: ShardMap) -> MemorySystem {
+        let group = config.dram.channels.max(1);
+        config.shards = shard_map.shards.max(1);
+        let total = config.shards * group;
+        MemorySystem {
+            channels: (0..total).map(|_| Channel::new()).collect(),
+            svc_ns: vec![0.0; group],
+            svc_bursts: vec![0; group],
+            svc_rows: vec![0; group],
+            config,
+            shard_map,
+            ports: Vec::new(),
+        }
+    }
+
+    /// Register a new request port (one per stage per viewer). Ports
+    /// registered after simulation started join at the current horizon,
+    /// never in the past.
+    pub fn register_port(&mut self) -> PortId {
+        let at = self.horizon_ns();
+        self.ports.push(PortState::new(at));
+        self.ports.len() - 1
+    }
+
+    pub fn n_ports(&self) -> usize {
+        self.ports.len()
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Read `bytes` at `addr` on behalf of `port`/`stage`, splitting at
+    /// shard boundaries.
+    pub fn read(&mut self, port: PortId, stage: MemStage, addr: u64, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let map = self.shard_map;
+        map.split(addr, bytes, |shard, a, b| {
+            self.submit(port, MemRequest { addr: a, bytes: b, stage, shard });
+        });
+    }
+
+    /// Submit one shard-local request to its channel group's queues.
+    pub fn submit(&mut self, port: PortId, req: MemRequest) {
+        if req.bytes == 0 {
+            return;
+        }
+        let cfg = self.config.dram;
+        let group = cfg.channels.max(1);
+        let base_ch = req.shard.min(self.shard_map.shards - 1) * group;
+        let outstanding = self.config.outstanding.max(1);
+        let stage = req.stage.idx();
+
+        let first_burst = req.addr / cfg.burst_bytes;
+        let last_burst = (req.addr + req.bytes - 1) / cfg.burst_bytes;
+        let n_bursts = last_burst - first_burst + 1;
+        let bursts_per_row = cfg.row_bytes / cfg.burst_bytes;
+
+        // ---- issue time: the outstanding-transaction window -------------
+        let issue = {
+            let p = &mut self.ports[port];
+            let mut issue = p.now_ns;
+            if p.inflight.len() >= outstanding {
+                if let Some(oldest) = p.inflight.pop_front() {
+                    if oldest > issue {
+                        issue = oldest;
+                    }
+                }
+            }
+            p.now_ns = issue;
+            issue
+        };
+
+        // ---- service: row-buffer walk over the shard's channel group ----
+        // Per-channel service time of this request lands in `svc_ns`;
+        // hit/miss counts and energy accumulate into the locals below in
+        // the same order the synchronous oracle uses (bit-exactness with
+        // one channel per group).
+        let channels = &mut self.channels;
+        let svc_ns = &mut self.svc_ns;
+        for v in svc_ns.iter_mut() {
+            *v = 0.0;
+        }
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let mut pj = 0.0f64;
+        if n_bursts > 4 * bursts_per_row {
+            // Analytic fast path (mirrors the oracle): one activation per
+            // row touched, rows striped row-wise over the group.
+            let first_row = (first_burst * cfg.burst_bytes) / cfg.row_bytes;
+            let last_row = (last_burst * cfg.burst_bytes) / cfg.row_bytes;
+            let g = group as u64;
+            let svc_bursts = &mut self.svc_bursts;
+            let svc_rows = &mut self.svc_rows;
+            for c in 0..group {
+                // Rows r in [first_row, last_row] with r % g == c.
+                let c64 = c as u64;
+                let offset = (c64 + g - (first_row % g)) % g;
+                let first_c = first_row + offset;
+                let rows_c =
+                    if first_c > last_row { 0 } else { (last_row - first_c) / g + 1 };
+                svc_rows[c] = rows_c;
+                svc_bursts[c] = rows_c * bursts_per_row;
+            }
+            // The first and last rows are only partially covered.
+            let lead = first_burst % bursts_per_row;
+            let tail = bursts_per_row - 1 - (last_burst % bursts_per_row);
+            svc_bursts[(first_row % g) as usize] -= lead;
+            svc_bursts[(last_row % g) as usize] -= tail;
+            for c in 0..group {
+                let rows_c = svc_rows[c];
+                let bursts_c = svc_bursts[c];
+                if bursts_c == 0 {
+                    continue;
+                }
+                misses += rows_c;
+                hits += bursts_c - rows_c;
+                svc_ns[c] = rows_c as f64 * (cfg.t_rp_ns + cfg.t_rcd_ns)
+                    + bursts_c as f64 * cfg.t_burst_ns;
+                pj += rows_c as f64 * cfg.e_activate_pj
+                    + bursts_c as f64 * cfg.e_access_pj_per_bit * (cfg.burst_bytes * 8) as f64;
+                // Leave the channel's open row as the last row it serves.
+                let c64 = c as u64;
+                let last_c = last_row - ((last_row % g) + g - c64) % g;
+                if last_c >= first_row {
+                    channels[base_ch + c].open_row = Some(last_c);
+                }
+            }
+        } else {
+            for b in first_burst..=last_burst {
+                let byte_addr = b * cfg.burst_bytes;
+                let row = byte_addr / cfg.row_bytes;
+                let c = (row as usize) % group;
+                let ch = &mut channels[base_ch + c];
+                if ch.open_row == Some(row) {
+                    hits += 1;
+                } else {
+                    misses += 1;
+                    ch.open_row = Some(row);
+                    svc_ns[c] += cfg.t_rp_ns + cfg.t_rcd_ns;
+                    pj += cfg.e_activate_pj;
+                }
+                svc_ns[c] += cfg.t_burst_ns;
+                pj += cfg.e_access_pj_per_bit * (cfg.burst_bytes * 8) as f64;
+            }
+        }
+
+        // ---- queueing: arrival-ordered FIFO per channel -----------------
+        let base = {
+            let p = &self.ports[port];
+            if p.last_completion_ns > issue { p.last_completion_ns } else { issue }
+        };
+        let mut completion = issue;
+        let mut wait = 0.0f64;
+        let mut involved = 0usize;
+        let mut single_ns = 0.0f64;
+        let mut single_start = issue;
+        for c in 0..group {
+            let ns = svc_ns[c];
+            if ns <= 0.0 {
+                continue;
+            }
+            let ch = &mut channels[base_ch + c];
+            let start = if ch.free_at_ns > issue { ch.free_at_ns } else { issue };
+            let comp = start + ns;
+            ch.free_at_ns = comp;
+            ch.service_ns += ns;
+            ch.served += 1;
+            // Contention wait: channel busy time beyond this port's own
+            // completion horizon (`base`). Queueing behind the port's own
+            // earlier in-flight transactions is pipelining, not
+            // contention — an isolated stream waits for nothing at any
+            // `outstanding` setting.
+            if start - base > wait {
+                wait = start - base;
+            }
+            if comp > completion {
+                completion = comp;
+            }
+            involved += 1;
+            single_ns = ns;
+            single_start = start;
+        }
+        // Union-of-intervals busy increment. The single-channel sequential
+        // case is computed as (start − base) + service so the no-wait path
+        // stays exactly equal to the service time (oracle bit-identity).
+        let busy_inc = if involved == 1 {
+            let lead = single_start - base;
+            if lead >= 0.0 {
+                lead + single_ns
+            } else {
+                let inc = (single_start + single_ns) - base;
+                if inc > 0.0 { inc } else { 0.0 }
+            }
+        } else {
+            let inc = completion - base;
+            if inc > 0.0 { inc } else { 0.0 }
+        };
+
+        // ---- retire into port statistics --------------------------------
+        let p = &mut self.ports[port];
+        p.inflight.push_back(completion);
+        if completion > p.last_completion_ns {
+            p.last_completion_ns = completion;
+        }
+        if issue < p.first_issue_ns[stage] {
+            p.first_issue_ns[stage] = issue;
+        }
+        if completion > p.last_completion_stage_ns[stage] {
+            p.last_completion_stage_ns[stage] = completion;
+        }
+        let s = &mut p.stats[stage];
+        s.reads += 1;
+        s.bursts += n_bursts;
+        s.bytes += n_bursts * cfg.burst_bytes;
+        s.row_hits += hits;
+        s.row_misses += misses;
+        s.energy_pj += pj;
+        s.busy_ns += busy_inc;
+        s.wait_ns += wait;
+        if wait > 0.0 {
+            s.stalls += 1;
+        }
+    }
+
+    /// Global completion horizon: the latest simulated time any channel or
+    /// port has reached.
+    pub fn horizon_ns(&self) -> f64 {
+        let mut h = 0.0f64;
+        for ch in &self.channels {
+            if ch.free_at_ns > h {
+                h = ch.free_at_ns;
+            }
+        }
+        for p in &self.ports {
+            if p.last_completion_ns > h {
+                h = p.last_completion_ns;
+            }
+        }
+        h
+    }
+
+    /// Frame barrier: advance every port clock to the completion horizon
+    /// (all in-flight transactions retire). Returns the new epoch time.
+    pub fn advance_epoch(&mut self) -> f64 {
+        let epoch = self.horizon_ns();
+        for p in &mut self.ports {
+            p.now_ns = epoch;
+            p.inflight.clear();
+        }
+        epoch
+    }
+
+    /// Cumulative statistics of one port's stage stream.
+    pub fn port_stage_stats(&self, port: PortId, stage: MemStage) -> DramStats {
+        self.ports[port].stats[stage.idx()]
+    }
+
+    /// Per-stage (first issue, last completion) span of a port: the
+    /// overlap-aware window on the simulated timeline during which the
+    /// stage's requests were in flight. `(0, 0)` before any traffic.
+    pub fn port_stage_span(&self, port: PortId, stage: MemStage) -> (f64, f64) {
+        let p = &self.ports[port];
+        let i = stage.idx();
+        if p.first_issue_ns[i].is_finite() {
+            (p.first_issue_ns[i], p.last_completion_stage_ns[i])
+        } else {
+            (0.0, 0.0)
+        }
+    }
+
+    /// Cumulative service occupancy per channel (ns).
+    pub fn channel_service_ns(&self) -> Vec<f64> {
+        self.channels.iter().map(|c| c.service_ns).collect()
+    }
+
+    /// Requests (or shard-split request slices) served per channel.
+    pub fn channel_served(&self) -> Vec<u64> {
+        self.channels.iter().map(|c| c.served).collect()
+    }
+
+    /// Per-channel utilization over the simulated makespan (0 when idle).
+    pub fn channel_utilization(&self) -> Vec<f64> {
+        let makespan = self.horizon_ns();
+        if makespan <= 0.0 {
+            return vec![0.0; self.channels.len()];
+        }
+        self.channels.iter().map(|c| c.service_ns / makespan).collect()
+    }
+}
+
+/// The stage-facing request handle: either a private synchronous model
+/// (the determinism baseline) or a registered port of a shared event-queue
+/// [`MemorySystem`].
+#[derive(Debug)]
+pub struct MemPort {
+    stage: MemStage,
+    backend: PortBackend,
+    /// Snapshot taken by `begin_frame` (shared backend): frame statistics
+    /// are reported as deltas so channel state persists across frames.
+    frame_base: DramStats,
+    /// Lifetime totals of frames already retired by `begin_frame`
+    /// (synchronous backend only — the model itself resets per frame).
+    sync_lifetime: DramStats,
+}
+
+#[derive(Debug)]
+enum PortBackend {
+    Sync(SyncDramModel),
+    Shared { sys: Arc<Mutex<MemorySystem>>, id: PortId },
+}
+
+impl MemPort {
+    /// Private synchronous backend (bit-identical to the pre-refactor
+    /// per-stage `DramModel`).
+    pub fn sync(config: DramConfig, stage: MemStage) -> MemPort {
+        MemPort {
+            stage,
+            backend: PortBackend::Sync(SyncDramModel::new(config)),
+            frame_base: DramStats::default(),
+            sync_lifetime: DramStats::default(),
+        }
+    }
+
+    /// Register a new port on a shared event-queue system.
+    pub fn shared(sys: &Arc<Mutex<MemorySystem>>, stage: MemStage) -> MemPort {
+        let id = sys.lock().expect("memory system lock poisoned").register_port();
+        MemPort {
+            stage,
+            backend: PortBackend::Shared { sys: Arc::clone(sys), id },
+            frame_base: DramStats::default(),
+            sync_lifetime: DramStats::default(),
+        }
+    }
+
+    pub fn stage(&self) -> MemStage {
+        self.stage
+    }
+
+    /// The registered [`PortId`] on the shared event-queue system (None
+    /// for a private synchronous backend). This is how owners of a shared
+    /// `MemorySystem` (the contended batch) map ports back to viewers
+    /// without assuming a registration order.
+    pub fn shared_id(&self) -> Option<PortId> {
+        match &self.backend {
+            PortBackend::Sync(_) => None,
+            PortBackend::Shared { id, .. } => Some(*id),
+        }
+    }
+
+    /// Start a new frame: the synchronous backend resets (cold rows, zero
+    /// stats — the pre-refactor per-frame contract); the shared backend
+    /// snapshots cumulative statistics and keeps all channel state.
+    pub fn begin_frame(&mut self) {
+        let stage = self.stage;
+        match &mut self.backend {
+            PortBackend::Sync(m) => {
+                self.sync_lifetime.add(&m.stats());
+                m.reset();
+            }
+            PortBackend::Shared { sys, id } => {
+                self.frame_base = sys
+                    .lock()
+                    .expect("memory system lock poisoned")
+                    .port_stage_stats(*id, stage);
+            }
+        }
+    }
+
+    /// Issue a read on this port.
+    pub fn read(&mut self, addr: u64, bytes: u64) {
+        let stage = self.stage;
+        match &mut self.backend {
+            PortBackend::Sync(m) => m.read(addr, bytes),
+            PortBackend::Shared { sys, id } => sys
+                .lock()
+                .expect("memory system lock poisoned")
+                .read(*id, stage, addr, bytes),
+        }
+    }
+
+    /// Statistics since the last `begin_frame` (or construction).
+    pub fn stats(&self) -> DramStats {
+        match &self.backend {
+            PortBackend::Sync(m) => m.stats(),
+            PortBackend::Shared { sys, id } => sys
+                .lock()
+                .expect("memory system lock poisoned")
+                .port_stage_stats(*id, self.stage)
+                .delta(&self.frame_base),
+        }
+    }
+
+    /// Cumulative statistics across the port's lifetime (both backends:
+    /// every frame ever issued, not just the one since `begin_frame`).
+    pub fn cumulative(&self) -> DramStats {
+        match &self.backend {
+            PortBackend::Sync(m) => {
+                let mut s = self.sync_lifetime;
+                s.add(&m.stats());
+                s
+            }
+            PortBackend::Shared { sys, id } => sys
+                .lock()
+                .expect("memory system lock poisoned")
+                .port_stage_stats(*id, self.stage),
+        }
+    }
+}
+
+impl MemSink for MemPort {
+    fn read(&mut self, addr: u64, bytes: u64) {
+        MemPort::read(self, addr, bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oracle_sys() -> MemorySystem {
+        let cfg = MemSimConfig::oracle_point();
+        let map = ShardMap::single(1 << 24);
+        MemorySystem::new(cfg, map)
+    }
+
+    #[test]
+    fn isolated_sequential_stream_never_waits() {
+        let mut sys = oracle_sys();
+        let p = sys.register_port();
+        for i in 0..64u64 {
+            sys.read(p, MemStage::Preprocess, i * 4096, 128);
+        }
+        let s = sys.port_stage_stats(p, MemStage::Preprocess);
+        assert_eq!(s.reads, 64);
+        assert_eq!(s.wait_ns, 0.0);
+        assert_eq!(s.stalls, 0);
+        assert!(s.busy_ns > 0.0);
+    }
+
+    #[test]
+    fn isolated_stream_with_deep_outstanding_window_never_waits() {
+        // Queueing behind one's own in-flight transactions is pipelining,
+        // not contention: at any `outstanding` depth an isolated stream
+        // must report zero wait/stalls.
+        let cfg = MemSimConfig {
+            mode: MemMode::EventQueue,
+            dram: DramConfig { channels: 2, ..DramConfig::default() },
+            outstanding: 8,
+            shards: 1,
+        };
+        let mut sys = MemorySystem::new(cfg, ShardMap::single(1 << 24));
+        let p = sys.register_port();
+        for i in 0..128u64 {
+            sys.read(p, MemStage::Preprocess, i * 2048 * 3, 64);
+        }
+        let s = sys.port_stage_stats(p, MemStage::Preprocess);
+        assert_eq!(s.wait_ns, 0.0, "self-queueing must not count as contention");
+        assert_eq!(s.stalls, 0);
+        assert!(s.busy_ns > 0.0);
+        // The stage span is the overlap-aware in-flight window: with two
+        // channels and a deep outstanding window it is shorter than the
+        // serial service sum but never shorter than the busy union.
+        let (first, last) = sys.port_stage_span(p, MemStage::Preprocess);
+        assert_eq!(first, 0.0);
+        assert_eq!(last, sys.horizon_ns());
+        assert!(last - first >= s.busy_ns - 1e-9);
+    }
+
+    #[test]
+    fn contending_ports_keep_their_byte_counts_but_pay_in_time() {
+        let cfg = MemSimConfig {
+            mode: MemMode::EventQueue,
+            dram: DramConfig { channels: 2, ..DramConfig::default() },
+            outstanding: 4,
+            shards: 1,
+        };
+        let mk = || MemorySystem::new(cfg.clone(), ShardMap::single(1 << 24));
+
+        // Isolated: each stream alone on its own system.
+        let mut iso_a = mk();
+        let mut iso_b = mk();
+        let pa = iso_a.register_port();
+        let pb = iso_b.register_port();
+        for i in 0..128u64 {
+            iso_a.read(pa, MemStage::Preprocess, i * 2048 * 3, 64);
+        }
+        for i in 0..128u64 {
+            iso_b.read(pb, MemStage::Blend, (i + 7) * 2048 * 5, 64);
+        }
+        let a_alone = iso_a.port_stage_stats(pa, MemStage::Preprocess);
+        let b_alone = iso_b.port_stage_stats(pb, MemStage::Blend);
+        assert_eq!(a_alone.wait_ns, 0.0);
+        assert_eq!(b_alone.wait_ns, 0.0);
+
+        // Shared: B's stream lands while A's traffic still occupies the
+        // channels (both ports join at epoch 0 — the lockstep-round
+        // arrival model).
+        let mut sys = mk();
+        let qa = sys.register_port();
+        let qb = sys.register_port();
+        for i in 0..128u64 {
+            sys.read(qa, MemStage::Preprocess, i * 2048 * 3, 64);
+        }
+        for i in 0..128u64 {
+            sys.read(qb, MemStage::Blend, (i + 7) * 2048 * 5, 64);
+        }
+        let a_shared = sys.port_stage_stats(qa, MemStage::Preprocess);
+        let b_shared = sys.port_stage_stats(qb, MemStage::Blend);
+
+        // Addresses are timing-independent: transfer counts identical.
+        assert_eq!(a_shared.bytes, a_alone.bytes);
+        assert_eq!(a_shared.bursts, a_alone.bursts);
+        assert_eq!(b_shared.bytes, b_alone.bytes);
+        assert_eq!(b_shared.bursts, b_alone.bursts);
+        // Contention is port-attributed: A (first in) waits for nothing;
+        // B queues behind A's backlog beyond its own horizon.
+        assert_eq!(a_shared.wait_ns, 0.0);
+        assert!(b_shared.wait_ns > 0.0, "port B should queue behind A");
+        assert!(b_shared.stalls > 0);
+        assert!(
+            a_shared.busy_ns + b_shared.busy_ns > a_alone.busy_ns + b_alone.busy_ns,
+            "shared busy {} + {} vs isolated {} + {}",
+            a_shared.busy_ns,
+            b_shared.busy_ns,
+            a_alone.busy_ns,
+            b_alone.busy_ns
+        );
+    }
+
+    #[test]
+    fn advance_epoch_aligns_ports_to_horizon() {
+        let mut sys = oracle_sys();
+        let p = sys.register_port();
+        sys.read(p, MemStage::Preprocess, 0, 1 << 16);
+        let h = sys.horizon_ns();
+        assert!(h > 0.0);
+        let epoch = sys.advance_epoch();
+        assert_eq!(epoch, h);
+        // A port registered after traffic joins at the horizon, not at 0.
+        let q = sys.register_port();
+        sys.read(q, MemStage::Blend, 0, 64);
+        let s = sys.port_stage_stats(q, MemStage::Blend);
+        assert_eq!(s.wait_ns, 0.0, "fresh port must not see stale horizons as waits");
+    }
+
+    #[test]
+    fn shard_split_preserves_totals() {
+        let cfg = MemSimConfig {
+            mode: MemMode::EventQueue,
+            dram: DramConfig { channels: 1, ..DramConfig::default() },
+            outstanding: 1,
+            shards: 4,
+        };
+        let map = ShardMap::build(1 << 20, 4, 2048);
+        let mut sys = MemorySystem::new(cfg, map);
+        assert_eq!(sys.n_channels(), 4);
+        let p = sys.register_port();
+        // One read spanning all four shards.
+        let bytes = map.shard_bytes * 3;
+        sys.read(p, MemStage::Preprocess, map.shard_bytes / 2, bytes);
+        let s = sys.port_stage_stats(p, MemStage::Preprocess);
+        assert_eq!(s.bytes, bytes); // burst-aligned addresses: exact
+        assert!(s.reads >= 4, "split into at least one piece per shard");
+        // All four channel groups saw traffic (one request slice each).
+        let svc = sys.channel_service_ns();
+        assert!(svc.iter().all(|&v| v > 0.0), "service {svc:?}");
+        assert!(sys.channel_served().iter().all(|&n| n >= 1));
+    }
+
+    #[test]
+    fn more_channels_per_group_shorten_busy_time() {
+        let mk = |channels: usize| {
+            let cfg = MemSimConfig {
+                mode: MemMode::EventQueue,
+                dram: DramConfig { channels, ..DramConfig::default() },
+                outstanding: 4,
+                shards: 1,
+            };
+            MemorySystem::new(cfg, ShardMap::single(1 << 24))
+        };
+        let mut one = mk(1);
+        let mut four = mk(4);
+        let p1 = one.register_port();
+        let p4 = four.register_port();
+        one.read(p1, MemStage::Preprocess, 0, 1 << 20);
+        four.read(p4, MemStage::Preprocess, 0, 1 << 20);
+        let s1 = one.port_stage_stats(p1, MemStage::Preprocess);
+        let s4 = four.port_stage_stats(p4, MemStage::Preprocess);
+        assert_eq!(s1.bytes, s4.bytes);
+        assert!(
+            s4.busy_ns < s1.busy_ns / 2.0,
+            "4-channel sweep {} should be well under half the 1-channel {}",
+            s4.busy_ns,
+            s1.busy_ns
+        );
+    }
+
+    #[test]
+    fn sync_port_cumulative_spans_frames() {
+        let mut port = MemPort::sync(DramConfig::default(), MemStage::Preprocess);
+        assert_eq!(port.shared_id(), None);
+        port.begin_frame();
+        port.read(0, 4096);
+        assert_eq!(port.stats().bytes, 4096);
+        port.begin_frame();
+        port.read(0, 1024);
+        // Frame stats are the current frame; cumulative covers every frame.
+        assert_eq!(port.stats().bytes, 1024);
+        assert_eq!(port.cumulative().bytes, 4096 + 1024);
+        assert_eq!(port.cumulative().reads, 2);
+    }
+
+    #[test]
+    fn mem_port_frame_delta_reporting() {
+        let sys = Arc::new(Mutex::new(MemorySystem::new(
+            MemSimConfig::event_queue(),
+            ShardMap::single(1 << 20),
+        )));
+        let mut port = MemPort::shared(&sys, MemStage::Blend);
+        port.begin_frame();
+        port.read(0, 4096);
+        let f1 = port.stats();
+        assert_eq!(f1.bytes, 4096);
+        port.begin_frame();
+        assert_eq!(port.stats(), DramStats::default());
+        port.read(0, 1024);
+        assert_eq!(port.stats().bytes, 1024);
+        assert_eq!(port.cumulative().bytes, 4096 + 1024);
+    }
+}

@@ -1,11 +1,38 @@
-//! Memory-system models: off-chip LPDDR5 DRAM (Ramulator-2.0 stand-in, see
-//! DESIGN.md §2) and the 256 KB on-chip SRAM buffer with the depth-segmented
-//! 2-way associative organization of paper §3.3-III.
+//! Memory-system models: off-chip LPDDR5 DRAM, the event-queue memory
+//! subsystem, scene sharding, and the 256 KB on-chip SRAM buffer with the
+//! depth-segmented 2-way associative organization of paper §3.3-III.
+//!
+//! Layout of the subsystem (see `README.md` in this directory):
+//!
+//! * [`dram`] — configuration ([`DramConfig`]), the statistics contract
+//!   ([`DramStats`], now including contention fields), and the [`MemSink`]
+//!   request trait every backend implements;
+//! * [`oracle`] — [`SyncDramModel`], the frozen synchronous-per-read model
+//!   (determinism baseline; re-exported as [`DramModel`] for the frozen
+//!   pipeline monolith and the figure benches);
+//! * [`event_queue`] — the [`MemorySystem`]: per-channel FIFO queues with
+//!   row-buffer state, per-port outstanding-transaction windows, shard
+//!   channel groups, epoch barriers, and the [`MemPort`] handle the
+//!   pipeline stages issue requests through;
+//! * [`shard`] — [`ShardMap`], the row-aligned partition of a scene's DRAM
+//!   span into channel groups (built offline by `pipeline::ScenePrep`);
+//! * [`sram`] — the blending buffer model (lookups, miss fills via any
+//!   [`MemSink`], LRU within depth segments);
+//! * [`traffic`] — [`TrafficLog`], the per-frame roll-up every stage
+//!   deposits its statistics into.
 
 pub mod dram;
+pub mod event_queue;
+pub mod oracle;
+pub mod shard;
 pub mod sram;
 pub mod traffic;
 
-pub use dram::{DramConfig, DramModel, DramStats};
+pub use dram::{DramConfig, DramModel, DramStats, MemSink};
+pub use event_queue::{
+    MemMode, MemPort, MemRequest, MemSimConfig, MemStage, MemorySystem, PortId,
+};
+pub use oracle::SyncDramModel;
+pub use shard::ShardMap;
 pub use sram::{SramBuffer, SramConfig, SramStats};
 pub use traffic::TrafficLog;

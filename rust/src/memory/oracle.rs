@@ -1,0 +1,258 @@
+//! The pre-refactor synchronous DRAM model, frozen as the determinism
+//! oracle for the event-queue memory subsystem.
+//!
+//! [`SyncDramModel`] is the original per-call-synchronous LPDDR5 model the
+//! repo shipped with: every `read` retires instantly, charging burst/row
+//! statistics and an analytically striped busy time. The event-queue
+//! [`MemorySystem`](super::event_queue::MemorySystem) must reproduce these
+//! statistics **bit-for-bit** when configured with `channels = 1,
+//! outstanding = 1, shards = 1` (enforced by the `memory_event_queue`
+//! integration suite) — the same freeze-the-monolith pattern
+//! `pipeline::oracle` uses for the stage graph.
+//!
+//! Do not "improve" this module; its value is that it does not change.
+
+use super::dram::{DramConfig, DramStats, MemSink};
+
+/// The synchronous DRAM model: tracks per-bank open rows and accumulates
+/// stats, retiring every read instantly (no outstanding transactions, no
+/// queueing, no cross-stream contention).
+#[derive(Debug)]
+pub struct SyncDramModel {
+    pub config: DramConfig,
+    stats: DramStats,
+    /// Open row per channel (we model one bank group per channel — the
+    /// locality signal the experiments need is sequential-vs-scattered).
+    open_row: Vec<Option<u64>>,
+}
+
+impl SyncDramModel {
+    pub fn new(config: DramConfig) -> SyncDramModel {
+        SyncDramModel {
+            open_row: vec![None; config.channels],
+            config,
+            stats: DramStats::default(),
+        }
+    }
+
+    pub fn default_lpddr5() -> SyncDramModel {
+        SyncDramModel::new(DramConfig::default())
+    }
+
+    /// Read `bytes` starting at `addr`. Contiguous ranges amortize row
+    /// activations; scattered single-record reads mostly miss.
+    pub fn read(&mut self, addr: u64, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let cfg = self.config;
+        let first_burst = addr / cfg.burst_bytes;
+        let last_burst = (addr + bytes - 1) / cfg.burst_bytes;
+        let n_bursts = last_burst - first_burst + 1;
+        let bursts_per_row = cfg.row_bytes / cfg.burst_bytes;
+
+        let mut ns;
+        let mut pj;
+        if n_bursts > 4 * bursts_per_row {
+            // Analytic fast path for long contiguous sweeps (equivalent to
+            // the per-burst walk: one activation per row touched) — the
+            // per-burst loop was a host hot spot on multi-MB reads
+            // (EXPERIMENTS.md §Perf).
+            let first_row = (first_burst * cfg.burst_bytes) / cfg.row_bytes;
+            let last_row = (last_burst * cfg.burst_bytes) / cfg.row_bytes;
+            let rows = last_row - first_row + 1;
+            self.stats.row_misses += rows;
+            self.stats.row_hits += n_bursts - rows;
+            for ch in 0..cfg.channels {
+                // Leave each channel's open row as the last row it serves.
+                let r = last_row.saturating_sub(ch as u64);
+                if r >= first_row {
+                    let ch_idx = (r as usize) % cfg.channels;
+                    self.open_row[ch_idx] = Some(r);
+                }
+            }
+            ns = rows as f64 * (cfg.t_rp_ns + cfg.t_rcd_ns)
+                + n_bursts as f64 * cfg.t_burst_ns;
+            pj = rows as f64 * cfg.e_activate_pj
+                + n_bursts as f64 * cfg.e_access_pj_per_bit * (cfg.burst_bytes * 8) as f64;
+        } else {
+            ns = 0.0;
+            pj = 0.0;
+            for b in first_burst..=last_burst {
+                let byte_addr = b * cfg.burst_bytes;
+                let row = byte_addr / cfg.row_bytes;
+                let ch = (row as usize) % cfg.channels;
+                if self.open_row[ch] == Some(row) {
+                    self.stats.row_hits += 1;
+                } else {
+                    self.stats.row_misses += 1;
+                    self.open_row[ch] = Some(row);
+                    ns += cfg.t_rp_ns + cfg.t_rcd_ns;
+                    pj += cfg.e_activate_pj;
+                }
+                ns += cfg.t_burst_ns;
+                pj += cfg.e_access_pj_per_bit * (cfg.burst_bytes * 8) as f64;
+            }
+        }
+
+        self.stats.reads += 1;
+        self.stats.bursts += n_bursts;
+        self.stats.bytes += n_bursts * cfg.burst_bytes;
+        self.stats.energy_pj += pj;
+        // Channel-level parallelism: striped traffic divides busy time.
+        self.stats.busy_ns += ns / cfg.channels as f64;
+    }
+
+    pub fn stats(&self) -> DramStats {
+        self.stats
+    }
+
+    pub fn reset(&mut self) {
+        self.stats = DramStats::default();
+        for r in &mut self.open_row {
+            *r = None;
+        }
+    }
+}
+
+impl MemSink for SyncDramModel {
+    fn read(&mut self, addr: u64, bytes: u64) {
+        SyncDramModel::read(self, addr, bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_read_counts_bursts() {
+        let mut d = SyncDramModel::default_lpddr5();
+        d.read(0, 1024);
+        let s = d.stats();
+        assert_eq!(s.reads, 1);
+        assert_eq!(s.bursts, 32); // 1024 / 32
+        assert_eq!(s.bytes, 1024);
+    }
+
+    #[test]
+    fn contiguous_has_high_row_hit_rate() {
+        let mut d = SyncDramModel::default_lpddr5();
+        d.read(0, 64 * 1024);
+        assert!(d.stats().hit_rate() > 0.9, "hit rate {}", d.stats().hit_rate());
+    }
+
+    #[test]
+    fn scattered_reads_mostly_miss() {
+        let mut d = SyncDramModel::default_lpddr5();
+        // Stride row-sized: every read opens a new row.
+        for i in 0..256u64 {
+            d.read(i * 2048 * 7, 32);
+        }
+        assert!(d.stats().hit_rate() < 0.1);
+    }
+
+    #[test]
+    fn scattered_costs_more_energy_per_byte() {
+        let mut seq = SyncDramModel::default_lpddr5();
+        seq.read(0, 8192);
+        let e_seq = seq.stats().energy_pj / seq.stats().bytes as f64;
+
+        let mut sc = SyncDramModel::default_lpddr5();
+        for i in 0..256u64 {
+            sc.read(i * 2048 * 3, 32);
+        }
+        let e_sc = sc.stats().energy_pj / sc.stats().bytes as f64;
+        assert!(e_sc > 2.0 * e_seq, "scattered {e_sc} vs sequential {e_seq}");
+    }
+
+    #[test]
+    fn partial_burst_rounds_up() {
+        let mut d = SyncDramModel::default_lpddr5();
+        d.read(10, 8); // spans a single burst
+        assert_eq!(d.stats().bursts, 1);
+        assert_eq!(d.stats().bytes, 32);
+        let mut d2 = SyncDramModel::default_lpddr5();
+        d2.read(30, 8); // straddles a burst boundary
+        assert_eq!(d2.stats().bursts, 2);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut d = SyncDramModel::default_lpddr5();
+        d.read(0, 4096);
+        d.reset();
+        assert_eq!(d.stats(), DramStats::default());
+    }
+
+    #[test]
+    fn stats_add_accumulates() {
+        let mut a = DramStats::default();
+        let mut d = SyncDramModel::default_lpddr5();
+        d.read(0, 1024);
+        a.add(&d.stats());
+        a.add(&d.stats());
+        assert_eq!(a.bytes, 2048);
+        assert_eq!(a.reads, 2);
+    }
+
+    /// Regression for the analytic fast path: at the `4 * bursts_per_row`
+    /// boundary the model switches from the per-burst walk (`<=`) to the
+    /// analytic row-count expression (`>`). Both must agree on every
+    /// statistic for a cold model — checked just below, at, and above the
+    /// boundary, plus deep into fast-path territory.
+    #[test]
+    fn analytic_fast_path_matches_per_burst_walk_at_boundary() {
+        let cfg = DramConfig::default();
+        let bursts_per_row = cfg.row_bytes / cfg.burst_bytes;
+        let threshold = 4 * bursts_per_row; // walk for n <= threshold, fast path above
+
+        // Reference: per-burst walk on a cold model, reimplemented
+        // independently of the shipping code path.
+        let walk_reference = |addr: u64, bytes: u64| -> DramStats {
+            let mut stats = DramStats::default();
+            let mut open_row: Vec<Option<u64>> = vec![None; cfg.channels];
+            let first_burst = addr / cfg.burst_bytes;
+            let last_burst = (addr + bytes - 1) / cfg.burst_bytes;
+            let mut ns = 0.0;
+            for b in first_burst..=last_burst {
+                let row = (b * cfg.burst_bytes) / cfg.row_bytes;
+                let ch = (row as usize) % cfg.channels;
+                if open_row[ch] == Some(row) {
+                    stats.row_hits += 1;
+                } else {
+                    stats.row_misses += 1;
+                    open_row[ch] = Some(row);
+                    ns += cfg.t_rp_ns + cfg.t_rcd_ns;
+                    stats.energy_pj += cfg.e_activate_pj;
+                }
+                ns += cfg.t_burst_ns;
+                stats.energy_pj += cfg.e_access_pj_per_bit * (cfg.burst_bytes * 8) as f64;
+            }
+            stats.reads = 1;
+            stats.bursts = last_burst - first_burst + 1;
+            stats.bytes = stats.bursts * cfg.burst_bytes;
+            stats.busy_ns = ns / cfg.channels as f64;
+            stats
+        };
+
+        for n_bursts in [threshold - 1, threshold, threshold + 1, 16 * threshold] {
+            // Row-aligned start: the regimes must agree exactly on a cold
+            // model (one activation per touched row either way).
+            let bytes = n_bursts * cfg.burst_bytes;
+            let mut model = SyncDramModel::new(cfg);
+            model.read(0, bytes);
+            let reference = walk_reference(0, bytes);
+            let got = model.stats();
+            assert_eq!(got.reads, reference.reads, "n_bursts={n_bursts}");
+            assert_eq!(got.bursts, reference.bursts, "n_bursts={n_bursts}");
+            assert_eq!(got.bytes, reference.bytes, "n_bursts={n_bursts}");
+            assert_eq!(got.row_hits, reference.row_hits, "n_bursts={n_bursts}");
+            assert_eq!(got.row_misses, reference.row_misses, "n_bursts={n_bursts}");
+            let e_rel = (got.energy_pj - reference.energy_pj).abs() / reference.energy_pj;
+            let t_rel = (got.busy_ns - reference.busy_ns).abs() / reference.busy_ns;
+            assert!(e_rel < 1e-9, "n_bursts={n_bursts}: energy {e_rel}");
+            assert!(t_rel < 1e-9, "n_bursts={n_bursts}: busy {t_rel}");
+        }
+    }
+}

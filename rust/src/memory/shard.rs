@@ -1,0 +1,141 @@
+//! Scene sharding: partitioning the Gaussian DRAM layout across channel
+//! groups.
+//!
+//! A [`ShardMap`] splits the scene's byte-contiguous DRAM span (parameter
+//! records + neighbor pointer tables, see `scene::DramLayout`) into `N`
+//! equal contiguous shards, each mapped to its own group of DRAM channels
+//! in the event-queue [`MemorySystem`](super::event_queue::MemorySystem).
+//! Shard boundaries are aligned up to the DRAM row size so a row never
+//! straddles two channel groups and the row→channel striping inside a
+//! group stays well-defined.
+//!
+//! `ScenePrep` builds the map offline alongside the grid partition and
+//! layout; `SharedScene` exposes the translation so serving code can reason
+//! about which channel group a Gaussian's record lands on. With `shards =
+//! 1` the map is the identity and the event-queue model collapses to a
+//! single channel group — the configuration the determinism suite pins
+//! against the synchronous oracle.
+
+/// Address-space partition of one scene's DRAM span into channel-group
+/// shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMap {
+    /// Number of shards (≥ 1).
+    pub shards: usize,
+    /// Bytes per shard (row-aligned; the last shard absorbs the remainder
+    /// of the span).
+    pub shard_bytes: u64,
+    /// Total bytes of the mapped span.
+    pub total_bytes: u64,
+}
+
+impl ShardMap {
+    /// Partition `total_bytes` into `shards` contiguous ranges, aligning
+    /// each boundary up to `align_bytes` (the DRAM row size).
+    pub fn build(total_bytes: u64, shards: usize, align_bytes: u64) -> ShardMap {
+        let shards = shards.max(1);
+        let align = align_bytes.max(1);
+        let raw = total_bytes.div_ceil(shards as u64).max(1);
+        let shard_bytes = raw.div_ceil(align) * align;
+        ShardMap { shards, shard_bytes, total_bytes }
+    }
+
+    /// The identity map: one shard covering the whole span.
+    pub fn single(total_bytes: u64) -> ShardMap {
+        ShardMap { shards: 1, shard_bytes: total_bytes.max(1), total_bytes }
+    }
+
+    /// Which shard a byte address belongs to. Addresses past the mapped
+    /// span clamp to the last shard (the span is an upper bound, not a
+    /// hardware fault model).
+    pub fn shard_of(&self, addr: u64) -> usize {
+        ((addr / self.shard_bytes) as usize).min(self.shards - 1)
+    }
+
+    /// Byte range `[start, end)` of shard `s` within the address space.
+    /// The last shard is unbounded above (clamping mirror of `shard_of`).
+    pub fn shard_range(&self, s: usize) -> (u64, u64) {
+        let start = s as u64 * self.shard_bytes;
+        if s + 1 >= self.shards {
+            (start, u64::MAX)
+        } else {
+            (start, start + self.shard_bytes)
+        }
+    }
+
+    /// Split the request `[addr, addr + bytes)` at shard boundaries,
+    /// invoking `f(shard, addr, bytes)` once per contiguous piece in
+    /// ascending address order. With `shards = 1` this is exactly one call —
+    /// the determinism-critical case adds no arithmetic to the request.
+    pub fn split<F: FnMut(usize, u64, u64)>(&self, addr: u64, bytes: u64, mut f: F) {
+        if bytes == 0 {
+            return;
+        }
+        let mut cur = addr;
+        let end = addr.saturating_add(bytes);
+        while cur < end {
+            let s = self.shard_of(cur);
+            let (_, shard_end) = self.shard_range(s);
+            let piece_end = end.min(shard_end);
+            f(s, cur, piece_end - cur);
+            cur = piece_end;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_is_identity() {
+        let m = ShardMap::single(1 << 20);
+        assert_eq!(m.shards, 1);
+        assert_eq!(m.shard_of(0), 0);
+        assert_eq!(m.shard_of(u64::MAX / 2), 0);
+        let mut pieces = Vec::new();
+        m.split(100, 5000, |s, a, b| pieces.push((s, a, b)));
+        assert_eq!(pieces, vec![(0, 100, 5000)]);
+    }
+
+    #[test]
+    fn boundaries_are_row_aligned() {
+        let m = ShardMap::build(1_000_000, 4, 2048);
+        assert_eq!(m.shard_bytes % 2048, 0);
+        assert!(m.shard_bytes * 4 >= 1_000_000);
+        // Every byte of the span maps to a valid shard.
+        assert_eq!(m.shard_of(0), 0);
+        assert_eq!(m.shard_of(999_999), 3);
+    }
+
+    #[test]
+    fn split_covers_range_without_gaps() {
+        let m = ShardMap::build(64 * 2048, 4, 2048);
+        // A request spanning all four shards.
+        let (addr, bytes) = (m.shard_bytes / 2, m.shard_bytes * 3);
+        let mut pieces = Vec::new();
+        m.split(addr, bytes, |s, a, b| pieces.push((s, a, b)));
+        assert!(pieces.len() >= 3);
+        // Contiguity + total coverage.
+        let mut cur = addr;
+        let mut total = 0;
+        for (i, &(s, a, b)) in pieces.iter().enumerate() {
+            assert_eq!(a, cur, "piece {i} not contiguous");
+            assert_eq!(s, m.shard_of(a));
+            assert_eq!(m.shard_of(a + b - 1), s, "piece {i} crosses a boundary");
+            cur += b;
+            total += b;
+        }
+        assert_eq!(total, bytes);
+    }
+
+    #[test]
+    fn clamps_past_span_to_last_shard() {
+        let m = ShardMap::build(10_000, 2, 2048);
+        assert_eq!(m.shard_of(10 * m.shard_bytes), 1);
+        let mut pieces = Vec::new();
+        m.split(m.shard_bytes * 5, 128, |s, a, b| pieces.push((s, a, b)));
+        assert_eq!(pieces.len(), 1);
+        assert_eq!(pieces[0].0, 1);
+    }
+}

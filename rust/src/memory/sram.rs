@@ -4,7 +4,12 @@
 //! (N = the AII-Sort bucket count); a Gaussian's parameters are cached in the
 //! segment matching its depth bucket, and lookups are **2-way associative**
 //! within the segment. Tracks hits/misses/evictions and read/write energy —
-//! the buffer-reuse signal behind the ATG experiments (Fig. 10).
+//! the buffer-reuse signal behind the ATG experiments (Fig. 10). Miss
+//! fills issue their DRAM traffic through any [`MemSink`] (see
+//! [`SramBuffer::lookup_or_fill`]), so the buffer works against both the
+//! synchronous oracle and the event-queue memory system.
+
+use crate::memory::dram::MemSink;
 
 /// Buffer configuration.
 #[derive(Debug, Clone, Copy)]
@@ -159,6 +164,29 @@ impl SramBuffer {
         self.sets[victim] = Way { key, last_use: self.clock, valid: true };
     }
 
+    /// Look up `key` in `segment`; on a miss, fill the line from DRAM by
+    /// issuing `bytes` at `addr` through `mem` and insert it. Returns
+    /// `true` on hit. This is the blend-stage miss-fill path: the buffer
+    /// issues its own DRAM traffic through a
+    /// [`MemPort`](crate::memory::MemPort) (or any [`MemSink`]) instead of
+    /// the caller juggling a raw DRAM model — operation order (lookup,
+    /// fill, insert) matches the pre-refactor inline sequence exactly.
+    pub fn lookup_or_fill<M: MemSink>(
+        &mut self,
+        segment: usize,
+        key: u64,
+        addr: u64,
+        bytes: u64,
+        mem: &mut M,
+    ) -> bool {
+        if self.lookup(segment, key) {
+            return true;
+        }
+        mem.read(addr, bytes);
+        self.insert(segment, key);
+        false
+    }
+
     pub fn stats(&self) -> SramStats {
         self.stats
     }
@@ -262,6 +290,19 @@ mod tests {
         assert!(e1 > 0.0);
         s.lookup(0, 1);
         assert!(s.stats().energy_pj > e1);
+    }
+
+    #[test]
+    fn lookup_or_fill_reads_dram_only_on_miss() {
+        use crate::memory::oracle::SyncDramModel;
+        let mut s = small();
+        let mut dram = SyncDramModel::default_lpddr5();
+        assert!(!s.lookup_or_fill(0, 9, 4096, 64, &mut dram));
+        assert_eq!(dram.stats().reads, 1);
+        assert!(s.lookup_or_fill(0, 9, 4096, 64, &mut dram));
+        assert_eq!(dram.stats().reads, 1, "hit must not touch DRAM");
+        assert_eq!(s.stats().hits, 1);
+        assert_eq!(s.stats().misses, 1);
     }
 
     #[test]

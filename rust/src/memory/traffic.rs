@@ -60,6 +60,11 @@ impl TrafficLog {
 
     pub fn to_json(&self) -> Json {
         Json::obj()
+            // Full per-stage DRAM statistics (busy/wait/hit-rate included)
+            // so benches consume them instead of recomputing.
+            .set("preprocess_dram", self.preprocess_dram.to_json())
+            .set("blend_dram", self.blend_dram.to_json())
+            // Flat legacy keys, kept for existing report consumers.
             .set("preprocess_dram_bytes", self.preprocess_dram.bytes)
             .set("preprocess_dram_bursts", self.preprocess_dram.bursts)
             .set("blend_dram_bytes", self.blend_dram.bytes)
@@ -115,5 +120,23 @@ mod tests {
         let s = t.to_json().pretty();
         assert!(s.contains("sram_hit_rate"));
         assert!(s.contains("gaussians_visible"));
+    }
+
+    #[test]
+    fn json_emits_full_dram_stats_per_stage() {
+        let mut t = TrafficLog::new();
+        t.preprocess_dram.busy_ns = 12.5;
+        t.preprocess_dram.row_hits = 3;
+        t.preprocess_dram.row_misses = 1;
+        t.blend_dram.wait_ns = 4.0;
+        t.blend_dram.stalls = 2;
+        let s = t.to_json().pretty();
+        // Nested per-stage blocks with the complete DramStats schema.
+        assert!(s.contains("\"preprocess_dram\""), "{s}");
+        assert!(s.contains("\"blend_dram\""), "{s}");
+        assert!(s.contains("\"busy_ns\""), "{s}");
+        assert!(s.contains("\"hit_rate\""), "{s}");
+        assert!(s.contains("\"wait_ns\""), "{s}");
+        assert!(s.contains("\"stalls\""), "{s}");
     }
 }

@@ -8,10 +8,14 @@
 //!   zeroed by [`FrameCtx::begin_frame`] at the top of every frame;
 //! * **pooled scratch buffers** (projected splats, per-tile bins, block
 //!   working sets, sorted bins, visit order, the connection graph, depth
-//!   boundaries) — `clear()`ed, never dropped, so their capacities survive
-//!   across frames and **steady-state frames allocate no scratch vectors**
-//!   (asserted by the capacity-reuse test via
-//!   [`FrameCtx::scratch_capacities`]).
+//!   boundaries, the pooled cull output) — `clear()`ed, never dropped, so
+//!   their capacities survive across frames and **steady-state frames
+//!   allocate no scratch vectors** (asserted by the capacity-reuse test via
+//!   [`FrameCtx::scratch_capacities`]);
+//! * **memory ports** ([`crate::memory::MemPort`]): the cull and blend
+//!   DRAM request handles, threaded through the context so the stages are
+//!   agnostic to whether they talk to a private synchronous model or a
+//!   shared, contended event-queue `MemorySystem`.
 //!
 //! [`FrameBind`] is the borrowed, immutable per-frame view of the shared
 //! scene preparation (scene, grid partition, DRAM layout, quantized copy,
@@ -22,7 +26,7 @@
 use crate::culling::{CullOutput, GridPartition};
 use crate::dcim::{DcimConfig, DcimMacro};
 use crate::energy::{FrameEnergy, StageLatency};
-use crate::memory::TrafficLog;
+use crate::memory::{MemPort, TrafficLog};
 use crate::pipeline::PipelineConfig;
 use crate::render::Image;
 use crate::scene::{DramLayout, Gaussian4D, Scene};
@@ -55,9 +59,17 @@ pub struct FrameCtx {
     /// stage, blend ops by the blend stage). Stats reset per frame; the
     /// configuration is fixed at pipeline build.
     pub dcim: DcimMacro,
-    /// Culling result of the current frame (the cull models build their
-    /// output vectors themselves; modest size next to the pooled scratch).
+    /// Culling result of the current frame — pooled: the cull models refill
+    /// it in place via `cull_into`, so its vectors and dedup scratch keep
+    /// their capacity across frames.
     pub cull: CullOutput,
+    /// DRAM request port of the cull/preprocess stage. Backend chosen by
+    /// `PipelineConfig::mem`: a private synchronous model (determinism
+    /// baseline) or a registered port of a shared event-queue
+    /// `MemorySystem`.
+    pub cull_port: MemPort,
+    /// DRAM request port of the blend miss-fill path.
+    pub blend_port: MemPort,
     pub atg_ops: u64,
     pub atg_flags: u64,
     pub intersections: u64,
@@ -101,6 +113,8 @@ impl FrameCtx {
         dcim: DcimConfig,
         n_blocks: usize,
         n_tiles: usize,
+        cull_port: MemPort,
+        blend_port: MemPort,
     ) -> FrameCtx {
         FrameCtx {
             energy: FrameEnergy::default(),
@@ -109,6 +123,8 @@ impl FrameCtx {
             sort: SortStats::default(),
             dcim: DcimMacro::new(dcim),
             cull: CullOutput::default(),
+            cull_port,
+            blend_port,
             atg_ops: 0,
             atg_flags: 0,
             intersections: 0,
@@ -153,7 +169,7 @@ impl FrameCtx {
         fn nested<T>(v: &[Vec<T>]) -> usize {
             v.iter().map(Vec::capacity).sum()
         }
-        vec![
+        let mut caps = vec![
             self.splats.capacity(),
             self.bins.capacity(),
             nested(&self.bins),
@@ -169,6 +185,9 @@ impl FrameCtx {
             self.block_scratch.capacity(),
             self.depth_scratch.capacity(),
             self.depth_boundaries.capacity(),
-        ]
+        ];
+        // The pooled cull output (zero-allocation preprocess contract).
+        caps.extend(self.cull.scratch_capacities());
+        caps
     }
 }

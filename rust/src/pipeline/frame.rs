@@ -8,15 +8,16 @@
 //! pipelines can share it without copying (see
 //! [`crate::coordinator::RenderServer`]).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::camera::Camera;
 use crate::culling::{GridConfig, GridPartition};
 use crate::dcim::DcimConfig;
 use crate::energy::{FrameEnergy, StageLatency};
-use crate::memory::dram::DramModel;
 use crate::memory::sram::{SramBuffer, SramConfig};
-use crate::memory::TrafficLog;
+use crate::memory::{
+    MemMode, MemPort, MemSimConfig, MemStage, MemorySystem, PortId, ShardMap, TrafficLog,
+};
 use crate::render::{HwRenderer, Image};
 use crate::scene::{DramLayout, Gaussian4D, Scene};
 use crate::sorting::{SortEngine, SortHwConfig, SortStats};
@@ -65,6 +66,10 @@ pub struct PipelineConfig {
     /// working-set/capacity ratio matches the paper-scale scenes
     /// (DESIGN.md §7).
     pub sram_bytes: usize,
+    /// DRAM timing backend: the synchronous oracle (default — bit-identical
+    /// to the frozen monolith) or the event-queue memory system with
+    /// outstanding transactions, shard channel groups, and contention.
+    pub mem: MemSimConfig,
 }
 
 impl PipelineConfig {
@@ -82,6 +87,7 @@ impl PipelineConfig {
             dcim: if dynamic { DcimConfig::paper_dynamic() } else { DcimConfig::paper_static() },
             sort_hw: SortHwConfig::default(),
             sram_bytes: 256 * 1024,
+            mem: MemSimConfig::default(),
         }
     }
 
@@ -123,17 +129,22 @@ pub struct FrameResult {
 }
 
 /// The offline, immutable scene preparation: grid partition, DRAM layout,
-/// and the FP16-quantized parameter copy. Built once per scene and shared
-/// (`Arc`) by every pipeline rendering it — one viewer or many.
+/// the FP16-quantized parameter copy, and the shard map partitioning the
+/// layout's DRAM span across channel groups. Built once per scene and
+/// shared (`Arc`) by every pipeline rendering it — one viewer or many.
 #[derive(Debug, Clone)]
 pub struct ScenePrep {
     pub grid: Arc<GridPartition>,
     pub layout: Arc<DramLayout>,
     pub quantized: Arc<Vec<Gaussian4D>>,
+    /// Row-aligned partition of the layout's full span (records + pointer
+    /// tables) into `config.mem.shards` channel-group shards.
+    pub shard_map: Arc<ShardMap>,
 }
 
 impl ScenePrep {
-    /// Build the preparation (grid partition + DRAM layout + quantized copy).
+    /// Build the preparation (grid partition + DRAM layout + quantized
+    /// copy + shard map).
     pub fn build(scene: &Scene, config: &PipelineConfig) -> ScenePrep {
         let grid_cfg = if scene.dynamic {
             GridConfig::new(config.grid_n)
@@ -144,7 +155,12 @@ impl ScenePrep {
         let layout = Arc::new(DramLayout::build(scene, &grid));
         let quantized: Arc<Vec<Gaussian4D>> =
             Arc::new(scene.gaussians.iter().map(|g| g.quantized_fp16()).collect());
-        ScenePrep { grid, layout, quantized }
+        let shard_map = Arc::new(ShardMap::build(
+            layout.total_span_bytes(),
+            config.mem.shards,
+            config.mem.dram.row_bytes,
+        ));
+        ScenePrep { grid, layout, quantized, shard_map }
     }
 }
 
@@ -168,6 +184,14 @@ pub struct FramePipeline<'a> {
     blend_stage: BlendStage,
     ctx: FrameCtx,
     frame_idx: usize,
+    /// Event-queue memory system backing the context's ports (None in
+    /// synchronous mode).
+    mem_sys: Option<Arc<Mutex<MemorySystem>>>,
+    /// Whether this pipeline owns `mem_sys` (private system: the pipeline
+    /// drives the per-frame epoch barrier). A system attached via
+    /// [`FramePipeline::with_shared_memory`] is paced by its owner — the
+    /// contended `RenderServer` batch.
+    owns_mem: bool,
 }
 
 impl<'a> FramePipeline<'a> {
@@ -179,11 +203,36 @@ impl<'a> FramePipeline<'a> {
     }
 
     /// Build on a shared scene preparation (multi-viewer serving: N
-    /// pipelines, one grid/layout/quantized copy).
+    /// pipelines, one grid/layout/quantized copy). The memory backend
+    /// follows `config.mem`: synchronous ports, or a *private* event-queue
+    /// system the pipeline paces itself.
     pub fn with_prep(
         scene: &'a Scene,
         prep: ScenePrep,
         config: PipelineConfig,
+    ) -> FramePipeline<'a> {
+        FramePipeline::build(scene, prep, config, None)
+    }
+
+    /// Build on a shared preparation *and* a shared event-queue memory
+    /// system: the pipeline registers its cull/blend ports on `sys` and
+    /// contends with every other pipeline attached to it. The owner of
+    /// `sys` (e.g. the contended `RenderServer` batch) drives
+    /// `MemorySystem::advance_epoch` at frame-round boundaries.
+    pub fn with_shared_memory(
+        scene: &'a Scene,
+        prep: ScenePrep,
+        config: PipelineConfig,
+        sys: Arc<Mutex<MemorySystem>>,
+    ) -> FramePipeline<'a> {
+        FramePipeline::build(scene, prep, config, Some(sys))
+    }
+
+    fn build(
+        scene: &'a Scene,
+        prep: ScenePrep,
+        config: PipelineConfig,
+        shared_mem: Option<Arc<Mutex<MemorySystem>>>,
     ) -> FramePipeline<'a> {
         let tile_grid = TileGrid::new(config.width, config.height);
         let conn =
@@ -197,9 +246,43 @@ impl<'a> FramePipeline<'a> {
             )
         });
         let buffer_lines = sram.capacity_lines();
-        let ctx = FrameCtx::new(conn, config.dcim, n_blocks, tile_grid.n_tiles());
+
+        let attached = shared_mem.is_some();
+        let (cull_port, blend_port, mem_sys) = match shared_mem {
+            Some(sys) => {
+                let cull = MemPort::shared(&sys, MemStage::Preprocess);
+                let blend = MemPort::shared(&sys, MemStage::Blend);
+                (cull, blend, Some(sys))
+            }
+            None => match config.mem.mode {
+                MemMode::Sync => (
+                    MemPort::sync(config.mem.dram, MemStage::Preprocess),
+                    MemPort::sync(config.mem.dram, MemStage::Blend),
+                    None,
+                ),
+                MemMode::EventQueue => {
+                    let sys = Arc::new(Mutex::new(MemorySystem::new(
+                        config.mem.clone(),
+                        *prep.shard_map,
+                    )));
+                    let cull = MemPort::shared(&sys, MemStage::Preprocess);
+                    let blend = MemPort::shared(&sys, MemStage::Blend);
+                    (cull, blend, Some(sys))
+                }
+            },
+        };
+        let owns_mem = mem_sys.is_some() && !attached;
+
+        let ctx = FrameCtx::new(
+            conn,
+            config.dcim,
+            n_blocks,
+            tile_grid.n_tiles(),
+            cull_port,
+            blend_port,
+        );
         FramePipeline {
-            cull_stage: CullStage { dram: DramModel::default_lpddr5() },
+            cull_stage: CullStage,
             project_stage: ProjectStage,
             intersect_stage: IntersectStage,
             group_stage: GroupStage { atg: Atg::new(config.atg), buffer_lines },
@@ -211,11 +294,7 @@ impl<'a> FramePipeline<'a> {
                     config.sort_hw,
                 ),
             },
-            blend_stage: BlendStage::new(
-                DramModel::default_lpddr5(),
-                sram,
-                HwRenderer::new(config.width, config.height),
-            ),
+            blend_stage: BlendStage::new(sram, HwRenderer::new(config.width, config.height)),
             ctx,
             tile_grid,
             grid: prep.grid,
@@ -224,7 +303,23 @@ impl<'a> FramePipeline<'a> {
             config,
             scene,
             frame_idx: 0,
+            mem_sys,
+            owns_mem,
         }
+    }
+
+    /// The event-queue memory system backing this pipeline's ports (None
+    /// in synchronous mode).
+    pub fn memory_system(&self) -> Option<&Arc<Mutex<MemorySystem>>> {
+        self.mem_sys.as_ref()
+    }
+
+    /// The (cull, blend) [`PortId`]s this pipeline registered on its
+    /// event-queue memory system (None in synchronous mode). Owners of a
+    /// shared system use this to map per-port statistics back to viewers
+    /// instead of assuming a registration order.
+    pub fn mem_port_ids(&self) -> Option<(PortId, PortId)> {
+        Some((self.ctx.cull_port.shared_id()?, self.ctx.blend_port.shared_id()?))
     }
 
     /// Reset posteriori state and frame counter (scene cut).
@@ -240,6 +335,14 @@ impl<'a> FramePipeline<'a> {
     /// The body is the stage graph: every stage reads/writes the pooled
     /// [`FrameCtx`] through the shared [`FrameBind`] view.
     pub fn render_frame(&mut self, cam: &Camera, t: f32, render_image: bool) -> FrameResult {
+        // Private event-queue system: frame barrier (all in-flight
+        // transactions retire; port clocks align to the completion
+        // horizon). Shared systems are paced by their owner per round.
+        if self.owns_mem {
+            if let Some(sys) = &self.mem_sys {
+                sys.lock().expect("memory system lock poisoned").advance_epoch();
+            }
+        }
         let bind = FrameBind {
             scene: self.scene,
             grid: &self.grid,
@@ -427,6 +530,30 @@ mod tests {
         assert!(r.n_visible > 0);
         let img = r.image.unwrap();
         assert!(img.mean_luma() > 0.01, "rendered something: {}", img.mean_luma());
+    }
+
+    #[test]
+    fn event_queue_backend_runs_and_models_stage_overlap() {
+        let scene = small_scene();
+        let mut cfg = PipelineConfig::paper(true).with_resolution(192, 108);
+        cfg.mem = crate::memory::MemSimConfig::event_queue();
+        let mut p = FramePipeline::new(&scene, cfg);
+        assert!(p.memory_system().is_some());
+        let cam = template(192, 108);
+        let r1 = p.render_frame(&cam, 0.3, false);
+        assert!(r1.traffic.preprocess_dram.bytes > 0);
+        // The blend miss-fill shares channels with the cull fetch: the
+        // overlap model records blend requests queueing behind the
+        // preprocess stream.
+        assert!(r1.traffic.blend_dram.wait_ns > 0.0);
+        // Per-frame epoch barriers keep later frames well-formed: same
+        // view ⇒ same transfer counts, no stale-horizon waits exploding.
+        let r2 = p.render_frame(&cam, 0.3, false);
+        assert_eq!(r1.traffic.blend_dram.bytes, r2.traffic.blend_dram.bytes);
+        assert_eq!(
+            r1.traffic.preprocess_dram.bursts,
+            r2.traffic.preprocess_dram.bursts
+        );
     }
 
     #[test]

@@ -23,9 +23,11 @@
 //!   — asserted by the capacity-reuse test via
 //!   [`FramePipeline::scratch_capacities`]).
 //! * Stages own the persistent hardware models and posteriori state they
-//!   simulate (DRAM channels, the SRAM buffer, ATG groups, AII boundaries,
-//!   early-termination calibration), so ablations swap stage internals —
-//!   never the graph.
+//!   simulate (the SRAM buffer, ATG groups, AII boundaries,
+//!   early-termination calibration); DRAM traffic is issued through the
+//!   context's cull/blend [`crate::memory::MemPort`] handles, whose backend
+//!   (`PipelineConfig::mem`) is the synchronous oracle or the event-queue
+//!   `MemorySystem` — so ablations swap stage internals, never the graph.
 //! * The offline scene preparation ([`ScenePrep`]) sits behind `Arc`s:
 //!   [`crate::coordinator::RenderServer`] builds it once and shares it
 //!   across N concurrent per-viewer pipelines.

@@ -8,8 +8,10 @@
 //! Stages communicate exclusively through the pooled
 //! [`FrameCtx`](super::FrameCtx) and the borrowed
 //! [`FrameBind`](super::FrameBind); each stage owns the *persistent*
-//! hardware state it models (DRAM channel, SRAM buffer, ATG/AII posteriori
-//! state, renderer, early-termination calibration), so a
+//! hardware state it models (SRAM buffer, ATG/AII posteriori state,
+//! renderer, early-termination calibration), while DRAM traffic is issued
+//! through the context's cull/blend [`MemPort`](crate::memory::MemPort)
+//! handles (synchronous oracle or shared event-queue backend), so a
 //! [`FramePipeline`](super::FramePipeline) is just the linear composition of
 //! the six `run` calls. Per-frame stat outputs are bit-identical to the
 //! pre-refactor monolithic `render_frame` (enforced against
@@ -23,7 +25,6 @@ use crate::culling::DrFc;
 use crate::dcim::mapping::BlendOpCounts;
 use crate::dcim::nmc::NmcAccumulator;
 use crate::energy::ops;
-use crate::memory::dram::DramModel;
 use crate::memory::sram::SramBuffer;
 use crate::render::HwRenderer;
 use crate::sorting::SortEngine;
@@ -32,32 +33,32 @@ use crate::tiles::intersect::{bin_splats_into, project_gaussian, Splat2D};
 use crate::tiles::raster::raster_order_into;
 
 /// Stage 1 — frustum culling (DR-FC or the conventional full fetch) and its
-/// DRAM traffic. Owns the preprocess DRAM channel model.
+/// DRAM traffic, issued through the context's preprocess
+/// [`MemPort`](crate::memory::MemPort) into the pooled cull output
+/// (`cull_into`: zero steady-state allocations).
 #[derive(Debug)]
-pub struct CullStage {
-    pub dram: DramModel,
-}
+pub struct CullStage;
 
 impl CullStage {
     pub fn run(&mut self, bind: &FrameBind, cam: &Camera, t: f32, ctx: &mut FrameCtx) {
-        self.dram.reset();
-        let out = if bind.config.use_drfc {
-            let drfc = DrFc::new(bind.scene, bind.grid, bind.layout);
-            let out = drfc.cull(cam, t, &mut self.dram);
-            ctx.energy.cull_pj += bind.grid.n_cells() as f64 * ops::E_GRID_TEST_PJ
-                + out.fetched as f64 * ops::E_FRUSTUM_PJ;
-            out
-        } else {
-            let conv = ConventionalCulling::new(bind.scene, bind.layout);
-            let out = conv.cull(cam, t, &mut self.dram);
-            ctx.energy.cull_pj += out.fetched as f64 * ops::E_FRUSTUM_PJ;
-            out
-        };
-        ctx.traffic.preprocess_dram = self.dram.stats();
+        ctx.cull_port.begin_frame();
+        {
+            let FrameCtx { cull, cull_port, energy, .. } = ctx;
+            if bind.config.use_drfc {
+                let drfc = DrFc::new(bind.scene, bind.grid, bind.layout);
+                drfc.cull_into(cam, t, cull_port, cull);
+                energy.cull_pj += bind.grid.n_cells() as f64 * ops::E_GRID_TEST_PJ
+                    + cull.fetched as f64 * ops::E_FRUSTUM_PJ;
+            } else {
+                let conv = ConventionalCulling::new(bind.scene, bind.layout);
+                conv.cull_into(cam, t, cull_port, cull);
+                energy.cull_pj += cull.fetched as f64 * ops::E_FRUSTUM_PJ;
+            }
+        }
+        ctx.traffic.preprocess_dram = ctx.cull_port.stats();
         ctx.energy.dram_pj += ctx.traffic.preprocess_dram.energy_pj;
-        ctx.traffic.gaussians_fetched = out.fetched;
-        ctx.traffic.gaussians_visible = out.visible.len() as u64;
-        ctx.cull = out;
+        ctx.traffic.gaussians_fetched = ctx.cull.fetched;
+        ctx.traffic.gaussians_visible = ctx.cull.visible.len() as u64;
     }
 }
 
@@ -270,11 +271,11 @@ impl SortStage {
 /// Stage 6 — blending: §3.3-III depth-segment calibration, the SRAM/DRAM
 /// reuse simulation over the chosen tile order, the optional numeric render
 /// (NMC arithmetic), DCIM blend charging, early-termination calibration,
-/// and the blend-latency roll-up. Owns the blend DRAM channel, the SRAM
-/// buffer, the hardware renderer, and the live early-termination factor.
+/// and the blend-latency roll-up. Owns the SRAM buffer, the hardware
+/// renderer, and the live early-termination factor; miss fills issue
+/// through the context's blend [`MemPort`](crate::memory::MemPort).
 #[derive(Debug)]
 pub struct BlendStage {
-    pub dram: DramModel,
     pub sram: SramBuffer,
     pub renderer: HwRenderer,
     /// Live early-termination factor (calibrated by rendered frames).
@@ -282,8 +283,8 @@ pub struct BlendStage {
 }
 
 impl BlendStage {
-    pub fn new(dram: DramModel, sram: SramBuffer, renderer: HwRenderer) -> BlendStage {
-        BlendStage { dram, sram, renderer, et_factor: EARLY_TERMINATION_FACTOR }
+    pub fn new(sram: SramBuffer, renderer: HwRenderer) -> BlendStage {
+        BlendStage { sram, renderer, et_factor: EARLY_TERMINATION_FACTOR }
     }
 
     pub fn run(&mut self, bind: &FrameBind, render_image: bool, ctx: &mut FrameCtx) {
@@ -301,26 +302,30 @@ impl BlendStage {
         }
 
         // SRAM/DRAM reuse simulation over the chosen tile order.
-        self.dram.reset();
+        ctx.blend_port.begin_frame();
         self.sram.reset();
         let mut blend_pairs_upper = 0u64;
-        for &tile in &ctx.tile_order {
-            let (x0, y0, x1, y1) = bind.tile_grid.tile_pixels(tile);
-            let pixels = ((x1 - x0) * (y1 - y0)) as u64;
-            blend_pairs_upper += pixels * ctx.sorted_bins[tile].len() as u64;
-            for &si in &ctx.sorted_bins[tile] {
-                let s = &ctx.splats[si as usize];
-                let segment = depth_segment(&ctx.depth_boundaries, s.depth);
-                if !self.sram.lookup(segment, s.id as u64) {
-                    self.dram.read(
+        {
+            let FrameCtx { tile_order, sorted_bins, splats, depth_boundaries, blend_port, .. } =
+                ctx;
+            for &tile in tile_order.iter() {
+                let (x0, y0, x1, y1) = bind.tile_grid.tile_pixels(tile);
+                let pixels = ((x1 - x0) * (y1 - y0)) as u64;
+                blend_pairs_upper += pixels * sorted_bins[tile].len() as u64;
+                for &si in &sorted_bins[tile] {
+                    let s = &splats[si as usize];
+                    let segment = depth_segment(depth_boundaries, s.depth);
+                    self.sram.lookup_or_fill(
+                        segment,
+                        s.id as u64,
                         bind.layout.addr[s.id as usize],
                         bind.layout.bytes_per_gaussian,
+                        blend_port,
                     );
-                    self.sram.insert(segment, s.id as u64);
                 }
             }
         }
-        ctx.traffic.blend_dram = self.dram.stats();
+        ctx.traffic.blend_dram = ctx.blend_port.stats();
         ctx.traffic.blend_sram = self.sram.stats();
         ctx.energy.dram_pj += ctx.traffic.blend_dram.energy_pj;
         ctx.energy.sram_pj += ctx.traffic.blend_sram.energy_pj;

@@ -90,6 +90,14 @@ impl DramLayout {
         self.order.len() as u64 * self.bytes_per_gaussian
     }
 
+    /// Full DRAM address span of the scene: parameter records plus the
+    /// per-cell neighbor pointer tables laid out after them. This is the
+    /// span `ScenePrep` hands to [`crate::memory::ShardMap`] so every
+    /// address the cull/blend paths can issue maps to a shard.
+    pub fn total_span_bytes(&self) -> u64 {
+        self.total_bytes() + self.pointer_table_bytes()
+    }
+
     /// On-chip metadata footprint: one `(start, end)` pair per cell for the
     /// central run plus one `(start, count)` pair per cell locating its
     /// pointer table in DRAM. This is the buffer cost the Fig. 9 trade-off
@@ -194,5 +202,19 @@ mod tests {
     fn metadata_far_smaller_than_data() {
         let (_, _, layout) = build(5000, 4);
         assert!(layout.metadata_bytes() * 10 < layout.total_bytes());
+    }
+
+    #[test]
+    fn span_covers_params_and_pointer_tables() {
+        let (_, _, layout) = build(3000, 4);
+        assert_eq!(
+            layout.total_span_bytes(),
+            layout.total_bytes() + layout.pointer_table_bytes()
+        );
+        // Every pointer table lies inside the span.
+        for ci in 0..layout.cell_refs.len() {
+            let (_, e) = layout.pointer_table_range(ci);
+            assert!(e <= layout.total_span_bytes());
+        }
     }
 }
