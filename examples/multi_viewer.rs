@@ -2,23 +2,60 @@
 //! scene preparation, batched through the [`RenderServer`].
 //!
 //! Measures host simulation throughput (viewers × frames / wall-clock) for
-//! the sequential baseline vs the parallel batch, then runs the same specs
-//! through the **shared, contended event-queue memory system**
-//! (`render_batch_contended`) and reports per-stage simulated latency and
-//! channel-utilization percentiles. Everything lands in
-//! `BENCH_server.json` (including the `contended_mem` block) so future PRs
-//! have a perf trajectory to beat.
+//! the sequential baseline vs the parallel batch, probes the intra-frame
+//! parallel executor (`pipeline::par`) on a single-viewer trajectory
+//! (per-stage host wall-clock at `threads = 1` vs the configured count),
+//! then runs the same specs through the **shared, contended event-queue
+//! memory system** twice — single-threaded lockstep and the two-phase
+//! parallel scheme — asserting the contended roll-ups are bit-identical
+//! before reporting the parallel one. Everything lands in
+//! `BENCH_server.json` (the `contended_mem` block, per-stage host
+//! wall-clock percentiles, and `speedup_vs_serial`) so future PRs have a
+//! perf trajectory to beat.
 //!
-//! Run: `cargo run --release --example multi_viewer [-- --viewers 4 --frames 8]`
+//! Run: `cargo run --release --example multi_viewer [-- --viewers 4 --frames 8 --threads 0]`
+//! (`--threads 0` = auto: `PALLAS_THREADS` env, else available parallelism)
 
 use gaucim::bench::write_bench_json;
 use gaucim::camera::ViewCondition;
-use gaucim::coordinator::{RenderServer, ViewerSpec};
-use gaucim::pipeline::PipelineConfig;
+use gaucim::coordinator::{Percentiles, RenderServer, ViewerSpec};
+use gaucim::pipeline::{resolve_threads, HostStageWall, PipelineConfig};
 use gaucim::scene::synth::{SceneKind, SynthParams};
 use gaucim::util::cli::Args;
 use gaucim::util::json::Json;
 use std::time::Instant;
+
+/// Run one single-viewer trajectory at a fixed thread count and return the
+/// pipeline's host per-stage wall-clock accounting.
+fn executor_probe(
+    server: &RenderServer,
+    spec: &ViewerSpec,
+    threads: usize,
+) -> (HostStageWall, f64) {
+    let cfg = PipelineConfig { threads, ..server.config.clone() };
+    let mut pipeline = server.shared.pipeline(cfg);
+    let traj = server.trajectory(spec);
+    let t0 = Instant::now();
+    for (cam, t) in &traj {
+        std::hint::black_box(pipeline.render_frame(cam, *t, false));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (pipeline.host_wall().clone(), wall)
+}
+
+fn stage_wall_json(wall: &HostStageWall) -> Json {
+    let sort_pctl = Percentiles::of(&wall.sort_samples);
+    let blend_pctl = Percentiles::of(&wall.blend_samples);
+    Json::obj()
+        .set("frames", wall.frames)
+        .set("sort_s_total", wall.sort_s)
+        .set("blend_s_total", wall.blend_s)
+        .set("frame_s_total", wall.frame_s)
+        .set("sort_s_p50", sort_pctl.p50)
+        .set("sort_s_p99", sort_pctl.p99)
+        .set("blend_s_p50", blend_pctl.p50)
+        .set("blend_s_p99", blend_pctl.p99)
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(&[]);
@@ -27,12 +64,15 @@ fn main() -> anyhow::Result<()> {
     let frames = args.get_usize("frames", 8);
     let width = args.get_usize("width", 640);
     let height = args.get_usize("height", 360);
+    let threads = resolve_threads(args.get_usize("threads", 0));
 
     let scene = SynthParams::new(SceneKind::DynamicLarge, n).with_seed(42).generate();
-    let config = PipelineConfig::paper(true).with_resolution(width, height);
-    let server = RenderServer::new(scene, config);
+    let config =
+        PipelineConfig::paper(true).with_resolution(width, height).with_threads(threads);
+    let mut server = RenderServer::new(scene, config);
     println!(
-        "multi-viewer server: {} gaussians, {n_viewers} viewers × {frames} frames @ {width}x{height}",
+        "multi-viewer server: {} gaussians, {n_viewers} viewers × {frames} frames @ \
+         {width}x{height}, {threads} executor threads",
         server.shared.scene.len()
     );
 
@@ -46,7 +86,8 @@ fn main() -> anyhow::Result<()> {
     // Warm-up (page in the shared preparation, stabilize timing).
     server.render_viewer(0, &specs[0]);
 
-    // Sequential baseline: the same sessions one after another.
+    // ---- serial baselines (threads = 1) --------------------------------
+    server.set_threads(1);
     let t0 = Instant::now();
     let sequential: Vec<_> = specs
         .iter()
@@ -54,9 +95,20 @@ fn main() -> anyhow::Result<()> {
         .map(|(i, s)| server.render_viewer(i, s))
         .collect();
     let seq_wall_s = t0.elapsed().as_secs_f64();
+    let contended_serial = server.render_batch_contended(&specs);
 
-    // Parallel batch.
+    // ---- parallel runs --------------------------------------------------
+    server.set_threads(threads);
     let batch = server.render_batch(&specs);
+    let contended = server.render_batch_contended(&specs);
+
+    // Two-phase determinism: the parallel contended batch must reproduce
+    // the single-threaded lockstep bit-for-bit (wall-clock aside).
+    assert_eq!(
+        contended_serial.simulated_projection(),
+        contended.simulated_projection(),
+        "two-phase contended batch diverged from the lockstep reference"
+    );
 
     println!("\nper-viewer reports (modeled accelerator FPS/W):");
     for rep in &batch.viewers {
@@ -79,9 +131,29 @@ fn main() -> anyhow::Result<()> {
         batch.wall_s, batch.aggregate_frames_per_s
     );
 
-    // Contended memory mode: the same specs on one shared event-queue
-    // MemorySystem, stepped in deterministic lockstep rounds.
-    let contended = server.render_batch_contended(&specs);
+    // ---- intra-frame executor probe (sort + blend host wall-clock) -----
+    let (wall_serial, frame_wall_serial) = executor_probe(&server, &specs[0], 1);
+    let (wall_par, frame_wall_par) = executor_probe(&server, &specs[0], threads);
+    let sort_speedup = wall_serial.sort_s / wall_par.sort_s.max(1e-12);
+    let blend_speedup = wall_serial.blend_s / wall_par.blend_s.max(1e-12);
+    let frame_speedup = frame_wall_serial / frame_wall_par.max(1e-12);
+    let contended_speedup = contended_serial.wall_s / contended.wall_s.max(1e-12);
+    println!("\nintra-frame executor ({threads} threads vs serial, single viewer):");
+    println!(
+        "  sort  {:.3} ms → {:.3} ms  ({sort_speedup:.2}x)",
+        wall_serial.sort_s * 1e3,
+        wall_par.sort_s * 1e3
+    );
+    println!(
+        "  blend {:.3} ms → {:.3} ms  ({blend_speedup:.2}x)",
+        wall_serial.blend_s * 1e3,
+        wall_par.blend_s * 1e3
+    );
+    println!(
+        "  contended batch {:.3} s → {:.3} s  ({contended_speedup:.2}x)",
+        contended_serial.wall_s, contended.wall_s
+    );
+
     let mem = contended
         .contended_mem
         .as_ref()
@@ -129,6 +201,7 @@ fn main() -> anyhow::Result<()> {
         .set("frames_per_viewer", frames)
         .set("width", width)
         .set("height", height)
+        .set("threads", threads)
         .set("sequential_wall_s", seq_wall_s)
         .set("batch_wall_s", batch.wall_s)
         .set("sequential_frames_per_s", seq_fps)
@@ -138,8 +211,20 @@ fn main() -> anyhow::Result<()> {
             "host_parallelism",
             std::thread::available_parallelism().map(usize::from).unwrap_or(1),
         )
+        .set("stage_wall_serial", stage_wall_json(&wall_serial))
+        .set("stage_wall_parallel", stage_wall_json(&wall_par))
+        .set(
+            "speedup_vs_serial",
+            Json::obj()
+                .set("sort", sort_speedup)
+                .set("blend", blend_speedup)
+                .set("frame", frame_speedup)
+                .set("contended", contended_speedup),
+        )
+        .set("contended_wall_serial_s", contended_serial.wall_s)
+        .set("contended_wall_parallel_s", contended.wall_s)
         .set("contended_mem", mem.to_json());
     write_bench_json("BENCH_server.json", &record)?;
-    println!("\nwrote BENCH_server.json (with contended_mem block)");
+    println!("\nwrote BENCH_server.json (contended_mem + stage_wall + speedup_vs_serial)");
     Ok(())
 }

@@ -37,7 +37,7 @@ impl ExperimentConfig {
             "name", "scene", "gaussians", "seed", "width", "height",
             "condition", "frames", "psnr_every", "grid_n", "atg_threshold",
             "tile_block", "n_buckets", "use_drfc", "use_atg", "use_aii",
-            "sram_kb", "report_json", "frame_ppm",
+            "sram_kb", "threads", "report_json", "frame_ppm",
         ];
         if let Json::Obj(m) = doc {
             for k in m.keys() {
@@ -81,6 +81,9 @@ impl ExperimentConfig {
         pipeline.use_atg = get_bool("use_atg", true);
         pipeline.use_aii = get_bool("use_aii", true);
         pipeline.sram_bytes = get_usize("sram_kb", pipeline.sram_bytes / 1024) * 1024;
+        // Executor threads: 0 = auto (PALLAS_THREADS env, else available
+        // parallelism). Stat outputs are thread-count invariant.
+        pipeline.threads = get_usize("threads", 0);
         pipeline.atg = AtgConfig {
             user_threshold: doc
                 .get("atg_threshold")
@@ -164,7 +167,8 @@ mod tests {
                 "tile_block": 2,
                 "n_buckets": 16,
                 "use_aii": false,
-                "sram_kb": 64
+                "sram_kb": 64,
+                "threads": 3
             }"#,
         )
         .unwrap();
@@ -177,6 +181,8 @@ mod tests {
         assert_eq!(cfg.pipeline.n_buckets, 16);
         assert!(!cfg.pipeline.use_aii);
         assert_eq!(cfg.pipeline.sram_bytes, 64 * 1024);
+        assert_eq!(cfg.pipeline.threads, 3);
+        assert_eq!(cfg.pipeline.resolved_threads(), 3);
         assert_eq!(cfg.condition, ViewCondition::Extreme);
     }
 

@@ -13,11 +13,18 @@
 //! [`RenderServer::render_batch_contended`] is the *memory-fidelity* mode:
 //! all viewers register ports on **one shared event-queue
 //! [`MemorySystem`]** and are stepped frame-round by frame-round in
-//! lockstep (rotating issue order for fairness) on the calling thread.
-//! Contention is a simulated-time property, so lockstep keeps it exactly
-//! deterministic: per-viewer byte/burst counts stay identical to isolated
-//! runs while per-viewer `busy_ns` rises with queueing behind the other
-//! viewers' traffic. The per-viewer fairness and channel-utilization
+//! lockstep (rotating issue order for fairness). Contention is a
+//! simulated-time property, so the lockstep *request schedule* keeps it
+//! exactly deterministic: per-viewer byte/burst counts stay identical to
+//! isolated runs while per-viewer `busy_ns` rises with queueing behind the
+//! other viewers' traffic. With `PipelineConfig::threads > 1` the batch
+//! runs **two-phase**: each round's viewer frames render in parallel on a
+//! [`WorkerPool`] against trace-recording ports, then the recorded DRAM
+//! requests replay into the shared system in the exact rotating lockstep
+//! order — host throughput scales with cores while every contention stat
+//! (fairness, channel utilization, wait/stall) stays bit-identical to the
+//! single-threaded lockstep (enforced by the `render_server` suite and the
+//! CI threads-matrix job). The per-viewer fairness and channel-utilization
 //! roll-up lands in [`ContendedMemReport`].
 //!
 //! Two throughput numbers must not be confused:
@@ -34,7 +41,7 @@
 
 use crate::camera::{Camera, ViewCondition};
 use crate::memory::{DramStats, MemMode, MemStage, MemorySystem, PortId, ShardMap};
-use crate::pipeline::{FramePipeline, PipelineConfig, ScenePrep};
+use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig, ScenePrep, WorkerPool};
 use crate::render::{psnr, ReferenceRenderer};
 use crate::scene::Scene;
 use crate::util::json::Json;
@@ -220,6 +227,23 @@ pub struct ServerReport {
 }
 
 impl ServerReport {
+    /// The wall-clock-free projection of a contended report: per-viewer
+    /// simulated stats plus the full contended-memory roll-up, as JSON
+    /// text (identical f64 values print identically). This is the
+    /// bit-identity surface the two-phase executor must preserve — shared
+    /// by the determinism unit test and the `multi_viewer` runtime
+    /// assertion so the two checks cannot drift apart.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the report carries no contended-memory roll-up.
+    pub fn simulated_projection(&self) -> String {
+        let viewers =
+            Json::Arr(self.viewers.iter().map(SequenceReport::to_json).collect()).pretty();
+        let mem = self.contended_mem.as_ref().expect("contended roll-up").to_json().pretty();
+        format!("{viewers}\n{mem}")
+    }
+
     pub fn to_json(&self) -> Json {
         let mut js = Json::obj()
             .set("viewers", self.viewers.len())
@@ -293,11 +317,27 @@ impl RenderServer {
         )
     }
 
+    /// Pin the executor thread count used by subsequent batches (`0` =
+    /// auto). Simulated stats are thread-count invariant; this only moves
+    /// host wall-clock.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.config.threads = threads;
+    }
+
     /// Run one viewer session to completion (sequentially, on the calling
     /// thread). This is the exact unit of work `render_batch` parallelizes.
     pub fn render_viewer(&self, viewer_idx: usize, spec: &ViewerSpec) -> SequenceReport {
+        self.render_viewer_with(viewer_idx, spec, self.config.clone())
+    }
+
+    fn render_viewer_with(
+        &self,
+        viewer_idx: usize,
+        spec: &ViewerSpec,
+        config: PipelineConfig,
+    ) -> SequenceReport {
         let seq = self.trajectory(spec);
-        let mut pipeline = self.shared.pipeline(self.config.clone());
+        let mut pipeline = self.shared.pipeline(config);
         run_frames_report(
             &self.shared.scene,
             &mut pipeline,
@@ -315,15 +355,22 @@ impl RenderServer {
     /// viewer, all borrowing the shared scene preparation). Reports are
     /// returned in `specs` order; a panicking viewer thread propagates.
     /// Every viewer keeps a private memory system — the host-throughput
-    /// mode. See [`RenderServer::render_batch_contended`] for the shared,
-    /// contended memory mode.
+    /// mode; the viewer thread itself is the parallel unit, so per-viewer
+    /// pipelines run their executor serially (`threads = 1`) instead of
+    /// oversubscribing the host. See
+    /// [`RenderServer::render_batch_contended`] for the shared, contended
+    /// memory mode.
     pub fn render_batch(&self, specs: &[ViewerSpec]) -> ServerReport {
         let t0 = Instant::now();
+        let viewer_cfg = PipelineConfig { threads: 1, ..self.config.clone() };
         let viewers: Vec<SequenceReport> = std::thread::scope(|scope| {
             let handles: Vec<_> = specs
                 .iter()
                 .enumerate()
-                .map(|(i, spec)| scope.spawn(move || self.render_viewer(i, spec)))
+                .map(|(i, spec)| {
+                    let cfg = viewer_cfg.clone();
+                    scope.spawn(move || self.render_viewer_with(i, spec, cfg))
+                })
                 .collect();
             handles
                 .into_iter()
@@ -343,14 +390,33 @@ impl RenderServer {
 
     /// Render a batch against **one shared, contended event-queue memory
     /// system**: every viewer's cull/blend ports register on the same
-    /// [`MemorySystem`], and viewers are stepped frame-round by
-    /// frame-round in lockstep on the calling thread (issue order rotates
-    /// each round so no viewer systematically goes first). Deterministic
-    /// by construction — contention lives on the simulated timeline, not
-    /// in host scheduling. Per-viewer byte/burst counts are identical to
-    /// isolated runs; per-viewer `busy_ns` additionally carries the
-    /// queueing behind the other viewers' traffic.
+    /// [`MemorySystem`], and the request schedule steps frame-round by
+    /// frame-round in lockstep (issue order rotates each round so no
+    /// viewer systematically goes first). Deterministic by construction —
+    /// contention lives on the simulated timeline, not in host scheduling.
+    /// Per-viewer byte/burst counts are identical to isolated runs;
+    /// per-viewer `busy_ns` additionally carries the queueing behind the
+    /// other viewers' traffic.
+    ///
+    /// With `PipelineConfig::threads > 1` (or auto-resolving to > 1) the
+    /// batch runs the **two-phase** scheme: render each round's viewers in
+    /// parallel while recording their DRAM requests into per-viewer
+    /// traces, then replay the traces into the shared system in the exact
+    /// rotating order above — [`ContendedMemReport`] and every per-viewer
+    /// stat stay bit-identical to the single-threaded lockstep while host
+    /// throughput scales with cores.
     pub fn render_batch_contended(&self, specs: &[ViewerSpec]) -> ServerReport {
+        let threads = self.config.resolved_threads();
+        if threads <= 1 || specs.len() <= 1 {
+            self.contended_lockstep(specs)
+        } else {
+            self.contended_two_phase(specs, threads)
+        }
+    }
+
+    /// The single-threaded lockstep reference implementation (also the
+    /// `threads = 1` fast path): render and issue in one pass.
+    fn contended_lockstep(&self, specs: &[ViewerSpec]) -> ServerReport {
         let t0 = Instant::now();
         let mut config = self.config.clone();
         config.mem.mode = MemMode::EventQueue;
@@ -375,9 +441,7 @@ impl RenderServer {
 
         let n = specs.len();
         let max_frames = specs.iter().map(|s| s.frames).max().unwrap_or(0);
-        let mut aggs: Vec<SequenceAgg> = (0..n).map(|_| SequenceAgg::new()).collect();
-        let mut pre_latency: Vec<f64> = Vec::new();
-        let mut blend_latency: Vec<f64> = Vec::new();
+        let mut run = ContendedAgg::new(n);
 
         for round in 0..max_frames {
             // Frame barrier: all in-flight transactions retire, port clocks
@@ -393,16 +457,152 @@ impl RenderServer {
                 let spec = &specs[v];
                 let render = spec.psnr_every > 0 && round % spec.psnr_every == 0;
                 let r = pipelines[v].render_frame(cam, *t, render);
-                pre_latency.push(r.latency.preprocess_ns);
-                blend_latency.push(r.latency.blend_ns);
                 let scored = r.image.as_ref().map(|img| {
                     let ref_img = reference.render(&self.shared.scene, cam, *t);
                     (psnr(&ref_img, img), crate::render::ssim(&ref_img, img))
                 });
-                aggs[v].push(&r, scored);
+                run.push(v, &r, scored);
             }
         }
 
+        self.finish_contended(&sys, &port_ids, &config, run, specs, t0)
+    }
+
+    /// The two-phase parallel implementation: phase 1 renders a round's
+    /// frames concurrently against trace-recording ports; phase 2 replays
+    /// every recorded request into the shared system in the rotating
+    /// lockstep order and patches the DRAM-dependent frame outputs
+    /// (traffic, DRAM energy, stage-latency maxima) from the replayed port
+    /// statistics — the same values the lockstep path computes inline.
+    fn contended_two_phase(&self, specs: &[ViewerSpec], threads: usize) -> ServerReport {
+        let t0 = Instant::now();
+        let mut config = self.config.clone();
+        config.mem.mode = MemMode::EventQueue;
+        let sys = Arc::new(Mutex::new(MemorySystem::new(
+            config.mem.clone(),
+            *self.shared.prep.shard_map,
+        )));
+
+        // Viewers are the parallel unit of a round; their pipelines run
+        // serially inside (threads = 1) and record DRAM traces.
+        let viewer_cfg = PipelineConfig { threads: 1, ..config.clone() };
+        let mut pipelines: Vec<FramePipeline<'_>> = specs
+            .iter()
+            .map(|_| {
+                FramePipeline::with_trace_ports(
+                    &self.shared.scene,
+                    self.shared.prep.clone(),
+                    viewer_cfg.clone(),
+                )
+            })
+            .collect();
+        // Register the same (cull, blend) port pairs the lockstep build
+        // registers: viewer order, cull before blend.
+        let port_ids: Vec<(PortId, PortId)> = {
+            let mut sys_l = sys.lock().expect("memory system lock poisoned");
+            specs
+                .iter()
+                .map(|_| {
+                    let cull = sys_l.register_port();
+                    let blend = sys_l.register_port();
+                    (cull, blend)
+                })
+                .collect()
+        };
+        let trajectories: Vec<Vec<(Camera, f32)>> =
+            specs.iter().map(|s| self.trajectory(s)).collect();
+        let reference = ReferenceRenderer::new(config.width, config.height);
+        let pool = WorkerPool::new(threads);
+
+        let n = specs.len();
+        let max_frames = specs.iter().map(|s| s.frames).max().unwrap_or(0);
+        let mut run = ContendedAgg::new(n);
+        let mut slots: Vec<Option<RoundFrame>> = (0..n).map(|_| None).collect();
+
+        for round in 0..max_frames {
+            // Phase 1 — render this round's frames in parallel (PSNR
+            // scoring included: it is pure per-frame work).
+            {
+                let reference = &reference;
+                let trajectories = &trajectories;
+                let scene = &self.shared.scene;
+                pool.scope(|scope| {
+                    for ((v, pipe), slot) in
+                        pipelines.iter_mut().enumerate().zip(slots.iter_mut())
+                    {
+                        let spec = &specs[v];
+                        scope.spawn(move || {
+                            *slot = None;
+                            if round >= trajectories[v].len() {
+                                return;
+                            }
+                            let (cam, t) = &trajectories[v][round];
+                            let render = spec.psnr_every > 0 && round % spec.psnr_every == 0;
+                            let result = pipe.render_frame(cam, *t, render);
+                            let (cull_trace, blend_trace) = pipe.take_frame_traces();
+                            let scored = result.image.as_ref().map(|img| {
+                                let ref_img = reference.render(scene, cam, *t);
+                                (psnr(&ref_img, img), crate::render::ssim(&ref_img, img))
+                            });
+                            *slot = Some(RoundFrame { result, scored, cull_trace, blend_trace });
+                        });
+                    }
+                });
+            }
+
+            // Phase 2 — replay into the shared system in the rotating
+            // lockstep order, then patch each frame's DRAM-dependent
+            // outputs from the replayed per-port deltas.
+            let mut sys_l = sys.lock().expect("memory system lock poisoned");
+            sys_l.advance_epoch();
+            for k in 0..n {
+                let v = (round + k) % n;
+                let Some(mut frame) = slots[v].take() else { continue };
+                let (cull_id, blend_id) = port_ids[v];
+                let pre_base = sys_l.port_stage_stats(cull_id, MemStage::Preprocess);
+                for &(addr, bytes) in &frame.cull_trace {
+                    sys_l.read(cull_id, MemStage::Preprocess, addr, bytes);
+                }
+                let pre = sys_l
+                    .port_stage_stats(cull_id, MemStage::Preprocess)
+                    .delta(&pre_base);
+                let blend_base = sys_l.port_stage_stats(blend_id, MemStage::Blend);
+                for &(addr, bytes) in &frame.blend_trace {
+                    sys_l.read(blend_id, MemStage::Blend, addr, bytes);
+                }
+                let blend = sys_l
+                    .port_stage_stats(blend_id, MemStage::Blend)
+                    .delta(&blend_base);
+
+                let r = &mut frame.result;
+                r.traffic.preprocess_dram = pre;
+                r.traffic.blend_dram = blend;
+                // Trace-port frames carried zero DRAM energy/busy time, so
+                // these recompute exactly what the lockstep stages produce:
+                // dram_pj = pre + blend, stage latency = max(compute, DRAM).
+                r.energy.dram_pj = pre.energy_pj + blend.energy_pj;
+                r.latency.preprocess_ns = r.latency.preprocess_ns.max(pre.busy_ns);
+                r.latency.blend_ns = r.latency.blend_ns.max(blend.busy_ns);
+                run.push(v, r, frame.scored);
+            }
+            drop(sys_l);
+        }
+
+        self.finish_contended(&sys, &port_ids, &config, run, specs, t0)
+    }
+
+    /// Shared tail of both contended implementations: per-viewer reports,
+    /// the memory roll-up, and the batch report.
+    fn finish_contended(
+        &self,
+        sys: &Arc<Mutex<MemorySystem>>,
+        port_ids: &[(PortId, PortId)],
+        config: &PipelineConfig,
+        run: ContendedAgg,
+        specs: &[ViewerSpec],
+        t0: Instant,
+    ) -> ServerReport {
+        let ContendedAgg { aggs, pre_latency, blend_latency } = run;
         let viewers: Vec<SequenceReport> = aggs
             .into_iter()
             .enumerate()
@@ -455,6 +655,39 @@ impl RenderServer {
             aggregate_frames_per_s: total_frames as f64 / wall_s.max(1e-12),
             contended_mem: Some(contended),
         }
+    }
+}
+
+/// One viewer's rendered-but-not-yet-replayed frame of a two-phase round.
+struct RoundFrame {
+    result: FrameResult,
+    scored: Option<(f64, f64)>,
+    cull_trace: Vec<(u64, u64)>,
+    blend_trace: Vec<(u64, u64)>,
+}
+
+/// Streaming state both contended implementations feed in the rotating
+/// lockstep order: per-viewer aggregates plus the per-frame simulated
+/// stage-latency samples of the batch.
+struct ContendedAgg {
+    aggs: Vec<SequenceAgg>,
+    pre_latency: Vec<f64>,
+    blend_latency: Vec<f64>,
+}
+
+impl ContendedAgg {
+    fn new(n: usize) -> ContendedAgg {
+        ContendedAgg {
+            aggs: (0..n).map(|_| SequenceAgg::new()).collect(),
+            pre_latency: Vec::new(),
+            blend_latency: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, viewer: usize, r: &FrameResult, scored: Option<(f64, f64)>) {
+        self.pre_latency.push(r.latency.preprocess_ns);
+        self.blend_latency.push(r.latency.blend_ns);
+        self.aggs[viewer].push(r, scored);
     }
 }
 
@@ -512,6 +745,37 @@ mod tests {
         assert!(js.contains("contended_mem"));
         assert!(js.contains("channel_util_pctl"));
         assert!(js.contains("preprocess_latency_ns_pctl"));
+    }
+
+    #[test]
+    fn contended_two_phase_is_bit_identical_to_lockstep() {
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 1500).generate();
+        let config = PipelineConfig::paper(true).with_resolution(128, 72);
+        let mut server = RenderServer::new(scene, config);
+        // Uneven frame counts exercise the round-skip path; one viewer
+        // renders numerically so PSNR scoring crosses the phase boundary.
+        let specs = [
+            ViewerSpec { condition: ViewCondition::Average, frames: 3, psnr_every: 2 },
+            ViewerSpec::perf(ViewCondition::Static, 2),
+            ViewerSpec::perf(ViewCondition::Extreme, 3),
+        ];
+
+        server.set_threads(1);
+        let lockstep = server.render_batch_contended(&specs);
+        let baseline = lockstep.simulated_projection();
+        for threads in [2, 8] {
+            server.set_threads(threads);
+            let par = server.render_batch_contended(&specs);
+            assert_eq!(
+                baseline,
+                par.simulated_projection(),
+                "two-phase contended batch diverged at threads={threads}"
+            );
+        }
+        // Sanity: the roll-up still reports real contention.
+        let mem = lockstep.contended_mem.as_ref().unwrap();
+        assert!(mem.viewers.iter().all(|v| v.total_bytes() > 0));
+        assert!(mem.makespan_ns > 0.0);
     }
 
     #[test]

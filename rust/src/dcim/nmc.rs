@@ -52,7 +52,6 @@ impl NmcAccumulator {
     #[inline]
     pub fn blend(&mut self, state: &mut PixelState, alpha: f32, rgb: [f32; 3]) -> bool {
         self.stats.blend_ops += 1;
-        self.stats.energy_pj += self.e_blend_pj;
         let a = alpha.clamp(0.0, 0.999);
         let w = a * state.transmittance;
         state.rgb[0] += w * rgb[0];
@@ -67,8 +66,21 @@ impl NmcAccumulator {
         }
     }
 
+    /// Statistics snapshot. Energy derives from the op count here
+    /// (`blend_ops · e_blend_pj`), so per-tile partial accumulators reduce
+    /// exactly — the tile-parallel rasterizer depends on this for its
+    /// bit-identical-stats contract.
     pub fn stats(&self) -> NmcStats {
-        self.stats
+        let mut s = self.stats;
+        s.energy_pj = s.blend_ops as f64 * self.e_blend_pj;
+        s
+    }
+
+    /// Fold a partial (per-tile) counter set in; energy re-derives at
+    /// [`NmcAccumulator::stats`] time.
+    pub fn absorb(&mut self, o: &NmcStats) {
+        self.stats.blend_ops += o.blend_ops;
+        self.stats.saturated += o.saturated;
     }
 
     pub fn reset(&mut self) {

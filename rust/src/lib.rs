@@ -36,12 +36,21 @@
 //! [`memory::MemPort`] handles threaded through the frame context — see
 //! `rust/src/memory/README.md`.
 //!
+//! Host parallelism is handled by the **deterministic intra-frame
+//! executor** ([`pipeline::par`]): a persistent scoped worker pool fans the
+//! sort stage out per tile block and the blend walk out per depth segment
+//! (plus the numeric render per tile), with every simulated stat
+//! bit-identical to the serial path at any thread count
+//! (`PipelineConfig::threads`, `PALLAS_THREADS`) — see
+//! `rust/src/pipeline/README.md`.
+//!
 //! Above the frame engine, [`coordinator::RenderServer`] shares one
 //! immutable scene preparation (grid partition, DRAM layout, FP16-quantized
 //! copy, shard map) across N concurrent per-viewer sessions and renders
-//! whole viewer batches in parallel (private memory systems) or in
-//! deterministic lockstep on one shared, contended memory system — the
-//! serving-at-scale entry points.
+//! whole viewer batches in parallel (private memory systems) or against one
+//! shared, contended memory system whose deterministic lockstep request
+//! schedule is preserved by two-phase trace replay while rounds render in
+//! parallel — the serving-at-scale entry points.
 //!
 //! Entry points: [`coordinator::App`] drives single-viewer renders;
 //! [`coordinator::RenderServer`] drives multi-viewer batches;

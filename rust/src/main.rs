@@ -44,7 +44,7 @@ fn usage() {
         "usage: gaucim <render|sequence|profile|table1|pjrt|run|info> \
          [--scene static|dynamic] [--gaussians N] [--frames N] \
          [--width W --height H] [--condition average|extreme|static] \
-         [--seed S] [--out FILE]"
+         [--seed S] [--threads N] [--out FILE]"
     );
 }
 
@@ -70,7 +70,10 @@ fn build_app(args: &Args) -> App {
     let mut app = App::new(kind, n, seed);
     let w = args.get_usize("width", 640);
     let h = args.get_usize("height", 360);
-    app.config = app.config.clone().with_resolution(w, h);
+    // Executor threads: 0 = auto (PALLAS_THREADS env, else available
+    // parallelism). Simulated stats are thread-count invariant.
+    let threads = args.get_usize("threads", 0);
+    app.config = app.config.clone().with_resolution(w, h).with_threads(threads);
     app
 }
 

@@ -518,6 +518,12 @@ pub struct MemPort {
 enum PortBackend {
     Sync(SyncDramModel),
     Shared { sys: Arc<Mutex<MemorySystem>>, id: PortId },
+    /// Record `(addr, bytes)` requests instead of simulating them — the
+    /// capture side of the two-phase contended batch: frames render in
+    /// parallel against trace ports, then the coordinator replays each
+    /// frame's trace into the shared `MemorySystem` in the deterministic
+    /// lockstep order. Statistics report zero until replayed.
+    Trace(Vec<(u64, u64)>),
 }
 
 impl MemPort {
@@ -529,6 +535,26 @@ impl MemPort {
             backend: PortBackend::Sync(SyncDramModel::new(config)),
             frame_base: DramStats::default(),
             sync_lifetime: DramStats::default(),
+        }
+    }
+
+    /// Trace-recording backend (see [`PortBackend::Trace`]).
+    pub fn trace(stage: MemStage) -> MemPort {
+        MemPort {
+            stage,
+            backend: PortBackend::Trace(Vec::new()),
+            frame_base: DramStats::default(),
+            sync_lifetime: DramStats::default(),
+        }
+    }
+
+    /// Drain the recorded request trace (empty for non-trace backends).
+    /// `begin_frame` also clears it, so after a frame this returns exactly
+    /// that frame's requests in issue order.
+    pub fn take_trace(&mut self) -> Vec<(u64, u64)> {
+        match &mut self.backend {
+            PortBackend::Trace(log) => std::mem::take(log),
+            _ => Vec::new(),
         }
     }
 
@@ -553,8 +579,8 @@ impl MemPort {
     /// without assuming a registration order.
     pub fn shared_id(&self) -> Option<PortId> {
         match &self.backend {
-            PortBackend::Sync(_) => None,
             PortBackend::Shared { id, .. } => Some(*id),
+            PortBackend::Sync(_) | PortBackend::Trace(_) => None,
         }
     }
 
@@ -574,6 +600,7 @@ impl MemPort {
                     .expect("memory system lock poisoned")
                     .port_stage_stats(*id, stage);
             }
+            PortBackend::Trace(log) => log.clear(),
         }
     }
 
@@ -586,6 +613,7 @@ impl MemPort {
                 .lock()
                 .expect("memory system lock poisoned")
                 .read(*id, stage, addr, bytes),
+            PortBackend::Trace(log) => log.push((addr, bytes)),
         }
     }
 
@@ -598,11 +626,13 @@ impl MemPort {
                 .expect("memory system lock poisoned")
                 .port_stage_stats(*id, self.stage)
                 .delta(&self.frame_base),
+            PortBackend::Trace(_) => DramStats::default(),
         }
     }
 
-    /// Cumulative statistics across the port's lifetime (both backends:
-    /// every frame ever issued, not just the one since `begin_frame`).
+    /// Cumulative statistics across the port's lifetime (both simulating
+    /// backends: every frame ever issued, not just the one since
+    /// `begin_frame`; zero for trace ports).
     pub fn cumulative(&self) -> DramStats {
         match &self.backend {
             PortBackend::Sync(m) => {
@@ -614,6 +644,7 @@ impl MemPort {
                 .lock()
                 .expect("memory system lock poisoned")
                 .port_stage_stats(*id, self.stage),
+            PortBackend::Trace(_) => DramStats::default(),
         }
     }
 }
@@ -819,6 +850,23 @@ mod tests {
         assert_eq!(port.stats().bytes, 1024);
         assert_eq!(port.cumulative().bytes, 4096 + 1024);
         assert_eq!(port.cumulative().reads, 2);
+    }
+
+    #[test]
+    fn trace_port_records_requests_and_reports_zero_stats() {
+        let mut p = MemPort::trace(MemStage::Blend);
+        assert_eq!(p.shared_id(), None);
+        p.begin_frame();
+        p.read(64, 128);
+        p.read(4096, 32);
+        assert_eq!(p.stats(), DramStats::default());
+        assert_eq!(p.cumulative(), DramStats::default());
+        assert_eq!(p.take_trace(), vec![(64, 128), (4096, 32)]);
+        assert!(p.take_trace().is_empty(), "take_trace drains");
+        p.begin_frame();
+        p.read(1, 2);
+        p.begin_frame();
+        assert!(p.take_trace().is_empty(), "begin_frame clears the frame trace");
     }
 
     #[test]

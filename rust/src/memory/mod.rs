@@ -34,5 +34,5 @@ pub use event_queue::{
 };
 pub use oracle::SyncDramModel;
 pub use shard::ShardMap;
-pub use sram::{SramBuffer, SramConfig, SramStats};
+pub use sram::{SegmentWalker, SramBuffer, SramConfig, SramStats};
 pub use traffic::TrafficLog;

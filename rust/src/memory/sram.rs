@@ -47,13 +47,18 @@ impl SramConfig {
     }
 }
 
-/// Statistics.
+/// Statistics. `energy_pj` is **derived** from the hit/write counters when
+/// a buffer snapshot is taken ([`SramBuffer::stats`]) rather than
+/// accumulated per operation, so it reduces exactly no matter how a lookup
+/// stream was partitioned across the executor's segment walkers.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SramStats {
     pub lookups: u64,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Line writes (miss fills / inserts).
+    pub writes: u64,
     pub energy_pj: f64,
 }
 
@@ -71,6 +76,7 @@ impl SramStats {
         self.hits += o.hits;
         self.misses += o.misses;
         self.evictions += o.evictions;
+        self.writes += o.writes;
         self.energy_pj += o.energy_pj;
     }
 }
@@ -116,21 +122,17 @@ impl SramBuffer {
         (base, base + self.config.ways)
     }
 
-    /// Look up `key` in `segment`; on hit, refresh LRU and charge a read.
-    /// Returns `true` on hit. On miss the caller fetches from DRAM and calls
-    /// [`SramBuffer::insert`].
+    /// Look up `key` in `segment`; on hit, refresh LRU (a line read is
+    /// charged when statistics are snapshotted). Returns `true` on hit. On
+    /// miss the caller fetches from DRAM and calls [`SramBuffer::insert`].
     pub fn lookup(&mut self, segment: usize, key: u64) -> bool {
         self.clock += 1;
         self.stats.lookups += 1;
         let (lo, hi) = self.set_range(segment, key);
-        let bits = (self.config.line_bytes * 8) as f64;
-        // Tag check energy is negligible next to the line read; charge the
-        // line read only on hit.
         for i in lo..hi {
             if self.sets[i].valid && self.sets[i].key == key {
                 self.sets[i].last_use = self.clock;
                 self.stats.hits += 1;
-                self.stats.energy_pj += self.config.e_read_pj_per_bit * bits;
                 return true;
             }
         }
@@ -141,11 +143,10 @@ impl SramBuffer {
     /// Insert `key` into `segment` (after a miss fill), LRU-evicting.
     pub fn insert(&mut self, segment: usize, key: u64) {
         self.clock += 1;
-        let (lo, hi) = self.set_range(segment, key);
-        let bits = (self.config.line_bytes * 8) as f64;
-        self.stats.energy_pj += self.config.e_write_pj_per_bit * bits;
+        self.stats.writes += 1;
 
         // Reuse an invalid way if present.
+        let (lo, hi) = self.set_range(segment, key);
         let mut victim = lo;
         let mut oldest = u64::MAX;
         for i in lo..hi {
@@ -187,8 +188,50 @@ impl SramBuffer {
         false
     }
 
+    /// Statistics snapshot. Energy derives from the counters here —
+    /// `hits·E_read + writes·E_write` per line (tag checks are negligible
+    /// next to the line access) — so it is independent of how the lookup
+    /// stream was partitioned across segment walkers: a requirement of the
+    /// parallel executor's bit-identical-stats contract.
     pub fn stats(&self) -> SramStats {
-        self.stats
+        let mut s = self.stats;
+        let bits = (self.config.line_bytes * 8) as f64;
+        s.energy_pj = s.hits as f64 * self.config.e_read_pj_per_bit * bits
+            + s.writes as f64 * self.config.e_write_pj_per_bit * bits;
+        s
+    }
+
+    /// Split the buffer into independent per-depth-segment walkers (one
+    /// per segment, each owning that segment's way storage). Lookups are
+    /// already segment-local (set selection never crosses a segment), and
+    /// LRU only compares ages *within a set*, so replaying each segment's
+    /// subsequence of a global lookup stream — in stream order, under a
+    /// segment-local clock — reproduces the exact hit/miss/eviction
+    /// sequence of the monolithic walk. The caller folds walker counters
+    /// back with [`SramBuffer::merge_stats`] in segment order.
+    pub fn segment_walkers(&mut self) -> Vec<SegmentWalker<'_>> {
+        let config = self.config;
+        let sets_per_segment = self.sets_per_segment;
+        let per = (sets_per_segment * config.ways).max(1);
+        self.sets
+            .chunks_mut(per)
+            .map(|ways| SegmentWalker {
+                config,
+                sets_per_segment,
+                ways,
+                clock: 0,
+                stats: SramStats::default(),
+            })
+            .collect()
+    }
+
+    /// Fold per-segment walker counters back into the buffer's statistics
+    /// (callers iterate segments in fixed 0..N order; all fields are
+    /// integer counters, so the reduction is exact).
+    pub fn merge_stats(&mut self, per_segment: &[SramStats]) {
+        for s in per_segment {
+            self.stats.add(s);
+        }
     }
 
     /// Clear contents and stats (new frame sweep with cold buffer).
@@ -211,6 +254,72 @@ impl SramBuffer {
     /// Lines the whole buffer can hold.
     pub fn capacity_lines(&self) -> usize {
         self.config.segments * self.sets_per_segment * self.config.ways
+    }
+}
+
+/// Independent per-segment view of an [`SramBuffer`] (see
+/// [`SramBuffer::segment_walkers`]): replays one depth segment's lookup
+/// subsequence with segment-local state, so the executor fans the blend
+/// walk out across segments while keeping every counter bit-identical to
+/// the monolithic serial walk.
+#[derive(Debug)]
+pub struct SegmentWalker<'a> {
+    config: SramConfig,
+    sets_per_segment: usize,
+    ways: &'a mut [Way],
+    clock: u64,
+    stats: SramStats,
+}
+
+impl SegmentWalker<'_> {
+    /// One lookup; on a miss the line is inserted immediately (the caller
+    /// records the DRAM fill and issues it later in global request order).
+    /// Returns `true` on hit. Mirrors `lookup` + `insert` of the owning
+    /// buffer exactly, under a segment-local clock — LRU only compares
+    /// ages within a set, so relative order (all that matters) is
+    /// preserved.
+    pub fn lookup_or_note(&mut self, key: u64) -> bool {
+        self.clock += 1;
+        self.stats.lookups += 1;
+        let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
+        let set = (h as usize) % self.sets_per_segment.max(1);
+        let lo = set * self.config.ways;
+        let hi = (lo + self.config.ways).min(self.ways.len());
+        for i in lo..hi {
+            if self.ways[i].valid && self.ways[i].key == key {
+                self.ways[i].last_use = self.clock;
+                self.stats.hits += 1;
+                return true;
+            }
+        }
+        self.stats.misses += 1;
+
+        // Miss: fill the line (LRU-evicting), like `SramBuffer::insert`.
+        self.clock += 1;
+        self.stats.writes += 1;
+        let mut victim = lo;
+        let mut oldest = u64::MAX;
+        for i in lo..hi {
+            if !self.ways[i].valid {
+                victim = i;
+                break;
+            }
+            if self.ways[i].last_use < oldest {
+                oldest = self.ways[i].last_use;
+                victim = i;
+            }
+        }
+        if self.ways[victim].valid {
+            self.stats.evictions += 1;
+        }
+        self.ways[victim] = Way { key, last_use: self.clock, valid: true };
+        false
+    }
+
+    /// Raw walker counters (energy stays 0 here — it derives from the
+    /// merged counters at [`SramBuffer::stats`] time).
+    pub fn stats(&self) -> SramStats {
+        self.stats
     }
 }
 
@@ -303,6 +412,55 @@ mod tests {
         assert_eq!(dram.stats().reads, 1, "hit must not touch DRAM");
         assert_eq!(s.stats().hits, 1);
         assert_eq!(s.stats().misses, 1);
+    }
+
+    #[test]
+    fn segment_walkers_match_monolithic_walk() {
+        use crate::memory::dram::MemSink;
+
+        struct AddrLog(Vec<u64>);
+        impl MemSink for AddrLog {
+            fn read(&mut self, addr: u64, _bytes: u64) {
+                self.0.push(addr);
+            }
+        }
+
+        // A deterministic interleaved stream over all 4 segments with
+        // reuse (hits), conflicts, and evictions (modulus chosen so all
+        // three counters are exercised; validated against a Python mirror
+        // of both walks).
+        let stream: Vec<(usize, u64)> = (0..600u64)
+            .map(|i| (((i * 7 + i / 5) % 4) as usize, (i * 31 + 11) % 37))
+            .collect();
+
+        // (a) The monolithic serial walk.
+        let mut mono = small();
+        let mut fills = AddrLog(Vec::new());
+        for &(seg, key) in &stream {
+            mono.lookup_or_fill(seg, key, key * 64, 64, &mut fills);
+        }
+
+        // (b) The executor's sharded walk: per-segment subsequences in
+        // stream order, misses replayed by global stream index.
+        let mut sharded = small();
+        let mut misses: Vec<(usize, u64)> = Vec::new();
+        let per_segment: Vec<SramStats> = {
+            let mut walkers = sharded.segment_walkers();
+            assert_eq!(walkers.len(), 4);
+            for (i, &(seg, key)) in stream.iter().enumerate() {
+                if !walkers[seg].lookup_or_note(key) {
+                    misses.push((i, key));
+                }
+            }
+            walkers.iter().map(SegmentWalker::stats).collect()
+        };
+        sharded.merge_stats(&per_segment);
+
+        assert_eq!(mono.stats(), sharded.stats());
+        assert!(mono.stats().hits > 0, "stream must exercise the hit path");
+        assert!(mono.stats().evictions > 0, "stream must exercise eviction");
+        let replayed: Vec<u64> = misses.iter().map(|&(_, key)| key * 64).collect();
+        assert_eq!(fills.0, replayed, "miss-fill order must match the serial walk");
     }
 
     #[test]

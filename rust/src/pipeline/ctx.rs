@@ -8,25 +8,31 @@
 //!   zeroed by [`FrameCtx::begin_frame`] at the top of every frame;
 //! * **pooled scratch buffers** (projected splats, per-tile bins, block
 //!   working sets, sorted bins, visit order, the connection graph, depth
-//!   boundaries, the pooled cull output) — `clear()`ed, never dropped, so
-//!   their capacities survive across frames and **steady-state frames
-//!   allocate no scratch vectors** (asserted by the capacity-reuse test via
+//!   boundaries, the pooled cull output, the executor's per-worker and
+//!   per-segment pools) — `clear()`ed, never dropped, so their capacities
+//!   survive across frames and **steady-state frames allocate no scratch
+//!   vectors** (asserted by the capacity-reuse test via
 //!   [`FrameCtx::scratch_capacities`]);
 //! * **memory ports** ([`crate::memory::MemPort`]): the cull and blend
 //!   DRAM request handles, threaded through the context so the stages are
-//!   agnostic to whether they talk to a private synchronous model or a
-//!   shared, contended event-queue `MemorySystem`.
+//!   agnostic to whether they talk to a private synchronous model, a
+//!   shared, contended event-queue `MemorySystem`, or a trace recorder.
 //!
 //! [`FrameBind`] is the borrowed, immutable per-frame view of the shared
 //! scene preparation (scene, grid partition, DRAM layout, quantized copy,
 //! configuration, tile grid) handed to every stage alongside the context —
 //! the same preparation a [`crate::coordinator::RenderServer`] shares across
 //! N concurrent viewer sessions.
+//!
+//! [`WorkerScratch`] is the per-executor-worker slice of the pool: the
+//! sort stage's membership flags and bucket-routing scratch, and the blend
+//! stage's per-depth-segment request streams. Workers receive disjoint
+//! `&mut WorkerScratch` entries, so the fan-out never shares hot scratch.
 
 use crate::culling::{CullOutput, GridPartition};
 use crate::dcim::{DcimConfig, DcimMacro};
 use crate::energy::{FrameEnergy, StageLatency};
-use crate::memory::{MemPort, TrafficLog};
+use crate::memory::{MemPort, SramStats, TrafficLog};
 use crate::pipeline::PipelineConfig;
 use crate::render::Image;
 use crate::scene::{DramLayout, Gaussian4D, Scene};
@@ -47,6 +53,21 @@ pub struct FrameBind<'s> {
     pub tile_grid: &'s TileGrid,
 }
 
+/// Per-worker pooled scratch of the parallel executor (one entry per pool
+/// thread; entry 0 doubles as the serial path's scratch).
+#[derive(Debug, Default)]
+pub struct WorkerScratch {
+    /// Splat-in-tile flags (per-tile extraction filter of the sort stage).
+    pub in_tile: Vec<bool>,
+    /// Bucket-routing scratch for the sort engine (see
+    /// [`crate::sorting::assign_buckets_into`]).
+    pub buckets: Vec<Vec<SortItem>>,
+    /// Per-depth-segment blend request streams: `(global pair index,
+    /// gaussian id)`, ordered within each worker's contiguous chunk of the
+    /// tile order.
+    pub seg_streams: Vec<Vec<(u64, u32)>>,
+}
+
 /// Shared mutable frame state: stage outputs + pooled scratch.
 #[derive(Debug)]
 pub struct FrameCtx {
@@ -65,8 +86,8 @@ pub struct FrameCtx {
     pub cull: CullOutput,
     /// DRAM request port of the cull/preprocess stage. Backend chosen by
     /// `PipelineConfig::mem`: a private synchronous model (determinism
-    /// baseline) or a registered port of a shared event-queue
-    /// `MemorySystem`.
+    /// baseline), a registered port of a shared event-queue
+    /// `MemorySystem`, or a trace recorder (two-phase contended batches).
     pub cull_port: MemPort,
     /// DRAM request port of the blend miss-fill path.
     pub blend_port: MemPort,
@@ -89,8 +110,6 @@ pub struct FrameCtx {
     pub sorted_bins: Vec<Vec<u32>>,
     /// Splat membership flags (working-set dedup).
     pub member: Vec<bool>,
-    /// Splat-in-tile flags (per-tile extraction filter).
-    pub in_tile: Vec<bool>,
     /// Tile visit order (ATG groups or raster).
     pub tile_order: Vec<usize>,
     /// Per-group block sort scratch for the ATG tile order.
@@ -102,12 +121,30 @@ pub struct FrameCtx {
     /// Tile-block connection-strength graph, rebuilt (cleared) per frame —
     /// hoisted out of the old per-frame `ConnectionGraph::new` allocation.
     pub conn: ConnectionGraph,
+
+    // ---- executor pools (cleared, never dropped) ------------------------
+    /// Per-worker scratch of the parallel executor (entry 0 = serial path).
+    pub workers: Vec<WorkerScratch>,
+    /// Per-block sort stat partials, reduced in block order after the
+    /// fan-out.
+    pub block_sort_stats: Vec<SortStats>,
+    /// Global pair index at which each tile-order position starts (blend
+    /// request enumeration prefix).
+    pub pair_base: Vec<u64>,
+    /// Per-depth-segment SRAM stat partials, reduced in segment order.
+    pub seg_stats: Vec<SramStats>,
+    /// Per-depth-segment miss lists: `(global pair index, gaussian id)`.
+    pub seg_misses: Vec<Vec<(u64, u32)>>,
+    /// Miss merge buffer: all segments' misses, sorted by global pair
+    /// index — the serial DRAM issue order.
+    pub miss_order: Vec<(u64, u32)>,
 }
 
 impl FrameCtx {
     /// Build the context for a pipeline with the given connection-graph
     /// geometry and DCIM configuration. `n_blocks`/`n_tiles` size the
-    /// block- and tile-indexed pools once, up front.
+    /// block- and tile-indexed pools once, up front. The executor pools
+    /// default to one worker; see [`FrameCtx::with_workers`].
     pub fn new(
         conn: ConnectionGraph,
         dcim: DcimConfig,
@@ -136,13 +173,25 @@ impl FrameCtx {
             block_items: vec![Vec::new(); n_blocks],
             sorted_bins: vec![Vec::new(); n_tiles],
             member: Vec::new(),
-            in_tile: Vec::new(),
             tile_order: Vec::new(),
             block_scratch: Vec::new(),
             depth_scratch: Vec::new(),
             depth_boundaries: Vec::new(),
             conn,
+            workers: vec![WorkerScratch::default()],
+            block_sort_stats: vec![SortStats::default(); n_blocks],
+            pair_base: Vec::new(),
+            seg_stats: Vec::new(),
+            seg_misses: Vec::new(),
+            miss_order: Vec::new(),
         }
+    }
+
+    /// Size the executor's per-worker pool (`threads` entries).
+    pub fn with_workers(mut self, threads: usize) -> FrameCtx {
+        let t = threads.max(1);
+        self.workers = (0..t).map(|_| WorkerScratch::default()).collect();
+        self
     }
 
     /// Zero the per-frame outputs. Pooled scratch is *not* touched here —
@@ -180,12 +229,26 @@ impl FrameCtx {
             self.sorted_bins.capacity(),
             nested(&self.sorted_bins),
             self.member.capacity(),
-            self.in_tile.capacity(),
             self.tile_order.capacity(),
             self.block_scratch.capacity(),
             self.depth_scratch.capacity(),
             self.depth_boundaries.capacity(),
+            self.block_sort_stats.capacity(),
+            self.pair_base.capacity(),
+            self.seg_stats.capacity(),
+            self.seg_misses.capacity(),
+            nested(&self.seg_misses),
+            self.miss_order.capacity(),
         ];
+        // Per-worker executor scratch (sort flags, bucket routing, segment
+        // streams) is part of the zero-allocation contract too.
+        for ws in &self.workers {
+            caps.push(ws.in_tile.capacity());
+            caps.push(ws.buckets.capacity());
+            caps.push(nested(&ws.buckets));
+            caps.push(ws.seg_streams.capacity());
+            caps.push(nested(&ws.seg_streams));
+        }
         // The pooled cull output (zero-allocation preprocess contract).
         caps.extend(self.cull.scratch_capacities());
         caps

@@ -9,6 +9,7 @@
 //! [`crate::coordinator::RenderServer`]).
 
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::camera::Camera;
 use crate::culling::{GridConfig, GridPartition};
@@ -26,6 +27,7 @@ use crate::tiles::connection::ConnectionGraph;
 use crate::tiles::intersect::TileGrid;
 
 use super::ctx::{FrameBind, FrameCtx};
+use super::par::{resolve_threads, WorkerPool};
 use super::stages::{BlendStage, CullStage, GroupStage, IntersectStage, ProjectStage, SortStage};
 
 /// Per-Gaussian preprocessing MACs on the DCIM tier: temporal slice (eq. 5:
@@ -70,6 +72,11 @@ pub struct PipelineConfig {
     /// to the frozen monolith) or the event-queue memory system with
     /// outstanding transactions, shard channel groups, and contention.
     pub mem: MemSimConfig,
+    /// Host threads of the intra-frame parallel executor (`pipeline::par`):
+    /// `0` = auto (the `PALLAS_THREADS` environment variable, else
+    /// `available_parallelism`). Every simulated stat output is
+    /// bit-identical at any value — this knob only trades host wall-clock.
+    pub threads: usize,
 }
 
 impl PipelineConfig {
@@ -88,6 +95,7 @@ impl PipelineConfig {
             sort_hw: SortHwConfig::default(),
             sram_bytes: 256 * 1024,
             mem: MemSimConfig::default(),
+            threads: 0,
         }
     }
 
@@ -107,6 +115,53 @@ impl PipelineConfig {
         self.width = w;
         self.height = h;
         self
+    }
+
+    /// Pin the executor thread count (`0` = auto).
+    pub fn with_threads(mut self, threads: usize) -> PipelineConfig {
+        self.threads = threads;
+        self
+    }
+
+    /// The executor thread count this configuration resolves to (see
+    /// [`resolve_threads`]).
+    pub fn resolved_threads(&self) -> usize {
+        resolve_threads(self.threads)
+    }
+}
+
+/// Host wall-clock accounting of the intra-frame executor — the BENCH
+/// layer's per-stage timing source. Simulated-time latencies live in
+/// [`StageLatency`]; this is what actually elapsed on the host, so it is
+/// *not* part of any determinism contract.
+#[derive(Debug, Clone, Default)]
+pub struct HostStageWall {
+    /// Frames measured.
+    pub frames: u64,
+    /// Cumulative host seconds inside the sort stage / blend stage / the
+    /// whole frame.
+    pub sort_s: f64,
+    pub blend_s: f64,
+    pub frame_s: f64,
+    /// Per-frame samples (capped at [`HOST_WALL_SAMPLES`]) for percentile
+    /// reporting.
+    pub sort_samples: Vec<f64>,
+    pub blend_samples: Vec<f64>,
+}
+
+/// Sample cap of [`HostStageWall`] (keeps long sequences bounded).
+pub const HOST_WALL_SAMPLES: usize = 4096;
+
+impl HostStageWall {
+    fn push(&mut self, sort_s: f64, blend_s: f64, frame_s: f64) {
+        self.frames += 1;
+        self.sort_s += sort_s;
+        self.blend_s += blend_s;
+        self.frame_s += frame_s;
+        if self.sort_samples.len() < HOST_WALL_SAMPLES {
+            self.sort_samples.push(sort_s);
+            self.blend_samples.push(blend_s);
+        }
     }
 }
 
@@ -192,6 +247,22 @@ pub struct FramePipeline<'a> {
     /// [`FramePipeline::with_shared_memory`] is paced by its owner — the
     /// contended `RenderServer` batch.
     owns_mem: bool,
+    /// The intra-frame parallel executor (sized by
+    /// `PipelineConfig::threads`; persistent across frames).
+    pool: WorkerPool,
+    /// Host wall-clock per-stage accounting (BENCH layer).
+    host: HostStageWall,
+}
+
+/// Which memory backend [`FramePipeline::build`] wires the context's ports
+/// to.
+enum MemChoice {
+    /// Follow `PipelineConfig::mem` (private sync or private event-queue).
+    Config,
+    /// Register ports on a shared, contended event-queue system.
+    Shared(Arc<Mutex<MemorySystem>>),
+    /// Record per-frame request traces (two-phase contended batches).
+    Trace,
 }
 
 impl<'a> FramePipeline<'a> {
@@ -211,7 +282,7 @@ impl<'a> FramePipeline<'a> {
         prep: ScenePrep,
         config: PipelineConfig,
     ) -> FramePipeline<'a> {
-        FramePipeline::build(scene, prep, config, None)
+        FramePipeline::build(scene, prep, config, MemChoice::Config)
     }
 
     /// Build on a shared preparation *and* a shared event-queue memory
@@ -225,14 +296,27 @@ impl<'a> FramePipeline<'a> {
         config: PipelineConfig,
         sys: Arc<Mutex<MemorySystem>>,
     ) -> FramePipeline<'a> {
-        FramePipeline::build(scene, prep, config, Some(sys))
+        FramePipeline::build(scene, prep, config, MemChoice::Shared(sys))
+    }
+
+    /// Build on a shared preparation with **trace-recording** memory
+    /// ports: frames simulate everything except DRAM timing, and
+    /// [`FramePipeline::take_frame_traces`] drains the per-frame request
+    /// streams for deterministic replay into a shared system — the render
+    /// half of the two-phase contended batch.
+    pub fn with_trace_ports(
+        scene: &'a Scene,
+        prep: ScenePrep,
+        config: PipelineConfig,
+    ) -> FramePipeline<'a> {
+        FramePipeline::build(scene, prep, config, MemChoice::Trace)
     }
 
     fn build(
         scene: &'a Scene,
         prep: ScenePrep,
         config: PipelineConfig,
-        shared_mem: Option<Arc<Mutex<MemorySystem>>>,
+        choice: MemChoice,
     ) -> FramePipeline<'a> {
         let tile_grid = TileGrid::new(config.width, config.height);
         let conn =
@@ -247,18 +331,24 @@ impl<'a> FramePipeline<'a> {
         });
         let buffer_lines = sram.capacity_lines();
 
-        let attached = shared_mem.is_some();
-        let (cull_port, blend_port, mem_sys) = match shared_mem {
-            Some(sys) => {
+        let (cull_port, blend_port, mem_sys, owns_mem) = match choice {
+            MemChoice::Shared(sys) => {
                 let cull = MemPort::shared(&sys, MemStage::Preprocess);
                 let blend = MemPort::shared(&sys, MemStage::Blend);
-                (cull, blend, Some(sys))
+                (cull, blend, Some(sys), false)
             }
-            None => match config.mem.mode {
+            MemChoice::Trace => (
+                MemPort::trace(MemStage::Preprocess),
+                MemPort::trace(MemStage::Blend),
+                None,
+                false,
+            ),
+            MemChoice::Config => match config.mem.mode {
                 MemMode::Sync => (
                     MemPort::sync(config.mem.dram, MemStage::Preprocess),
                     MemPort::sync(config.mem.dram, MemStage::Blend),
                     None,
+                    false,
                 ),
                 MemMode::EventQueue => {
                     let sys = Arc::new(Mutex::new(MemorySystem::new(
@@ -267,12 +357,12 @@ impl<'a> FramePipeline<'a> {
                     )));
                     let cull = MemPort::shared(&sys, MemStage::Preprocess);
                     let blend = MemPort::shared(&sys, MemStage::Blend);
-                    (cull, blend, Some(sys))
+                    (cull, blend, Some(sys), true)
                 }
             },
         };
-        let owns_mem = mem_sys.is_some() && !attached;
 
+        let threads = config.resolved_threads();
         let ctx = FrameCtx::new(
             conn,
             config.dcim,
@@ -280,8 +370,11 @@ impl<'a> FramePipeline<'a> {
             tile_grid.n_tiles(),
             cull_port,
             blend_port,
-        );
+        )
+        .with_workers(threads);
         FramePipeline {
+            pool: WorkerPool::new(threads),
+            host: HostStageWall::default(),
             cull_stage: CullStage,
             project_stage: ProjectStage,
             intersect_stage: IntersectStage,
@@ -351,13 +444,19 @@ impl<'a> FramePipeline<'a> {
             config: &self.config,
             tile_grid: &self.tile_grid,
         };
+        let frame_t0 = Instant::now();
         self.ctx.begin_frame();
         self.cull_stage.run(&bind, cam, t, &mut self.ctx);
         self.project_stage.run(&bind, cam, t, &mut self.ctx);
         self.intersect_stage.run(&bind, &mut self.ctx);
         self.group_stage.run(&bind, &mut self.ctx);
-        self.sort_stage.run(&bind, &mut self.ctx);
-        self.blend_stage.run(&bind, render_image, &mut self.ctx);
+        let sort_t0 = Instant::now();
+        self.sort_stage.run(&bind, &mut self.ctx, &self.pool);
+        let sort_s = sort_t0.elapsed().as_secs_f64();
+        let blend_t0 = Instant::now();
+        self.blend_stage.run(&bind, render_image, &mut self.ctx, &self.pool);
+        let blend_s = blend_t0.elapsed().as_secs_f64();
+        self.host.push(sort_s, blend_s, frame_t0.elapsed().as_secs_f64());
         self.frame_idx += 1;
 
         FrameResult {
@@ -378,6 +477,25 @@ impl<'a> FramePipeline<'a> {
     /// [`EARLY_TERMINATION_FACTOR`], re-calibrated by rendered frames).
     pub fn et_factor(&self) -> f64 {
         self.blend_stage.et_factor
+    }
+
+    /// Drain the per-frame DRAM request traces of both ports — `(cull,
+    /// blend)` streams of `(addr, bytes)` in issue order. Non-empty only
+    /// for pipelines built via [`FramePipeline::with_trace_ports`]; call
+    /// once after each `render_frame`.
+    pub fn take_frame_traces(&mut self) -> (Vec<(u64, u64)>, Vec<(u64, u64)>) {
+        (self.ctx.cull_port.take_trace(), self.ctx.blend_port.take_trace())
+    }
+
+    /// Host wall-clock per-stage accounting across all frames rendered so
+    /// far (see [`HostStageWall`]).
+    pub fn host_wall(&self) -> &HostStageWall {
+        &self.host
+    }
+
+    /// Executor threads this pipeline's pool applies per frame.
+    pub fn pool_threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Capacities of the pooled scratch buffers (see

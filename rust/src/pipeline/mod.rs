@@ -41,10 +41,12 @@
 pub mod ctx;
 pub mod frame;
 pub mod oracle;
+pub mod par;
 pub mod profile;
 pub mod stages;
 
-pub use ctx::{FrameBind, FrameCtx};
-pub use frame::{FramePipeline, FrameResult, PipelineConfig, ScenePrep};
+pub use ctx::{FrameBind, FrameCtx, WorkerScratch};
+pub use frame::{FramePipeline, FrameResult, HostStageWall, PipelineConfig, ScenePrep};
+pub use par::{resolve_threads, SharedSlice, WorkerPool};
 pub use profile::{profile_breakdown, PhaseShare};
 pub use stages::{BlendStage, CullStage, GroupStage, IntersectStage, ProjectStage, SortStage};

@@ -1,0 +1,415 @@
+//! `pipeline::par` — the deterministic intra-frame parallel executor.
+//!
+//! [`WorkerPool`] is a **persistent, std-only scoped worker pool**: `N − 1`
+//! OS threads live as long as the pool (one [`FramePipeline`] or one
+//! contended server batch), and [`WorkerPool::scope`] hands out a
+//! [`Scope`] whose `spawn` accepts closures borrowing the caller's stack —
+//! exactly like `std::thread::scope`, but without re-spawning threads every
+//! frame. The calling thread participates: after the scope closure returns
+//! it drains the task queue itself, so a pool of `threads = T` applies `T`
+//! cores to the region.
+//!
+//! # Determinism contract
+//!
+//! The executor never makes *statistics* depend on scheduling:
+//!
+//! * workers write **disjoint** slices of the pooled
+//!   [`FrameCtx`](super::FrameCtx) (per-block sort outputs, per-tile blend
+//!   outputs, per-segment SRAM streams) through [`SharedSlice`];
+//! * every accumulator that crosses the fan-out is either an integer
+//!   counter (exact under any reduction order) or is **derived** from
+//!   integer counters at read time (SRAM/NMC energy), and partials are
+//!   reduced on the calling thread in fixed block/tile/segment order;
+//! * DRAM request *order* is preserved by collecting requests with their
+//!   global sequence index and replaying them serially.
+//!
+//! Consequently every simulated stat output is bit-identical to the serial
+//! path at any thread count — enforced by the `stage_graph_determinism`
+//! thread-matrix suite and the CI `threads-matrix` job.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Resolve a configured thread count: `0` means "auto" — the
+/// `PALLAS_THREADS` environment variable if set (and a positive integer),
+/// else `std::thread::available_parallelism()`.
+pub fn resolve_threads(configured: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    if let Ok(s) = std::env::var("PALLAS_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(usize::from).unwrap_or(1)
+}
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+/// Completion latch of one scope: counts outstanding tasks and carries the
+/// first panic payload across threads.
+struct Latch {
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// A persistent scoped worker pool (see the module docs). `threads <= 1`
+/// builds a serial pool: no OS threads, `spawn` runs closures inline in
+/// spawn order — the degenerate case every parallel region reduces to.
+pub struct WorkerPool {
+    shared: Option<Arc<PoolShared>>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.threads).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool applying `threads` cores to each scope (the calling
+    /// thread counts as one; `threads − 1` workers are spawned).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return WorkerPool { shared: None, handles: Vec::new(), threads };
+        }
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let handles = (0..threads - 1)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkerPool { shared: Some(shared), handles, threads }
+    }
+
+    /// Cores this pool applies to a scope (including the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a parallel region: `f` spawns tasks on the given [`Scope`];
+    /// `scope` returns only after every spawned task has finished. Panics
+    /// inside tasks are caught, the region completes, and the first payload
+    /// is re-raised here.
+    pub fn scope<'env, F>(&self, f: F)
+    where
+        F: FnOnce(&Scope<'_, 'env>),
+    {
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let scope = Scope { pool: self, latch: Arc::clone(&latch), _env: PhantomData };
+        // A panic in `f` must not unwind past already-spawned tasks (they
+        // borrow the caller's stack): catch it, finish the region, re-raise.
+        let f_result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // The caller helps drain the queue, then waits for stragglers still
+        // running on workers.
+        if let Some(shared) = &self.shared {
+            loop {
+                let task = {
+                    let mut st = shared.state.lock().expect("worker pool lock poisoned");
+                    st.queue.pop_front()
+                };
+                match task {
+                    Some(t) => t(),
+                    None => break,
+                }
+            }
+        }
+        let mut remaining = latch.remaining.lock().expect("scope latch lock poisoned");
+        while *remaining > 0 {
+            remaining = latch.done_cv.wait(remaining).expect("scope latch wait poisoned");
+        }
+        drop(remaining);
+        if let Err(p) = f_result {
+            resume_unwind(p);
+        }
+        let payload = latch.panic.lock().expect("scope panic slot poisoned").take();
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            shared.state.lock().expect("worker pool lock poisoned").shutdown = true;
+            shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut st = shared.state.lock().expect("worker pool lock poisoned");
+            loop {
+                if let Some(t) = st.queue.pop_front() {
+                    break Some(t);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.work_cv.wait(st).expect("worker pool wait poisoned");
+            }
+        };
+        match task {
+            Some(t) => t(),
+            None => return,
+        }
+    }
+}
+
+/// The spawn handle of one [`WorkerPool::scope`] region. Closures may
+/// borrow anything that outlives the `scope` call (`'env`).
+pub struct Scope<'pool, 'env> {
+    pool: &'pool WorkerPool,
+    latch: Arc<Latch>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'pool, 'env> Scope<'pool, 'env> {
+    /// Spawn one task. On a serial pool the closure runs inline (in spawn
+    /// order); otherwise it is queued for the workers / the draining
+    /// caller.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        let Some(shared) = &self.pool.shared else {
+            f();
+            return;
+        };
+        *self.latch.remaining.lock().expect("scope latch lock poisoned") += 1;
+        let latch = Arc::clone(&self.latch);
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            if let Err(p) = catch_unwind(AssertUnwindSafe(f)) {
+                let mut slot = latch.panic.lock().expect("scope panic slot poisoned");
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            let mut remaining = latch.remaining.lock().expect("scope latch lock poisoned");
+            *remaining -= 1;
+            if *remaining == 0 {
+                latch.done_cv.notify_all();
+            }
+        });
+        // SAFETY: `scope` does not return until the latch reaches zero,
+        // i.e. this task has finished running, so every `'env` borrow the
+        // closure captures strictly outlives its execution. The lifetime is
+        // erased only to store the task in the long-lived queue.
+        let task: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Box<dyn FnOnce() + Send>>(task)
+        };
+        let mut st = shared.state.lock().expect("worker pool lock poisoned");
+        st.queue.push_back(task);
+        drop(st);
+        shared.work_cv.notify_one();
+    }
+}
+
+/// A shared view of a mutable slice for fan-out writes to **disjoint**
+/// indices. The executor's stages partition index spaces statically (by
+/// block, tile, or segment), so no two workers ever touch the same element;
+/// the wrapper only erases the exclusivity the borrow checker cannot see
+/// across the static partition.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+impl<T> Clone for SharedSlice<'_, T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SharedSlice<'_, T> {}
+
+// SAFETY: access discipline is the caller's obligation (disjoint indices);
+// the data itself moves between threads, hence the `T: Send` bounds.
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> SharedSlice<'a, T> {
+        SharedSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exclusive access to element `i`.
+    ///
+    /// # Safety
+    ///
+    /// `i < len`, and no other thread may access index `i` while the
+    /// returned borrow lives (the stages guarantee this by striding or
+    /// chunking the index space per worker).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_pool_runs_inline_in_spawn_order() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut log: Vec<usize> = Vec::new();
+        {
+            let log = &mut log;
+            pool.scope(|s| {
+                // Serial spawns run immediately, so sequential &mut
+                // captures are fine one at a time.
+                s.spawn(|| log.push(1));
+            });
+        }
+        let mut log2: Vec<usize> = Vec::new();
+        {
+            let log2 = &mut log2;
+            pool.scope(|s| s.spawn(move || log2.extend([2, 3])));
+        }
+        assert_eq!(log, vec![1]);
+        assert_eq!(log2, vec![2, 3]);
+    }
+
+    #[test]
+    fn parallel_pool_completes_all_tasks() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..64 {
+                let counter = &counter;
+                s.spawn(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+        // The pool is persistent: a second scope reuses the same workers.
+        pool.scope(|s| {
+            for _ in 0..8 {
+                let counter = &counter;
+                s.spawn(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 72);
+    }
+
+    #[test]
+    fn scoped_borrows_of_disjoint_chunks() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 30];
+        pool.scope(|s| {
+            for (i, chunk) in data.chunks_mut(10).enumerate() {
+                s.spawn(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 10 + j) as u64;
+                    }
+                });
+            }
+        });
+        assert_eq!(data, (0..30u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shared_slice_disjoint_strided_writes() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0usize; 101];
+        let n = data.len();
+        {
+            let sl = SharedSlice::new(data.as_mut_slice());
+            pool.scope(|s| {
+                for w in 0..4 {
+                    s.spawn(move || {
+                        let mut i = w;
+                        while i < n {
+                            // SAFETY: indices strided by worker — disjoint.
+                            unsafe { *sl.get_mut(i) = i * 2 };
+                            i += 4;
+                        }
+                    });
+                }
+            });
+        }
+        assert!(data.iter().enumerate().all(|(i, &v)| v == i * 2));
+    }
+
+    #[test]
+    fn task_panic_propagates_after_region_completes() {
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("boom"));
+                let done = &done;
+                s.spawn(move || {
+                    done.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        }));
+        assert!(result.is_err(), "task panic must surface from scope()");
+        assert_eq!(done.load(Ordering::SeqCst), 1, "sibling task still ran");
+        // The pool survives a panicked scope.
+        let again = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let again = &again;
+            s.spawn(move || {
+                again.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(again.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn resolve_threads_prefers_explicit_over_env() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+    }
+}

@@ -11,14 +11,22 @@
 //! hardware state it models (SRAM buffer, ATG/AII posteriori state,
 //! renderer, early-termination calibration), while DRAM traffic is issued
 //! through the context's cull/blend [`MemPort`](crate::memory::MemPort)
-//! handles (synchronous oracle or shared event-queue backend), so a
-//! [`FramePipeline`](super::FramePipeline) is just the linear composition of
-//! the six `run` calls. Per-frame stat outputs are bit-identical to the
-//! pre-refactor monolithic `render_frame` (enforced against
-//! [`super::oracle::MonolithPipeline`] by the determinism suite).
+//! handles (synchronous oracle, shared event-queue backend, or trace
+//! recorder), so a [`FramePipeline`](super::FramePipeline) is just the
+//! linear composition of the six `run` calls.
+//!
+//! The sort and blend stages fan out across the pipeline's
+//! [`WorkerPool`](super::par::WorkerPool): per-block sorting (disjoint
+//! posteriori slots + per-block stat partials reduced in block order) and
+//! the per-depth-segment blend-buffer walk (disjoint segment state, DRAM
+//! miss fills replayed in global pair order). Per-frame stat outputs are
+//! bit-identical to the pre-refactor monolithic `render_frame` at **any**
+//! thread count (enforced against [`super::oracle::MonolithPipeline`] and
+//! across thread counts by the determinism suite).
 
-use super::ctx::{FrameBind, FrameCtx};
+use super::ctx::{FrameBind, FrameCtx, WorkerScratch};
 use super::frame::{DIGITAL_FREQ_GHZ, EARLY_TERMINATION_FACTOR, PREPROCESS_MACS_PER_GAUSSIAN};
+use super::par::{SharedSlice, WorkerPool};
 use crate::camera::Camera;
 use crate::culling::conventional::ConventionalCulling;
 use crate::culling::DrFc;
@@ -26,8 +34,9 @@ use crate::dcim::mapping::BlendOpCounts;
 use crate::dcim::nmc::NmcAccumulator;
 use crate::energy::ops;
 use crate::memory::sram::SramBuffer;
+use crate::memory::SramStats;
 use crate::render::HwRenderer;
-use crate::sorting::SortEngine;
+use crate::sorting::{conventional_bucket_bitonic_into, AiiSort, SortEngine, SortStats};
 use crate::tiles::atg::Atg;
 use crate::tiles::intersect::{bin_splats_into, project_gaussian, Splat2D};
 use crate::tiles::raster::raster_order_into;
@@ -214,53 +223,118 @@ impl GroupStage {
 /// are sorted a single time — and every tile extracts its own ordered list
 /// from the block's result (a stable, order-preserving filter). Owns the
 /// sort engine (AII posteriori boundaries or the conventional baseline).
+///
+/// **Executor fan-out:** blocks are strided across the pool's workers.
+/// Every per-block write is disjoint — the block's working set, its
+/// posteriori boundary slot, its stat cell, and its tiles' `sorted_bins`
+/// entries (each tile belongs to exactly one block) — and the per-block
+/// [`SortStats`] partials (all integer counters) reduce on the calling
+/// thread in fixed block order, so the stat outputs are bit-identical to
+/// the serial walk at any thread count.
 #[derive(Debug)]
 pub struct SortStage {
     pub engine: SortEngine,
 }
 
 impl SortStage {
-    pub fn run(&mut self, bind: &FrameBind, ctx: &mut FrameCtx) {
+    pub fn run(&mut self, bind: &FrameBind, ctx: &mut FrameCtx, pool: &WorkerPool) {
+        // Engine dispatch: the AII arm exposes its per-block posteriori
+        // slots for the fan-out; the conventional arm is stateless and
+        // reads the live configuration (pre-refactor contract).
+        let (eng_buckets, eng_hw, slots_sl) = match &mut self.engine {
+            SortEngine::Aii(aii) => {
+                let nb = aii.n_buckets;
+                let hw = aii.hw;
+                (nb, hw, Some(SharedSlice::new(aii.boundaries_mut())))
+            }
+            SortEngine::Conventional => (bind.config.n_buckets, bind.config.sort_hw, None),
+        };
+
         let FrameCtx {
-            splats,
             bins,
             block_tiles,
             block_items,
             sorted_bins,
-            in_tile,
+            block_sort_stats,
+            workers,
+            splats,
             sort,
             energy,
             latency,
             ..
         } = ctx;
+        let n_blocks = block_tiles.len();
+        let n_splats = splats.len();
         for v in sorted_bins.iter_mut() {
             v.clear();
         }
-        in_tile.clear();
-        in_tile.resize(splats.len(), false);
-        for (block, tiles) in block_tiles.iter().enumerate() {
-            let items = &mut block_items[block];
-            if items.is_empty() {
-                continue;
-            }
-            let stats =
-                self.engine
-                    .sort_block(block, items, bind.config.n_buckets, &bind.config.sort_hw);
-            sort.add(&stats);
-            // Per-tile extraction (stable, order-preserving).
-            for &tile in tiles {
-                for &si in &bins[tile] {
-                    in_tile[si as usize] = true;
+        block_sort_stats.clear();
+        block_sort_stats.resize(n_blocks, SortStats::default());
+        let t = workers.len().max(1);
+        {
+            let bins: &[Vec<u32>] = bins;
+            let block_tiles: &[Vec<usize>] = block_tiles;
+            let items_sl = SharedSlice::new(block_items.as_mut_slice());
+            let sorted_sl = SharedSlice::new(sorted_bins.as_mut_slice());
+            let stats_sl = SharedSlice::new(block_sort_stats.as_mut_slice());
+            pool.scope(|scope| {
+                for (w, ws) in workers.iter_mut().enumerate() {
+                    scope.spawn(move || {
+                        ws.in_tile.clear();
+                        ws.in_tile.resize(n_splats, false);
+                        let mut block = w;
+                        while block < n_blocks {
+                            // SAFETY: block indices are strided by worker
+                            // (w, w+t, …), so no two workers touch the same
+                            // block's working set, posteriori slot, or stat
+                            // cell — and each tile belongs to exactly one
+                            // block, so `sorted_bins` writes are disjoint
+                            // too.
+                            let items = unsafe { items_sl.get_mut(block) };
+                            if !items.is_empty() {
+                                let stats = match slots_sl {
+                                    Some(sl) => AiiSort::sort_block_slot(
+                                        eng_buckets,
+                                        &eng_hw,
+                                        unsafe { sl.get_mut(block) },
+                                        items,
+                                        &mut ws.buckets,
+                                    ),
+                                    None => conventional_bucket_bitonic_into(
+                                        items,
+                                        eng_buckets,
+                                        &eng_hw,
+                                        &mut ws.buckets,
+                                    ),
+                                };
+                                unsafe { *stats_sl.get_mut(block) = stats };
+                                // Per-tile extraction (stable,
+                                // order-preserving filter of the block's
+                                // sorted working set).
+                                for &tile in &block_tiles[block] {
+                                    let out = unsafe { sorted_sl.get_mut(tile) };
+                                    for &si in &bins[tile] {
+                                        ws.in_tile[si as usize] = true;
+                                    }
+                                    for &(_, si) in items.iter() {
+                                        if ws.in_tile[si as usize] {
+                                            out.push(si);
+                                        }
+                                    }
+                                    for &si in &bins[tile] {
+                                        ws.in_tile[si as usize] = false;
+                                    }
+                                }
+                            }
+                            block += t;
+                        }
+                    });
                 }
-                for &(_, si) in items.iter() {
-                    if in_tile[si as usize] {
-                        sorted_bins[tile].push(si);
-                    }
-                }
-                for &si in &bins[tile] {
-                    in_tile[si as usize] = false;
-                }
-            }
+            });
+        }
+        // Fixed block-order reduction (integer counters — exact).
+        for s in block_sort_stats.iter() {
+            sort.add(s);
         }
         energy.sort_pj += sort.comparisons as f64 * ops::E_CMP_FP16_PJ
             + sort.bucketed as f64 * ops::E_ROUTE_PJ;
@@ -274,6 +348,23 @@ impl SortStage {
 /// and the blend-latency roll-up. Owns the SRAM buffer, the hardware
 /// renderer, and the live early-termination factor; miss fills issue
 /// through the context's blend [`MemPort`](crate::memory::MemPort).
+///
+/// **Executor fan-out (three phases):**
+///
+/// 1. *classify* — contiguous chunks of the tile order stream every
+///    `(tile, splat)` lookup, tagged with its global pair index, into
+///    per-depth-segment queues (per-worker, so queue appends are private;
+///    worker-order concatenation reconstructs global order);
+/// 2. *walk* — one independent [`SegmentWalker`](crate::memory::SegmentWalker)
+///    per depth segment replays its queue (segments strided across
+///    workers), recording hits/misses and the miss list;
+/// 3. *reduce* — SRAM counters merge in segment order, and DRAM miss fills
+///    replay through the blend port sorted by global pair index — the
+///    exact serial issue order, so every DRAM stat (sync oracle or
+///    event-queue) is bit-identical to the serial walk.
+///
+/// The optional numeric render fans out per tile (disjoint pixels,
+/// per-tile NMC partials).
 #[derive(Debug)]
 pub struct BlendStage {
     pub sram: SramBuffer,
@@ -287,7 +378,13 @@ impl BlendStage {
         BlendStage { sram, renderer, et_factor: EARLY_TERMINATION_FACTOR }
     }
 
-    pub fn run(&mut self, bind: &FrameBind, render_image: bool, ctx: &mut FrameCtx) {
+    pub fn run(
+        &mut self,
+        bind: &FrameBind,
+        render_image: bool,
+        ctx: &mut FrameCtx,
+        pool: &WorkerPool,
+    ) {
         // Balanced depth-segment boundaries (§3.3-III: the buffer's N depth
         // segments are co-designed with AII-Sort's buckets — equal-count
         // intervals over this frame's visible depths).
@@ -304,25 +401,127 @@ impl BlendStage {
         // SRAM/DRAM reuse simulation over the chosen tile order.
         ctx.blend_port.begin_frame();
         self.sram.reset();
+        let segments = self.sram.config.segments.max(1);
+
+        // Pair-enumeration prefix over the tile order (the global request
+        // indices the replay sorts by) + the modeled pair upper bound.
         let mut blend_pairs_upper = 0u64;
         {
-            let FrameCtx { tile_order, sorted_bins, splats, depth_boundaries, blend_port, .. } =
-                ctx;
+            let FrameCtx { tile_order, sorted_bins, pair_base, .. } = ctx;
+            pair_base.clear();
+            let mut idx = 0u64;
             for &tile in tile_order.iter() {
+                pair_base.push(idx);
+                idx += sorted_bins[tile].len() as u64;
                 let (x0, y0, x1, y1) = bind.tile_grid.tile_pixels(tile);
                 let pixels = ((x1 - x0) * (y1 - y0)) as u64;
                 blend_pairs_upper += pixels * sorted_bins[tile].len() as u64;
-                for &si in &sorted_bins[tile] {
-                    let s = &splats[si as usize];
-                    let segment = depth_segment(depth_boundaries, s.depth);
-                    self.sram.lookup_or_fill(
-                        segment,
-                        s.id as u64,
-                        bind.layout.addr[s.id as usize],
-                        bind.layout.bytes_per_gaussian,
-                        blend_port,
-                    );
+            }
+        }
+
+        // Phase 1 — classify lookups into per-segment streams.
+        {
+            let FrameCtx {
+                tile_order,
+                sorted_bins,
+                splats,
+                depth_boundaries,
+                pair_base,
+                workers,
+                ..
+            } = ctx;
+            let t = workers.len().max(1);
+            let n_pos = tile_order.len();
+            let chunk = n_pos.div_ceil(t).max(1);
+            let tile_order: &[usize] = tile_order;
+            let sorted_bins: &[Vec<u32>] = sorted_bins;
+            let splats: &[Splat2D] = splats;
+            let boundaries: &[f32] = depth_boundaries;
+            let pair_base: &[u64] = pair_base;
+            pool.scope(|scope| {
+                for (w, ws) in workers.iter_mut().enumerate() {
+                    scope.spawn(move || {
+                        ws.seg_streams.resize_with(segments, Vec::new);
+                        for s in ws.seg_streams.iter_mut() {
+                            s.clear();
+                        }
+                        let lo = (w * chunk).min(n_pos);
+                        let hi = ((w + 1) * chunk).min(n_pos);
+                        for p in lo..hi {
+                            let tile = tile_order[p];
+                            let mut idx = pair_base[p];
+                            for &si in &sorted_bins[tile] {
+                                let s = &splats[si as usize];
+                                let seg = depth_segment(boundaries, s.depth);
+                                ws.seg_streams[seg].push((idx, s.id));
+                                idx += 1;
+                            }
+                        }
+                    });
                 }
+            });
+        }
+
+        // Phase 2 — independent per-segment walks.
+        {
+            let FrameCtx { workers, seg_stats, seg_misses, .. } = ctx;
+            seg_stats.clear();
+            seg_stats.resize(segments, SramStats::default());
+            seg_misses.resize_with(segments, Vec::new);
+            for m in seg_misses.iter_mut() {
+                m.clear();
+            }
+            let t = workers.len().max(1);
+            let workers_ref: &[WorkerScratch] = workers;
+            let mut walkers = self.sram.segment_walkers();
+            let n_segs = walkers.len();
+            {
+                let walkers_sl = SharedSlice::new(walkers.as_mut_slice());
+                let stats_sl = SharedSlice::new(seg_stats.as_mut_slice());
+                let miss_sl = SharedSlice::new(seg_misses.as_mut_slice());
+                pool.scope(|scope| {
+                    for w in 0..t {
+                        scope.spawn(move || {
+                            let mut seg = w;
+                            while seg < n_segs {
+                                // SAFETY: segment indices are strided by
+                                // worker — each walker, stat cell, and miss
+                                // list is touched by exactly one worker.
+                                let walker = unsafe { walkers_sl.get_mut(seg) };
+                                let misses = unsafe { miss_sl.get_mut(seg) };
+                                // Worker-order concatenation of the
+                                // per-worker streams = ascending global
+                                // pair index (contiguous chunks).
+                                for ws in workers_ref {
+                                    if let Some(stream) = ws.seg_streams.get(seg) {
+                                        for &(idx, id) in stream {
+                                            if !walker.lookup_or_note(id as u64) {
+                                                misses.push((idx, id));
+                                            }
+                                        }
+                                    }
+                                }
+                                unsafe { *stats_sl.get_mut(seg) = walker.stats() };
+                                seg += t;
+                            }
+                        });
+                    }
+                });
+            }
+        }
+
+        // Phase 3 — serial reduction: counters in segment order, DRAM miss
+        // fills in global pair order (the serial walk's issue order).
+        {
+            let FrameCtx { seg_stats, seg_misses, miss_order, blend_port, .. } = ctx;
+            self.sram.merge_stats(seg_stats);
+            miss_order.clear();
+            for m in seg_misses.iter() {
+                miss_order.extend_from_slice(m);
+            }
+            miss_order.sort_unstable_by_key(|&(idx, _)| idx);
+            for &(_, id) in miss_order.iter() {
+                blend_port.read(bind.layout.addr[id as usize], bind.layout.bytes_per_gaussian);
             }
         }
         ctx.traffic.blend_dram = ctx.blend_port.stats();
@@ -333,9 +532,12 @@ impl BlendStage {
         // Numeric render (optional) gives the exact blended-pair count.
         let mut nmc = NmcAccumulator::new();
         let (image, blend_pairs) = if render_image {
-            let img = self
-                .renderer
-                .render_splats_ordered(&ctx.splats, &ctx.tile_order, &mut nmc);
+            let img = self.renderer.render_splats_ordered_par(
+                &ctx.splats,
+                &ctx.tile_order,
+                &mut nmc,
+                pool,
+            );
             let exact = nmc.stats().blend_ops;
             if blend_pairs_upper > 0 {
                 // Calibrate the live factor for subsequent perf-only frames.

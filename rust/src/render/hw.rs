@@ -12,9 +12,10 @@
 
 use super::Image;
 use crate::camera::Camera;
-use crate::dcim::nmc::{NmcAccumulator, PixelState};
+use crate::dcim::nmc::{NmcAccumulator, NmcStats, PixelState};
 use crate::dcim::ExpLut;
 use crate::math::f16;
+use crate::pipeline::par::{SharedSlice, WorkerPool};
 use crate::scene::Scene;
 use crate::tiles::intersect::{bin_splats, project_gaussian, splat_exponent, Splat2D, TileGrid};
 
@@ -71,6 +72,52 @@ impl HwRenderer {
         self.render_splats_ordered(&splats, &order, &mut NmcAccumulator::new())
     }
 
+    /// Front-to-back depth order of one tile's bin (stable by splat index
+    /// on ties — the exact order the serial rasterizer always used).
+    fn tile_depth_order(&self, splats: &[Splat2D], bin: &[u32]) -> Vec<u32> {
+        let mut order: Vec<u32> = bin.to_vec();
+        order.sort_by(|&a, &b| {
+            splats[a as usize]
+                .depth
+                .partial_cmp(&splats[b as usize].depth)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        order
+    }
+
+    /// Blend one pixel through the depth-ordered splat list (merged
+    /// exponent, FP16 operands, DD3D-Flow LUT exponential, NMC
+    /// accumulation) — the shared inner loop of the serial and
+    /// tile-parallel rasterizers.
+    fn shade_pixel(
+        &self,
+        splats: &[Splat2D],
+        order: &[u32],
+        px: usize,
+        py: usize,
+        nmc: &mut NmcAccumulator,
+    ) -> [f32; 3] {
+        let mut state = PixelState::default();
+        for &si in order {
+            let s = &splats[si as usize];
+            // Merged exponent, FP16 like the datapath operands.
+            let e = splat_exponent(s, px as f32 + 0.5, py as f32 + 0.5);
+            if e < EXP_CUTOFF {
+                continue;
+            }
+            let e_hw = f16::quantize(e);
+            // DD3D-Flow: exponent pre-scaled by 1/ln2 offline.
+            let alpha = s.alpha_base * self.exp.exp2(e_hw * std::f32::consts::LOG2_E);
+            if alpha < 1.0 / 255.0 {
+                continue;
+            }
+            if !nmc.blend(&mut state, alpha, [s.color.x, s.color.y, s.color.z]) {
+                break;
+            }
+        }
+        state.rgb
+    }
+
     /// Rasterize pre-projected splats visiting tiles in `tile_order`,
     /// charging blend arithmetic to `nmc`.
     pub fn render_splats_ordered(
@@ -83,46 +130,92 @@ impl HwRenderer {
         let bins = bin_splats(&self.grid, splats);
 
         for &tile in tile_order {
-            let mut order: Vec<u32> = bins[tile].clone();
-            if order.is_empty() {
+            if bins[tile].is_empty() {
                 continue;
             }
-            order.sort_by(|&a, &b| {
-                splats[a as usize]
-                    .depth
-                    .partial_cmp(&splats[b as usize].depth)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            });
-
+            let order = self.tile_depth_order(splats, &bins[tile]);
             let (x0, y0, x1, y1) = self.grid.tile_pixels(tile);
             for py in y0..y1 {
                 for px in x0..x1 {
-                    let mut state = PixelState::default();
-                    for &si in &order {
-                        let s = &splats[si as usize];
-                        // Merged exponent, FP16 like the datapath operands.
-                        let e = splat_exponent(s, px as f32 + 0.5, py as f32 + 0.5);
-                        if e < EXP_CUTOFF {
-                            continue;
-                        }
-                        let e_hw = f16::quantize(e);
-                        // DD3D-Flow: exponent pre-scaled by 1/ln2 offline.
-                        let alpha =
-                            s.alpha_base * self.exp.exp2(e_hw * std::f32::consts::LOG2_E);
-                        if alpha < 1.0 / 255.0 {
-                            continue;
-                        }
-                        if !nmc.blend(
-                            &mut state,
-                            alpha,
-                            [s.color.x, s.color.y, s.color.z],
-                        ) {
-                            break;
-                        }
-                    }
-                    img.set_pixel(px, py, state.rgb);
+                    let rgb = self.shade_pixel(splats, &order, px, py, nmc);
+                    img.set_pixel(px, py, rgb);
                 }
             }
+        }
+        img
+    }
+
+    /// Tile-parallel rasterization on a [`WorkerPool`]. Tiles own disjoint
+    /// pixel rectangles, so workers write the image without coordination
+    /// (`tile_order` must be a permutation of the tile indices, which every
+    /// ATG/raster order is); per-tile NMC counters reduce in tile order and
+    /// energy derives from op counts, so pixels *and* statistics are
+    /// bit-identical to [`HwRenderer::render_splats_ordered`] at any worker
+    /// count.
+    pub fn render_splats_ordered_par(
+        &self,
+        splats: &[Splat2D],
+        tile_order: &[usize],
+        nmc: &mut NmcAccumulator,
+        pool: &WorkerPool,
+    ) -> Image {
+        let mut img = Image::new(self.grid.width, self.grid.height);
+        let bins = bin_splats(&self.grid, splats);
+        let n_pos = tile_order.len();
+        let width = self.grid.width;
+        // The disjoint-pixel contract requires each tile at most once —
+        // a repeated tile would hand the same pixels to two workers.
+        debug_assert!(
+            {
+                let mut seen = vec![false; self.grid.n_tiles()];
+                tile_order.iter().all(|&tile| !std::mem::replace(&mut seen[tile], true))
+            },
+            "tile_order must not repeat tiles (disjoint-pixel fan-out contract)"
+        );
+        let mut tile_stats: Vec<NmcStats> = vec![NmcStats::default(); n_pos];
+        let t = pool.threads().max(1);
+        {
+            let data_sl = SharedSlice::new(img.data.as_mut_slice());
+            let stats_sl = SharedSlice::new(tile_stats.as_mut_slice());
+            let bins = &bins;
+            pool.scope(|scope| {
+                for w in 0..t {
+                    scope.spawn(move || {
+                        let mut pos = w;
+                        while pos < n_pos {
+                            let tile = tile_order[pos];
+                            if !bins[tile].is_empty() {
+                                let order = self.tile_depth_order(splats, &bins[tile]);
+                                let mut local = NmcAccumulator::new();
+                                let (x0, y0, x1, y1) = self.grid.tile_pixels(tile);
+                                for py in y0..y1 {
+                                    for px in x0..x1 {
+                                        let rgb =
+                                            self.shade_pixel(splats, &order, px, py, &mut local);
+                                        let i = (py * width + px) * 3;
+                                        // SAFETY: tiles cover disjoint pixel
+                                        // rectangles and order positions are
+                                        // strided by worker — no index is
+                                        // written twice.
+                                        unsafe {
+                                            *data_sl.get_mut(i) = rgb[0];
+                                            *data_sl.get_mut(i + 1) = rgb[1];
+                                            *data_sl.get_mut(i + 2) = rgb[2];
+                                        }
+                                    }
+                                }
+                                // SAFETY: one stats cell per order position.
+                                unsafe { *stats_sl.get_mut(pos) = local.stats() };
+                            }
+                            pos += t;
+                        }
+                    });
+                }
+            });
+        }
+        // Reduce the per-tile counters in fixed tile order.
+        for s in &tile_stats {
+            nmc.absorb(s);
         }
         img
     }
@@ -207,6 +300,24 @@ mod tests {
         let img_f = r.render_splats_ordered(&splats, &fwd, &mut NmcAccumulator::new());
         let img_r = r.render_splats_ordered(&splats, &rev, &mut NmcAccumulator::new());
         assert_eq!(img_f, img_r);
+    }
+
+    #[test]
+    fn parallel_render_is_bit_identical_to_serial() {
+        let scene = SynthParams::new(SceneKind::StaticLarge, 1500).generate();
+        let c = cam(96, 96, 25.0);
+        let r = HwRenderer::new(96, 96);
+        let splats = r.project_all(&scene, &c, 0.0);
+        let order: Vec<usize> = (0..r.grid.n_tiles()).collect();
+        let mut serial_nmc = NmcAccumulator::new();
+        let serial = r.render_splats_ordered(&splats, &order, &mut serial_nmc);
+        for threads in [1, 3, 8] {
+            let pool = crate::pipeline::par::WorkerPool::new(threads);
+            let mut par_nmc = NmcAccumulator::new();
+            let par = r.render_splats_ordered_par(&splats, &order, &mut par_nmc, &pool);
+            assert_eq!(serial, par, "pixels diverged at {threads} workers");
+            assert_eq!(serial_nmc.stats(), par_nmc.stats(), "NMC stats at {threads} workers");
+        }
     }
 
     #[test]

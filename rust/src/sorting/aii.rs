@@ -15,7 +15,7 @@
 //! interval value for each tile group").
 
 use super::bucket::{quantile_boundaries, uniform_boundaries};
-use super::{sort_with_boundaries, SortHwConfig, SortItem, SortStats};
+use super::{sort_with_boundaries_into, SortHwConfig, SortItem, SortStats};
 
 /// The AII-Sort engine; owns per-block posteriori boundaries.
 #[derive(Debug)]
@@ -55,15 +55,41 @@ impl AiiSort {
     /// Sort one tile's items (ascending depth), updating the block's
     /// boundaries from the sorted result for the next frame.
     pub fn sort_tile(&mut self, block: usize, items: &mut Vec<SortItem>) -> SortStats {
+        let block = block.min(self.boundaries.len() - 1);
+        let n_buckets = self.n_buckets;
+        let hw = self.hw;
+        let mut scratch: Vec<Vec<SortItem>> = Vec::new();
+        AiiSort::sort_block_slot(n_buckets, &hw, &mut self.boundaries[block], items, &mut scratch)
+    }
+
+    /// The per-block posteriori slots, one per tile block — the parallel
+    /// executor hands each worker disjoint slots so blocks sort
+    /// concurrently without sharing `&mut self`.
+    pub fn boundaries_mut(&mut self) -> &mut [Option<Vec<f32>>] {
+        &mut self.boundaries
+    }
+
+    /// Sort one block's working set against a single posteriori slot
+    /// (phase 1 min/max scan when the slot is empty, phase 2 reuse
+    /// otherwise), updating the slot from the sorted result. `scratch` is
+    /// the caller-owned bucket-routing scratch (per executor worker).
+    pub fn sort_block_slot(
+        n_buckets: usize,
+        hw: &SortHwConfig,
+        slot: &mut Option<Vec<f32>>,
+        items: &mut Vec<SortItem>,
+        scratch: &mut Vec<Vec<SortItem>>,
+    ) -> SortStats {
         let mut stats = SortStats::default();
         let n = items.len();
-        let block = block.min(self.boundaries.len() - 1);
         if n <= 1 {
             return stats;
         }
 
-        let boundaries = match &self.boundaries[block] {
-            Some(b) => b.clone(),
+        match slot.as_deref() {
+            Some(boundaries) => {
+                sort_with_boundaries_into(items, boundaries, hw, &mut stats, scratch);
+            }
             None => {
                 // Phase 1: pay the min/max scan once.
                 let mut lo = f32::INFINITY;
@@ -73,16 +99,15 @@ impl AiiSort {
                     hi = hi.max(d);
                 }
                 stats.minmax_scanned += n as u64;
-                stats.cycles += (n as u64).div_ceil(self.hw.scan_lanes as u64);
-                uniform_boundaries(lo, hi, self.n_buckets)
+                stats.cycles += (n as u64).div_ceil(hw.scan_lanes as u64);
+                let boundaries = uniform_boundaries(lo, hi, n_buckets);
+                sort_with_boundaries_into(items, &boundaries, hw, &mut stats, scratch);
             }
-        };
-
-        sort_with_boundaries(items, &boundaries, &self.hw, &mut stats);
+        }
 
         // Posteriori update: equal-count quantiles of this frame's sorted
         // result become next frame's intervals.
-        self.boundaries[block] = Some(quantile_boundaries(items, self.n_buckets));
+        *slot = Some(quantile_boundaries(items, n_buckets));
         stats
     }
 }

@@ -33,8 +33,26 @@ pub fn quantile_boundaries(sorted: &[SortItem], n_buckets: usize) -> Vec<f32> {
 /// boundary go to bucket 0; at/above the last go to the final bucket — so
 /// stale boundaries (posteriori reuse) degrade balance, never correctness.
 pub fn assign_buckets(items: &[SortItem], boundaries: &[f32]) -> Vec<Vec<SortItem>> {
+    let mut buckets: Vec<Vec<SortItem>> = Vec::new();
+    assign_buckets_into(items, boundaries, &mut buckets);
+    buckets
+}
+
+/// Pooled variant of [`assign_buckets`]: routes into caller-owned scratch,
+/// reusing both the outer vector and every inner bucket's capacity. This is
+/// the per-block hot path of the sort stage (one call per tile block per
+/// frame), so the scratch lives in the frame context — per executor worker
+/// — and is covered by the zero-allocation capacity-signature test.
+pub fn assign_buckets_into(
+    items: &[SortItem],
+    boundaries: &[f32],
+    buckets: &mut Vec<Vec<SortItem>>,
+) {
     let n_buckets = boundaries.len() + 1;
-    let mut buckets: Vec<Vec<SortItem>> = vec![Vec::new(); n_buckets];
+    buckets.resize_with(n_buckets, Vec::new);
+    for b in buckets.iter_mut() {
+        b.clear();
+    }
     for &it in items {
         let mut b = 0;
         while b < boundaries.len() && it.0 >= boundaries[b] {
@@ -42,7 +60,6 @@ pub fn assign_buckets(items: &[SortItem], boundaries: &[f32]) -> Vec<Vec<SortIte
         }
         buckets[b].push(it);
     }
-    buckets
 }
 
 /// Bucket occupancy counts (balance diagnostics; Fig. 6's motivation).
@@ -93,6 +110,30 @@ mod tests {
             cv_qtl < 0.25 && cv_uni > 1.0,
             "quantile cv {cv_qtl} must beat uniform cv {cv_uni} on skewed data"
         );
+    }
+
+    #[test]
+    fn assign_buckets_into_matches_and_reuses_capacity() {
+        let mut rng = Rng::new(3);
+        let items: Vec<SortItem> = (0..500u32).map(|i| (rng.normal(), i)).collect();
+        let boundaries = [-0.5f32, 0.0, 0.7];
+        let mut scratch: Vec<Vec<SortItem>> = Vec::new();
+        assign_buckets_into(&items, &boundaries, &mut scratch);
+        assert_eq!(scratch, assign_buckets(&items, &boundaries));
+
+        // Steady-state reuse: a second routing of the same items must not
+        // grow the outer vector or any bucket (zero allocations).
+        let outer = scratch.capacity();
+        let inner: Vec<usize> = scratch.iter().map(Vec::capacity).collect();
+        assign_buckets_into(&items, &boundaries, &mut scratch);
+        assert_eq!(scratch.capacity(), outer);
+        assert_eq!(scratch.iter().map(Vec::capacity).collect::<Vec<_>>(), inner);
+        assert_eq!(scratch, assign_buckets(&items, &boundaries));
+
+        // Fewer boundaries shrink the bucket count in place.
+        assign_buckets_into(&items, &boundaries[..1], &mut scratch);
+        assert_eq!(scratch.len(), 2);
+        assert_eq!(scratch, assign_buckets(&items, &boundaries[..1]));
     }
 
     #[test]

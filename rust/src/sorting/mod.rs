@@ -9,7 +9,7 @@ pub mod bucket;
 
 pub use aii::AiiSort;
 pub use bitonic::{bitonic_sort, BitonicHw};
-pub use bucket::{assign_buckets, quantile_boundaries, uniform_boundaries};
+pub use bucket::{assign_buckets, assign_buckets_into, quantile_boundaries, uniform_boundaries};
 
 /// One sortable record: (depth key, splat index).
 pub type SortItem = (f32, u32);
@@ -140,6 +140,19 @@ pub fn conventional_bucket_bitonic(
     n_buckets: usize,
     hw: &SortHwConfig,
 ) -> SortStats {
+    let mut buckets: Vec<Vec<SortItem>> = Vec::new();
+    conventional_bucket_bitonic_into(items, n_buckets, hw, &mut buckets)
+}
+
+/// Pooled variant of [`conventional_bucket_bitonic`]: routes through
+/// caller-owned bucket scratch (the executor hands each worker its own),
+/// so steady-state frames allocate no bucket vectors.
+pub fn conventional_bucket_bitonic_into(
+    items: &mut Vec<SortItem>,
+    n_buckets: usize,
+    hw: &SortHwConfig,
+    buckets: &mut Vec<Vec<SortItem>>,
+) -> SortStats {
     let mut stats = SortStats::default();
     let n = items.len();
     if n <= 1 {
@@ -157,29 +170,30 @@ pub fn conventional_bucket_bitonic(
     stats.cycles += (n as u64).div_ceil(hw.scan_lanes as u64);
 
     let boundaries = uniform_boundaries(lo, hi, n_buckets);
-    sort_with_boundaries(items, &boundaries, hw, &mut stats);
+    sort_with_boundaries_into(items, &boundaries, hw, &mut stats, buckets);
     stats
 }
 
-/// Route into buckets by `boundaries`, bitonic-sort each bucket, and splice
-/// back in ascending depth order. Shared by the conventional path and
-/// AII-Sort.
-pub(crate) fn sort_with_boundaries(
+/// Route into buckets by `boundaries`, bitonic-sort each bucket, and
+/// splice back in ascending depth order — the bucket-route + per-bucket
+/// sort core shared by the conventional path and AII-Sort, over
+/// caller-owned bucket scratch (see [`assign_buckets_into`]).
+pub(crate) fn sort_with_boundaries_into(
     items: &mut Vec<SortItem>,
     boundaries: &[f32],
     hw: &SortHwConfig,
     stats: &mut SortStats,
+    buckets: &mut Vec<Vec<SortItem>>,
 ) {
     let n = items.len();
-    let hw_bitonic = BitonicHw { comparators: hw.comparators };
-    let mut buckets = assign_buckets(items, boundaries);
+    assign_buckets_into(items, boundaries, buckets);
     stats.bucketed += n as u64;
     stats.cycles += (n as u64).div_ceil(hw.route_lanes as u64);
     // Routing comparisons: linear interval compare per element.
     stats.comparisons += n as u64 * (boundaries.len() as u64 + 1);
 
     items.clear();
-    for bucket in &mut buckets {
+    for bucket in buckets.iter_mut() {
         // Numeric path: host sort (same ascending result the bitonic
         // network produces — the network itself is validated separately in
         // `bitonic`'s tests; running it per bucket was a host hot spot,
@@ -192,7 +206,6 @@ pub(crate) fn sort_with_boundaries(
         stats.cycles += hw.bucket_cycles(bucket.len());
         items.extend_from_slice(bucket);
     }
-    let _ = hw_bitonic;
 }
 
 /// Verify ascending order by key (test helper, also used by prop tests).

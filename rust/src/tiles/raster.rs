@@ -35,4 +35,24 @@ mod tests {
         assert_eq!(out, raster_order(5, 2));
         assert_eq!(out.capacity(), cap);
     }
+
+    #[test]
+    fn raster_into_is_invariant_to_prior_contents() {
+        // The pooled output may hold any permutation (or garbage) from a
+        // previous frame's ATG order — the refill must be insensitive to
+        // it. This is what licenses sharing one `tile_order` pool between
+        // the ATG and raster arms across frames.
+        let expected = raster_order(4, 3);
+        let mut permuted: Vec<usize> = (0..12).rev().collect();
+        raster_order_into(4, 3, &mut permuted);
+        assert_eq!(permuted, expected);
+
+        let mut garbage: Vec<usize> = vec![9, 3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8, 9, 7];
+        raster_order_into(4, 3, &mut garbage);
+        assert_eq!(garbage, expected);
+
+        let mut short: Vec<usize> = vec![2];
+        raster_order_into(4, 3, &mut short);
+        assert_eq!(short, expected);
+    }
 }

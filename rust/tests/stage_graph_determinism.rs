@@ -9,11 +9,15 @@
 //! 2. **Zero steady-state scratch allocations**: on a static trajectory the
 //!    pooled `FrameCtx` buffers must stop growing after warm-up — their
 //!    capacity signature is frozen from the second frame on.
+//! 3. **Thread-count invariance**: the `pipeline::par` executor must
+//!    produce bit-identical stat outputs (and pixels) at `threads = 1, 2,
+//!    8` — parallelism moves host wall-clock only, never simulated
+//!    results.
 
 use gaucim::camera::{Camera, Trajectory, ViewCondition};
 use gaucim::math::Vec3;
 use gaucim::pipeline::oracle::MonolithPipeline;
-use gaucim::pipeline::{FramePipeline, PipelineConfig};
+use gaucim::pipeline::{FramePipeline, FrameResult, PipelineConfig};
 use gaucim::scene::synth::{SceneKind, SynthParams};
 use gaucim::scene::Scene;
 
@@ -113,6 +117,54 @@ fn stage_graph_matches_monolith_all_ablations() {
             ..base.clone()
         };
         assert_engines_identical(&scene, config, ViewCondition::Average, 3, 0);
+    }
+}
+
+fn assert_frames_identical(a: &FrameResult, b: &FrameResult, label: &str) {
+    assert_eq!(a.traffic, b.traffic, "{label}: TrafficLog diverged");
+    assert_eq!(a.sort, b.sort, "{label}: SortStats diverged");
+    assert_eq!(a.energy, b.energy, "{label}: FrameEnergy diverged");
+    assert_eq!(a.latency, b.latency, "{label}: StageLatency diverged");
+    assert_eq!(a.n_visible, b.n_visible, "{label}: n_visible diverged");
+    assert_eq!(a.blend_pairs, b.blend_pairs, "{label}: blend_pairs diverged");
+    assert_eq!(a.intersections, b.intersections, "{label}: intersections diverged");
+    assert_eq!(a.atg_ops, b.atg_ops, "{label}: atg_ops diverged");
+    assert_eq!(a.atg_flags, b.atg_flags, "{label}: atg_flags diverged");
+    assert_eq!(a.image, b.image, "{label}: rendered pixels diverged");
+}
+
+#[test]
+fn thread_counts_do_not_change_any_stat_output() {
+    let scene = SynthParams::new(SceneKind::DynamicLarge, 4000).with_seed(13).generate();
+    let base = PipelineConfig::paper(true).with_resolution(192, 108);
+    let seq = trajectory(&scene, ViewCondition::Average, 3, 192, 108);
+    let run = |config: PipelineConfig| -> Vec<FrameResult> {
+        let mut p = FramePipeline::new(&scene, config);
+        // Frame 0 renders numerically: the tile-parallel rasterizer, exact
+        // blend pairs, and the early-termination calibration all cross the
+        // fan-out.
+        seq.iter()
+            .enumerate()
+            .map(|(i, (cam, t))| p.render_frame(cam, *t, i == 0))
+            .collect()
+    };
+
+    let serial = run(PipelineConfig { threads: 1, ..base.clone() });
+    for threads in [2, 8] {
+        let par = run(PipelineConfig { threads, ..base.clone() });
+        for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+            assert_frames_identical(a, b, &format!("threads={threads} frame={i}"));
+        }
+    }
+
+    // The event-queue memory backend must be thread-count invariant too
+    // (the blend miss replay preserves global request order).
+    let mut eq_cfg = base.clone();
+    eq_cfg.mem = gaucim::memory::MemSimConfig::event_queue();
+    let eq_serial = run(PipelineConfig { threads: 1, ..eq_cfg.clone() });
+    let eq_par = run(PipelineConfig { threads: 4, ..eq_cfg });
+    for (i, (a, b)) in eq_serial.iter().zip(&eq_par).enumerate() {
+        assert_frames_identical(a, b, &format!("event-queue threads=4 frame={i}"));
     }
 }
 
