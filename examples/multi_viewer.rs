@@ -13,12 +13,23 @@
 //! wall-clock percentiles, and `speedup_vs_serial`) so future PRs have a
 //! perf trajectory to beat.
 //!
+//! The **session layer** rides along: a join/leave [`SessionScript`] runs
+//! under every [`SchedPolicy`] (round-robin / DWFQ / EDF) after asserting
+//! that round-robin over a static script reproduces the contended batch's
+//! roll-up bit-for-bit; the per-policy deadline-miss rates, frame-latency
+//! percentiles, and fairness land in the `sessions` block of
+//! `BENCH_server.json` (diffed across thread counts by the CI
+//! `session-smoke` job). Pass `--sessions` to run the session layer only.
+//!
 //! Run: `cargo run --release --example multi_viewer [-- --viewers 4 --frames 8 --threads 0]`
 //! (`--threads 0` = auto: `PALLAS_THREADS` env, else available parallelism)
 
 use gaucim::bench::write_bench_json;
 use gaucim::camera::ViewCondition;
-use gaucim::coordinator::{Percentiles, RenderServer, ViewerSpec};
+use gaucim::coordinator::{
+    ContendedMemReport, Percentiles, RenderServer, SchedPolicy, SessionScript, SessionSpec,
+    ViewerSpec,
+};
 use gaucim::pipeline::{resolve_threads, HostStageWall, PipelineConfig};
 use gaucim::scene::synth::{SceneKind, SynthParams};
 use gaucim::util::cli::Args;
@@ -41,6 +52,92 @@ fn executor_probe(
     }
     let wall = t0.elapsed().as_secs_f64();
     (pipeline.host_wall().clone(), wall)
+}
+
+/// Run the session-scheduler layer: assert the round-robin static-script
+/// bit-compatibility with `render_batch_contended`, then stream a
+/// join/leave script under every policy and report the per-policy
+/// deadline/fairness roll-ups (simulated quantities only — the block is
+/// diffed across host thread counts by CI).
+fn session_bench(
+    server: &RenderServer,
+    specs: &[ViewerSpec],
+    frames: usize,
+    batch_mem: Option<&ContendedMemReport>,
+) -> Json {
+    // 1 — acceptance gate: round-robin sessions over a no-join/no-leave
+    // script must reproduce the contended batch bit-for-bit. The full run
+    // hands in the roll-up it already computed; `--sessions`-only mode
+    // renders the batch here.
+    let static_script = SessionScript::from_specs(specs);
+    let rr_static = server.render_sessions(&static_script, SchedPolicy::RoundRobin);
+    let batch_json = match batch_mem {
+        Some(mem) => mem.to_json().pretty(),
+        None => server
+            .render_batch_contended(specs)
+            .contended_mem
+            .as_ref()
+            .expect("contended batch must produce a memory roll-up")
+            .to_json()
+            .pretty(),
+    };
+    assert_eq!(
+        batch_json,
+        rr_static.contended.to_json().pretty(),
+        "round-robin session scheduler diverged from render_batch_contended"
+    );
+
+    // 2 — a live stream: two viewers join at frame 0 with different
+    // deadlines/weights, a third joins mid-stream (trajectory cursor at
+    // its join round), one leaves mid-stream, and a fourth warm-starts
+    // its AII intervals from the leaver's retained state.
+    let join_round = (frames / 2).max(1);
+    let leave_round = frames.max(2);
+    let script = SessionScript::new()
+        .join_at(
+            0,
+            SessionSpec::stream(ViewCondition::Average, frames + join_round)
+                .with_deadline_fps(120.0),
+        )
+        .join_at(
+            0,
+            SessionSpec::stream(ViewCondition::Static, frames + join_round)
+                .with_deadline_fps(60.0)
+                .with_weight(2.0),
+        )
+        .join_at(
+            join_round,
+            SessionSpec::stream(ViewCondition::Extreme, frames)
+                .with_start(join_round)
+                .with_deadline_fps(90.0),
+        )
+        .leave_at(leave_round, 1)
+        .join_at(
+            leave_round,
+            SessionSpec::stream(ViewCondition::Static, frames)
+                .with_deadline_fps(90.0)
+                .with_warm_from(1),
+        );
+
+    println!("\nsession scheduler (join/leave stream, {} sessions):", script.n_sessions());
+    let mut policies = Json::obj();
+    for policy in SchedPolicy::ALL {
+        let rep = server.render_sessions(&script, policy);
+        println!(
+            "  {:<12} rounds {:>3}  miss-rate {:.3}  fairness {:.3}  latency p50/p99 {:.1}/{:.1} µs  ({:.3} s host)",
+            policy.label(),
+            rep.rounds,
+            rep.deadline_miss_rate,
+            rep.fairness(),
+            rep.frame_latency_pctl.p50 / 1e3,
+            rep.frame_latency_pctl.p99 / 1e3,
+            rep.wall_s
+        );
+        policies = policies.set(policy.label(), rep.to_json());
+    }
+    Json::obj()
+        .set("static_round_robin_matches_contended", true)
+        .set("policies", policies)
 }
 
 fn stage_wall_json(wall: &HostStageWall) -> Json {
@@ -82,6 +179,23 @@ fn main() -> anyhow::Result<()> {
     let specs: Vec<ViewerSpec> = (0..n_viewers)
         .map(|i| ViewerSpec::perf(conditions[i % conditions.len()], frames))
         .collect();
+
+    if args.flag("sessions") {
+        // Session-layer-only mode (the CI `session-smoke` job): run the
+        // scheduler demo and write just the `sessions` block.
+        let sessions = session_bench(&server, &specs, frames, None);
+        let record = Json::obj()
+            .set("gaussians", server.shared.scene.len())
+            .set("viewers", n_viewers)
+            .set("frames_per_viewer", frames)
+            .set("width", width)
+            .set("height", height)
+            .set("threads", threads)
+            .set("sessions", sessions);
+        write_bench_json("BENCH_server.json", &record)?;
+        println!("\nwrote BENCH_server.json (sessions block only)");
+        return Ok(());
+    }
 
     // Warm-up (page in the shared preparation, stabilize timing).
     server.render_viewer(0, &specs[0]);
@@ -195,6 +309,10 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Session layer (join/leave stream + per-policy roll-ups); the
+    // bit-compat gate reuses the contended roll-up computed above.
+    let sessions = session_bench(&server, &specs, frames, Some(mem));
+
     let record = Json::obj()
         .set("gaussians", server.shared.scene.len())
         .set("viewers", n_viewers)
@@ -223,8 +341,9 @@ fn main() -> anyhow::Result<()> {
         )
         .set("contended_wall_serial_s", contended_serial.wall_s)
         .set("contended_wall_parallel_s", contended.wall_s)
-        .set("contended_mem", mem.to_json());
+        .set("contended_mem", mem.to_json())
+        .set("sessions", sessions);
     write_bench_json("BENCH_server.json", &record)?;
-    println!("\nwrote BENCH_server.json (contended_mem + stage_wall + speedup_vs_serial)");
+    println!("\nwrote BENCH_server.json (contended_mem + stage_wall + speedup_vs_serial + sessions)");
     Ok(())
 }

@@ -4,7 +4,7 @@
 use crate::camera::{Camera, Trajectory, ViewCondition};
 use crate::energy::{FrameEnergy, PowerReport, StageLatency};
 use crate::math::Vec3;
-use crate::pipeline::{FramePipeline, PipelineConfig};
+use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig};
 use crate::render::{psnr, Image, ReferenceRenderer};
 use crate::scene::synth::{SceneKind, SynthParams};
 use crate::scene::Scene;
@@ -191,6 +191,45 @@ pub(crate) fn scene_trajectory(
         .generate(&camera_template(config, orbit_radius))
 }
 
+/// A trajectory suffix for a viewer already `start` frames into a stream:
+/// frames `[start, start + frames)` of the full walk — what a mid-stream
+/// joiner renders, and by construction identical to the tail a viewer who
+/// joined at frame 0 would render from frame `start` on.
+pub(crate) fn scene_trajectory_from(
+    scene: &Scene,
+    config: &PipelineConfig,
+    orbit_radius: f32,
+    condition: ViewCondition,
+    start: usize,
+    frames: usize,
+) -> Vec<(Camera, f32)> {
+    let mut full = scene_trajectory(scene, config, orbit_radius, condition, start + frames);
+    full.split_off(start)
+}
+
+/// The canonical per-viewer report label — shared by the sequential,
+/// batched, contended, and session paths so their reports stay
+/// string-comparable.
+pub(crate) fn viewer_label(scene_name: &str, viewer: usize, condition: ViewCondition) -> String {
+    format!("viewer-{viewer} {scene_name} ({})", condition.label())
+}
+
+/// Score one rendered frame against the exact reference renderer,
+/// returning `(PSNR dB, SSIM)` — `None` for perf-only frames. The single
+/// scoring path every sequence runner shares.
+pub(crate) fn score_frame(
+    reference: &ReferenceRenderer,
+    scene: &Scene,
+    cam: &Camera,
+    t: f32,
+    r: &FrameResult,
+) -> Option<(f64, f64)> {
+    r.image.as_ref().map(|img| {
+        let ref_img = reference.render(scene, cam, t);
+        (psnr(&ref_img, img), crate::render::ssim(&ref_img, img))
+    })
+}
+
 /// Streaming aggregator of per-frame [`FrameResult`]s into a
 /// [`SequenceReport`]. The sequential runner ([`run_frames_report`]) and
 /// the lockstep contended batch (`RenderServer::render_batch_contended`)
@@ -312,10 +351,7 @@ pub(crate) fn run_frames_report(
     for (i, (cam, t)) in seq.iter().enumerate() {
         let render = psnr_every > 0 && i % psnr_every == 0;
         let r = pipeline.render_frame(cam, *t, render);
-        let scored = r.image.as_ref().map(|img| {
-            let ref_img = reference.render(scene, cam, *t);
-            (psnr(&ref_img, img), crate::render::ssim(&ref_img, img))
-        });
+        let scored = score_frame(&reference, scene, cam, *t, &r);
         agg.push(&r, scored);
     }
     agg.finish(label, dcim_area_mm2, scene.dynamic)

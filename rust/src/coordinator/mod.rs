@@ -1,20 +1,30 @@
 //! L3 coordinator: drives whole rendering sequences and viewer fleets —
 //! scene synthesis (with on-disk caching), trajectory generation, the
 //! stage-graph frame pipeline with its posteriori state, PSNR evaluation
-//! against the reference renderer, Table-I style report generation, and the
+//! against the reference renderer, Table-I style report generation, the
 //! multi-viewer [`RenderServer`] that shares one immutable scene
 //! preparation across N concurrent per-viewer sessions — in parallel with
 //! private memory systems (host throughput) or in deterministic lockstep
 //! on one shared, contended event-queue memory system
-//! ([`RenderServer::render_batch_contended`]).
+//! ([`RenderServer::render_batch_contended`]) — and the long-lived
+//! streaming layer ([`session::SessionScheduler`]): deterministic
+//! join/leave scripts, retained per-session pipeline state, pluggable
+//! fairness/deadline scheduling policies, and DRAM-bandwidth admission
+//! control. See `README.md` in this directory for the session/scheduler
+//! contract.
 
 pub mod app;
 pub mod config;
 pub mod server;
+pub mod session;
 
 pub use app::{App, SequenceReport};
 pub use config::ExperimentConfig;
 pub use server::{
     ContendedMemReport, Percentiles, RenderServer, ServerReport, SharedScene, ViewerMemStats,
     ViewerSpec,
+};
+pub use session::{
+    SchedPolicy, SessionBatchReport, SessionEvent, SessionReport, SessionScheduler,
+    SessionScript, SessionSpec,
 };

@@ -42,13 +42,15 @@
 use crate::camera::{Camera, ViewCondition};
 use crate::memory::{DramStats, MemMode, MemStage, MemorySystem, PortId, ShardMap};
 use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig, ScenePrep, WorkerPool};
-use crate::render::{psnr, ReferenceRenderer};
+use crate::render::ReferenceRenderer;
 use crate::scene::Scene;
 use crate::util::json::Json;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::app::{camera_template, run_frames_report, scene_trajectory, SequenceAgg};
+use super::app::{
+    camera_template, run_frames_report, scene_trajectory, score_frame, viewer_label, SequenceAgg,
+};
 use super::SequenceReport;
 
 /// A scene plus its shared, immutable preparation.
@@ -261,8 +263,49 @@ impl ServerReport {
     }
 }
 
+/// Assemble the [`ContendedMemReport`] of a shared, contended
+/// [`MemorySystem`]: per-viewer port statistics (in `port_ids` order,
+/// `(cull, blend)` per viewer), Jain fairness over per-viewer busy time,
+/// channel utilization, and the per-frame simulated stage-latency
+/// percentiles collected by the caller. Shared by the contended batch
+/// paths and the [`super::session::SessionScheduler`] so the roll-ups
+/// cannot drift apart — which is what makes the session scheduler's
+/// round-robin report bit-comparable to `render_batch_contended`.
+pub(crate) fn contended_rollup(
+    sys: &Arc<Mutex<MemorySystem>>,
+    port_ids: &[(PortId, PortId)],
+    outstanding: usize,
+    pre_latency: &[f64],
+    blend_latency: &[f64],
+) -> ContendedMemReport {
+    let sys = sys.lock().expect("memory system lock poisoned");
+    let rows: Vec<ViewerMemStats> = port_ids
+        .iter()
+        .enumerate()
+        .map(|(i, &(cull_port, blend_port))| ViewerMemStats {
+            viewer: i,
+            preprocess: sys.port_stage_stats(cull_port, MemStage::Preprocess),
+            blend: sys.port_stage_stats(blend_port, MemStage::Blend),
+        })
+        .collect();
+    let busy: Vec<f64> = rows.iter().map(ViewerMemStats::total_busy_ns).collect();
+    let channel_util = sys.channel_utilization();
+    ContendedMemReport {
+        shards: sys.shard_map.shards,
+        channels: sys.n_channels(),
+        outstanding,
+        makespan_ns: sys.horizon_ns(),
+        fairness: jain_fairness(&busy),
+        channel_util_pctl: Percentiles::of(&channel_util),
+        channel_util,
+        preprocess_latency_pctl: Percentiles::of(pre_latency),
+        blend_latency_pctl: Percentiles::of(blend_latency),
+        viewers: rows,
+    }
+}
+
 /// Jain's fairness index over non-negative shares: `(Σx)² / (n·Σx²)`.
-fn jain_fairness(shares: &[f64]) -> f64 {
+pub(crate) fn jain_fairness(shares: &[f64]) -> f64 {
     if shares.is_empty() {
         return 1.0;
     }
@@ -343,11 +386,7 @@ impl RenderServer {
             &mut pipeline,
             &seq,
             spec.psnr_every,
-            format!(
-                "viewer-{viewer_idx} {} ({})",
-                self.shared.scene.name,
-                spec.condition.label()
-            ),
+            viewer_label(&self.shared.scene.name, viewer_idx, spec.condition),
         )
     }
 
@@ -457,10 +496,7 @@ impl RenderServer {
                 let spec = &specs[v];
                 let render = spec.psnr_every > 0 && round % spec.psnr_every == 0;
                 let r = pipelines[v].render_frame(cam, *t, render);
-                let scored = r.image.as_ref().map(|img| {
-                    let ref_img = reference.render(&self.shared.scene, cam, *t);
-                    (psnr(&ref_img, img), crate::render::ssim(&ref_img, img))
-                });
+                let scored = score_frame(&reference, &self.shared.scene, cam, *t, &r);
                 run.push(v, &r, scored);
             }
         }
@@ -540,10 +576,7 @@ impl RenderServer {
                             let render = spec.psnr_every > 0 && round % spec.psnr_every == 0;
                             let result = pipe.render_frame(cam, *t, render);
                             let (cull_trace, blend_trace) = pipe.take_frame_traces();
-                            let scored = result.image.as_ref().map(|img| {
-                                let ref_img = reference.render(scene, cam, *t);
-                                (psnr(&ref_img, img), crate::render::ssim(&ref_img, img))
-                            });
+                            let scored = score_frame(reference, scene, cam, *t, &result);
                             *slot = Some(RoundFrame { result, scored, cull_trace, blend_trace });
                         });
                     }
@@ -608,43 +641,15 @@ impl RenderServer {
             .enumerate()
             .map(|(i, agg)| {
                 agg.finish(
-                    format!(
-                        "viewer-{i} {} ({})",
-                        self.shared.scene.name,
-                        specs[i].condition.label()
-                    ),
+                    viewer_label(&self.shared.scene.name, i, specs[i].condition),
                     config.dcim.area_mm2,
                     self.shared.scene.dynamic,
                 )
             })
             .collect();
 
-        let contended = {
-            let sys = sys.lock().expect("memory system lock poisoned");
-            let rows: Vec<ViewerMemStats> = port_ids
-                .iter()
-                .enumerate()
-                .map(|(i, &(cull_port, blend_port))| ViewerMemStats {
-                    viewer: i,
-                    preprocess: sys.port_stage_stats(cull_port, MemStage::Preprocess),
-                    blend: sys.port_stage_stats(blend_port, MemStage::Blend),
-                })
-                .collect();
-            let busy: Vec<f64> = rows.iter().map(ViewerMemStats::total_busy_ns).collect();
-            let channel_util = sys.channel_utilization();
-            ContendedMemReport {
-                shards: sys.shard_map.shards,
-                channels: sys.n_channels(),
-                outstanding: config.mem.outstanding,
-                makespan_ns: sys.horizon_ns(),
-                fairness: jain_fairness(&busy),
-                channel_util_pctl: Percentiles::of(&channel_util),
-                channel_util,
-                preprocess_latency_pctl: Percentiles::of(&pre_latency),
-                blend_latency_pctl: Percentiles::of(&blend_latency),
-                viewers: rows,
-            }
-        };
+        let contended =
+            contended_rollup(sys, port_ids, config.mem.outstanding, &pre_latency, &blend_latency);
 
         let wall_s = t0.elapsed().as_secs_f64();
         let total_frames: usize = specs.iter().map(|s| s.frames).sum();

@@ -1,0 +1,874 @@
+//! `coordinator::session` — long-lived viewer sessions over one shared,
+//! contended memory system.
+//!
+//! The batch paths ([`RenderServer::render_batch`] /
+//! [`RenderServer::render_batch_contended`]) treat serving as fixed-size
+//! jobs: every viewer exists for the whole batch and the issue order is a
+//! hard-coded rotation. Real edge serving is a *stream*: viewers join
+//! mid-flight, move, and leave while the renderer sustains its frame rate
+//! under a shared DRAM budget. This module adds that layer:
+//!
+//! * [`SessionScript`] — a deterministic event script
+//!   (`JoinAt { frame, spec }` / `LeaveAt { frame, session }`) describing
+//!   when viewers enter and exit the stream. Scripts are data: replaying
+//!   the same script always reproduces the same simulated statistics, at
+//!   any host thread count.
+//! * [`ViewerSession`]s retain their per-viewer pipeline state across
+//!   scheduling rounds — the pooled `FrameCtx` scratch, the ATG grouping
+//!   and AII interval posteriori, the early-termination calibration, and
+//!   the camera-trajectory cursor — instead of cold-starting, so interval
+//!   hit rates and buffer reuse reflect steady-state streaming. A departed
+//!   session's state is detached ([`crate::pipeline::SessionState`]) and
+//!   can seed a later joiner's AII intervals (`SessionSpec::warm_from`).
+//! * [`SchedPolicy`] — the pluggable per-round issue-order policy:
+//!   [`SchedPolicy::RoundRobin`] (the rotating lockstep, bit-compatible
+//!   with `render_batch_contended` for a no-join/no-leave script),
+//!   [`SchedPolicy::Dwfq`] (deficit-weighted fair queueing: the session
+//!   with the least weighted DRAM service goes first), and
+//!   [`SchedPolicy::Edf`] (earliest deadline first by per-session target
+//!   FPS). Ordering moves *when* a session's requests meet the channels —
+//!   per-session byte counts never change, only waits and latency.
+//! * Admission control: an optional DRAM-bandwidth budget
+//!   ([`SessionScheduler::dram_budget_gbps`]) defers joins whose
+//!   estimated demand (measured bytes/frame × target FPS) would oversubscribe
+//!   the channels; admission is work-conserving (a deferred session is
+//!   admitted as soon as the stream would otherwise idle).
+//! * [`SessionReport`] / [`SessionBatchReport`] — per-session frame-latency
+//!   percentiles vs. deadline, missed-deadline counts, retained-state hit
+//!   rates, and the same [`ContendedMemReport`] roll-up the batch path
+//!   emits (assembled by the shared `contended_rollup` helper, so the two
+//!   cannot drift).
+//!
+//! # Determinism contract
+//!
+//! One scheduling round = one simulated frame epoch: the shared
+//! [`MemorySystem`] takes a frame barrier, then every renderable session
+//! renders exactly one frame in the policy's issue order on the calling
+//! thread (frames themselves use the intra-frame parallel executor, whose
+//! statistics are thread-count invariant). Everything the scheduler
+//! consumes — cumulative busy time, cursors, deadlines — lives on the
+//! simulated timeline, so reports are bit-identical across runs and host
+//! thread counts (enforced by the `session_scheduler` suite and the CI
+//! `session-smoke` job).
+
+use crate::camera::ViewCondition;
+use crate::memory::{MemMode, MemorySystem, PortId};
+use crate::pipeline::{FramePipeline, PipelineConfig, SessionState};
+use crate::render::ReferenceRenderer;
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::app::{scene_trajectory_from, score_frame, viewer_label, SequenceAgg};
+use super::server::{
+    contended_rollup, ContendedMemReport, Percentiles, RenderServer, ViewerMemStats, ViewerSpec,
+};
+use super::SequenceReport;
+
+/// Demand estimate FPS for sessions that declare no deadline.
+pub const DEFAULT_STREAM_FPS: f64 = 30.0;
+
+/// One viewer session's streaming parameters.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    pub condition: ViewCondition,
+    /// Frames this session renders (its share of the stream).
+    pub frames: usize,
+    /// Trajectory cursor at join: a mid-stream viewer `start_frame` frames
+    /// into its walk renders frames `[start_frame, start_frame + frames)`
+    /// of the full trajectory — identical to the tail a frame-0 joiner
+    /// would render from `start_frame` on.
+    pub start_frame: usize,
+    /// Render every n-th frame numerically for PSNR (0 = perf path only).
+    pub psnr_every: usize,
+    /// Target frame rate: the per-frame deadline is `1e9 / target_fps` ns
+    /// of simulated latency (0 = no deadline; EDF orders such sessions
+    /// last).
+    pub target_fps: f64,
+    /// DWFQ weight (> 0; a weight-2 session is entitled to twice the DRAM
+    /// service before yielding priority).
+    pub weight: f64,
+    /// Warm-start the AII sort intervals from this departed session's
+    /// retained state (by session id). Ignored when the donor has not left
+    /// or retained nothing.
+    pub warm_from: Option<usize>,
+}
+
+impl SessionSpec {
+    /// A perf-path streaming session with no deadline and unit weight.
+    pub fn stream(condition: ViewCondition, frames: usize) -> SessionSpec {
+        SessionSpec {
+            condition,
+            frames,
+            start_frame: 0,
+            psnr_every: 0,
+            target_fps: 0.0,
+            weight: 1.0,
+            warm_from: None,
+        }
+    }
+
+    /// Adopt a batch [`ViewerSpec`] unchanged (frame-0 join, no deadline).
+    pub fn from_viewer(spec: &ViewerSpec) -> SessionSpec {
+        SessionSpec {
+            psnr_every: spec.psnr_every,
+            ..SessionSpec::stream(spec.condition, spec.frames)
+        }
+    }
+
+    pub fn with_start(mut self, start_frame: usize) -> SessionSpec {
+        self.start_frame = start_frame;
+        self
+    }
+
+    pub fn with_deadline_fps(mut self, target_fps: f64) -> SessionSpec {
+        self.target_fps = target_fps;
+        self
+    }
+
+    pub fn with_weight(mut self, weight: f64) -> SessionSpec {
+        self.weight = weight;
+        self
+    }
+
+    pub fn with_psnr_every(mut self, psnr_every: usize) -> SessionSpec {
+        self.psnr_every = psnr_every;
+        self
+    }
+
+    pub fn with_warm_from(mut self, donor: usize) -> SessionSpec {
+        self.warm_from = Some(donor);
+        self
+    }
+
+    /// Simulated per-frame deadline (ns); infinite without a target FPS.
+    pub fn deadline_ns(&self) -> f64 {
+        if self.target_fps > 0.0 {
+            1e9 / self.target_fps
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// One lifecycle event of a session stream. Events fire at *round
+/// boundaries*: a `LeaveAt { frame: k }` session does not render round k.
+#[derive(Debug, Clone)]
+pub enum SessionEvent {
+    /// A viewer joins at the start of round `frame`. Session ids are
+    /// assigned by join order within the script (0, 1, …).
+    JoinAt { frame: usize, spec: SessionSpec },
+    /// Session `session` (join-order id) departs at the start of round
+    /// `frame`; its pipeline state is detached and retained, its memory
+    /// ports retire.
+    LeaveAt { frame: usize, session: usize },
+}
+
+/// A deterministic join/leave script — the replayable description of one
+/// streaming workload.
+#[derive(Debug, Clone, Default)]
+pub struct SessionScript {
+    pub events: Vec<SessionEvent>,
+}
+
+impl SessionScript {
+    pub fn new() -> SessionScript {
+        SessionScript::default()
+    }
+
+    pub fn join_at(mut self, frame: usize, spec: SessionSpec) -> SessionScript {
+        self.events.push(SessionEvent::JoinAt { frame, spec });
+        self
+    }
+
+    pub fn leave_at(mut self, frame: usize, session: usize) -> SessionScript {
+        self.events.push(SessionEvent::LeaveAt { frame, session });
+        self
+    }
+
+    /// The static-batch script: every spec joins at frame 0 and streams to
+    /// completion — the workload under which round-robin scheduling is
+    /// bit-compatible with [`RenderServer::render_batch_contended`].
+    pub fn from_specs(specs: &[ViewerSpec]) -> SessionScript {
+        let mut script = SessionScript::new();
+        for spec in specs {
+            script = script.join_at(0, SessionSpec::from_viewer(spec));
+        }
+        script
+    }
+
+    /// Sessions the script joins.
+    pub fn n_sessions(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, SessionEvent::JoinAt { .. }))
+            .count()
+    }
+}
+
+/// Per-round issue-order policy of the [`SessionScheduler`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Rotating lockstep (round r issues session `(r + k) mod n` for
+    /// k = 0..n over the join-ordered ring) — the batch path's order, kept
+    /// bit-compatible as the baseline.
+    RoundRobin,
+    /// Deficit-weighted fair queueing: ascending cumulative DRAM busy time
+    /// over weight — the least-served session (per its entitlement) issues
+    /// first each round.
+    Dwfq,
+    /// Earliest deadline first: ascending next-frame deadline
+    /// (`(cursor + 1) / target_fps` on the session's stream clock);
+    /// deadline-free sessions go last.
+    Edf,
+}
+
+impl SchedPolicy {
+    pub const ALL: [SchedPolicy; 3] =
+        [SchedPolicy::RoundRobin, SchedPolicy::Dwfq, SchedPolicy::Edf];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SchedPolicy::RoundRobin => "round_robin",
+            SchedPolicy::Dwfq => "dwfq",
+            SchedPolicy::Edf => "edf",
+        }
+    }
+}
+
+/// Final report of one session's lifetime in the stream.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    pub session: usize,
+    /// Round the script joined the session.
+    pub joined_round: usize,
+    /// Round admission control actually admitted it.
+    pub admitted_round: usize,
+    /// Rounds spent deferred by the DRAM-bandwidth budget.
+    pub deferred_rounds: usize,
+    /// Round the session left (explicit leave, or the stream's last round).
+    pub left_round: usize,
+    /// Frames actually rendered.
+    pub frames: usize,
+    pub target_fps: f64,
+    pub weight: f64,
+    /// Whether the session warm-started its AII intervals from a departed
+    /// donor's retained state.
+    pub warm_started: bool,
+    /// Frames whose simulated latency exceeded the deadline.
+    pub missed_deadlines: u64,
+    /// `missed_deadlines / frames` (0 without a deadline).
+    pub deadline_miss_rate: f64,
+    /// Simulated frame-latency percentiles (pipelined ns) over the
+    /// session's lifetime.
+    pub frame_latency_pctl: Percentiles,
+    /// Retained-state hit rate of AII interval initialization: the
+    /// fraction of sorted elements that skipped the phase-1 min/max scan
+    /// because their block's intervals were carried across frames.
+    pub aii_interval_hit_rate: f64,
+    /// Per-port DRAM statistics under contention.
+    pub mem: ViewerMemStats,
+    /// The standard per-viewer sequence report (energy, FPS, PSNR, …).
+    pub seq: SequenceReport,
+}
+
+impl SessionReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("session", self.session)
+            .set("joined_round", self.joined_round)
+            .set("admitted_round", self.admitted_round)
+            .set("deferred_rounds", self.deferred_rounds)
+            .set("left_round", self.left_round)
+            .set("frames", self.frames)
+            .set("target_fps", self.target_fps)
+            .set("weight", self.weight)
+            .set("warm_started", self.warm_started)
+            .set("missed_deadlines", self.missed_deadlines as f64)
+            .set("deadline_miss_rate", self.deadline_miss_rate)
+            .set("frame_latency_ns_pctl", self.frame_latency_pctl.to_json())
+            .set("aii_interval_hit_rate", self.aii_interval_hit_rate)
+            .set("mem", self.mem.to_json())
+            .set("report", self.seq.to_json())
+    }
+}
+
+/// Stream-level report of one scheduler run.
+#[derive(Debug, Clone)]
+pub struct SessionBatchReport {
+    pub policy: SchedPolicy,
+    /// Scheduling rounds driven (frame epochs on the shared system).
+    pub rounds: usize,
+    pub total_frames: usize,
+    /// Host wall-clock of the run (not part of the simulated projection).
+    pub wall_s: f64,
+    /// Missed-deadline fraction across all deadline-bearing frames.
+    pub deadline_miss_rate: f64,
+    /// Frame-latency percentiles across every session frame.
+    pub frame_latency_pctl: Percentiles,
+    pub sessions: Vec<SessionReport>,
+    /// The shared-memory roll-up, structurally identical to the batch
+    /// path's `contended_mem` block.
+    pub contended: ContendedMemReport,
+}
+
+impl SessionBatchReport {
+    /// Jain fairness over per-session DRAM busy time (lifetime).
+    pub fn fairness(&self) -> f64 {
+        self.contended.fairness
+    }
+
+    /// Simulated-statistics JSON: everything except host wall-clock — the
+    /// surface that must be bit-identical across host thread counts (the
+    /// CI `session-smoke` diff and the determinism suite compare this).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("policy", self.policy.label())
+            .set("rounds", self.rounds)
+            .set("total_frames", self.total_frames)
+            .set("deadline_miss_rate", self.deadline_miss_rate)
+            .set("frame_latency_ns_pctl", self.frame_latency_pctl.to_json())
+            .set("fairness", self.fairness())
+            .set(
+                "sessions",
+                Json::Arr(self.sessions.iter().map(SessionReport::to_json).collect()),
+            )
+            .set("contended_mem", self.contended.to_json())
+    }
+
+    /// The wall-clock-free projection used by determinism assertions.
+    pub fn simulated_projection(&self) -> String {
+        self.to_json().pretty()
+    }
+}
+
+/// A live session inside one scheduler run (internal).
+struct ViewerSession<'s> {
+    spec: SessionSpec,
+    pipeline: Option<FramePipeline<'s>>,
+    ports: Option<(PortId, PortId)>,
+    traj: Vec<(crate::camera::Camera, f32)>,
+    /// Frames rendered so far (the camera-trajectory cursor, relative to
+    /// `spec.start_frame`).
+    cursor: usize,
+    joined_round: usize,
+    admitted_round: Option<usize>,
+    left_round: Option<usize>,
+    deferred_rounds: usize,
+    agg: SequenceAgg,
+    latency: Vec<f64>,
+    missed: u64,
+    /// Cumulative DRAM busy time (DWFQ service measure).
+    busy_ns: f64,
+    minmax_scanned: u64,
+    bucketed: u64,
+    warm_started: bool,
+    /// Bandwidth demand charged against the admission budget while the
+    /// session streams.
+    demand_bytes_per_s: f64,
+    /// Detached pipeline state after leaving (warm-start donor).
+    retained: Option<SessionState>,
+}
+
+impl ViewerSession<'_> {
+    fn renderable(&self) -> bool {
+        self.pipeline.is_some() && self.left_round.is_none() && self.cursor < self.traj.len()
+    }
+}
+
+/// The stream scheduler: owns the shared contended [`MemorySystem`] and the
+/// [`ViewerSession`]s of one script run. Built by
+/// [`RenderServer::sessions`].
+pub struct SessionScheduler<'a> {
+    pub server: &'a RenderServer,
+    pub policy: SchedPolicy,
+    /// Admission budget (bytes/s of estimated DRAM demand); `None` admits
+    /// every join immediately.
+    pub dram_budget_bytes_per_s: Option<f64>,
+}
+
+impl RenderServer {
+    /// A session scheduler over this server's shared scene preparation.
+    pub fn sessions(&self, policy: SchedPolicy) -> SessionScheduler<'_> {
+        SessionScheduler { server: self, policy, dram_budget_bytes_per_s: None }
+    }
+
+    /// Run a session script to completion under `policy` (convenience for
+    /// [`SessionScheduler::run`]).
+    pub fn render_sessions(
+        &self,
+        script: &SessionScript,
+        policy: SchedPolicy,
+    ) -> SessionBatchReport {
+        self.sessions(policy).run(script)
+    }
+}
+
+impl<'a> SessionScheduler<'a> {
+    /// Cap admitted sessions' estimated aggregate DRAM demand at `gbps`
+    /// GB/s. Demand is estimated as measured mean bytes/frame × the
+    /// session's target FPS ([`DEFAULT_STREAM_FPS`] without a deadline);
+    /// joins that would exceed the cap wait in join order. Admission is
+    /// work-conserving: the head of the wait queue is admitted whenever
+    /// the stream would otherwise go idle.
+    pub fn dram_budget_gbps(mut self, gbps: f64) -> SessionScheduler<'a> {
+        self.dram_budget_bytes_per_s = Some(gbps * 1e9);
+        self
+    }
+
+    /// Drive `script` to completion: every joined session is admitted,
+    /// streams its frames, and leaves (explicitly or at stream end); the
+    /// run returns when no session is renderable and no event is pending.
+    ///
+    /// # Panics
+    ///
+    /// Panics on malformed scripts: a leave for an unknown session, a
+    /// leave at or before its session's join frame, or a duplicate leave.
+    pub fn run(&self, script: &SessionScript) -> SessionBatchReport {
+        let t0 = Instant::now();
+        let server = self.server;
+        let shared = &server.shared;
+        let mut config = server.config.clone();
+        config.mem.mode = MemMode::EventQueue;
+        let sys = Arc::new(Mutex::new(MemorySystem::new(
+            config.mem.clone(),
+            *shared.prep.shard_map,
+        )));
+        let reference = ReferenceRenderer::new(config.width, config.height);
+        let fallback_bytes_per_frame = shared.prep.layout.total_span_bytes() as f64 / 10.0;
+
+        // Split the script into join-ordered sessions and leave events.
+        let mut joins: Vec<(usize, SessionSpec)> = Vec::new();
+        let mut leaves: Vec<(usize, usize)> = Vec::new();
+        for ev in &script.events {
+            match ev {
+                SessionEvent::JoinAt { frame, spec } => joins.push((*frame, spec.clone())),
+                SessionEvent::LeaveAt { frame, session } => leaves.push((*frame, *session)),
+            }
+        }
+        for &(frame, session) in &leaves {
+            assert!(session < joins.len(), "leave for unknown session {session}");
+            assert!(
+                frame > joins[session].0,
+                "session {session} leaves at round {frame}, on or before its join round {}",
+                joins[session].0
+            );
+            assert_eq!(
+                leaves.iter().filter(|&&(_, s)| s == session).count(),
+                1,
+                "session {session} leaves twice"
+            );
+        }
+        let last_event_round = joins
+            .iter()
+            .map(|&(f, _)| f)
+            .chain(leaves.iter().map(|&(f, _)| f))
+            .max()
+            .unwrap_or(0);
+
+        let mut sessions: Vec<Option<ViewerSession<'a>>> =
+            (0..joins.len()).map(|_| None).collect();
+        let mut ring: Vec<usize> = Vec::new(); // admitted, not-left, join order
+        let mut pending: VecDeque<usize> = VecDeque::new();
+        let mut pre_latency: Vec<f64> = Vec::new();
+        let mut blend_latency: Vec<f64> = Vec::new();
+        let mut admitted_demand = 0.0f64;
+        let mut measured_bytes = 0.0f64;
+        let mut measured_frames = 0u64;
+
+        let mut round = 0usize;
+        loop {
+            // 1 — departures scheduled this round (before joins, so a
+            // leaver's bandwidth is released to the admission check). The
+            // session record always exists here: its join round is
+            // strictly earlier (validated above).
+            for &(frame, id) in &leaves {
+                if frame != round {
+                    continue;
+                }
+                let s = sessions[id].as_mut().expect("leave validated against join round");
+                s.left_round = Some(round);
+                admitted_demand -= s.demand_bytes_per_s;
+                s.demand_bytes_per_s = 0.0;
+                if let Some(pipeline) = s.pipeline.take() {
+                    s.retained = Some(pipeline.detach_session());
+                    let mut sys_l = sys.lock().expect("memory system lock poisoned");
+                    if let Some((cull, blend)) = s.ports {
+                        sys_l.retire_port(cull);
+                        sys_l.retire_port(blend);
+                    }
+                }
+                ring.retain(|&x| x != id);
+                // A session deferred past its own leave never streams: drop
+                // it from the admission queue too, or a later round would
+                // admit a departed viewer and leak its bandwidth demand.
+                pending.retain(|&x| x != id);
+            }
+
+            // 2 — arrivals scheduled this round enter the wait queue.
+            for (id, (frame, spec)) in joins.iter().enumerate() {
+                if *frame != round {
+                    continue;
+                }
+                let traj = scene_trajectory_from(
+                    &shared.scene,
+                    &server.config,
+                    server.orbit_radius,
+                    spec.condition,
+                    spec.start_frame,
+                    spec.frames,
+                );
+                sessions[id] = Some(ViewerSession {
+                    spec: spec.clone(),
+                    pipeline: None,
+                    ports: None,
+                    traj,
+                    cursor: 0,
+                    joined_round: round,
+                    admitted_round: None,
+                    left_round: None,
+                    deferred_rounds: 0,
+                    agg: SequenceAgg::new(),
+                    latency: Vec::new(),
+                    missed: 0,
+                    busy_ns: 0.0,
+                    minmax_scanned: 0,
+                    bucketed: 0,
+                    warm_started: false,
+                    demand_bytes_per_s: 0.0,
+                    retained: None,
+                });
+                pending.push_back(id);
+            }
+
+            // 3 — admission control (join order; work-conserving).
+            while let Some(&cand) = pending.front() {
+                let est_bytes_per_frame = if measured_frames > 0 {
+                    measured_bytes / measured_frames as f64
+                } else {
+                    fallback_bytes_per_frame
+                };
+                let demand = {
+                    let s = sessions[cand].as_ref().expect("pending session exists");
+                    let fps = if s.spec.target_fps > 0.0 {
+                        s.spec.target_fps
+                    } else {
+                        DEFAULT_STREAM_FPS
+                    };
+                    // A session with no frames to stream reserves nothing —
+                    // it can never reach the completion branch that would
+                    // release the reservation.
+                    if s.traj.is_empty() { 0.0 } else { est_bytes_per_frame * fps }
+                };
+                let stream_busy = ring
+                    .iter()
+                    .any(|&id| sessions[id].as_ref().is_some_and(ViewerSession::renderable));
+                let fits = match self.dram_budget_bytes_per_s {
+                    None => true,
+                    Some(budget) => admitted_demand + demand <= budget || !stream_busy,
+                };
+                if !fits {
+                    break;
+                }
+                pending.pop_front();
+                // Warm-start intervals from the donor's retained state, if
+                // the script asked for it and the donor has departed.
+                let warm = {
+                    let donor = sessions[cand].as_ref().unwrap().spec.warm_from;
+                    donor.and_then(|d| {
+                        if d == cand {
+                            return None;
+                        }
+                        sessions
+                            .get_mut(d)
+                            .and_then(|slot| slot.as_mut())
+                            .and_then(|donor| donor.retained.as_mut())
+                            .and_then(SessionState::take_aii_intervals)
+                    })
+                };
+                let mut pipeline =
+                    shared.pipeline_with_memory(config.clone(), Arc::clone(&sys));
+                let ports = pipeline
+                    .mem_port_ids()
+                    .expect("session pipelines register shared ports");
+                let s = sessions[cand].as_mut().unwrap();
+                s.warm_started = warm.map(|iv| pipeline.warm_start_aii(iv)).unwrap_or(false);
+                s.pipeline = Some(pipeline);
+                s.ports = Some(ports);
+                s.admitted_round = Some(round);
+                s.demand_bytes_per_s = demand;
+                admitted_demand += demand;
+                ring.push(cand);
+            }
+            for &id in &pending {
+                if let Some(s) = sessions[id].as_mut() {
+                    s.deferred_rounds += 1;
+                }
+            }
+
+            // 4 — stream end?
+            let renderable = ring
+                .iter()
+                .any(|&id| sessions[id].as_ref().is_some_and(ViewerSession::renderable));
+            if !renderable && pending.is_empty() && round >= last_event_round {
+                break;
+            }
+
+            // 5 — frame barrier + policy-ordered round.
+            sys.lock().expect("memory system lock poisoned").advance_epoch();
+            let order = issue_order(self.policy, round, &ring, &sessions);
+            for id in order {
+                let s = sessions[id].as_mut().expect("ring holds live sessions");
+                if !s.renderable() {
+                    continue;
+                }
+                let (cam, t) = s.traj[s.cursor];
+                let render =
+                    s.spec.psnr_every > 0 && s.cursor % s.spec.psnr_every == 0;
+                let r = s
+                    .pipeline
+                    .as_mut()
+                    .expect("renderable session has a pipeline")
+                    .render_frame(&cam, t, render);
+                let scored = score_frame(&reference, &shared.scene, &cam, t, &r);
+                pre_latency.push(r.latency.preprocess_ns);
+                blend_latency.push(r.latency.blend_ns);
+                let frame_ns = r.latency.pipelined_ns();
+                s.latency.push(frame_ns);
+                if frame_ns > s.spec.deadline_ns() {
+                    s.missed += 1;
+                }
+                let frame_busy =
+                    r.traffic.preprocess_dram.busy_ns + r.traffic.blend_dram.busy_ns;
+                s.busy_ns += frame_busy;
+                let frame_bytes = r.traffic.total_dram_bytes() as f64;
+                measured_bytes += frame_bytes;
+                measured_frames += 1;
+                s.minmax_scanned += r.sort.minmax_scanned;
+                s.bucketed += r.sort.bucketed;
+                s.agg.push(&r, scored);
+                s.cursor += 1;
+                if s.cursor >= s.traj.len() {
+                    // Completed: release the bandwidth reservation (the
+                    // session stays in the ring for rotation parity with
+                    // the batch path until it leaves or the stream ends).
+                    admitted_demand -= s.demand_bytes_per_s;
+                    s.demand_bytes_per_s = 0.0;
+                }
+            }
+            round += 1;
+        }
+
+        self.assemble(sessions, round, &sys, &config, pre_latency, blend_latency, t0)
+    }
+
+    /// Final report assembly (per-session reports + the shared roll-up).
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        &self,
+        sessions: Vec<Option<ViewerSession<'_>>>,
+        rounds: usize,
+        sys: &Arc<Mutex<MemorySystem>>,
+        config: &PipelineConfig,
+        pre_latency: Vec<f64>,
+        blend_latency: Vec<f64>,
+        t0: Instant,
+    ) -> SessionBatchReport {
+        let scene = &self.server.shared.scene;
+        // Port list of admitted sessions, in session-id order (un-admitted
+        // sessions rendered nothing and own no ports).
+        let port_ids: Vec<(PortId, PortId)> =
+            sessions.iter().flatten().filter_map(|s| s.ports).collect();
+        let mut contended =
+            contended_rollup(sys, &port_ids, config.mem.outstanding, &pre_latency, &blend_latency);
+        // Re-attribute the positional viewer rows to session ids (identical
+        // when every session was admitted — the batch-compatible case).
+        let admitted_ids: Vec<usize> = sessions
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.as_ref().is_some_and(|s| s.ports.is_some()))
+            .map(|(id, _)| id)
+            .collect();
+        for (row, &id) in contended.viewers.iter_mut().zip(&admitted_ids) {
+            row.viewer = id;
+        }
+
+        let mut reports = Vec::with_capacity(sessions.len());
+        let mut all_latency: Vec<f64> = Vec::new();
+        let mut missed_total = 0u64;
+        let mut deadline_frames = 0u64;
+        let mut total_frames = 0usize;
+        for (id, slot) in sessions.into_iter().enumerate() {
+            let Some(mut s) = slot else { continue };
+            let frames = s.cursor;
+            total_frames += frames;
+            all_latency.extend_from_slice(&s.latency);
+            if s.spec.target_fps > 0.0 {
+                missed_total += s.missed;
+                deadline_frames += frames as u64;
+            }
+            let agg = std::mem::replace(&mut s.agg, SequenceAgg::new());
+            let seq = agg.finish(
+                viewer_label(&scene.name, id, s.spec.condition),
+                config.dcim.area_mm2,
+                scene.dynamic,
+            );
+            let mem = contended
+                .viewers
+                .iter()
+                .find(|v| v.viewer == id)
+                .cloned()
+                .unwrap_or_else(|| ViewerMemStats {
+                    viewer: id,
+                    preprocess: Default::default(),
+                    blend: Default::default(),
+                });
+            reports.push(SessionReport {
+                session: id,
+                joined_round: s.joined_round,
+                admitted_round: s.admitted_round.unwrap_or(s.joined_round),
+                deferred_rounds: s.deferred_rounds,
+                left_round: s.left_round.unwrap_or(rounds),
+                frames,
+                target_fps: s.spec.target_fps,
+                weight: s.spec.weight,
+                warm_started: s.warm_started,
+                missed_deadlines: s.missed,
+                deadline_miss_rate: if s.spec.target_fps > 0.0 && frames > 0 {
+                    s.missed as f64 / frames as f64
+                } else {
+                    0.0
+                },
+                frame_latency_pctl: Percentiles::of(&s.latency),
+                aii_interval_hit_rate: if s.bucketed > 0 {
+                    1.0 - s.minmax_scanned as f64 / s.bucketed as f64
+                } else {
+                    0.0
+                },
+                mem,
+                seq,
+            });
+        }
+
+        SessionBatchReport {
+            policy: self.policy,
+            rounds,
+            total_frames,
+            wall_s: t0.elapsed().as_secs_f64(),
+            deadline_miss_rate: if deadline_frames > 0 {
+                missed_total as f64 / deadline_frames as f64
+            } else {
+                0.0
+            },
+            frame_latency_pctl: Percentiles::of(&all_latency),
+            sessions: reports,
+            contended,
+        }
+    }
+}
+
+/// The policy-ordered issue list of one round. Round-robin rotates the
+/// whole ring (completed sessions are skipped at render time, preserving
+/// the batch path's `(round + k) mod n` arithmetic); DWFQ and EDF sort the
+/// renderable sessions by their keys with session-id tie-breaks — every
+/// input is simulated state, so the order is deterministic.
+fn issue_order(
+    policy: SchedPolicy,
+    round: usize,
+    ring: &[usize],
+    sessions: &[Option<ViewerSession<'_>>],
+) -> Vec<usize> {
+    if ring.is_empty() {
+        return Vec::new();
+    }
+    match policy {
+        SchedPolicy::RoundRobin => {
+            (0..ring.len()).map(|k| ring[(round + k) % ring.len()]).collect()
+        }
+        SchedPolicy::Dwfq => {
+            let key = |id: usize| {
+                let s = sessions[id].as_ref().expect("ring holds live sessions");
+                s.busy_ns / s.spec.weight.max(1e-9)
+            };
+            sorted_by_key(ring, sessions, key)
+        }
+        SchedPolicy::Edf => {
+            let key = |id: usize| {
+                let s = sessions[id].as_ref().expect("ring holds live sessions");
+                (s.cursor + 1) as f64 * s.spec.deadline_ns()
+            };
+            sorted_by_key(ring, sessions, key)
+        }
+    }
+}
+
+/// Renderable ring members sorted ascending by `key`, ties broken by
+/// session id.
+fn sorted_by_key(
+    ring: &[usize],
+    sessions: &[Option<ViewerSession<'_>>],
+    key: impl Fn(usize) -> f64,
+) -> Vec<usize> {
+    let mut ids: Vec<usize> = ring
+        .iter()
+        .copied()
+        .filter(|&id| sessions[id].as_ref().is_some_and(ViewerSession::renderable))
+        .collect();
+    ids.sort_by(|&a, &b| {
+        key(a)
+            .partial_cmp(&key(b))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn script_builder_counts_sessions() {
+        let script = SessionScript::new()
+            .join_at(0, SessionSpec::stream(ViewCondition::Average, 4))
+            .join_at(2, SessionSpec::stream(ViewCondition::Static, 2).with_deadline_fps(90.0))
+            .leave_at(3, 0);
+        assert_eq!(script.n_sessions(), 2);
+        assert_eq!(script.events.len(), 3);
+    }
+
+    #[test]
+    fn static_script_adopts_viewer_specs() {
+        let specs = [
+            ViewerSpec::perf(ViewCondition::Average, 3),
+            ViewerSpec { condition: ViewCondition::Static, frames: 2, psnr_every: 2 },
+        ];
+        let script = SessionScript::from_specs(&specs);
+        assert_eq!(script.n_sessions(), 2);
+        match &script.events[1] {
+            SessionEvent::JoinAt { frame, spec } => {
+                assert_eq!(*frame, 0);
+                assert_eq!(spec.frames, 2);
+                assert_eq!(spec.psnr_every, 2);
+                assert_eq!(spec.start_frame, 0);
+            }
+            other => panic!("expected JoinAt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spec_deadline_conversion() {
+        let spec = SessionSpec::stream(ViewCondition::Average, 1).with_deadline_fps(200.0);
+        assert!((spec.deadline_ns() - 5e6).abs() < 1e-6);
+        assert_eq!(SessionSpec::stream(ViewCondition::Average, 1).deadline_ns(), f64::INFINITY);
+    }
+
+    #[test]
+    fn policy_labels_are_stable() {
+        assert_eq!(SchedPolicy::RoundRobin.label(), "round_robin");
+        assert_eq!(SchedPolicy::Dwfq.label(), "dwfq");
+        assert_eq!(SchedPolicy::Edf.label(), "edf");
+        assert_eq!(SchedPolicy::ALL.len(), 3);
+    }
+}

@@ -90,19 +90,53 @@ impl<'a> DrFc<'a> {
         mem: &mut M,
         out: &mut CullOutput,
     ) {
-        let frustum = cam.frustum();
         out.clear();
-        let CullOutput { visible_cells, candidates, visible, fetched, seen, ref_addrs } = out;
-
         // Pass 1 (no DRAM): find visible cells in the temporal slice of t.
-        let slice = self.temporal_slice_of(t);
-        let per_slice = self.grid.config.cells_per_slice();
-        for s in 0..per_slice {
-            let flat = slice * per_slice + s;
-            if self.cell_visible(flat, &frustum, t) {
-                visible_cells.push(flat);
+        let frustum = cam.frustum();
+        for flat in self.slice_cell_range(t) {
+            if self.cell_test(flat, &frustum) {
+                out.visible_cells.push(flat);
             }
         }
+        self.cull_scheduled(cam, t, mem, out);
+    }
+
+    /// The flat grid-cell index range of the temporal slice containing `t`
+    /// — the pass-1 test domain. The range is contiguous, so the parallel
+    /// executor can chunk it per worker and concatenate the per-worker
+    /// visible-cell partials in worker order to reproduce the serial
+    /// ascending-flat-index scan exactly.
+    pub fn slice_cell_range(&self, t: f32) -> std::ops::Range<usize> {
+        let slice = self.temporal_slice_of(t);
+        let per_slice = self.grid.config.cells_per_slice();
+        slice * per_slice..(slice + 1) * per_slice
+    }
+
+    /// The pass-1 visibility test of one grid cell (pure, no DRAM): skip
+    /// empty cells outright, else AABB-vs-frustum.
+    pub fn cell_test(&self, flat: usize, frustum: &Frustum) -> bool {
+        let cell = &self.grid.cells[flat];
+        if cell.central.is_empty() && cell.refs.is_empty() {
+            return false;
+        }
+        frustum.test_aabb(&self.grid.cell_aabb(flat)) != Containment::Outside
+    }
+
+    /// Passes 2–3 over an already-populated `out.visible_cells` list
+    /// (candidate fetch scheduling + exact per-Gaussian culling). Pass 1 —
+    /// serial in [`DrFc::cull_into`], fanned out per cell chunk by the
+    /// pipeline's cull stage — must have pushed the slice's visible cells
+    /// in ascending flat order; request order and outputs are then
+    /// identical to the pre-refactor single-pass path.
+    pub fn cull_scheduled<M: MemSink>(
+        &self,
+        cam: &Camera,
+        t: f32,
+        mem: &mut M,
+        out: &mut CullOutput,
+    ) {
+        let frustum = cam.frustum();
+        let CullOutput { visible_cells, candidates, visible, fetched, seen, ref_addrs } = out;
 
         // Pass 2: schedule DRAM reads. Central runs as big contiguous reads.
         seen.clear();
@@ -173,17 +207,6 @@ impl<'a> DrFc<'a> {
         }
         let f = ((t - t0) / (t1 - t0)).clamp(0.0, 1.0);
         ((f * n as f32) as usize).min(n - 1)
-    }
-
-    /// Coarse cell visibility: AABB-vs-frustum plus the temporal overlap of
-    /// the slice (always true for the slice containing t, kept for clarity).
-    fn cell_visible(&self, flat: usize, frustum: &Frustum, _t: f32) -> bool {
-        // Empty cells (no central data, no refs) can be skipped outright.
-        let cell = &self.grid.cells[flat];
-        if cell.central.is_empty() && cell.refs.is_empty() {
-            return false;
-        }
-        frustum.test_aabb(&self.grid.cell_aabb(flat)) != Containment::Outside
     }
 }
 
@@ -297,6 +320,35 @@ mod tests {
         drfc.cull_into(&cam, 0.4, &mut d3, &mut out);
         assert_eq!(out.scratch_capacities(), caps, "steady-state reallocation");
         assert_eq!(out.candidates, fresh.candidates);
+    }
+
+    #[test]
+    fn scheduled_split_matches_single_pass_cull() {
+        // The executor's fan-out contract: pass 1 computed externally (in
+        // ascending flat order) + `cull_scheduled` must equal `cull_into`.
+        let (scene, grid, layout) = setup(3000, 4);
+        let drfc = DrFc::new(&scene, &grid, &layout);
+        let cam = camera();
+        let t = 0.4;
+
+        let mut d1 = DramModel::default_lpddr5();
+        let single = drfc.cull(&cam, t, &mut d1);
+
+        let mut out = CullOutput::default();
+        out.clear();
+        let frustum = cam.frustum();
+        for flat in drfc.slice_cell_range(t) {
+            if drfc.cell_test(flat, &frustum) {
+                out.visible_cells.push(flat);
+            }
+        }
+        let mut d2 = DramModel::default_lpddr5();
+        drfc.cull_scheduled(&cam, t, &mut d2, &mut out);
+        assert_eq!(out.visible_cells, single.visible_cells);
+        assert_eq!(out.candidates, single.candidates);
+        assert_eq!(out.visible, single.visible);
+        assert_eq!(out.fetched, single.fetched);
+        assert_eq!(d1.stats(), d2.stats(), "identical request streams");
     }
 
     #[test]

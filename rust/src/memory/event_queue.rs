@@ -173,6 +173,10 @@ struct PortState {
     /// Per-stage first-issue / last-completion timestamps.
     first_issue_ns: [f64; 2],
     last_completion_stage_ns: [f64; 2],
+    /// Retired ports (departed viewer sessions) keep their statistics
+    /// readable but issue no further traffic and are skipped by epoch
+    /// barriers.
+    retired: bool,
 }
 
 impl PortState {
@@ -184,6 +188,7 @@ impl PortState {
             stats: [DramStats::default(); 2],
             first_issue_ns: [f64::INFINITY; 2],
             last_completion_stage_ns: [0.0; 2],
+            retired: false,
         }
     }
 }
@@ -234,6 +239,27 @@ impl MemorySystem {
         self.ports.len()
     }
 
+    /// Ports still eligible to issue traffic (registered, not retired).
+    pub fn n_active_ports(&self) -> usize {
+        self.ports.iter().filter(|p| !p.retired).count()
+    }
+
+    /// Retire a port at the end of its session: in-flight transactions are
+    /// dropped from the issue window (their channel occupancy has already
+    /// been charged), the port stops participating in epoch barriers, and
+    /// any later read on it is a logic error. Cumulative statistics stay
+    /// readable — the final session report is assembled after retirement.
+    pub fn retire_port(&mut self, port: PortId) {
+        let p = &mut self.ports[port];
+        p.inflight.clear();
+        p.retired = true;
+    }
+
+    /// Has `port` been retired?
+    pub fn port_retired(&self, port: PortId) -> bool {
+        self.ports[port].retired
+    }
+
     pub fn n_channels(&self) -> usize {
         self.channels.len()
     }
@@ -269,6 +295,7 @@ impl MemorySystem {
         // ---- issue time: the outstanding-transaction window -------------
         let issue = {
             let p = &mut self.ports[port];
+            debug_assert!(!p.retired, "read on retired port {port}");
             let mut issue = p.now_ns;
             if p.inflight.len() >= outstanding {
                 if let Some(oldest) = p.inflight.pop_front() {
@@ -455,6 +482,9 @@ impl MemorySystem {
     pub fn advance_epoch(&mut self) -> f64 {
         let epoch = self.horizon_ns();
         for p in &mut self.ports {
+            if p.retired {
+                continue;
+            }
             p.now_ns = epoch;
             p.inflight.clear();
         }
@@ -767,6 +797,34 @@ mod tests {
             a_alone.busy_ns,
             b_alone.busy_ns
         );
+    }
+
+    #[test]
+    fn retired_ports_keep_stats_and_skip_epochs() {
+        let mut sys = oracle_sys();
+        let a = sys.register_port();
+        let b = sys.register_port();
+        sys.read(a, MemStage::Preprocess, 0, 4096);
+        sys.read(b, MemStage::Blend, 1 << 16, 4096);
+        let a_stats = sys.port_stage_stats(a, MemStage::Preprocess);
+        assert!(a_stats.bytes > 0);
+        assert_eq!(sys.n_active_ports(), 2);
+
+        // A session departs mid-stream: its port retires, its stats stay.
+        sys.retire_port(a);
+        assert!(sys.port_retired(a));
+        assert!(!sys.port_retired(b));
+        assert_eq!(sys.n_active_ports(), 1);
+        assert_eq!(sys.port_stage_stats(a, MemStage::Preprocess), a_stats);
+
+        // Epoch barriers keep pacing the survivors; the retired port's
+        // horizon contribution (past traffic) is still real.
+        let h = sys.horizon_ns();
+        let epoch = sys.advance_epoch();
+        assert_eq!(epoch, h);
+        sys.read(b, MemStage::Blend, 1 << 17, 4096);
+        assert!(sys.port_stage_stats(b, MemStage::Blend).bytes > 4096);
+        assert_eq!(sys.port_stage_stats(a, MemStage::Preprocess), a_stats);
     }
 
     #[test]

@@ -25,9 +25,10 @@
 //! N concurrent viewer sessions.
 //!
 //! [`WorkerScratch`] is the per-executor-worker slice of the pool: the
-//! sort stage's membership flags and bucket-routing scratch, and the blend
-//! stage's per-depth-segment request streams. Workers receive disjoint
-//! `&mut WorkerScratch` entries, so the fan-out never shares hot scratch.
+//! cull stage's visible-cell partials, the sort stage's membership flags
+//! and bucket-routing scratch, and the blend stage's per-depth-segment
+//! request streams. Workers receive disjoint `&mut WorkerScratch` entries,
+//! so the fan-out never shares hot scratch.
 
 use crate::culling::{CullOutput, GridPartition};
 use crate::dcim::{DcimConfig, DcimMacro};
@@ -57,6 +58,10 @@ pub struct FrameBind<'s> {
 /// thread; entry 0 doubles as the serial path's scratch).
 #[derive(Debug, Default)]
 pub struct WorkerScratch {
+    /// Visible-cell partials of the DR-FC pass-1 fan-out (this worker's
+    /// contiguous chunk of the temporal slice's cells, ascending flat
+    /// order; worker-order concatenation reproduces the serial scan).
+    pub cells: Vec<usize>,
     /// Splat-in-tile flags (per-tile extraction filter of the sort stage).
     pub in_tile: Vec<bool>,
     /// Bucket-routing scratch for the sort engine (see
@@ -243,6 +248,7 @@ impl FrameCtx {
         // Per-worker executor scratch (sort flags, bucket routing, segment
         // streams) is part of the zero-allocation contract too.
         for ws in &self.workers {
+            caps.push(ws.cells.capacity());
             caps.push(ws.in_tile.capacity());
             caps.push(ws.buckets.capacity());
             caps.push(nested(&ws.buckets));

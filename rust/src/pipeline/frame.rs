@@ -312,26 +312,16 @@ impl<'a> FramePipeline<'a> {
         FramePipeline::build(scene, prep, config, MemChoice::Trace)
     }
 
-    fn build(
-        scene: &'a Scene,
-        prep: ScenePrep,
-        config: PipelineConfig,
+    /// Build the (cull, blend) [`MemPort`] pair for a backend choice —
+    /// shared by [`FramePipeline::build`] and the session-resume
+    /// constructors (a resumed session re-registers fresh ports; retained
+    /// state never carries another system's port handles).
+    fn make_ports(
+        config: &PipelineConfig,
+        prep: &ScenePrep,
         choice: MemChoice,
-    ) -> FramePipeline<'a> {
-        let tile_grid = TileGrid::new(config.width, config.height);
-        let conn =
-            ConnectionGraph::new(tile_grid.tiles_x, tile_grid.tiles_y, config.atg.tile_block);
-        let n_blocks = conn.n_blocks();
-        let sram = SramBuffer::new(SramConfig {
-            capacity_bytes: config.sram_bytes,
-            ..SramConfig::paper_default(
-                Gaussian4D::dram_bytes(scene.dynamic),
-                config.n_buckets,
-            )
-        });
-        let buffer_lines = sram.capacity_lines();
-
-        let (cull_port, blend_port, mem_sys, owns_mem) = match choice {
+    ) -> (MemPort, MemPort, Option<Arc<Mutex<MemorySystem>>>, bool) {
+        match choice {
             MemChoice::Shared(sys) => {
                 let cull = MemPort::shared(&sys, MemStage::Preprocess);
                 let blend = MemPort::shared(&sys, MemStage::Blend);
@@ -360,7 +350,30 @@ impl<'a> FramePipeline<'a> {
                     (cull, blend, Some(sys), true)
                 }
             },
-        };
+        }
+    }
+
+    fn build(
+        scene: &'a Scene,
+        prep: ScenePrep,
+        config: PipelineConfig,
+        choice: MemChoice,
+    ) -> FramePipeline<'a> {
+        let tile_grid = TileGrid::new(config.width, config.height);
+        let conn =
+            ConnectionGraph::new(tile_grid.tiles_x, tile_grid.tiles_y, config.atg.tile_block);
+        let n_blocks = conn.n_blocks();
+        let sram = SramBuffer::new(SramConfig {
+            capacity_bytes: config.sram_bytes,
+            ..SramConfig::paper_default(
+                Gaussian4D::dram_bytes(scene.dynamic),
+                config.n_buckets,
+            )
+        });
+        let buffer_lines = sram.capacity_lines();
+
+        let (cull_port, blend_port, mem_sys, owns_mem) =
+            Self::make_ports(&config, &prep, choice);
 
         let threads = config.resolved_threads();
         let ctx = FrameCtx::new(
@@ -446,7 +459,7 @@ impl<'a> FramePipeline<'a> {
         };
         let frame_t0 = Instant::now();
         self.ctx.begin_frame();
-        self.cull_stage.run(&bind, cam, t, &mut self.ctx);
+        self.cull_stage.run(&bind, cam, t, &mut self.ctx, &self.pool);
         self.project_stage.run(&bind, cam, t, &mut self.ctx);
         self.intersect_stage.run(&bind, &mut self.ctx);
         self.group_stage.run(&bind, &mut self.ctx);
@@ -503,6 +516,204 @@ impl<'a> FramePipeline<'a> {
     /// this unchanged (the zero-allocation contract).
     pub fn scratch_capacities(&self) -> Vec<usize> {
         self.ctx.scratch_capacities()
+    }
+
+    /// Detach this pipeline's retained per-session state — the pooled
+    /// [`FrameCtx`] (scratch warmth), the ATG grouping and AII interval
+    /// posteriori, the early-termination calibration, and the frame
+    /// counter — into an owned [`SessionState`] that outlives the
+    /// pipeline's scene borrow. A departing viewer session detaches so a
+    /// later pipeline (same scene preparation and geometry) can resume
+    /// warm instead of cold-starting; the state's memory ports are
+    /// *not* carried over (resume registers fresh ones).
+    pub fn detach_session(self) -> SessionState {
+        SessionState {
+            shape: SessionShape::of(&self.config),
+            ctx: self.ctx,
+            group_stage: self.group_stage,
+            sort_stage: self.sort_stage,
+            blend_stage: self.blend_stage,
+            frame_idx: self.frame_idx,
+            host: self.host,
+        }
+    }
+
+    /// Resume a detached session on a shared preparation with the memory
+    /// backend chosen by `config.mem` (the [`FramePipeline::with_prep`]
+    /// counterpart). The very next `render_frame` continues the stream
+    /// bit-identically to the pipeline the state was detached from.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `config`'s state-bearing shape (resolution, tile block,
+    /// bucket count, SRAM capacity, sort-engine choice) differs from the
+    /// configuration the state was detached under — the pooled context is
+    /// tile-indexed and the retained stages bake those dimensions in.
+    pub fn resume_with_prep(
+        scene: &'a Scene,
+        prep: ScenePrep,
+        config: PipelineConfig,
+        state: SessionState,
+    ) -> FramePipeline<'a> {
+        FramePipeline::resume(scene, prep, config, MemChoice::Config, state)
+    }
+
+    /// Resume a detached session with its cull/blend ports registered on a
+    /// shared, contended event-queue system (the
+    /// [`FramePipeline::with_shared_memory`] counterpart).
+    pub fn resume_with_shared_memory(
+        scene: &'a Scene,
+        prep: ScenePrep,
+        config: PipelineConfig,
+        sys: Arc<Mutex<MemorySystem>>,
+        state: SessionState,
+    ) -> FramePipeline<'a> {
+        FramePipeline::resume(scene, prep, config, MemChoice::Shared(sys), state)
+    }
+
+    fn resume(
+        scene: &'a Scene,
+        prep: ScenePrep,
+        config: PipelineConfig,
+        choice: MemChoice,
+        state: SessionState,
+    ) -> FramePipeline<'a> {
+        assert_eq!(
+            state.shape,
+            SessionShape::of(&config),
+            "session state detached under a different pipeline shape"
+        );
+        let tile_grid = TileGrid::new(config.width, config.height);
+        let (cull_port, blend_port, mem_sys, owns_mem) =
+            Self::make_ports(&config, &prep, choice);
+        let SessionState { mut ctx, group_stage, sort_stage, blend_stage, frame_idx, host, .. } =
+            state;
+        ctx.cull_port = cull_port;
+        ctx.blend_port = blend_port;
+        // The executor pool is host-side state, resized to this run's
+        // thread count (simulated stats are thread-count invariant).
+        let threads = config.resolved_threads();
+        ctx.workers.resize_with(threads.max(1), Default::default);
+        FramePipeline {
+            pool: WorkerPool::new(threads),
+            host,
+            cull_stage: CullStage,
+            project_stage: ProjectStage,
+            intersect_stage: IntersectStage,
+            group_stage,
+            sort_stage,
+            blend_stage,
+            ctx,
+            tile_grid,
+            grid: prep.grid,
+            layout: prep.layout,
+            quantized: prep.quantized,
+            config,
+            scene,
+            frame_idx,
+            mem_sys,
+            owns_mem,
+        }
+    }
+
+    /// Seed the AII sort engine's per-block intervals from retained state
+    /// (`SessionState::take_aii_intervals` of a departed session). Returns
+    /// `false` (and leaves the engine untouched) when the engine is the
+    /// conventional baseline or the block counts differ — warm-starting is
+    /// an optimization, never a requirement.
+    pub fn warm_start_aii(&mut self, intervals: Vec<Option<Vec<f32>>>) -> bool {
+        match &mut self.sort_stage.engine {
+            SortEngine::Aii(aii) if aii.n_blocks() == intervals.len() => {
+                aii.warm_start(intervals);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Tile blocks whose AII interval slots currently hold posteriori
+    /// boundaries (0 for the conventional engine).
+    pub fn aii_warm_blocks(&self) -> usize {
+        match &self.sort_stage.engine {
+            SortEngine::Aii(aii) => aii.warm_blocks(),
+            SortEngine::Conventional => 0,
+        }
+    }
+}
+
+/// Owned, scene-independent retained state of one viewer session's
+/// pipeline: the pooled frame context (scratch capacity warmth), the
+/// stage units carrying posteriori state (ATG groups, AII intervals, SRAM
+/// geometry + early-termination calibration), and the frame counter.
+/// Produced by [`FramePipeline::detach_session`]; consumed by the
+/// `resume_*` constructors. The contained memory ports are replaced on
+/// resume — sessions own their state, memory systems own their ports.
+#[derive(Debug)]
+pub struct SessionState {
+    /// The state-bearing configuration shape the state was detached under
+    /// — resume re-checks it before adopting the retained stages.
+    shape: SessionShape,
+    ctx: FrameCtx,
+    group_stage: GroupStage,
+    sort_stage: SortStage,
+    blend_stage: BlendStage,
+    frame_idx: usize,
+    host: HostStageWall,
+}
+
+/// The configuration dimensions baked into retained session state: the
+/// tile-indexed context geometry, the block/bucket structure of the sort
+/// and group stages, the SRAM buffer capacity, and the sort-engine choice.
+/// Resume requires an exact match; everything else in `PipelineConfig`
+/// (threads, memory backend, feature switches outside sorting) is safe to
+/// change across a handoff.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct SessionShape {
+    width: usize,
+    height: usize,
+    tile_block: usize,
+    n_buckets: usize,
+    sram_bytes: usize,
+    use_aii: bool,
+}
+
+impl SessionShape {
+    fn of(config: &PipelineConfig) -> SessionShape {
+        SessionShape {
+            width: config.width,
+            height: config.height,
+            tile_block: config.atg.tile_block,
+            n_buckets: config.n_buckets,
+            sram_bytes: config.sram_bytes,
+            use_aii: config.use_aii,
+        }
+    }
+}
+
+impl SessionState {
+    /// Frames the detached session had rendered.
+    pub fn frame_idx(&self) -> usize {
+        self.frame_idx
+    }
+
+    /// Extract the AII sort engine's retained per-block intervals, leaving
+    /// the state cold (None for the conventional engine). This is the
+    /// donor side of [`FramePipeline::warm_start_aii`]: a scheduler hands a
+    /// departed session's intervals to a joining viewer whose view is
+    /// expected to be depth-coherent with the donor's.
+    pub fn take_aii_intervals(&mut self) -> Option<Vec<Option<Vec<f32>>>> {
+        match &mut self.sort_stage.engine {
+            SortEngine::Aii(aii) => Some(aii.take_intervals()),
+            SortEngine::Conventional => None,
+        }
+    }
+
+    /// Tile blocks whose AII slots hold posteriori boundaries.
+    pub fn aii_warm_blocks(&self) -> usize {
+        match &self.sort_stage.engine {
+            SortEngine::Aii(aii) => aii.warm_blocks(),
+            SortEngine::Conventional => 0,
+        }
     }
 }
 
@@ -671,6 +882,72 @@ mod tests {
         assert_eq!(
             r1.traffic.preprocess_dram.bursts,
             r2.traffic.preprocess_dram.bursts
+        );
+    }
+
+    #[test]
+    fn detached_session_resumes_bit_identically() {
+        let scene = small_scene();
+        let cfg = PipelineConfig::paper(true).with_resolution(192, 108);
+        let prep = ScenePrep::build(&scene, &cfg);
+        let cam = template(192, 108);
+        // Frozen pose + scene time: frame 2's working sets depend only on
+        // the carried posteriori state, making the handoff check exact.
+        let times = [0.3f32, 0.3, 0.3];
+
+        // Uninterrupted reference.
+        let mut whole = FramePipeline::with_prep(&scene, prep.clone(), cfg.clone());
+        let mut expect = Vec::new();
+        for &t in &times {
+            expect.push(whole.render_frame(&cam, t, false));
+        }
+
+        // Detach after frame 1, resume, continue: frame 2 must match the
+        // uninterrupted stream bit-for-bit (posteriori state carried over).
+        let mut first = FramePipeline::with_prep(&scene, prep.clone(), cfg.clone());
+        first.render_frame(&cam, times[0], false);
+        first.render_frame(&cam, times[1], false);
+        let state = first.detach_session();
+        assert_eq!(state.frame_idx(), 2);
+        assert!(state.aii_warm_blocks() > 0, "posteriori intervals retained");
+        let mut resumed = FramePipeline::resume_with_prep(&scene, prep.clone(), cfg.clone(), state);
+        let r = resumed.render_frame(&cam, times[2], false);
+        let e = &expect[2];
+        assert_eq!(r.traffic, e.traffic);
+        assert_eq!(r.sort, e.sort);
+        assert_eq!(r.energy, e.energy);
+        assert_eq!(r.n_visible, e.n_visible);
+        assert_eq!(r.blend_pairs, e.blend_pairs);
+        assert_eq!(r.atg_ops, e.atg_ops, "ATG posteriori must survive the handoff");
+        assert_eq!(r.sort.minmax_scanned, 0, "AII stays warm across the handoff");
+
+        // A cold pipeline at the same frame pays the min/max scan instead.
+        let mut cold = FramePipeline::with_prep(&scene, prep, cfg);
+        let c = cold.render_frame(&cam, times[2], false);
+        assert!(c.sort.minmax_scanned > 0);
+    }
+
+    #[test]
+    fn aii_warm_start_seeds_intervals_from_donor_state() {
+        let scene = small_scene();
+        let cfg = PipelineConfig::paper(true).with_resolution(192, 108);
+        let prep = ScenePrep::build(&scene, &cfg);
+        let cam = template(192, 108);
+
+        let mut donor = FramePipeline::with_prep(&scene, prep.clone(), cfg.clone());
+        donor.render_frame(&cam, 0.3, false);
+        let mut state = donor.detach_session();
+        let intervals = state.take_aii_intervals().expect("paper config uses AII");
+        assert_eq!(state.aii_warm_blocks(), 0, "take_aii_intervals cools the donor");
+
+        let mut joiner = FramePipeline::with_prep(&scene, prep, cfg);
+        assert_eq!(joiner.aii_warm_blocks(), 0);
+        assert!(joiner.warm_start_aii(intervals));
+        assert!(joiner.aii_warm_blocks() > 0);
+        let r = joiner.render_frame(&cam, 0.3, false);
+        assert_eq!(
+            r.sort.minmax_scanned, 0,
+            "warm-started joiner skips the phase-1 scan on a coherent view"
         );
     }
 

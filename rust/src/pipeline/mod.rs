@@ -46,7 +46,9 @@ pub mod profile;
 pub mod stages;
 
 pub use ctx::{FrameBind, FrameCtx, WorkerScratch};
-pub use frame::{FramePipeline, FrameResult, HostStageWall, PipelineConfig, ScenePrep};
+pub use frame::{
+    FramePipeline, FrameResult, HostStageWall, PipelineConfig, ScenePrep, SessionState,
+};
 pub use par::{resolve_threads, SharedSlice, WorkerPool};
 pub use profile::{profile_breakdown, PhaseShare};
 pub use stages::{BlendStage, CullStage, GroupStage, IntersectStage, ProjectStage, SortStage};

@@ -15,14 +15,16 @@
 //! recorder), so a [`FramePipeline`](super::FramePipeline) is just the
 //! linear composition of the six `run` calls.
 //!
-//! The sort and blend stages fan out across the pipeline's
-//! [`WorkerPool`](super::par::WorkerPool): per-block sorting (disjoint
-//! posteriori slots + per-block stat partials reduced in block order) and
-//! the per-depth-segment blend-buffer walk (disjoint segment state, DRAM
-//! miss fills replayed in global pair order). Per-frame stat outputs are
-//! bit-identical to the pre-refactor monolithic `render_frame` at **any**
-//! thread count (enforced against [`super::oracle::MonolithPipeline`] and
-//! across thread counts by the determinism suite).
+//! The cull, sort, and blend stages fan out across the pipeline's
+//! [`WorkerPool`](super::par::WorkerPool): the DR-FC grid-cell tests (per
+//! contiguous cell chunk, partials concatenated in worker order), per-block
+//! sorting (disjoint posteriori slots + per-block stat partials reduced in
+//! block order), and the per-depth-segment blend-buffer walk (disjoint
+//! segment state, DRAM miss fills replayed in global pair order). Per-frame
+//! stat outputs are bit-identical to the pre-refactor monolithic
+//! `render_frame` at **any** thread count (enforced against
+//! [`super::oracle::MonolithPipeline`] and across thread counts by the
+//! determinism suite).
 
 use super::ctx::{FrameBind, FrameCtx, WorkerScratch};
 use super::frame::{DIGITAL_FREQ_GHZ, EARLY_TERMINATION_FACTOR, PREPROCESS_MACS_PER_GAUSSIAN};
@@ -44,18 +46,66 @@ use crate::tiles::raster::raster_order_into;
 /// Stage 1 — frustum culling (DR-FC or the conventional full fetch) and its
 /// DRAM traffic, issued through the context's preprocess
 /// [`MemPort`](crate::memory::MemPort) into the pooled cull output
-/// (`cull_into`: zero steady-state allocations).
+/// (zero steady-state allocations).
+///
+/// **Executor fan-out (DR-FC pass 1):** the temporal slice's grid-cell
+/// visibility tests are chunked contiguously across the pool's workers;
+/// each worker appends its chunk's visible cells to a private pooled
+/// partial (disjoint writes), and the partials concatenate on the calling
+/// thread in fixed worker order — reproducing the serial ascending
+/// flat-index scan exactly, so the scheduled DRAM request stream (passes
+/// 2–3, [`DrFc::cull_scheduled`]) is bit-identical at any thread count.
 #[derive(Debug)]
 pub struct CullStage;
 
 impl CullStage {
-    pub fn run(&mut self, bind: &FrameBind, cam: &Camera, t: f32, ctx: &mut FrameCtx) {
+    pub fn run(
+        &mut self,
+        bind: &FrameBind,
+        cam: &Camera,
+        t: f32,
+        ctx: &mut FrameCtx,
+        pool: &WorkerPool,
+    ) {
         ctx.cull_port.begin_frame();
         {
-            let FrameCtx { cull, cull_port, energy, .. } = ctx;
+            let FrameCtx { cull, cull_port, energy, workers, .. } = ctx;
             if bind.config.use_drfc {
                 let drfc = DrFc::new(bind.scene, bind.grid, bind.layout);
-                drfc.cull_into(cam, t, cull_port, cull);
+                cull.clear();
+                // Pass 1 — fan the grid-cell tests out per contiguous cell
+                // chunk (pure reads of the shared preparation; per-worker
+                // visible-cell partials are disjoint writes).
+                let range = drfc.slice_cell_range(t);
+                let frustum = cam.frustum();
+                let n_cells = range.len();
+                let start = range.start;
+                let tw = workers.len().max(1);
+                let chunk = n_cells.div_ceil(tw).max(1);
+                {
+                    let drfc = &drfc;
+                    let frustum = &frustum;
+                    pool.scope(|scope| {
+                        for (w, ws) in workers.iter_mut().enumerate() {
+                            scope.spawn(move || {
+                                ws.cells.clear();
+                                let lo = (w * chunk).min(n_cells);
+                                let hi = ((w + 1) * chunk).min(n_cells);
+                                for i in lo..hi {
+                                    let flat = start + i;
+                                    if drfc.cell_test(flat, frustum) {
+                                        ws.cells.push(flat);
+                                    }
+                                }
+                            });
+                        }
+                    });
+                }
+                // Fixed worker-order concatenation = ascending flat order.
+                for ws in workers.iter() {
+                    cull.visible_cells.extend_from_slice(&ws.cells);
+                }
+                drfc.cull_scheduled(cam, t, cull_port, cull);
                 energy.cull_pj += bind.grid.n_cells() as f64 * ops::E_GRID_TEST_PJ
                     + cull.fetched as f64 * ops::E_FRUSTUM_PJ;
             } else {

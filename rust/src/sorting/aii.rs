@@ -44,6 +44,41 @@ impl AiiSort {
         }
     }
 
+    /// Tile blocks tracked by this engine.
+    pub fn n_blocks(&self) -> usize {
+        self.boundaries.len()
+    }
+
+    /// Blocks currently holding carried boundaries (warm blocks).
+    pub fn warm_blocks(&self) -> usize {
+        self.boundaries.iter().filter(|b| b.is_some()).count()
+    }
+
+    /// Extract the per-block posteriori intervals, leaving the engine cold
+    /// — the retained-state handoff a departing viewer session uses so a
+    /// later session can [`AiiSort::warm_start`] from them.
+    pub fn take_intervals(&mut self) -> Vec<Option<Vec<f32>>> {
+        let n = self.boundaries.len();
+        std::mem::replace(&mut self.boundaries, vec![None; n])
+    }
+
+    /// Seed the per-block boundaries from previously retained intervals
+    /// (`take_intervals` of a compatible engine). Warm blocks skip the
+    /// phase-1 min/max scan on their first sort, exactly as if the engine
+    /// had sorted the previous frame itself.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `intervals` does not cover the same block count.
+    pub fn warm_start(&mut self, intervals: Vec<Option<Vec<f32>>>) {
+        assert_eq!(
+            intervals.len(),
+            self.boundaries.len(),
+            "warm-start intervals must match the engine's block count"
+        );
+        self.boundaries = intervals;
+    }
+
     /// Does block `block` have carried boundaries?
     pub fn has_posteriori(&self, block: usize) -> bool {
         self.boundaries
@@ -200,6 +235,34 @@ mod tests {
         let mut items = frame_items(&mut rng, 200, 0.0);
         let s = aii.sort_tile(0, &mut items);
         assert_eq!(s.minmax_scanned, 200);
+    }
+
+    #[test]
+    fn warm_start_from_retained_intervals_skips_minmax_scan() {
+        let hw = SortHwConfig::default();
+        let mut donor = AiiSort::new(8, 3, hw);
+        let mut rng = Rng::new(6);
+        let mut items = frame_items(&mut rng, 400, 0.0);
+        donor.sort_tile(1, &mut items);
+        assert_eq!(donor.warm_blocks(), 1);
+
+        // Handoff: donor's intervals seed a fresh engine; the donor cools.
+        let intervals = donor.take_intervals();
+        assert_eq!(donor.warm_blocks(), 0);
+        assert_eq!(intervals.len(), 3);
+        let mut fresh = AiiSort::new(8, 3, hw);
+        fresh.warm_start(intervals);
+        assert_eq!(fresh.n_blocks(), 3);
+        assert_eq!(fresh.warm_blocks(), 1);
+
+        // The warmed block sorts without the phase-1 scan; cold blocks pay.
+        let mut items = frame_items(&mut rng, 400, 0.02);
+        let warm = fresh.sort_tile(1, &mut items);
+        assert_eq!(warm.minmax_scanned, 0, "retained intervals skip the scan");
+        assert!(is_sorted(&items));
+        let mut items = frame_items(&mut rng, 400, 0.02);
+        let cold = fresh.sort_tile(0, &mut items);
+        assert_eq!(cold.minmax_scanned, 400);
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Session-scheduler lifecycle contract:
+//!
+//! 1. **Round-robin bit-compatibility** — a no-join/no-leave script under
+//!    `SchedPolicy::RoundRobin` reproduces `render_batch_contended`'s
+//!    `ContendedMemReport` (and per-viewer reports) bit-for-bit, at any
+//!    host thread count.
+//! 2. **Script determinism** — join/leave scripts replay identically at
+//!    threads = 1/2/8 (the simulated projection is the comparison surface).
+//! 3. **Mid-stream joins** — a session joining at frame k with
+//!    `start_frame = k` produces frames identical to a fresh viewer whose
+//!    trajectory starts at k (timing-independent stats compared against an
+//!    isolated run).
+//! 4. **Policies** — DWFQ and EDF yield schedules distinct from
+//!    round-robin, each deterministic under replay.
+//! 5. **Retained state** — a joiner warm-started from a departed session's
+//!    AII intervals skips the phase-1 scan its cold twin pays for.
+//! 6. **Admission control** — a tiny DRAM budget defers the second join
+//!    but stays work-conserving (every session still streams to
+//!    completion).
+
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::{
+    RenderServer, SchedPolicy, SessionScript, SessionSpec, ViewerSpec,
+};
+use gaucim::memory::MemMode;
+use gaucim::pipeline::PipelineConfig;
+use gaucim::scene::synth::{SceneKind, SynthParams};
+
+fn server(threads: usize) -> RenderServer {
+    let scene = SynthParams::new(SceneKind::DynamicLarge, 1500).with_seed(21).generate();
+    let config =
+        PipelineConfig::paper(true).with_resolution(128, 72).with_threads(threads);
+    RenderServer::new(scene, config)
+}
+
+#[test]
+fn round_robin_static_script_matches_contended_batch_bit_for_bit() {
+    // Uneven frame counts exercise the rotation-skip path; one viewer
+    // renders numerically so PSNR scoring is covered too.
+    let specs = [
+        ViewerSpec { condition: ViewCondition::Average, frames: 3, psnr_every: 2 },
+        ViewerSpec::perf(ViewCondition::Static, 2),
+        ViewerSpec::perf(ViewCondition::Extreme, 3),
+    ];
+    for threads in [1, 4] {
+        let server = server(threads);
+        let batch = server.render_batch_contended(&specs);
+        let script = SessionScript::from_specs(&specs);
+        let sessions = server.render_sessions(&script, SchedPolicy::RoundRobin);
+
+        let batch_mem = batch.contended_mem.as_ref().expect("contended roll-up");
+        assert_eq!(
+            batch_mem.to_json().pretty(),
+            sessions.contended.to_json().pretty(),
+            "ContendedMemReport diverged at threads={threads}"
+        );
+        assert_eq!(batch.viewers.len(), sessions.sessions.len());
+        for (b, s) in batch.viewers.iter().zip(&sessions.sessions) {
+            assert_eq!(
+                b.to_json().pretty(),
+                s.seq.to_json().pretty(),
+                "per-viewer report diverged at threads={threads}"
+            );
+        }
+        assert_eq!(sessions.rounds, 3, "rounds = max frame count");
+        assert_eq!(sessions.total_frames, 8);
+        assert_eq!(sessions.policy.label(), "round_robin");
+    }
+}
+
+fn join_leave_script() -> SessionScript {
+    SessionScript::new()
+        .join_at(0, SessionSpec::stream(ViewCondition::Average, 5).with_deadline_fps(120.0))
+        .join_at(
+            0,
+            SessionSpec::stream(ViewCondition::Static, 5)
+                .with_deadline_fps(60.0)
+                .with_weight(2.0),
+        )
+        .join_at(
+            2,
+            SessionSpec::stream(ViewCondition::Extreme, 3)
+                .with_start(2)
+                .with_deadline_fps(90.0),
+        )
+        .leave_at(4, 0)
+}
+
+#[test]
+fn join_leave_script_replays_identically_at_any_thread_count() {
+    let script = join_leave_script();
+    let run = |threads: usize| {
+        server(threads).render_sessions(&script, SchedPolicy::Edf).simulated_projection()
+    };
+    let baseline = run(1);
+    for threads in [2, 8] {
+        assert_eq!(baseline, run(threads), "EDF stream diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn joining_at_frame_k_matches_fresh_viewer_starting_at_k() {
+    let server = server(1);
+    let k = 3;
+    let n = 3;
+    let script = SessionScript::new()
+        .join_at(0, SessionSpec::stream(ViewCondition::Average, k + n))
+        .join_at(k, SessionSpec::stream(ViewCondition::Static, n).with_start(k));
+    let rep = server.render_sessions(&script, SchedPolicy::RoundRobin);
+    let joiner = &rep.sessions[1];
+    assert_eq!(joiner.joined_round, k);
+    assert_eq!(joiner.admitted_round, k);
+    assert_eq!(joiner.frames, n);
+
+    // Isolated fresh viewer: a private pipeline over the same trajectory's
+    // frames [k, k + n) (same event-queue backend, no contention). Every
+    // timing-independent stat must match the in-stream session exactly —
+    // contention moves *when* requests complete, never what is fetched.
+    let traj = server.trajectory(&ViewerSpec::perf(ViewCondition::Static, k + n));
+    let mut cfg = server.config.clone();
+    cfg.mem.mode = MemMode::EventQueue;
+    let mut pipeline = server.shared.pipeline(cfg);
+    let (mut visible, mut accesses, mut bytes, mut cycles, mut atg) =
+        (0f64, 0f64, 0f64, 0f64, 0f64);
+    let (mut hits, mut lookups) = (0u64, 0u64);
+    for (cam, t) in &traj[k..] {
+        let r = pipeline.render_frame(cam, *t, false);
+        visible += r.n_visible as f64;
+        accesses += r.traffic.total_dram_accesses() as f64;
+        bytes += r.traffic.total_dram_bytes() as f64;
+        cycles += r.sort.cycles as f64;
+        atg += r.atg_ops as f64;
+        hits += r.traffic.blend_sram.hits;
+        lookups += r.traffic.blend_sram.lookups;
+    }
+    let nf = n as f64;
+    assert_eq!(joiner.seq.avg_visible, visible / nf);
+    assert_eq!(joiner.seq.avg_dram_accesses, accesses / nf);
+    assert_eq!(joiner.seq.avg_dram_bytes, bytes / nf);
+    assert_eq!(joiner.seq.avg_sort_cycles, cycles / nf);
+    assert_eq!(joiner.seq.avg_atg_ops, atg / nf);
+    assert_eq!(joiner.seq.sram_hit_rate, hits as f64 / lookups as f64);
+}
+
+#[test]
+fn dwfq_and_edf_yield_distinct_deterministic_schedules() {
+    let script = join_leave_script();
+    let server = server(1);
+    let rr = server.render_sessions(&script, SchedPolicy::RoundRobin);
+    let dwfq = server.render_sessions(&script, SchedPolicy::Dwfq);
+    let edf = server.render_sessions(&script, SchedPolicy::Edf);
+
+    // Each policy is deterministic under replay…
+    assert_eq!(
+        dwfq.simulated_projection(),
+        server.render_sessions(&script, SchedPolicy::Dwfq).simulated_projection()
+    );
+    assert_eq!(
+        edf.simulated_projection(),
+        server.render_sessions(&script, SchedPolicy::Edf).simulated_projection()
+    );
+    // …but the issue orders differ, so the contention profiles differ.
+    assert_ne!(rr.simulated_projection(), dwfq.simulated_projection());
+    assert_ne!(rr.simulated_projection(), edf.simulated_projection());
+
+    // Ordering never changes what is transferred — only when.
+    for (a, b) in rr.sessions.iter().zip(&dwfq.sessions) {
+        assert_eq!(a.mem.total_bytes(), b.mem.total_bytes());
+        assert_eq!(a.frames, b.frames);
+    }
+    for (a, b) in rr.sessions.iter().zip(&edf.sessions) {
+        assert_eq!(a.mem.total_bytes(), b.mem.total_bytes());
+    }
+    // Deadline accounting is populated for deadline-bearing sessions.
+    assert!(rr.sessions.iter().all(|s| s.target_fps > 0.0));
+    assert!(rr.frame_latency_pctl.p99 >= rr.frame_latency_pctl.p50);
+}
+
+#[test]
+fn warm_started_joiner_reuses_departed_intervals() {
+    let server = server(1);
+    let frames = 3;
+    let base = SessionSpec::stream(ViewCondition::Static, frames);
+    let cold_script = SessionScript::new()
+        .join_at(0, base.clone())
+        .leave_at(frames, 0)
+        .join_at(frames, base.clone());
+    let warm_script = SessionScript::new()
+        .join_at(0, base.clone())
+        .leave_at(frames, 0)
+        .join_at(frames, base.clone().with_warm_from(0));
+
+    let cold = server.render_sessions(&cold_script, SchedPolicy::RoundRobin);
+    let warm = server.render_sessions(&warm_script, SchedPolicy::RoundRobin);
+    let cold_j = &cold.sessions[1];
+    let warm_j = &warm.sessions[1];
+    assert!(!cold_j.warm_started);
+    assert!(warm_j.warm_started, "retained intervals must be adopted");
+    assert_eq!(warm_j.frames, frames);
+    assert!(
+        warm_j.aii_interval_hit_rate > cold_j.aii_interval_hit_rate,
+        "warm {} vs cold {}: retained intervals must lift the hit rate",
+        warm_j.aii_interval_hit_rate,
+        cold_j.aii_interval_hit_rate
+    );
+    // Identical static views: the warm joiner never pays the phase-1 scan.
+    assert_eq!(warm_j.aii_interval_hit_rate, 1.0);
+}
+
+#[test]
+fn tiny_dram_budget_defers_joins_but_stays_work_conserving() {
+    let server = server(1);
+    let script = SessionScript::new()
+        .join_at(0, SessionSpec::stream(ViewCondition::Average, 2))
+        .join_at(0, SessionSpec::stream(ViewCondition::Static, 2));
+    // Budget sized for one fallback-estimate stream, not two.
+    let fallback_demand = server.shared.prep.layout.total_span_bytes() as f64 / 10.0
+        * gaucim::coordinator::session::DEFAULT_STREAM_FPS;
+    let rep = server
+        .sessions(SchedPolicy::RoundRobin)
+        .dram_budget_gbps(fallback_demand * 1.5 / 1e9)
+        .run(&script);
+
+    let a = &rep.sessions[0];
+    let b = &rep.sessions[1];
+    assert_eq!(a.admitted_round, 0);
+    assert_eq!(a.deferred_rounds, 0);
+    assert!(b.admitted_round > 0, "budget must defer the second join");
+    assert!(b.deferred_rounds > 0);
+    // Work-conserving: both sessions still stream every frame.
+    assert_eq!(a.frames, 2);
+    assert_eq!(b.frames, 2);
+    assert_eq!(rep.total_frames, 4);
+    assert!(rep.rounds >= 3, "deferred admission stretches the stream");
+
+    // Without a budget the same script admits everyone at round 0.
+    let free = server.render_sessions(&script, SchedPolicy::RoundRobin);
+    assert_eq!(free.sessions[1].admitted_round, 0);
+    assert_eq!(free.rounds, 2);
+}
+
+#[test]
+fn leave_while_deferred_cancels_admission() {
+    // A session still in the admission queue when its leave fires must be
+    // dropped from the queue — never admitted, no ports, no demand leak.
+    let server = server(1);
+    let script = SessionScript::new()
+        .join_at(0, SessionSpec::stream(ViewCondition::Average, 3))
+        .join_at(0, SessionSpec::stream(ViewCondition::Static, 3))
+        .leave_at(1, 1);
+    let fallback_demand = server.shared.prep.layout.total_span_bytes() as f64 / 10.0
+        * gaucim::coordinator::session::DEFAULT_STREAM_FPS;
+    let rep = server
+        .sessions(SchedPolicy::RoundRobin)
+        .dram_budget_gbps(fallback_demand * 1.5 / 1e9)
+        .run(&script);
+
+    let b = &rep.sessions[1];
+    assert_eq!(b.frames, 0, "a session deferred past its leave never streams");
+    assert_eq!(b.left_round, 1);
+    assert_eq!(
+        rep.contended.viewers.len(),
+        1,
+        "the never-admitted session must not register ports"
+    );
+    assert_eq!(rep.sessions[0].frames, 3);
+    assert_eq!(rep.total_frames, 3);
+}

@@ -169,6 +169,43 @@ fn thread_counts_do_not_change_any_stat_output() {
 }
 
 #[test]
+fn drfc_cell_fanout_is_thread_invariant() {
+    // The cull stage's DR-FC pass-1 fan-out (grid-cell tests chunked per
+    // worker, partials concatenated in worker order): a dense grid
+    // (grid_n = 8 → many cells per temporal slice) makes every worker
+    // chunk non-empty, and the extreme condition moves the frustum so the
+    // visible-cell set changes every frame. All stat outputs — most
+    // directly the preprocess DRAM stream scheduled from the visible-cell
+    // list — must be bit-identical at threads = 1, 2, 8.
+    let scene = SynthParams::new(SceneKind::DynamicLarge, 4000).with_seed(23).generate();
+    let base = PipelineConfig {
+        grid_n: 8,
+        ..PipelineConfig::paper(true).with_resolution(160, 96)
+    };
+    let seq = trajectory(&scene, ViewCondition::Extreme, 3, 160, 96);
+    let run = |config: PipelineConfig| -> Vec<FrameResult> {
+        let mut p = FramePipeline::new(&scene, config);
+        seq.iter().map(|(cam, t)| p.render_frame(cam, *t, false)).collect()
+    };
+
+    let serial = run(PipelineConfig { threads: 1, ..base.clone() });
+    assert!(
+        serial.iter().all(|r| r.traffic.preprocess_dram.bytes > 0),
+        "the fan-out must schedule real cull traffic"
+    );
+    for threads in [2, 8] {
+        let par = run(PipelineConfig { threads, ..base.clone() });
+        for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+            assert_frames_identical(a, b, &format!("drfc threads={threads} frame={i}"));
+        }
+    }
+
+    // And the fanned-out stage graph still matches the frozen monolith
+    // (which culls through the serial single-pass path) on this grid.
+    assert_engines_identical(&scene, base, ViewCondition::Extreme, 3, 0);
+}
+
+#[test]
 fn steady_state_frames_reuse_all_scratch_capacity() {
     // Static trajectory: identical views, so from frame 2 on every pooled
     // buffer has reached its working size — the capacity signature must
