@@ -13,12 +13,16 @@
 //! wall-clock percentiles, and `speedup_vs_serial`) so future PRs have a
 //! perf trajectory to beat.
 //!
-//! The **session layer** rides along: a join/leave [`SessionScript`] runs
-//! under every [`SchedPolicy`] (round-robin / DWFQ / EDF) after asserting
-//! that round-robin over a static script reproduces the contended batch's
-//! roll-up bit-for-bit; the per-policy deadline-miss rates, frame-latency
-//! percentiles, and fairness land in the `sessions` block of
-//! `BENCH_server.json` (diffed across thread counts by the CI
+//! The **session layer** rides along: a join/leave [`SessionScript`] —
+//! the built-in demo, or a declarative JSON file via
+//! `--session-script <path>` — runs under every [`SchedPolicy`]
+//! (round-robin / DWFQ / EDF) after asserting that round-robin over a
+//! static script reproduces the contended batch's roll-up bit-for-bit,
+//! and that the host-parallel round-engine run is byte-identical to the
+//! serial schedule; the per-policy deadline-miss rates, frame-latency
+//! percentiles, fairness, and the serial-vs-parallel session speedup
+//! (`speedup_vs_serial.sessions`) land in `BENCH_server.json` (the
+//! `sessions` block is diffed across thread counts by the CI
 //! `session-smoke` job). Pass `--sessions` to run the session layer only.
 //!
 //! Run: `cargo run --release --example multi_viewer [-- --viewers 4 --frames 8 --threads 0]`
@@ -27,8 +31,8 @@
 use gaucim::bench::write_bench_json;
 use gaucim::camera::ViewCondition;
 use gaucim::coordinator::{
-    ContendedMemReport, Percentiles, RenderServer, SchedPolicy, SessionScript, SessionSpec,
-    ViewerSpec,
+    ContendedMemReport, Percentiles, RenderServer, SchedPolicy, SessionBatchReport,
+    SessionScript, SessionSpec, ViewerSpec,
 };
 use gaucim::pipeline::{resolve_threads, HostStageWall, PipelineConfig};
 use gaucim::scene::synth::{SceneKind, SynthParams};
@@ -54,46 +58,15 @@ fn executor_probe(
     (pipeline.host_wall().clone(), wall)
 }
 
-/// Run the session-scheduler layer: assert the round-robin static-script
-/// bit-compatibility with `render_batch_contended`, then stream a
-/// join/leave script under every policy and report the per-policy
-/// deadline/fairness roll-ups (simulated quantities only — the block is
-/// diffed across host thread counts by CI).
-fn session_bench(
-    server: &RenderServer,
-    specs: &[ViewerSpec],
-    frames: usize,
-    batch_mem: Option<&ContendedMemReport>,
-) -> Json {
-    // 1 — acceptance gate: round-robin sessions over a no-join/no-leave
-    // script must reproduce the contended batch bit-for-bit. The full run
-    // hands in the roll-up it already computed; `--sessions`-only mode
-    // renders the batch here.
-    let static_script = SessionScript::from_specs(specs);
-    let rr_static = server.render_sessions(&static_script, SchedPolicy::RoundRobin);
-    let batch_json = match batch_mem {
-        Some(mem) => mem.to_json().pretty(),
-        None => server
-            .render_batch_contended(specs)
-            .contended_mem
-            .as_ref()
-            .expect("contended batch must produce a memory roll-up")
-            .to_json()
-            .pretty(),
-    };
-    assert_eq!(
-        batch_json,
-        rr_static.contended.to_json().pretty(),
-        "round-robin session scheduler diverged from render_batch_contended"
-    );
-
-    // 2 — a live stream: two viewers join at frame 0 with different
-    // deadlines/weights, a third joins mid-stream (trajectory cursor at
-    // its join round), one leaves mid-stream, and a fourth warm-starts
-    // its AII intervals from the leaver's retained state.
+/// The built-in demo stream (used when no `--session-script` file is
+/// given): two viewers join at frame 0 with different deadlines/weights, a
+/// third joins mid-stream (trajectory cursor at its join round), one
+/// leaves mid-stream, and a fourth warm-starts its AII intervals from the
+/// leaver's retained state.
+fn demo_session_script(frames: usize) -> SessionScript {
     let join_round = (frames / 2).max(1);
     let leave_round = frames.max(2);
-    let script = SessionScript::new()
+    SessionScript::new()
         .join_at(
             0,
             SessionSpec::stream(ViewCondition::Average, frames + join_round)
@@ -117,12 +90,62 @@ fn session_bench(
             SessionSpec::stream(ViewCondition::Static, frames)
                 .with_deadline_fps(90.0)
                 .with_warm_from(1),
-        );
+        )
+}
 
+/// Run the session-scheduler layer: assert the round-robin static-script
+/// bit-compatibility with `render_batch_contended`, then stream `script`
+/// under every policy and report the per-policy deadline/fairness
+/// roll-ups (simulated quantities only — the block is diffed across host
+/// thread counts by CI). When a serial round-robin reference is handed
+/// in, the parallel round-robin run is asserted byte-identical to it (the
+/// round-engine gate). Returns the `sessions` JSON block plus the
+/// round-robin run's host wall-clock (the session-speedup denominator).
+fn session_bench(
+    server: &RenderServer,
+    specs: &[ViewerSpec],
+    script: &SessionScript,
+    batch_mem: Option<&ContendedMemReport>,
+    serial_rr: Option<&SessionBatchReport>,
+) -> (Json, f64) {
+    // 1 — acceptance gate: round-robin sessions over a no-join/no-leave
+    // script must reproduce the contended batch bit-for-bit. The full run
+    // hands in the roll-up it already computed; `--sessions`-only mode
+    // renders the batch here.
+    let static_script = SessionScript::from_specs(specs);
+    let rr_static = server.render_sessions(&static_script, SchedPolicy::RoundRobin);
+    let batch_json = match batch_mem {
+        Some(mem) => mem.to_json().pretty(),
+        None => server
+            .render_batch_contended(specs)
+            .contended_mem
+            .as_ref()
+            .expect("contended batch must produce a memory roll-up")
+            .to_json()
+            .pretty(),
+    };
+    assert_eq!(
+        batch_json,
+        rr_static.contended.to_json().pretty(),
+        "round-robin session scheduler diverged from render_batch_contended"
+    );
+
+    // 2 — the live stream under every policy.
     println!("\nsession scheduler (join/leave stream, {} sessions):", script.n_sessions());
     let mut policies = Json::obj();
+    let mut rr_wall_s = 0.0;
     for policy in SchedPolicy::ALL {
-        let rep = server.render_sessions(&script, policy);
+        let rep = server.render_sessions(script, policy);
+        if policy == SchedPolicy::RoundRobin {
+            rr_wall_s = rep.wall_s;
+            if let Some(serial) = serial_rr {
+                assert_eq!(
+                    serial.simulated_projection(),
+                    rep.simulated_projection(),
+                    "host-parallel session rounds diverged from the serial schedule"
+                );
+            }
+        }
         println!(
             "  {:<12} rounds {:>3}  miss-rate {:.3}  fairness {:.3}  latency p50/p99 {:.1}/{:.1} µs  ({:.3} s host)",
             policy.label(),
@@ -135,9 +158,12 @@ fn session_bench(
         );
         policies = policies.set(policy.label(), rep.to_json());
     }
-    Json::obj()
-        .set("static_round_robin_matches_contended", true)
-        .set("policies", policies)
+    (
+        Json::obj()
+            .set("static_round_robin_matches_contended", true)
+            .set("policies", policies),
+        rr_wall_s,
+    )
 }
 
 fn stage_wall_json(wall: &HostStageWall) -> Json {
@@ -180,10 +206,33 @@ fn main() -> anyhow::Result<()> {
         .map(|i| ViewerSpec::perf(conditions[i % conditions.len()], frames))
         .collect();
 
+    // The session stream: a declarative JSON script from disk
+    // (`--session-script path`), or the built-in demo.
+    let script = match args.get("session-script") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("--session-script {path}: {e}"))?;
+            let script = SessionScript::from_json_str(&text)
+                .map_err(|e| anyhow::anyhow!("--session-script {path}: {e}"))?;
+            println!(
+                "session script: {path} ({} events, {} sessions)",
+                script.events.len(),
+                script.n_sessions()
+            );
+            script
+        }
+        None => demo_session_script(frames),
+    };
+
     if args.flag("sessions") {
         // Session-layer-only mode (the CI `session-smoke` job): run the
-        // scheduler demo and write just the `sessions` block.
-        let sessions = session_bench(&server, &specs, frames, None);
+        // scheduler stream and write just the `sessions` block (plus the
+        // serial-vs-parallel session speedup).
+        server.set_threads(1);
+        let sessions_serial = server.render_sessions(&script, SchedPolicy::RoundRobin);
+        server.set_threads(threads);
+        let (sessions, rr_wall_s) =
+            session_bench(&server, &specs, &script, None, Some(&sessions_serial));
         let record = Json::obj()
             .set("gaussians", server.shared.scene.len())
             .set("viewers", n_viewers)
@@ -191,6 +240,10 @@ fn main() -> anyhow::Result<()> {
             .set("width", width)
             .set("height", height)
             .set("threads", threads)
+            .set(
+                "speedup_vs_serial",
+                Json::obj().set("sessions", sessions_serial.wall_s / rr_wall_s.max(1e-12)),
+            )
             .set("sessions", sessions);
         write_bench_json("BENCH_server.json", &record)?;
         println!("\nwrote BENCH_server.json (sessions block only)");
@@ -310,8 +363,18 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Session layer (join/leave stream + per-policy roll-ups); the
-    // bit-compat gate reuses the contended roll-up computed above.
-    let sessions = session_bench(&server, &specs, frames, Some(mem));
+    // bit-compat gate reuses the contended roll-up computed above, and the
+    // serial round-robin reference gates the host-parallel round engine.
+    server.set_threads(1);
+    let sessions_serial = server.render_sessions(&script, SchedPolicy::RoundRobin);
+    server.set_threads(threads);
+    let (sessions, rr_wall_s) =
+        session_bench(&server, &specs, &script, Some(mem), Some(&sessions_serial));
+    let sessions_speedup = sessions_serial.wall_s / rr_wall_s.max(1e-12);
+    println!(
+        "  sessions (round-robin) {:.3} s → {:.3} s  ({sessions_speedup:.2}x)",
+        sessions_serial.wall_s, rr_wall_s
+    );
 
     let record = Json::obj()
         .set("gaussians", server.shared.scene.len())
@@ -337,7 +400,8 @@ fn main() -> anyhow::Result<()> {
                 .set("sort", sort_speedup)
                 .set("blend", blend_speedup)
                 .set("frame", frame_speedup)
-                .set("contended", contended_speedup),
+                .set("contended", contended_speedup)
+                .set("sessions", sessions_speedup),
         )
         .set("contended_wall_serial_s", contended_serial.wall_s)
         .set("contended_wall_parallel_s", contended.wall_s)

@@ -45,6 +45,16 @@ impl ViewCondition {
             ViewCondition::Static => "static",
         }
     }
+
+    /// Inverse of [`ViewCondition::label`] (declarative config parsing).
+    pub fn from_label(label: &str) -> Option<ViewCondition> {
+        match label {
+            "average" => Some(ViewCondition::Average),
+            "extreme" => Some(ViewCondition::Extreme),
+            "static" => Some(ViewCondition::Static),
+            _ => None,
+        }
+    }
 }
 
 /// Generates a sequence of camera poses (+ scene time) for `frames` frames

@@ -8,13 +8,19 @@
 //! on one shared, contended event-queue memory system
 //! ([`RenderServer::render_batch_contended`]) — and the long-lived
 //! streaming layer ([`session::SessionScheduler`]): deterministic
-//! join/leave scripts, retained per-session pipeline state, pluggable
-//! fairness/deadline scheduling policies, and DRAM-bandwidth admission
-//! control. See `README.md` in this directory for the session/scheduler
-//! contract.
+//! join/leave scripts (builder or declarative JSON), retained per-session
+//! pipeline state (in-run and across runs via `take_detached` /
+//! `seed_detached`), pluggable fairness/deadline scheduling policies, and
+//! DRAM-bandwidth admission control. Both contended paths execute through
+//! the shared two-phase round engine (`rounds`): policy-ordered rounds
+//! render host-parallel against trace-recording ports and replay into the
+//! shared memory system in the exact policy order, bit-identically to the
+//! serial schedule. See `README.md` in this directory for the
+//! session/scheduler and round-engine contracts.
 
 pub mod app;
 pub mod config;
+pub(crate) mod rounds;
 pub mod server;
 pub mod session;
 

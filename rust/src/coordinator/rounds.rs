@@ -1,0 +1,293 @@
+//! `coordinator::rounds` — the shared two-phase round engine.
+//!
+//! Both contended execution paths — [`RenderServer::render_batch_contended`]
+//! (fixed viewer batches) and [`super::session::SessionScheduler::run`]
+//! (long-lived join/leave streams) — drive the same unit of work: a
+//! **round** of policy-ordered frames over one shared, contended
+//! event-queue [`MemorySystem`]. Before this module each path carried its
+//! own copy of the execution machinery (and the session path only had the
+//! serial one); [`RoundEngine`] is the single implementation both are thin
+//! clients of.
+//!
+//! # Execution modes
+//!
+//! * **Lockstep** (`threads == 1`, or a single participant): pipelines
+//!   register their cull/blend ports directly on the shared system and a
+//!   round renders its frames serially in the caller's policy order,
+//!   issuing DRAM requests as it goes — the reference schedule.
+//! * **Two-phase** (`threads > 1` and more than one participant): pipelines
+//!   are built with **trace-recording ports**
+//!   ([`MemPort::trace`](crate::memory::MemPort::trace)) and
+//!   their port pairs are registered on the shared system separately (same
+//!   registration order as lockstep: participant order, cull before
+//!   blend). Phase 1 renders a round's frames concurrently on the engine's
+//!   [`WorkerPool`] (PSNR scoring included — pure per-frame work); phase 2
+//!   replays every recorded `(addr, bytes)` request into the shared system
+//!   in the exact policy order and patches each frame's DRAM-dependent
+//!   outputs (per-stage traffic, DRAM energy, the `max(compute, DRAM)`
+//!   stage latencies) from the replayed per-port deltas — the same values
+//!   the lockstep stages compute inline, because trace-port frames carry
+//!   zero DRAM busy time/energy.
+//!
+//! Either way the shared system observes the identical request schedule,
+//! so every contention statistic (fairness, channel utilization,
+//! wait/stall, latency percentiles) and every per-frame stat handed back
+//! through [`RoundOutcome`] is **bit-identical across modes and host
+//! thread counts** — enforced by the `render_server` and
+//! `session_scheduler` suites and the CI `threads-matrix` /
+//! `session-smoke` jobs.
+//!
+//! The engine also owns pipeline construction
+//! ([`RoundEngine::make_pipeline`] / [`RoundEngine::resume_pipeline`]) so
+//! clients never branch on the mode: lockstep builds shared-port
+//! pipelines, two-phase builds trace-port pipelines — ports come back
+//! uniformly as `(cull, blend)` [`PortId`] pairs.
+
+use crate::camera::Camera;
+use crate::memory::{MemMode, MemStage, MemorySystem, PortId, ShardMap};
+use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig, SessionState, WorkerPool};
+use crate::render::ReferenceRenderer;
+use crate::scene::Scene;
+use std::sync::{Arc, Mutex};
+
+use super::app::score_frame;
+use super::server::{RenderServer, SharedScene};
+
+/// One frame of work inside a round, in the caller's policy order.
+pub(crate) struct RoundJob<'j, 'scene> {
+    /// Caller's participant id (viewer / session), handed back on the
+    /// outcome — the engine never interprets it.
+    pub key: usize,
+    pub cam: Camera,
+    pub t: f32,
+    /// Render this frame numerically (PSNR scoring).
+    pub render: bool,
+    /// The participant's `(cull, blend)` ports on the shared system.
+    pub ports: (PortId, PortId),
+    pub pipeline: &'j mut FramePipeline<'scene>,
+}
+
+/// One completed (and, in two-phase mode, replay-patched) frame of a
+/// round, returned in the round's policy order.
+pub(crate) struct RoundOutcome {
+    pub key: usize,
+    pub result: FrameResult,
+    /// `(PSNR dB, SSIM)` when the frame was rendered numerically.
+    pub scored: Option<(f64, f64)>,
+}
+
+/// A rendered-but-not-yet-replayed frame of a two-phase round (internal).
+struct RoundFrame {
+    result: FrameResult,
+    scored: Option<(f64, f64)>,
+    cull_trace: Vec<(u64, u64)>,
+    blend_trace: Vec<(u64, u64)>,
+}
+
+/// The shared two-phase round engine (see the module docs).
+pub(crate) struct RoundEngine {
+    sys: Arc<Mutex<MemorySystem>>,
+    pool: WorkerPool,
+    two_phase: bool,
+    /// The caller's configuration forced to the event-queue backend — what
+    /// lockstep (shared-port) pipelines are built with, and the source of
+    /// report parameters (`mem.outstanding`, `dcim.area_mm2`).
+    config: PipelineConfig,
+    /// `threads = 1` clone of `config` for two-phase per-frame pipelines:
+    /// the round is the parallel unit, so frames run their intra-frame
+    /// executor serially instead of oversubscribing the host.
+    frame_cfg: PipelineConfig,
+}
+
+impl RoundEngine {
+    /// Build an engine over a fresh shared [`MemorySystem`].
+    /// `parallel_units` is the number of participants the caller expects a
+    /// round to fan out over (batch viewer count; a session script's
+    /// `peak_concurrency`): two-phase mode engages only when both the
+    /// resolved thread count and `parallel_units` exceed one — otherwise
+    /// rounds hold at most one frame at a time, and the lockstep path
+    /// keeps that frame's intra-frame executor parallelism instead of
+    /// pinning it to one thread.
+    pub(crate) fn new(
+        base: &PipelineConfig,
+        shard_map: ShardMap,
+        parallel_units: usize,
+    ) -> RoundEngine {
+        let mut config = base.clone();
+        config.mem.mode = MemMode::EventQueue;
+        let threads = config.resolved_threads();
+        let two_phase = threads > 1 && parallel_units > 1;
+        let sys = Arc::new(Mutex::new(MemorySystem::new(config.mem.clone(), shard_map)));
+        let frame_cfg = PipelineConfig { threads: 1, ..config.clone() };
+        RoundEngine {
+            sys,
+            pool: WorkerPool::new(if two_phase { threads } else { 1 }),
+            two_phase,
+            config,
+            frame_cfg,
+        }
+    }
+
+    /// The shared, contended memory system the engine replays into.
+    pub(crate) fn sys(&self) -> &Arc<Mutex<MemorySystem>> {
+        &self.sys
+    }
+
+    /// The event-queue configuration the engine runs under.
+    pub(crate) fn config(&self) -> &PipelineConfig {
+        &self.config
+    }
+
+    /// Register one participant's `(cull, blend)` port pair on the shared
+    /// system (two-phase mode; lockstep pipelines register through their
+    /// own shared ports).
+    fn register_ports(&self) -> (PortId, PortId) {
+        let mut sys = self.sys.lock().expect("memory system lock poisoned");
+        let cull = sys.register_port();
+        let blend = sys.register_port();
+        (cull, blend)
+    }
+
+    /// Build a participant's pipeline for the engine's mode. Ports are
+    /// registered in call order, cull before blend — identical in both
+    /// modes, so per-port statistics line up bit-for-bit.
+    pub(crate) fn make_pipeline<'s>(
+        &self,
+        shared: &'s SharedScene,
+    ) -> (FramePipeline<'s>, (PortId, PortId)) {
+        if self.two_phase {
+            let pipeline = FramePipeline::with_trace_ports(
+                &shared.scene,
+                shared.prep.clone(),
+                self.frame_cfg.clone(),
+            );
+            (pipeline, self.register_ports())
+        } else {
+            let pipeline =
+                shared.pipeline_with_memory(self.config.clone(), Arc::clone(&self.sys));
+            let ports = pipeline
+                .mem_port_ids()
+                .expect("shared-memory pipelines register ports");
+            (pipeline, ports)
+        }
+    }
+
+    /// Resume a detached [`SessionState`] as a participant pipeline (the
+    /// [`RoundEngine::make_pipeline`] counterpart for
+    /// `SessionScheduler::seed_detached`). The continuation is
+    /// bit-identical in either mode — retained state never carries port
+    /// handles, and the executor thread count is not part of the state's
+    /// shape.
+    pub(crate) fn resume_pipeline<'s>(
+        &self,
+        shared: &'s SharedScene,
+        state: SessionState,
+    ) -> (FramePipeline<'s>, (PortId, PortId)) {
+        if self.two_phase {
+            let pipeline = FramePipeline::resume_with_trace_ports(
+                &shared.scene,
+                shared.prep.clone(),
+                self.frame_cfg.clone(),
+                state,
+            );
+            (pipeline, self.register_ports())
+        } else {
+            let pipeline = FramePipeline::resume_with_shared_memory(
+                &shared.scene,
+                shared.prep.clone(),
+                self.config.clone(),
+                Arc::clone(&self.sys),
+                state,
+            );
+            let ports = pipeline
+                .mem_port_ids()
+                .expect("shared-memory pipelines register ports");
+            (pipeline, ports)
+        }
+    }
+
+    /// Drive one round: take the frame-epoch barrier on the shared system,
+    /// render every job, and return the completed frames **in the given
+    /// policy order** (`jobs` must already be ordered by the caller's
+    /// policy). In two-phase mode the jobs render concurrently and their
+    /// traces replay in that order; in lockstep mode they simply run in
+    /// it. An empty job list still takes the epoch barrier (an idle round
+    /// of a stream awaiting a future join).
+    pub(crate) fn run_round(
+        &self,
+        scene: &Scene,
+        reference: &ReferenceRenderer,
+        mut jobs: Vec<RoundJob<'_, '_>>,
+    ) -> Vec<RoundOutcome> {
+        // Frame barrier: all in-flight transactions retire, port clocks
+        // align — every participant's next frame starts at the same epoch
+        // and contends on the channels within the round.
+        self.sys.lock().expect("memory system lock poisoned").advance_epoch();
+
+        if !self.two_phase {
+            return jobs
+                .iter_mut()
+                .map(|job| {
+                    let result = job.pipeline.render_frame(&job.cam, job.t, job.render);
+                    let scored = score_frame(reference, scene, &job.cam, job.t, &result);
+                    RoundOutcome { key: job.key, result, scored }
+                })
+                .collect();
+        }
+
+        // Phase 1 — render this round's frames in parallel against the
+        // jobs' trace-recording ports (PSNR scoring included: pure
+        // per-frame work).
+        let mut slots: Vec<Option<RoundFrame>> = (0..jobs.len()).map(|_| None).collect();
+        self.pool.scope(|scope| {
+            for (job, slot) in jobs.iter_mut().zip(slots.iter_mut()) {
+                scope.spawn(move || {
+                    let result = job.pipeline.render_frame(&job.cam, job.t, job.render);
+                    let (cull_trace, blend_trace) = job.pipeline.take_frame_traces();
+                    let scored = score_frame(reference, scene, &job.cam, job.t, &result);
+                    *slot = Some(RoundFrame { result, scored, cull_trace, blend_trace });
+                });
+            }
+        });
+
+        // Phase 2 — replay into the shared system in the policy order,
+        // then patch each frame's DRAM-dependent outputs from the replayed
+        // per-port deltas.
+        let mut sys = self.sys.lock().expect("memory system lock poisoned");
+        let mut out = Vec::with_capacity(jobs.len());
+        for (job, slot) in jobs.iter().zip(slots.iter_mut()) {
+            let Some(mut frame) = slot.take() else { continue };
+            let (cull_id, blend_id) = job.ports;
+            let pre_base = sys.port_stage_stats(cull_id, MemStage::Preprocess);
+            for &(addr, bytes) in &frame.cull_trace {
+                sys.read(cull_id, MemStage::Preprocess, addr, bytes);
+            }
+            let pre = sys.port_stage_stats(cull_id, MemStage::Preprocess).delta(&pre_base);
+            let blend_base = sys.port_stage_stats(blend_id, MemStage::Blend);
+            for &(addr, bytes) in &frame.blend_trace {
+                sys.read(blend_id, MemStage::Blend, addr, bytes);
+            }
+            let blend = sys.port_stage_stats(blend_id, MemStage::Blend).delta(&blend_base);
+
+            let r = &mut frame.result;
+            r.traffic.preprocess_dram = pre;
+            r.traffic.blend_dram = blend;
+            // Trace-port frames carried zero DRAM energy/busy time, so
+            // these recompute exactly what the lockstep stages produce:
+            // dram_pj = pre + blend, stage latency = max(compute, DRAM).
+            r.energy.dram_pj = pre.energy_pj + blend.energy_pj;
+            r.latency.preprocess_ns = r.latency.preprocess_ns.max(pre.busy_ns);
+            r.latency.blend_ns = r.latency.blend_ns.max(blend.busy_ns);
+            out.push(RoundOutcome { key: job.key, result: frame.result, scored: frame.scored });
+        }
+        out
+    }
+}
+
+impl RenderServer {
+    /// A round engine over this server's configuration and shard map (a
+    /// fresh shared memory system per call).
+    pub(crate) fn round_engine(&self, parallel_units: usize) -> RoundEngine {
+        RoundEngine::new(&self.config, *self.shared.prep.shard_map, parallel_units)
+    }
+}

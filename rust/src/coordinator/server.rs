@@ -17,15 +17,17 @@
 //! simulated-time property, so the lockstep *request schedule* keeps it
 //! exactly deterministic: per-viewer byte/burst counts stay identical to
 //! isolated runs while per-viewer `busy_ns` rises with queueing behind the
-//! other viewers' traffic. With `PipelineConfig::threads > 1` the batch
-//! runs **two-phase**: each round's viewer frames render in parallel on a
-//! [`WorkerPool`] against trace-recording ports, then the recorded DRAM
-//! requests replay into the shared system in the exact rotating lockstep
-//! order — host throughput scales with cores while every contention stat
-//! (fairness, channel utilization, wait/stall) stays bit-identical to the
-//! single-threaded lockstep (enforced by the `render_server` suite and the
-//! CI threads-matrix job). The per-viewer fairness and channel-utilization
-//! roll-up lands in [`ContendedMemReport`].
+//! other viewers' traffic. Execution goes through the shared
+//! [`RoundEngine`](super::rounds::RoundEngine): with
+//! `PipelineConfig::threads > 1` the batch runs **two-phase** — each
+//! round's viewer frames render in parallel against trace-recording ports,
+//! then the recorded DRAM requests replay into the shared system in the
+//! exact rotating lockstep order — so host throughput scales with cores
+//! while every contention stat (fairness, channel utilization, wait/stall)
+//! stays bit-identical to the single-threaded lockstep (enforced by the
+//! `render_server` suite and the CI threads-matrix job). The per-viewer
+//! fairness and channel-utilization roll-up lands in
+//! [`ContendedMemReport`].
 //!
 //! Two throughput numbers must not be confused:
 //! * `SequenceReport::report.fps` — the **modeled accelerator** frame rate
@@ -40,8 +42,8 @@
 //! sequence-runner over the exact same trajectories.
 
 use crate::camera::{Camera, ViewCondition};
-use crate::memory::{DramStats, MemMode, MemStage, MemorySystem, PortId, ShardMap};
-use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig, ScenePrep, WorkerPool};
+use crate::memory::{DramStats, MemStage, MemorySystem, PortId, ShardMap};
+use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig, ScenePrep};
 use crate::render::ReferenceRenderer;
 use crate::scene::Scene;
 use crate::util::json::Json;
@@ -49,8 +51,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::app::{
-    camera_template, run_frames_report, scene_trajectory, score_frame, viewer_label, SequenceAgg,
+    camera_template, run_frames_report, scene_trajectory, viewer_label, SequenceAgg,
 };
+use super::rounds::RoundJob;
 use super::SequenceReport;
 
 /// A scene plus its shared, immutable preparation.
@@ -437,191 +440,57 @@ impl RenderServer {
     /// per-viewer `busy_ns` additionally carries the queueing behind the
     /// other viewers' traffic.
     ///
-    /// With `PipelineConfig::threads > 1` (or auto-resolving to > 1) the
-    /// batch runs the **two-phase** scheme: render each round's viewers in
-    /// parallel while recording their DRAM requests into per-viewer
-    /// traces, then replay the traces into the shared system in the exact
-    /// rotating order above — [`ContendedMemReport`] and every per-viewer
-    /// stat stay bit-identical to the single-threaded lockstep while host
-    /// throughput scales with cores.
+    /// Execution is a thin client of the shared
+    /// [`RoundEngine`](super::rounds::RoundEngine): with
+    /// `PipelineConfig::threads > 1` (and more than one viewer) each
+    /// round's frames render in parallel against trace-recording ports and
+    /// the traces replay in the exact rotating order above —
+    /// [`ContendedMemReport`] and every per-viewer stat stay bit-identical
+    /// to the single-threaded lockstep while host throughput scales with
+    /// cores. The session scheduler
+    /// ([`super::session::SessionScheduler`]) drives its policy-ordered
+    /// rounds through the same engine.
     pub fn render_batch_contended(&self, specs: &[ViewerSpec]) -> ServerReport {
-        let threads = self.config.resolved_threads();
-        if threads <= 1 || specs.len() <= 1 {
-            self.contended_lockstep(specs)
-        } else {
-            self.contended_two_phase(specs, threads)
-        }
-    }
-
-    /// The single-threaded lockstep reference implementation (also the
-    /// `threads = 1` fast path): render and issue in one pass.
-    fn contended_lockstep(&self, specs: &[ViewerSpec]) -> ServerReport {
         let t0 = Instant::now();
-        let mut config = self.config.clone();
-        config.mem.mode = MemMode::EventQueue;
-        let sys = Arc::new(Mutex::new(MemorySystem::new(
-            config.mem.clone(),
-            *self.shared.prep.shard_map,
-        )));
-
-        let mut pipelines: Vec<FramePipeline<'_>> = specs
-            .iter()
-            .map(|_| self.shared.pipeline_with_memory(config.clone(), Arc::clone(&sys)))
-            .collect();
-        // Each pipeline reports the (cull, blend) port ids it registered —
-        // the report never assumes a registration order.
-        let port_ids: Vec<(PortId, PortId)> = pipelines
-            .iter()
-            .map(|p| p.mem_port_ids().expect("contended pipelines register shared ports"))
-            .collect();
+        let engine = self.round_engine(specs.len());
+        let mut built: Vec<(FramePipeline<'_>, (PortId, PortId))> =
+            specs.iter().map(|_| engine.make_pipeline(&self.shared)).collect();
+        let port_ids: Vec<(PortId, PortId)> = built.iter().map(|&(_, ports)| ports).collect();
         let trajectories: Vec<Vec<(Camera, f32)>> =
             specs.iter().map(|s| self.trajectory(s)).collect();
-        let reference = ReferenceRenderer::new(config.width, config.height);
+        let reference = ReferenceRenderer::new(self.config.width, self.config.height);
 
         let n = specs.len();
         let max_frames = specs.iter().map(|s| s.frames).max().unwrap_or(0);
         let mut run = ContendedAgg::new(n);
 
         for round in 0..max_frames {
-            // Frame barrier: all in-flight transactions retire, port clocks
-            // align — every viewer's next frame starts at the same epoch
-            // and contends on the channels within the round.
-            sys.lock().expect("memory system lock poisoned").advance_epoch();
-            for k in 0..n {
-                let v = (round + k) % n;
-                if round >= trajectories[v].len() {
-                    continue;
-                }
-                let (cam, t) = &trajectories[v][round];
-                let spec = &specs[v];
-                let render = spec.psnr_every > 0 && round % spec.psnr_every == 0;
-                let r = pipelines[v].render_frame(cam, *t, render);
-                let scored = score_frame(&reference, &self.shared.scene, cam, *t, &r);
-                run.push(v, &r, scored);
-            }
-        }
-
-        self.finish_contended(&sys, &port_ids, &config, run, specs, t0)
-    }
-
-    /// The two-phase parallel implementation: phase 1 renders a round's
-    /// frames concurrently against trace-recording ports; phase 2 replays
-    /// every recorded request into the shared system in the rotating
-    /// lockstep order and patches the DRAM-dependent frame outputs
-    /// (traffic, DRAM energy, stage-latency maxima) from the replayed port
-    /// statistics — the same values the lockstep path computes inline.
-    fn contended_two_phase(&self, specs: &[ViewerSpec], threads: usize) -> ServerReport {
-        let t0 = Instant::now();
-        let mut config = self.config.clone();
-        config.mem.mode = MemMode::EventQueue;
-        let sys = Arc::new(Mutex::new(MemorySystem::new(
-            config.mem.clone(),
-            *self.shared.prep.shard_map,
-        )));
-
-        // Viewers are the parallel unit of a round; their pipelines run
-        // serially inside (threads = 1) and record DRAM traces.
-        let viewer_cfg = PipelineConfig { threads: 1, ..config.clone() };
-        let mut pipelines: Vec<FramePipeline<'_>> = specs
-            .iter()
-            .map(|_| {
-                FramePipeline::with_trace_ports(
-                    &self.shared.scene,
-                    self.shared.prep.clone(),
-                    viewer_cfg.clone(),
-                )
-            })
-            .collect();
-        // Register the same (cull, blend) port pairs the lockstep build
-        // registers: viewer order, cull before blend.
-        let port_ids: Vec<(PortId, PortId)> = {
-            let mut sys_l = sys.lock().expect("memory system lock poisoned");
-            specs
-                .iter()
-                .map(|_| {
-                    let cull = sys_l.register_port();
-                    let blend = sys_l.register_port();
-                    (cull, blend)
-                })
-                .collect()
-        };
-        let trajectories: Vec<Vec<(Camera, f32)>> =
-            specs.iter().map(|s| self.trajectory(s)).collect();
-        let reference = ReferenceRenderer::new(config.width, config.height);
-        let pool = WorkerPool::new(threads);
-
-        let n = specs.len();
-        let max_frames = specs.iter().map(|s| s.frames).max().unwrap_or(0);
-        let mut run = ContendedAgg::new(n);
-        let mut slots: Vec<Option<RoundFrame>> = (0..n).map(|_| None).collect();
-
-        for round in 0..max_frames {
-            // Phase 1 — render this round's frames in parallel (PSNR
-            // scoring included: it is pure per-frame work).
-            {
-                let reference = &reference;
-                let trajectories = &trajectories;
-                let scene = &self.shared.scene;
-                pool.scope(|scope| {
-                    for ((v, pipe), slot) in
-                        pipelines.iter_mut().enumerate().zip(slots.iter_mut())
-                    {
-                        let spec = &specs[v];
-                        scope.spawn(move || {
-                            *slot = None;
-                            if round >= trajectories[v].len() {
-                                return;
-                            }
-                            let (cam, t) = &trajectories[v][round];
-                            let render = spec.psnr_every > 0 && round % spec.psnr_every == 0;
-                            let result = pipe.render_frame(cam, *t, render);
-                            let (cull_trace, blend_trace) = pipe.take_frame_traces();
-                            let scored = score_frame(reference, scene, cam, *t, &result);
-                            *slot = Some(RoundFrame { result, scored, cull_trace, blend_trace });
-                        });
+            let mut jobs: Vec<RoundJob<'_, '_>> = built
+                .iter_mut()
+                .enumerate()
+                .filter(|(v, _)| round < trajectories[*v].len())
+                .map(|(v, (pipeline, ports))| {
+                    let (cam, t) = trajectories[v][round];
+                    let spec = &specs[v];
+                    RoundJob {
+                        key: v,
+                        cam,
+                        t,
+                        render: spec.psnr_every > 0 && round % spec.psnr_every == 0,
+                        ports: *ports,
+                        pipeline,
                     }
-                });
+                })
+                .collect();
+            // The rotating lockstep order: round r issues viewer
+            // (r + k) mod n at position k.
+            jobs.sort_by_key(|j| (j.key + n - round % n) % n);
+            for out in engine.run_round(&self.shared.scene, &reference, jobs) {
+                run.push(out.key, &out.result, out.scored);
             }
-
-            // Phase 2 — replay into the shared system in the rotating
-            // lockstep order, then patch each frame's DRAM-dependent
-            // outputs from the replayed per-port deltas.
-            let mut sys_l = sys.lock().expect("memory system lock poisoned");
-            sys_l.advance_epoch();
-            for k in 0..n {
-                let v = (round + k) % n;
-                let Some(mut frame) = slots[v].take() else { continue };
-                let (cull_id, blend_id) = port_ids[v];
-                let pre_base = sys_l.port_stage_stats(cull_id, MemStage::Preprocess);
-                for &(addr, bytes) in &frame.cull_trace {
-                    sys_l.read(cull_id, MemStage::Preprocess, addr, bytes);
-                }
-                let pre = sys_l
-                    .port_stage_stats(cull_id, MemStage::Preprocess)
-                    .delta(&pre_base);
-                let blend_base = sys_l.port_stage_stats(blend_id, MemStage::Blend);
-                for &(addr, bytes) in &frame.blend_trace {
-                    sys_l.read(blend_id, MemStage::Blend, addr, bytes);
-                }
-                let blend = sys_l
-                    .port_stage_stats(blend_id, MemStage::Blend)
-                    .delta(&blend_base);
-
-                let r = &mut frame.result;
-                r.traffic.preprocess_dram = pre;
-                r.traffic.blend_dram = blend;
-                // Trace-port frames carried zero DRAM energy/busy time, so
-                // these recompute exactly what the lockstep stages produce:
-                // dram_pj = pre + blend, stage latency = max(compute, DRAM).
-                r.energy.dram_pj = pre.energy_pj + blend.energy_pj;
-                r.latency.preprocess_ns = r.latency.preprocess_ns.max(pre.busy_ns);
-                r.latency.blend_ns = r.latency.blend_ns.max(blend.busy_ns);
-                run.push(v, r, frame.scored);
-            }
-            drop(sys_l);
         }
 
-        self.finish_contended(&sys, &port_ids, &config, run, specs, t0)
+        self.finish_contended(engine.sys(), &port_ids, engine.config(), run, specs, t0)
     }
 
     /// Shared tail of both contended implementations: per-viewer reports,
@@ -661,14 +530,6 @@ impl RenderServer {
             contended_mem: Some(contended),
         }
     }
-}
-
-/// One viewer's rendered-but-not-yet-replayed frame of a two-phase round.
-struct RoundFrame {
-    result: FrameResult,
-    scored: Option<(f64, f64)>,
-    cull_trace: Vec<(u64, u64)>,
-    blend_trace: Vec<(u64, u64)>,
 }
 
 /// Streaming state both contended implementations feed in the rotating

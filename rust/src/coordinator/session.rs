@@ -42,25 +42,30 @@
 //! # Determinism contract
 //!
 //! One scheduling round = one simulated frame epoch: the shared
-//! [`MemorySystem`] takes a frame barrier, then every renderable session
-//! renders exactly one frame in the policy's issue order on the calling
-//! thread (frames themselves use the intra-frame parallel executor, whose
-//! statistics are thread-count invariant). Everything the scheduler
-//! consumes — cumulative busy time, cursors, deadlines — lives on the
-//! simulated timeline, so reports are bit-identical across runs and host
-//! thread counts (enforced by the `session_scheduler` suite and the CI
-//! `session-smoke` job).
+//! [`MemorySystem`](crate::memory::MemorySystem) takes a frame barrier,
+//! then every renderable session renders exactly one frame in the
+//! policy's issue order. Execution goes through the shared
+//! [`RoundEngine`](super::rounds::RoundEngine): at `threads > 1` a
+//! round's frames render **host-parallel** against trace-recording ports
+//! and the recorded DRAM requests replay into the shared system in the
+//! exact policy order, so session rounds scale with cores while the
+//! request schedule — and therefore every statistic — matches the serial
+//! lockstep bit-for-bit. Everything the scheduler consumes — cumulative
+//! busy time, cursors, deadlines — lives on the simulated timeline, so
+//! reports are bit-identical across runs and host thread counts (enforced
+//! by the `session_scheduler` suite and the CI `session-smoke` job, which
+//! diffs the `sessions` block at `PALLAS_THREADS=1/4/8`).
 
 use crate::camera::ViewCondition;
-use crate::memory::{MemMode, MemorySystem, PortId};
-use crate::pipeline::{FramePipeline, PipelineConfig, SessionState};
+use crate::memory::PortId;
+use crate::pipeline::{FramePipeline, SessionState};
 use crate::render::ReferenceRenderer;
 use crate::util::json::Json;
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::app::{scene_trajectory_from, score_frame, viewer_label, SequenceAgg};
+use super::app::{scene_trajectory_from, viewer_label, SequenceAgg};
+use super::rounds::{RoundEngine, RoundJob};
 use super::server::{
     contended_rollup, ContendedMemReport, Percentiles, RenderServer, ViewerMemStats, ViewerSpec,
 };
@@ -93,6 +98,13 @@ pub struct SessionSpec {
     /// retained state (by session id). Ignored when the donor has not left
     /// or retained nothing.
     pub warm_from: Option<usize>,
+    /// Resume the full pipeline state seeded under this key by
+    /// [`SessionScheduler::seed_detached`] (a departed session of a
+    /// *previous* scheduler run). The continuation is bit-identical to an
+    /// uninterrupted stream; without a matching seeded state the join
+    /// falls back to a cold start. Mutually exclusive with `warm_from`
+    /// (resume carries the AII intervals already).
+    pub resume_from: Option<usize>,
 }
 
 impl SessionSpec {
@@ -106,6 +118,7 @@ impl SessionSpec {
             target_fps: 0.0,
             weight: 1.0,
             warm_from: None,
+            resume_from: None,
         }
     }
 
@@ -142,6 +155,11 @@ impl SessionSpec {
         self
     }
 
+    pub fn with_resume_from(mut self, key: usize) -> SessionSpec {
+        self.resume_from = Some(key);
+        self
+    }
+
     /// Simulated per-frame deadline (ns); infinite without a target FPS.
     pub fn deadline_ns(&self) -> f64 {
         if self.target_fps > 0.0 {
@@ -149,6 +167,101 @@ impl SessionSpec {
         } else {
             f64::INFINITY
         }
+    }
+
+    /// The declarative JSON form (see [`SessionScript::to_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut js = Json::obj()
+            .set("condition", self.condition.label())
+            .set("frames", self.frames)
+            .set("start_frame", self.start_frame)
+            .set("psnr_every", self.psnr_every)
+            .set("target_fps", self.target_fps)
+            .set("weight", self.weight);
+        if let Some(d) = self.warm_from {
+            js = js.set("warm_from", d);
+        }
+        if let Some(k) = self.resume_from {
+            js = js.set("resume_from", k);
+        }
+        js
+    }
+
+    /// Parse a spec from its JSON form. `condition` and `frames` are
+    /// required; every other field defaults to [`SessionSpec::stream`]'s
+    /// values. Strict: a present-but-mistyped field (string FPS,
+    /// fractional frame count) and an unknown key (a typo like
+    /// `"warm_form"`) are hard errors, never silent defaults.
+    pub fn from_json(v: &Json) -> Result<SessionSpec, String> {
+        const KNOWN: [&str; 8] = [
+            "condition",
+            "frames",
+            "start_frame",
+            "psnr_every",
+            "target_fps",
+            "weight",
+            "warm_from",
+            "resume_from",
+        ];
+        if let Json::Obj(map) = v {
+            for key in map.keys() {
+                if !KNOWN.contains(&key.as_str()) {
+                    return Err(format!("spec: unknown field {key:?}"));
+                }
+            }
+        } else {
+            return Err("spec: not an object".to_string());
+        }
+        // Present-but-wrong-type fields are errors, not defaults.
+        let opt_uint = |key: &str| -> Result<Option<usize>, String> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => x
+                    .as_f64()
+                    .filter(|f| *f >= 0.0 && f.fract() == 0.0)
+                    .map(|f| Some(f as usize))
+                    .ok_or_else(|| format!("spec: {key:?} must be a non-negative integer")),
+            }
+        };
+        let opt_num = |key: &str| -> Result<Option<f64>, String> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => x
+                    .as_f64()
+                    .map(Some)
+                    .ok_or_else(|| format!("spec: {key:?} must be a number")),
+            }
+        };
+
+        let label = v
+            .get("condition")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "spec: missing \"condition\"".to_string())?;
+        let condition = ViewCondition::from_label(label)
+            .ok_or_else(|| format!("spec: unknown view condition {label:?}"))?;
+        let frames =
+            opt_uint("frames")?.ok_or_else(|| "spec: missing \"frames\"".to_string())?;
+        let mut spec = SessionSpec::stream(condition, frames);
+        if let Some(x) = opt_uint("start_frame")? {
+            spec.start_frame = x;
+        }
+        if let Some(x) = opt_uint("psnr_every")? {
+            spec.psnr_every = x;
+        }
+        if let Some(x) = opt_num("target_fps")? {
+            spec.target_fps = x;
+        }
+        if let Some(x) = opt_num("weight")? {
+            spec.weight = x;
+        }
+        spec.warm_from = opt_uint("warm_from")?;
+        spec.resume_from = opt_uint("resume_from")?;
+        if spec.warm_from.is_some() && spec.resume_from.is_some() {
+            return Err(
+                "spec: \"warm_from\" and \"resume_from\" are mutually exclusive".to_string()
+            );
+        }
+        Ok(spec)
     }
 }
 
@@ -205,6 +318,110 @@ impl SessionScript {
             .filter(|e| matches!(e, SessionEvent::JoinAt { .. }))
             .count()
     }
+
+    /// The maximum number of simultaneously-live sessions the script can
+    /// reach: leaves fire before joins of the same round (matching the
+    /// scheduler), and a session without an explicit leave counts as live
+    /// to stream end. This is the host parallelism a round can actually
+    /// exploit — [`SessionScheduler::run`] sizes its round engine with it,
+    /// so a script whose sessions never overlap keeps the lockstep path
+    /// and its intra-frame executor parallelism instead of pinning every
+    /// frame to one thread.
+    pub fn peak_concurrency(&self) -> usize {
+        // round -> (leaves, joins) in ascending round order.
+        let mut deltas: std::collections::BTreeMap<usize, (usize, usize)> =
+            std::collections::BTreeMap::new();
+        for ev in &self.events {
+            match ev {
+                SessionEvent::JoinAt { frame, .. } => deltas.entry(*frame).or_default().1 += 1,
+                SessionEvent::LeaveAt { frame, .. } => deltas.entry(*frame).or_default().0 += 1,
+            }
+        }
+        let mut live = 0usize;
+        let mut peak = 0usize;
+        for (leaves, joins) in deltas.into_values() {
+            live = live.saturating_sub(leaves) + joins;
+            peak = peak.max(live);
+        }
+        peak
+    }
+
+    /// The declarative JSON form of the script:
+    ///
+    /// ```json
+    /// { "events": [
+    ///     { "type": "join",  "frame": 0, "spec": { "condition": "average",
+    ///       "frames": 8, "start_frame": 0, "psnr_every": 0,
+    ///       "target_fps": 120, "weight": 1 } },
+    ///     { "type": "leave", "frame": 4, "session": 0 }
+    /// ] }
+    /// ```
+    ///
+    /// `to_json` → [`SessionScript::from_json`] round-trips exactly (the
+    /// unit-test contract), so scripts can be authored by hand or dumped
+    /// from code and replayed from disk
+    /// (`examples/multi_viewer.rs --session-script <path>`).
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| match e {
+                SessionEvent::JoinAt { frame, spec } => Json::obj()
+                    .set("type", "join")
+                    .set("frame", *frame)
+                    .set("spec", spec.to_json()),
+                SessionEvent::LeaveAt { frame, session } => Json::obj()
+                    .set("type", "leave")
+                    .set("frame", *frame)
+                    .set("session", *session),
+            })
+            .collect();
+        Json::obj().set("events", Json::Arr(events))
+    }
+
+    /// Parse a script from its JSON form (inverse of
+    /// [`SessionScript::to_json`]).
+    pub fn from_json(v: &Json) -> Result<SessionScript, String> {
+        let Some(Json::Arr(events)) = v.get("events") else {
+            return Err("script: missing \"events\" array".to_string());
+        };
+        let mut script = SessionScript::new();
+        for (i, ev) in events.iter().enumerate() {
+            let ty = ev
+                .get("type")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("event {i}: missing \"type\""))?;
+            let frame = ev
+                .get("frame")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("event {i}: missing \"frame\""))?;
+            match ty {
+                "join" => {
+                    let spec = ev
+                        .get("spec")
+                        .ok_or_else(|| format!("event {i}: join without \"spec\""))?;
+                    let spec =
+                        SessionSpec::from_json(spec).map_err(|e| format!("event {i}: {e}"))?;
+                    script.events.push(SessionEvent::JoinAt { frame, spec });
+                }
+                "leave" => {
+                    let session = ev
+                        .get("session")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| format!("event {i}: leave without \"session\""))?;
+                    script.events.push(SessionEvent::LeaveAt { frame, session });
+                }
+                other => return Err(format!("event {i}: unknown type {other:?}")),
+            }
+        }
+        Ok(script)
+    }
+
+    /// Parse a script from JSON text (file contents of
+    /// `--session-script`).
+    pub fn from_json_str(s: &str) -> Result<SessionScript, String> {
+        SessionScript::from_json(&crate::util::json::parse(s)?)
+    }
 }
 
 /// Per-round issue-order policy of the [`SessionScheduler`].
@@ -256,6 +473,9 @@ pub struct SessionReport {
     /// Whether the session warm-started its AII intervals from a departed
     /// donor's retained state.
     pub warm_started: bool,
+    /// Whether the session resumed a full pipeline state seeded from a
+    /// previous scheduler run ([`SessionScheduler::seed_detached`]).
+    pub resumed: bool,
     /// Frames whose simulated latency exceeded the deadline.
     pub missed_deadlines: u64,
     /// `missed_deadlines / frames` (0 without a deadline).
@@ -285,6 +505,7 @@ impl SessionReport {
             .set("target_fps", self.target_fps)
             .set("weight", self.weight)
             .set("warm_started", self.warm_started)
+            .set("resumed", self.resumed)
             .set("missed_deadlines", self.missed_deadlines as f64)
             .set("deadline_miss_rate", self.deadline_miss_rate)
             .set("frame_latency_ns_pctl", self.frame_latency_pctl.to_json())
@@ -364,10 +585,12 @@ struct ViewerSession<'s> {
     minmax_scanned: u64,
     bucketed: u64,
     warm_started: bool,
+    resumed: bool,
     /// Bandwidth demand charged against the admission budget while the
     /// session streams.
     demand_bytes_per_s: f64,
-    /// Detached pipeline state after leaving (warm-start donor).
+    /// Detached pipeline state after leaving (warm-start donor within the
+    /// run; collected into [`SessionScheduler::take_detached`] after it).
     retained: Option<SessionState>,
 }
 
@@ -377,21 +600,35 @@ impl ViewerSession<'_> {
     }
 }
 
-/// The stream scheduler: owns the shared contended [`MemorySystem`] and the
+/// The stream scheduler: owns the shared contended
+/// [`MemorySystem`](crate::memory::MemorySystem) and the
 /// [`ViewerSession`]s of one script run. Built by
-/// [`RenderServer::sessions`].
+/// [`RenderServer::sessions`]. Rounds execute through the shared
+/// [`RoundEngine`](super::rounds::RoundEngine), so at `threads > 1` a
+/// round's sessions render host-parallel while the policy-ordered trace
+/// replay keeps every statistic bit-identical to the serial schedule.
 pub struct SessionScheduler<'a> {
     pub server: &'a RenderServer,
     pub policy: SchedPolicy,
     /// Admission budget (bytes/s of estimated DRAM demand); `None` admits
     /// every join immediately.
     pub dram_budget_bytes_per_s: Option<f64>,
+    /// Detached pipeline states collected by the last [`SessionScheduler::run`].
+    detached: Vec<(usize, SessionState)>,
+    /// States seeded for the next run's `resume_from` joins.
+    seeded: Vec<(usize, SessionState)>,
 }
 
 impl RenderServer {
     /// A session scheduler over this server's shared scene preparation.
     pub fn sessions(&self, policy: SchedPolicy) -> SessionScheduler<'_> {
-        SessionScheduler { server: self, policy, dram_budget_bytes_per_s: None }
+        SessionScheduler {
+            server: self,
+            policy,
+            dram_budget_bytes_per_s: None,
+            detached: Vec::new(),
+            seeded: Vec::new(),
+        }
     }
 
     /// Run a session script to completion under `policy` (convenience for
@@ -417,26 +654,63 @@ impl<'a> SessionScheduler<'a> {
         self
     }
 
+    /// Take the detached per-session pipeline states the last
+    /// [`SessionScheduler::run`] collected (keyed by session id):
+    /// explicitly-departed sessions and sessions still live at stream end.
+    /// Seed them into a later scheduler (same server / scene preparation)
+    /// via [`SessionScheduler::seed_detached`] so a second run's
+    /// `SessionSpec::resume_from` joins continue the streams
+    /// bit-identically — cross-run retention used to be pipeline-level
+    /// only.
+    ///
+    /// Caveat: a departed session whose AII intervals were donated to a
+    /// `warm_from` joiner *within* the run is exported with those
+    /// intervals drained (`SessionState::take_aii_intervals` cools the
+    /// donor by design) — its resume carries everything else warm but
+    /// pays the AII phase-1 rescan. Check
+    /// [`SessionState::aii_warm_blocks`] if that matters to the caller.
+    pub fn take_detached(&mut self) -> Vec<(usize, SessionState)> {
+        std::mem::take(&mut self.detached)
+    }
+
+    /// Seed detached states (a previous run's
+    /// [`SessionScheduler::take_detached`]) for the next run: a join whose
+    /// spec sets `resume_from = Some(key)` adopts the state stored under
+    /// `key` instead of cold-starting. Unmatched keys fall back to a fresh
+    /// pipeline; unclaimed states are dropped when the run ends.
+    ///
+    /// The resuming spec's `start_frame` must continue the donor's camera
+    /// walk — for a chain that began at frame 0 that is the state's
+    /// [`SessionState::frame_idx`] — and its `condition` must match the
+    /// donor's; the scheduler does not validate trajectory coherence (a
+    /// mismatched resume runs, but is not a continuation of anything).
+    pub fn seed_detached(&mut self, states: Vec<(usize, SessionState)>) {
+        self.seeded.extend(states);
+    }
+
     /// Drive `script` to completion: every joined session is admitted,
     /// streams its frames, and leaves (explicitly or at stream end); the
     /// run returns when no session is renderable and no event is pending.
+    /// Rounds go through the shared round engine — host-parallel two-phase
+    /// at `threads > 1`, lockstep otherwise — with bit-identical reports
+    /// either way.
     ///
     /// # Panics
     ///
     /// Panics on malformed scripts: a leave for an unknown session, a
     /// leave at or before its session's join frame, or a duplicate leave.
-    pub fn run(&self, script: &SessionScript) -> SessionBatchReport {
+    pub fn run(&mut self, script: &SessionScript) -> SessionBatchReport {
         let t0 = Instant::now();
         let server = self.server;
         let shared = &server.shared;
-        let mut config = server.config.clone();
-        config.mem.mode = MemMode::EventQueue;
-        let sys = Arc::new(Mutex::new(MemorySystem::new(
-            config.mem.clone(),
-            *shared.prep.shard_map,
-        )));
-        let reference = ReferenceRenderer::new(config.width, config.height);
+        // Size the engine by the script's *peak concurrency*, not its
+        // total joins: a stream whose sessions never overlap gets the
+        // lockstep path (full intra-frame parallelism per lone frame)
+        // instead of one-thread trace pipelines.
+        let engine = server.round_engine(script.peak_concurrency());
+        let reference = ReferenceRenderer::new(server.config.width, server.config.height);
         let fallback_bytes_per_frame = shared.prep.layout.total_span_bytes() as f64 / 10.0;
+        let mut seeded = std::mem::take(&mut self.seeded);
 
         // Split the script into join-ordered sessions and leave events.
         let mut joins: Vec<(usize, SessionSpec)> = Vec::new();
@@ -493,7 +767,8 @@ impl<'a> SessionScheduler<'a> {
                 s.demand_bytes_per_s = 0.0;
                 if let Some(pipeline) = s.pipeline.take() {
                     s.retained = Some(pipeline.detach_session());
-                    let mut sys_l = sys.lock().expect("memory system lock poisoned");
+                    let mut sys_l =
+                        engine.sys().lock().expect("memory system lock poisoned");
                     if let Some((cull, blend)) = s.ports {
                         sys_l.retire_port(cull);
                         sys_l.retire_port(blend);
@@ -536,6 +811,7 @@ impl<'a> SessionScheduler<'a> {
                     minmax_scanned: 0,
                     bucketed: 0,
                     warm_started: false,
+                    resumed: false,
                     demand_bytes_per_s: 0.0,
                     retained: None,
                 });
@@ -572,28 +848,54 @@ impl<'a> SessionScheduler<'a> {
                     break;
                 }
                 pending.pop_front();
-                // Warm-start intervals from the donor's retained state, if
-                // the script asked for it and the donor has departed.
-                let warm = {
-                    let donor = sessions[cand].as_ref().unwrap().spec.warm_from;
-                    donor.and_then(|d| {
-                        if d == cand {
-                            return None;
-                        }
-                        sessions
-                            .get_mut(d)
-                            .and_then(|slot| slot.as_mut())
-                            .and_then(|donor| donor.retained.as_mut())
-                            .and_then(SessionState::take_aii_intervals)
+                // Resume a seeded detached state from a previous run if
+                // the spec asks for one; otherwise build fresh, optionally
+                // warm-starting AII intervals from an in-run departed
+                // donor's retained state.
+                let resume_state = {
+                    let key = sessions[cand].as_ref().unwrap().spec.resume_from;
+                    key.and_then(|k| {
+                        seeded
+                            .iter()
+                            .position(|&(id, _)| id == k)
+                            .map(|pos| seeded.swap_remove(pos).1)
                     })
                 };
-                let mut pipeline =
-                    shared.pipeline_with_memory(config.clone(), Arc::clone(&sys));
-                let ports = pipeline
-                    .mem_port_ids()
-                    .expect("session pipelines register shared ports");
+                let (pipeline, ports, resumed, warm_started) = match resume_state {
+                    Some(state) => {
+                        let (pipeline, ports) = engine.resume_pipeline(shared, state);
+                        (pipeline, ports, true, false)
+                    }
+                    None => {
+                        // `resume_from` and `warm_from` are mutually
+                        // exclusive (a resume carries the AII intervals
+                        // already): a `resume_from` join whose key was not
+                        // seeded cold-starts, exactly as documented —
+                        // never silently taking the warm-start path.
+                        let warm = {
+                            let spec = &sessions[cand].as_ref().unwrap().spec;
+                            let donor =
+                                if spec.resume_from.is_some() { None } else { spec.warm_from };
+                            donor.and_then(|d| {
+                                if d == cand {
+                                    return None;
+                                }
+                                sessions
+                                    .get_mut(d)
+                                    .and_then(|slot| slot.as_mut())
+                                    .and_then(|donor| donor.retained.as_mut())
+                                    .and_then(SessionState::take_aii_intervals)
+                            })
+                        };
+                        let (mut pipeline, ports) = engine.make_pipeline(shared);
+                        let warm_started =
+                            warm.map(|iv| pipeline.warm_start_aii(iv)).unwrap_or(false);
+                        (pipeline, ports, false, warm_started)
+                    }
+                };
                 let s = sessions[cand].as_mut().unwrap();
-                s.warm_started = warm.map(|iv| pipeline.warm_start_aii(iv)).unwrap_or(false);
+                s.warm_started = warm_started;
+                s.resumed = resumed;
                 s.pipeline = Some(pipeline);
                 s.ports = Some(ports);
                 s.admitted_round = Some(round);
@@ -615,23 +917,37 @@ impl<'a> SessionScheduler<'a> {
                 break;
             }
 
-            // 5 — frame barrier + policy-ordered round.
-            sys.lock().expect("memory system lock poisoned").advance_epoch();
+            // 5 — policy-ordered round through the shared engine (which
+            // takes the frame-epoch barrier; an idle round awaiting a
+            // future join still advances the epoch).
             let order = issue_order(self.policy, round, &ring, &sessions);
-            for id in order {
-                let s = sessions[id].as_mut().expect("ring holds live sessions");
-                if !s.renderable() {
+            let mut rank = vec![usize::MAX; sessions.len()];
+            for (i, &id) in order.iter().enumerate() {
+                rank[id] = i;
+            }
+            let mut jobs: Vec<RoundJob<'_, '_>> = Vec::with_capacity(order.len());
+            for (id, slot) in sessions.iter_mut().enumerate() {
+                let Some(s) = slot.as_mut() else { continue };
+                // Round-robin keeps completed sessions in the issue order
+                // (rotation parity with the batch path); they are skipped
+                // here, at render time.
+                if rank[id] == usize::MAX || !s.renderable() {
                     continue;
                 }
                 let (cam, t) = s.traj[s.cursor];
-                let render =
-                    s.spec.psnr_every > 0 && s.cursor % s.spec.psnr_every == 0;
-                let r = s
-                    .pipeline
-                    .as_mut()
-                    .expect("renderable session has a pipeline")
-                    .render_frame(&cam, t, render);
-                let scored = score_frame(&reference, &shared.scene, &cam, t, &r);
+                jobs.push(RoundJob {
+                    key: id,
+                    cam,
+                    t,
+                    render: s.spec.psnr_every > 0 && s.cursor % s.spec.psnr_every == 0,
+                    ports: s.ports.expect("renderable session has ports"),
+                    pipeline: s.pipeline.as_mut().expect("renderable session has a pipeline"),
+                });
+            }
+            jobs.sort_by_key(|j| rank[j.key]);
+            for out in engine.run_round(&shared.scene, &reference, jobs) {
+                let s = sessions[out.key].as_mut().expect("outcome for a live session");
+                let r = &out.result;
                 pre_latency.push(r.latency.preprocess_ns);
                 blend_latency.push(r.latency.blend_ns);
                 let frame_ns = r.latency.pipelined_ns();
@@ -647,7 +963,7 @@ impl<'a> SessionScheduler<'a> {
                 measured_frames += 1;
                 s.minmax_scanned += r.sort.minmax_scanned;
                 s.bucketed += r.sort.bucketed;
-                s.agg.push(&r, scored);
+                s.agg.push(r, out.scored);
                 s.cursor += 1;
                 if s.cursor >= s.traj.len() {
                     // Completed: release the bandwidth reservation (the
@@ -660,22 +976,25 @@ impl<'a> SessionScheduler<'a> {
             round += 1;
         }
 
-        self.assemble(sessions, round, &sys, &config, pre_latency, blend_latency, t0)
+        self.assemble(sessions, round, &engine, pre_latency, blend_latency, t0)
     }
 
-    /// Final report assembly (per-session reports + the shared roll-up).
+    /// Final report assembly (per-session reports + the shared roll-up),
+    /// also collecting every session's detached pipeline state for
+    /// [`SessionScheduler::take_detached`].
     #[allow(clippy::too_many_arguments)]
     fn assemble(
-        &self,
+        &mut self,
         sessions: Vec<Option<ViewerSession<'_>>>,
         rounds: usize,
-        sys: &Arc<Mutex<MemorySystem>>,
-        config: &PipelineConfig,
+        engine: &RoundEngine,
         pre_latency: Vec<f64>,
         blend_latency: Vec<f64>,
         t0: Instant,
     ) -> SessionBatchReport {
         let scene = &self.server.shared.scene;
+        let sys = engine.sys();
+        let config = engine.config();
         // Port list of admitted sessions, in session-id order (un-admitted
         // sessions rendered nothing and own no ports).
         let port_ids: Vec<(PortId, PortId)> =
@@ -699,8 +1018,17 @@ impl<'a> SessionScheduler<'a> {
         let mut missed_total = 0u64;
         let mut deadline_frames = 0u64;
         let mut total_frames = 0usize;
+        let mut detached: Vec<(usize, SessionState)> = Vec::new();
         for (id, slot) in sessions.into_iter().enumerate() {
             let Some(mut s) = slot else { continue };
+            // Persist the session's pipeline state for a future run: an
+            // explicitly-departed session detached at its leave round; a
+            // session still live at stream end detaches here.
+            if let Some(state) = s.retained.take() {
+                detached.push((id, state));
+            } else if let Some(pipeline) = s.pipeline.take() {
+                detached.push((id, pipeline.detach_session()));
+            }
             let frames = s.cursor;
             total_frames += frames;
             all_latency.extend_from_slice(&s.latency);
@@ -734,6 +1062,7 @@ impl<'a> SessionScheduler<'a> {
                 target_fps: s.spec.target_fps,
                 weight: s.spec.weight,
                 warm_started: s.warm_started,
+                resumed: s.resumed,
                 missed_deadlines: s.missed,
                 deadline_miss_rate: if s.spec.target_fps > 0.0 && frames > 0 {
                     s.missed as f64 / frames as f64
@@ -751,7 +1080,7 @@ impl<'a> SessionScheduler<'a> {
             });
         }
 
-        SessionBatchReport {
+        let report = SessionBatchReport {
             policy: self.policy,
             rounds,
             total_frames,
@@ -764,7 +1093,9 @@ impl<'a> SessionScheduler<'a> {
             frame_latency_pctl: Percentiles::of(&all_latency),
             sessions: reports,
             contended,
-        }
+        };
+        self.detached = detached;
+        report
     }
 }
 
@@ -839,6 +1170,27 @@ mod tests {
     }
 
     #[test]
+    fn peak_concurrency_processes_leaves_before_joins() {
+        // Non-overlapping handoff: the leaver exits the round its
+        // successor joins, so at most one session is ever live.
+        let handoff = SessionScript::new()
+            .join_at(0, SessionSpec::stream(ViewCondition::Average, 8))
+            .leave_at(8, 0)
+            .join_at(8, SessionSpec::stream(ViewCondition::Static, 4));
+        assert_eq!(handoff.n_sessions(), 2);
+        assert_eq!(handoff.peak_concurrency(), 1);
+
+        let overlapping = SessionScript::new()
+            .join_at(0, SessionSpec::stream(ViewCondition::Average, 8))
+            .join_at(2, SessionSpec::stream(ViewCondition::Static, 4))
+            .leave_at(4, 0)
+            .join_at(6, SessionSpec::stream(ViewCondition::Extreme, 2));
+        assert_eq!(overlapping.peak_concurrency(), 2);
+
+        assert_eq!(SessionScript::new().peak_concurrency(), 0);
+    }
+
+    #[test]
     fn static_script_adopts_viewer_specs() {
         let specs = [
             ViewerSpec::perf(ViewCondition::Average, 3),
@@ -870,5 +1222,117 @@ mod tests {
         assert_eq!(SchedPolicy::Dwfq.label(), "dwfq");
         assert_eq!(SchedPolicy::Edf.label(), "edf");
         assert_eq!(SchedPolicy::ALL.len(), 3);
+    }
+
+    #[test]
+    fn script_json_round_trips_exactly() {
+        let script = SessionScript::new()
+            .join_at(
+                0,
+                SessionSpec::stream(ViewCondition::Average, 12)
+                    .with_deadline_fps(120.0)
+                    .with_weight(2.0)
+                    .with_psnr_every(3),
+            )
+            .join_at(
+                4,
+                SessionSpec::stream(ViewCondition::Extreme, 8).with_start(4),
+            )
+            .leave_at(8, 0)
+            .join_at(8, SessionSpec::stream(ViewCondition::Static, 6).with_warm_from(0))
+            .join_at(9, SessionSpec::stream(ViewCondition::Static, 4).with_resume_from(2));
+        let text = script.to_json().pretty();
+        let parsed = SessionScript::from_json_str(&text).expect("round-trip parse");
+        assert_eq!(parsed.to_json().pretty(), text);
+        assert_eq!(parsed.n_sessions(), 4);
+        match &parsed.events[0] {
+            SessionEvent::JoinAt { frame, spec } => {
+                assert_eq!(*frame, 0);
+                assert_eq!(spec.frames, 12);
+                assert_eq!(spec.target_fps, 120.0);
+                assert_eq!(spec.weight, 2.0);
+                assert_eq!(spec.psnr_every, 3);
+                assert_eq!(spec.warm_from, None);
+            }
+            other => panic!("expected JoinAt, got {other:?}"),
+        }
+        match &parsed.events[3] {
+            SessionEvent::JoinAt { spec, .. } => {
+                assert_eq!(spec.warm_from, Some(0));
+                assert_eq!(spec.resume_from, None);
+            }
+            other => panic!("expected JoinAt, got {other:?}"),
+        }
+        match &parsed.events[4] {
+            SessionEvent::JoinAt { spec, .. } => {
+                assert_eq!(spec.warm_from, None);
+                assert_eq!(spec.resume_from, Some(2));
+            }
+            other => panic!("expected JoinAt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn script_json_rejects_malformed_documents() {
+        assert!(SessionScript::from_json_str("{}").is_err());
+        assert!(SessionScript::from_json_str("not json").is_err());
+        assert!(SessionScript::from_json_str(
+            r#"{"events": [{"type": "join", "frame": 0}]}"#
+        )
+        .is_err());
+        assert!(SessionScript::from_json_str(
+            r#"{"events": [{"type": "join", "frame": 0,
+                "spec": {"condition": "sideways", "frames": 2}}]}"#
+        )
+        .is_err());
+        assert!(SessionScript::from_json_str(
+            r#"{"events": [{"type": "leave", "frame": 1}]}"#
+        )
+        .is_err());
+        assert!(SessionScript::from_json_str(
+            r#"{"events": [{"type": "warp", "frame": 1}]}"#
+        )
+        .is_err());
+        // warm_from and resume_from are mutually exclusive.
+        assert!(SessionScript::from_json_str(
+            r#"{"events": [{"type": "join", "frame": 0,
+                "spec": {"condition": "static", "frames": 2,
+                         "warm_from": 0, "resume_from": 0}}]}"#
+        )
+        .is_err());
+        // Present-but-mistyped fields are errors, not silent defaults…
+        assert!(SessionScript::from_json_str(
+            r#"{"events": [{"type": "join", "frame": 0,
+                "spec": {"condition": "static", "frames": 2, "target_fps": "120"}}]}"#
+        )
+        .is_err());
+        assert!(SessionScript::from_json_str(
+            r#"{"events": [{"type": "join", "frame": 0,
+                "spec": {"condition": "static", "frames": 2.5}}]}"#
+        )
+        .is_err());
+        // …and so are unknown spec fields (typos never pass silently).
+        assert!(SessionScript::from_json_str(
+            r#"{"events": [{"type": "join", "frame": 0,
+                "spec": {"condition": "static", "frames": 2, "warm_form": 0}}]}"#
+        )
+        .is_err());
+        // Defaults: a minimal join spec parses to SessionSpec::stream.
+        let minimal = SessionScript::from_json_str(
+            r#"{"events": [{"type": "join", "frame": 0,
+                "spec": {"condition": "static", "frames": 3}}]}"#,
+        )
+        .expect("minimal spec parses");
+        match &minimal.events[0] {
+            SessionEvent::JoinAt { spec, .. } => {
+                assert_eq!(spec.frames, 3);
+                assert_eq!(spec.start_frame, 0);
+                assert_eq!(spec.target_fps, 0.0);
+                assert_eq!(spec.weight, 1.0);
+                assert_eq!(spec.warm_from, None);
+                assert_eq!(spec.resume_from, None);
+            }
+            other => panic!("expected JoinAt, got {other:?}"),
+        }
     }
 }

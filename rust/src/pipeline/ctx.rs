@@ -25,10 +25,12 @@
 //! N concurrent viewer sessions.
 //!
 //! [`WorkerScratch`] is the per-executor-worker slice of the pool: the
-//! cull stage's visible-cell partials, the sort stage's membership flags
-//! and bucket-routing scratch, and the blend stage's per-depth-segment
-//! request streams. Workers receive disjoint `&mut WorkerScratch` entries,
-//! so the fan-out never shares hot scratch.
+//! cull stage's visible-cell partials, the project stage's splat
+//! partials, the intersect stage's per-tile binning partials and
+//! working-set membership flags, the sort stage's extraction flags and
+//! bucket-routing scratch, and the blend stage's per-depth-segment
+//! request streams. Workers receive disjoint `&mut WorkerScratch`
+//! entries, so the fan-out never shares hot scratch.
 
 use crate::culling::{CullOutput, GridPartition};
 use crate::dcim::{DcimConfig, DcimMacro};
@@ -62,7 +64,19 @@ pub struct WorkerScratch {
     /// contiguous chunk of the temporal slice's cells, ascending flat
     /// order; worker-order concatenation reproduces the serial scan).
     pub cells: Vec<usize>,
-    /// Splat-in-tile flags (per-tile extraction filter of the sort stage).
+    /// Projected-splat partials of the project-stage fan-out (this
+    /// worker's contiguous chunk of the visible set, ascending gaussian
+    /// order; worker-order concatenation reproduces the serial
+    /// projection).
+    pub splats: Vec<Splat2D>,
+    /// Per-tile splat-index partials of the intersect-stage binning
+    /// fan-out (this worker's contiguous splat chunk routed to every tile
+    /// it touches; per-tile worker-order concatenation reproduces the
+    /// serial ascending-splat bins).
+    pub bins: Vec<Vec<u32>>,
+    /// Splat-in-tile / splat-in-block membership flags (the per-block
+    /// working-set dedup of the intersect stage and the per-tile
+    /// extraction filter of the sort stage).
     pub in_tile: Vec<bool>,
     /// Bucket-routing scratch for the sort engine (see
     /// [`crate::sorting::assign_buckets_into`]).
@@ -113,8 +127,6 @@ pub struct FrameCtx {
     pub block_items: Vec<Vec<SortItem>>,
     /// Per-tile depth-ordered splat lists extracted from the block sorts.
     pub sorted_bins: Vec<Vec<u32>>,
-    /// Splat membership flags (working-set dedup).
-    pub member: Vec<bool>,
     /// Tile visit order (ATG groups or raster).
     pub tile_order: Vec<usize>,
     /// Per-group block sort scratch for the ATG tile order.
@@ -177,7 +189,6 @@ impl FrameCtx {
             block_tiles: vec![Vec::new(); n_blocks],
             block_items: vec![Vec::new(); n_blocks],
             sorted_bins: vec![Vec::new(); n_tiles],
-            member: Vec::new(),
             tile_order: Vec::new(),
             block_scratch: Vec::new(),
             depth_scratch: Vec::new(),
@@ -233,7 +244,6 @@ impl FrameCtx {
             nested(&self.block_items),
             self.sorted_bins.capacity(),
             nested(&self.sorted_bins),
-            self.member.capacity(),
             self.tile_order.capacity(),
             self.block_scratch.capacity(),
             self.depth_scratch.capacity(),
@@ -249,6 +259,9 @@ impl FrameCtx {
         // streams) is part of the zero-allocation contract too.
         for ws in &self.workers {
             caps.push(ws.cells.capacity());
+            caps.push(ws.splats.capacity());
+            caps.push(ws.bins.capacity());
+            caps.push(nested(&ws.bins));
             caps.push(ws.in_tile.capacity());
             caps.push(ws.buckets.capacity());
             caps.push(nested(&ws.buckets));

@@ -460,8 +460,8 @@ impl<'a> FramePipeline<'a> {
         let frame_t0 = Instant::now();
         self.ctx.begin_frame();
         self.cull_stage.run(&bind, cam, t, &mut self.ctx, &self.pool);
-        self.project_stage.run(&bind, cam, t, &mut self.ctx);
-        self.intersect_stage.run(&bind, &mut self.ctx);
+        self.project_stage.run(&bind, cam, t, &mut self.ctx, &self.pool);
+        self.intersect_stage.run(&bind, &mut self.ctx, &self.pool);
         self.group_stage.run(&bind, &mut self.ctx);
         let sort_t0 = Instant::now();
         self.sort_stage.run(&bind, &mut self.ctx, &self.pool);
@@ -556,6 +556,20 @@ impl<'a> FramePipeline<'a> {
         state: SessionState,
     ) -> FramePipeline<'a> {
         FramePipeline::resume(scene, prep, config, MemChoice::Config, state)
+    }
+
+    /// Resume a detached session with **trace-recording** ports (the
+    /// [`FramePipeline::with_trace_ports`] counterpart) — the render half
+    /// of a two-phase contended round; the owner replays the traces into
+    /// its shared system. The continuation is bit-identical to a
+    /// shared-port resume: retained state never carries port handles.
+    pub fn resume_with_trace_ports(
+        scene: &'a Scene,
+        prep: ScenePrep,
+        config: PipelineConfig,
+        state: SessionState,
+    ) -> FramePipeline<'a> {
+        FramePipeline::resume(scene, prep, config, MemChoice::Trace, state)
     }
 
     /// Resume a detached session with its cull/blend ports registered on a

@@ -51,6 +51,17 @@ pub fn resolve_threads(configured: usize) -> usize {
     std::thread::available_parallelism().map(usize::from).unwrap_or(1)
 }
 
+/// The contiguous `[lo, hi)` index range of an `items`-long space assigned
+/// to `worker` of `workers` total — the single chunk-partition rule every
+/// chunked stage fan-out (cull cells, project gaussians, intersect splat
+/// routing, blend classify) shares. Ceil-divided, so ascending worker
+/// order covers the space exactly once; trailing workers may get empty
+/// ranges.
+pub(crate) fn chunk_bounds(worker: usize, items: usize, workers: usize) -> (usize, usize) {
+    let chunk = items.div_ceil(workers.max(1)).max(1);
+    ((worker * chunk).min(items), ((worker + 1) * chunk).min(items))
+}
+
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
 struct PoolState {
@@ -411,5 +422,23 @@ mod tests {
     fn resolve_threads_prefers_explicit_over_env() {
         assert_eq!(resolve_threads(3), 3);
         assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn chunk_bounds_partitions_exactly_once_in_order() {
+        for items in [0usize, 1, 5, 17, 100, 101] {
+            for workers in [1usize, 2, 3, 8, 16] {
+                let mut covered = Vec::new();
+                for w in 0..workers {
+                    let (lo, hi) = chunk_bounds(w, items, workers);
+                    assert!(lo <= hi && hi <= items);
+                    covered.extend(lo..hi);
+                }
+                let expect: Vec<usize> = (0..items).collect();
+                assert_eq!(covered, expect, "items={items} workers={workers}");
+            }
+        }
+        // Degenerate worker count clamps to one.
+        assert_eq!(chunk_bounds(0, 4, 0), (0, 4));
     }
 }

@@ -15,12 +15,16 @@
 //! recorder), so a [`FramePipeline`](super::FramePipeline) is just the
 //! linear composition of the six `run` calls.
 //!
-//! The cull, sort, and blend stages fan out across the pipeline's
+//! Every stage with per-frame bulk work fans out across the pipeline's
 //! [`WorkerPool`](super::par::WorkerPool): the DR-FC grid-cell tests (per
-//! contiguous cell chunk, partials concatenated in worker order), per-block
-//! sorting (disjoint posteriori slots + per-block stat partials reduced in
-//! block order), and the per-depth-segment blend-buffer walk (disjoint
-//! segment state, DRAM miss fills replayed in global pair order). Per-frame
+//! contiguous cell chunk, partials concatenated in worker order), splat
+//! projection (per contiguous gaussian chunk), tile binning and the
+//! block-level working sets (per tile block, worker-order partial merge),
+//! per-block sorting (disjoint posteriori slots + per-block stat partials
+//! reduced in block order), and the per-depth-segment blend-buffer walk
+//! (disjoint segment state, DRAM miss fills replayed in global pair
+//! order); only the ATG union-find and the connection-footprint scan that
+//! feeds it stay serial (order-sequential posteriori state). Per-frame
 //! stat outputs are bit-identical to the pre-refactor monolithic
 //! `render_frame` at **any** thread count (enforced against
 //! [`super::oracle::MonolithPipeline`] and across thread counts by the
@@ -28,7 +32,7 @@
 
 use super::ctx::{FrameBind, FrameCtx, WorkerScratch};
 use super::frame::{DIGITAL_FREQ_GHZ, EARLY_TERMINATION_FACTOR, PREPROCESS_MACS_PER_GAUSSIAN};
-use super::par::{SharedSlice, WorkerPool};
+use super::par::{chunk_bounds, SharedSlice, WorkerPool};
 use crate::camera::Camera;
 use crate::culling::conventional::ConventionalCulling;
 use crate::culling::DrFc;
@@ -40,7 +44,7 @@ use crate::memory::SramStats;
 use crate::render::HwRenderer;
 use crate::sorting::{conventional_bucket_bitonic_into, AiiSort, SortEngine, SortStats};
 use crate::tiles::atg::Atg;
-use crate::tiles::intersect::{bin_splats_into, project_gaussian, Splat2D};
+use crate::tiles::intersect::{project_gaussian, Splat2D};
 use crate::tiles::raster::raster_order_into;
 
 /// Stage 1 — frustum culling (DR-FC or the conventional full fetch) and its
@@ -80,8 +84,7 @@ impl CullStage {
                 let frustum = cam.frustum();
                 let n_cells = range.len();
                 let start = range.start;
-                let tw = workers.len().max(1);
-                let chunk = n_cells.div_ceil(tw).max(1);
+                let tw = workers.len();
                 {
                     let drfc = &drfc;
                     let frustum = &frustum;
@@ -89,8 +92,7 @@ impl CullStage {
                         for (w, ws) in workers.iter_mut().enumerate() {
                             scope.spawn(move || {
                                 ws.cells.clear();
-                                let lo = (w * chunk).min(n_cells);
-                                let hi = ((w + 1) * chunk).min(n_cells);
+                                let (lo, hi) = chunk_bounds(w, n_cells, tw);
                                 for i in lo..hi {
                                     let flat = start + i;
                                     if drfc.cell_test(flat, frustum) {
@@ -123,37 +125,163 @@ impl CullStage {
 
 /// Stage 2 — projection of the visible set to screen-space splats
 /// (quantized FP16 parameters, DCIM preprocess MACs). Stateless.
+///
+/// **Executor fan-out:** the visible set is chunked contiguously across
+/// the pool's workers; each worker projects its chunk into a private
+/// pooled splat partial (`project_gaussian` is pure — every per-splat
+/// value is independent of its neighbors), and the partials concatenate
+/// on the calling thread in fixed worker order — reproducing the serial
+/// ascending-gaussian walk exactly, so the splat list every later stage
+/// consumes is bit-identical at any thread count.
 #[derive(Debug)]
 pub struct ProjectStage;
 
 impl ProjectStage {
-    pub fn run(&self, bind: &FrameBind, cam: &Camera, t: f32, ctx: &mut FrameCtx) {
+    pub fn run(
+        &self,
+        bind: &FrameBind,
+        cam: &Camera,
+        t: f32,
+        ctx: &mut FrameCtx,
+        pool: &WorkerPool,
+    ) {
         ctx.dcim
             .macs(ctx.cull.visible.len() as u64 * PREPROCESS_MACS_PER_GAUSSIAN);
-        let FrameCtx { splats, cull, .. } = ctx;
+        let FrameCtx { splats, cull, workers, .. } = ctx;
         splats.clear();
-        splats.extend(
-            cull.visible
-                .iter()
-                .filter_map(|&gi| project_gaussian(&bind.quantized[gi as usize], gi, cam, t)),
-        );
+        let visible: &[u32] = &cull.visible;
+        let n = visible.len();
+        let tw = workers.len();
+        pool.scope(|scope| {
+            for (w, ws) in workers.iter_mut().enumerate() {
+                scope.spawn(move || {
+                    ws.splats.clear();
+                    let (lo, hi) = chunk_bounds(w, n, tw);
+                    for &gi in &visible[lo..hi] {
+                        if let Some(s) =
+                            project_gaussian(&bind.quantized[gi as usize], gi, cam, t)
+                        {
+                            ws.splats.push(s);
+                        }
+                    }
+                });
+            }
+        });
+        // Fixed worker-order concatenation = ascending gaussian order.
+        for ws in workers.iter() {
+            splats.extend_from_slice(&ws.splats);
+        }
     }
 }
 
 /// Stage 3 — splat–tile intersection testing: per-tile bins, the
 /// connection-strength graph, and the block-level unique-splat working sets
 /// consumed by grouping and sorting. Stateless (scratch lives in the ctx).
+///
+/// **Executor fan-out (tile binning, per tile block):** two phases under
+/// the standard disjoint-write + fixed-order-reduction contract:
+///
+/// 1. *route* — contiguous splat chunks are binned by each worker into
+///    private per-tile partials (`WorkerScratch::bins`);
+/// 2. *merge* — tile blocks are strided across workers; each block's tiles
+///    concatenate the workers' partials in fixed worker order (a tile
+///    belongs to exactly one block, so the writes are disjoint), which
+///    reproduces the serial ascending-splat bin contents exactly.
+///
+/// The block-level working sets then fan out per tile block too (strided
+/// blocks, per-worker membership flags), feeding the sort stage and ATG's
+/// buffer calibration the identical serial-order inputs at any thread
+/// count. The footprint/connection scan stays serial — it feeds the ATG
+/// union-find, which is inherently order-sequential posteriori state.
 #[derive(Debug)]
 pub struct IntersectStage;
 
 impl IntersectStage {
-    pub fn run(&self, bind: &FrameBind, ctx: &mut FrameCtx) {
-        // Binning + connection tracking.
+    pub fn run(&self, bind: &FrameBind, ctx: &mut FrameCtx, pool: &WorkerPool) {
         ctx.conn.clear();
+        let n_tiles = bind.tile_grid.n_tiles();
+
+        // Tiles of each tile block (static geometry — computed up front so
+        // the binning merge below can fan out per block).
         {
-            let FrameCtx { splats, bins, .. } = ctx;
-            bin_splats_into(bind.tile_grid, splats, bins);
+            let FrameCtx { block_tiles, conn, .. } = ctx;
+            for v in block_tiles.iter_mut() {
+                v.clear();
+            }
+            for tile in 0..n_tiles {
+                let (tx, ty) = bind.tile_grid.tile_xy(tile);
+                block_tiles[conn.block_of_tile(tx, ty)].push(tile);
+            }
         }
+
+        // Binning phase 1 — route contiguous splat chunks into per-worker
+        // per-tile partials (private writes; chunks are ascending splat
+        // ranges, so each partial is internally in serial order).
+        {
+            let FrameCtx { splats, workers, .. } = ctx;
+            let n_splats = splats.len();
+            let tw = workers.len();
+            let splats_ref: &[Splat2D] = splats;
+            let tile_grid = bind.tile_grid;
+            pool.scope(|scope| {
+                for (w, ws) in workers.iter_mut().enumerate() {
+                    scope.spawn(move || {
+                        if ws.bins.len() != n_tiles {
+                            ws.bins.resize_with(n_tiles, Vec::new);
+                        }
+                        for b in ws.bins.iter_mut() {
+                            b.clear();
+                        }
+                        let (lo, hi) = chunk_bounds(w, n_splats, tw);
+                        for si in lo..hi {
+                            tile_grid.splat_tiles(&splats_ref[si], |tile| {
+                                ws.bins[tile].push(si as u32)
+                            });
+                        }
+                    });
+                }
+            });
+        }
+
+        // Binning phase 2 — merge the partials per tile, fanned out per
+        // tile block: fixed worker-order concatenation of ascending chunks
+        // = the serial ascending-splat bin contents.
+        {
+            let FrameCtx { bins, block_tiles, workers, .. } = ctx;
+            if bins.len() != n_tiles {
+                bins.resize_with(n_tiles, Vec::new);
+            }
+            let n_blocks = block_tiles.len();
+            let tw = workers.len().max(1);
+            let bins_sl = SharedSlice::new(bins.as_mut_slice());
+            let workers_ref: &[WorkerScratch] = workers;
+            let block_tiles: &[Vec<usize>] = block_tiles;
+            pool.scope(|scope| {
+                for w in 0..tw {
+                    scope.spawn(move || {
+                        let mut block = w;
+                        while block < n_blocks {
+                            for &tile in &block_tiles[block] {
+                                // SAFETY: every tile belongs to exactly one
+                                // block and blocks are strided per worker —
+                                // no two workers touch the same tile's bin.
+                                let out = unsafe { bins_sl.get_mut(tile) };
+                                out.clear();
+                                for ws in workers_ref {
+                                    if let Some(part) = ws.bins.get(tile) {
+                                        out.extend_from_slice(part);
+                                    }
+                                }
+                            }
+                            block += tw;
+                        }
+                    });
+                }
+            });
+        }
+
+        // Footprint / connection tracking (serial: feeds the ATG
+        // union-find's order-sequential posteriori state).
         let mut intersections = 0u64;
         for s in &ctx.splats {
             if let Some((tx0, ty0, tx1, ty1)) = bind.tile_grid.tile_range(s) {
@@ -165,40 +293,45 @@ impl IntersectStage {
         ctx.energy.intersect_pj += intersections as f64 * ops::E_INTERSECT_PJ;
 
         // Block-level unique-splat working sets (needed by the sort stage
-        // and by ATG's buffer-capacity calibration).
-        let FrameCtx {
-            splats,
-            bins,
-            block_tiles,
-            block_items,
-            member,
-            conn,
-            ..
-        } = ctx;
-        for v in block_tiles.iter_mut() {
-            v.clear();
-        }
-        for tile in 0..bins.len() {
-            let (tx, ty) = bind.tile_grid.tile_xy(tile);
-            let b = conn.block_of_tile(tx, ty);
-            block_tiles[b].push(tile);
-        }
-        member.clear();
-        member.resize(splats.len(), false);
-        for (block, tiles) in block_tiles.iter().enumerate() {
-            let items = &mut block_items[block];
-            items.clear();
-            for &tile in tiles {
-                for &si in &bins[tile] {
-                    if !member[si as usize] {
-                        member[si as usize] = true;
-                        items.push((splats[si as usize].depth, si));
-                    }
+        // and by ATG's buffer-capacity calibration), fanned out per tile
+        // block with per-worker membership flags.
+        {
+            let FrameCtx { splats, bins, block_tiles, block_items, workers, .. } = ctx;
+            let n_blocks = block_tiles.len();
+            let n_splats = splats.len();
+            let tw = workers.len().max(1);
+            let items_sl = SharedSlice::new(block_items.as_mut_slice());
+            let bins: &[Vec<u32>] = bins;
+            let block_tiles: &[Vec<usize>] = block_tiles;
+            let splats: &[Splat2D] = splats;
+            pool.scope(|scope| {
+                for (w, ws) in workers.iter_mut().enumerate() {
+                    scope.spawn(move || {
+                        ws.in_tile.clear();
+                        ws.in_tile.resize(n_splats, false);
+                        let mut block = w;
+                        while block < n_blocks {
+                            // SAFETY: blocks are strided per worker — each
+                            // block's working set is written by exactly one
+                            // worker.
+                            let items = unsafe { items_sl.get_mut(block) };
+                            items.clear();
+                            for &tile in &block_tiles[block] {
+                                for &si in &bins[tile] {
+                                    if !ws.in_tile[si as usize] {
+                                        ws.in_tile[si as usize] = true;
+                                        items.push((splats[si as usize].depth, si));
+                                    }
+                                }
+                            }
+                            for &(_, si) in items.iter() {
+                                ws.in_tile[si as usize] = false;
+                            }
+                            block += tw;
+                        }
+                    });
                 }
-            }
-            for &(_, si) in items.iter() {
-                member[si as usize] = false;
-            }
+            });
         }
     }
 }
@@ -480,9 +613,8 @@ impl BlendStage {
                 workers,
                 ..
             } = ctx;
-            let t = workers.len().max(1);
+            let t = workers.len();
             let n_pos = tile_order.len();
-            let chunk = n_pos.div_ceil(t).max(1);
             let tile_order: &[usize] = tile_order;
             let sorted_bins: &[Vec<u32>] = sorted_bins;
             let splats: &[Splat2D] = splats;
@@ -495,8 +627,7 @@ impl BlendStage {
                         for s in ws.seg_streams.iter_mut() {
                             s.clear();
                         }
-                        let lo = (w * chunk).min(n_pos);
-                        let hi = ((w + 1) * chunk).min(n_pos);
+                        let (lo, hi) = chunk_bounds(w, n_pos, t);
                         for p in lo..hi {
                             let tile = tile_order[p];
                             let mut idx = pair_base[p];

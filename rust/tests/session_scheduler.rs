@@ -17,6 +17,12 @@
 //! 6. **Admission control** — a tiny DRAM budget defers the second join
 //!    but stays work-conserving (every session still streams to
 //!    completion).
+//! 7. **Round engine** — the full `SessionBatchReport` JSON is
+//!    byte-identical at threads 1/4/8 for all three policies (lockstep vs
+//!    two-phase trace/replay).
+//! 8. **Cross-run persistence** — `take_detached` / `seed_detached` +
+//!    `SessionSpec::resume_from` continue a departed stream bit-identically
+//!    in a later scheduler run, at any thread count.
 
 use gaucim::camera::ViewCondition;
 use gaucim::coordinator::{
@@ -42,7 +48,7 @@ fn round_robin_static_script_matches_contended_batch_bit_for_bit() {
         ViewerSpec::perf(ViewCondition::Static, 2),
         ViewerSpec::perf(ViewCondition::Extreme, 3),
     ];
-    for threads in [1, 4] {
+    for threads in [1, 4, 8] {
         let server = server(threads);
         let batch = server.render_batch_contended(&specs);
         let script = SessionScript::from_specs(&specs);
@@ -95,6 +101,26 @@ fn join_leave_script_replays_identically_at_any_thread_count() {
     let baseline = run(1);
     for threads in [2, 8] {
         assert_eq!(baseline, run(threads), "EDF stream diverged at threads={threads}");
+    }
+}
+
+#[test]
+fn every_policy_is_byte_identical_across_thread_counts() {
+    // The round-engine acceptance gate: the full SessionBatchReport JSON —
+    // per-session reports, latency percentiles, the contended roll-up —
+    // must be byte-identical at threads 1/4/8 (lockstep vs two-phase
+    // trace/replay) for all three policies over a join/leave stream.
+    let script = join_leave_script();
+    for policy in SchedPolicy::ALL {
+        let baseline = server(1).render_sessions(&script, policy).simulated_projection();
+        for threads in [4, 8] {
+            assert_eq!(
+                baseline,
+                server(threads).render_sessions(&script, policy).simulated_projection(),
+                "{} diverged at threads={threads}",
+                policy.label()
+            );
+        }
     }
 }
 
@@ -205,6 +231,109 @@ fn warm_started_joiner_reuses_departed_intervals() {
     );
     // Identical static views: the warm joiner never pays the phase-1 scan.
     assert_eq!(warm_j.aii_interval_hit_rate, 1.0);
+}
+
+#[test]
+fn detached_sessions_resume_across_scheduler_runs_bit_identically() {
+    // Run 1 streams frames [0, k) of the Static walk and ends; its
+    // detached pipeline state is taken off the scheduler and seeded into a
+    // second run whose join resumes it at start_frame = k. The resumed
+    // session must continue the stream exactly — identical
+    // timing-independent stats to the tail of an uninterrupted [0, k + n)
+    // walk — at any host thread count.
+    let k = 2;
+    let n = 2;
+    let chain = |threads: usize| {
+        let server = server(threads);
+        let first = SessionScript::new()
+            .join_at(0, SessionSpec::stream(ViewCondition::Static, k));
+        let mut sched = server.sessions(SchedPolicy::RoundRobin);
+        let rep1 = sched.run(&first);
+        assert_eq!(rep1.sessions[0].frames, k);
+        let states = sched.take_detached();
+        assert_eq!(states.len(), 1, "stream-end sessions detach too");
+        assert_eq!(states[0].0, 0);
+        assert_eq!(states[0].1.frame_idx(), k);
+
+        // A fresh companion rides along so the second run has more than
+        // one session — at threads > 1 that engages the two-phase round
+        // engine, exercising the trace-port resume path.
+        let second = SessionScript::new()
+            .join_at(
+                0,
+                SessionSpec::stream(ViewCondition::Static, n)
+                    .with_start(k)
+                    .with_resume_from(0),
+            )
+            .join_at(0, SessionSpec::stream(ViewCondition::Average, n));
+        let mut sched2 = server.sessions(SchedPolicy::RoundRobin);
+        sched2.seed_detached(states);
+        sched2.run(&second)
+    };
+
+    let rep2 = chain(1);
+    let resumed = &rep2.sessions[0];
+    assert!(resumed.resumed, "seeded state must be adopted");
+    assert_eq!(resumed.frames, n);
+
+    // Reference: a private pipeline streaming the uninterrupted
+    // [0, k + n) walk; the resumed run must match its tail exactly
+    // (contention moves *when* requests complete, never what is fetched).
+    let server = server(1);
+    let traj = server.trajectory(&ViewerSpec::perf(ViewCondition::Static, k + n));
+    let mut cfg = server.config.clone();
+    cfg.mem.mode = MemMode::EventQueue;
+    let mut pipeline = server.shared.pipeline(cfg);
+    let (mut visible, mut accesses, mut bytes, mut cycles, mut atg) =
+        (0f64, 0f64, 0f64, 0f64, 0f64);
+    for (i, (cam, t)) in traj.iter().enumerate() {
+        let r = pipeline.render_frame(cam, *t, false);
+        if i >= k {
+            visible += r.n_visible as f64;
+            accesses += r.traffic.total_dram_accesses() as f64;
+            bytes += r.traffic.total_dram_bytes() as f64;
+            cycles += r.sort.cycles as f64;
+            atg += r.atg_ops as f64;
+        }
+    }
+    let nf = n as f64;
+    assert_eq!(resumed.seq.avg_visible, visible / nf);
+    assert_eq!(resumed.seq.avg_dram_accesses, accesses / nf);
+    assert_eq!(resumed.seq.avg_dram_bytes, bytes / nf);
+    assert_eq!(resumed.seq.avg_sort_cycles, cycles / nf);
+    assert_eq!(
+        resumed.seq.avg_atg_ops,
+        atg / nf,
+        "ATG posteriori must survive the cross-run handoff"
+    );
+
+    // The whole resumed run is byte-identical across host thread counts
+    // (the two-phase round engine path).
+    let baseline = rep2.simulated_projection();
+    for threads in [4, 8] {
+        assert_eq!(
+            baseline,
+            chain(threads).simulated_projection(),
+            "resumed run diverged at threads={threads}"
+        );
+    }
+
+    // Without seeding, resume_from falls back to a cold start: the joiner
+    // pays the frame-0 grouping/scan cost the resumed session skips.
+    let cold_script = SessionScript::new().join_at(
+        0,
+        SessionSpec::stream(ViewCondition::Static, n)
+            .with_start(k)
+            .with_resume_from(0),
+    );
+    let cold = server.render_sessions(&cold_script, SchedPolicy::RoundRobin);
+    assert!(!cold.sessions[0].resumed);
+    assert!(
+        cold.sessions[0].seq.avg_atg_ops > resumed.seq.avg_atg_ops,
+        "cold {} vs resumed {}: the resumed session must reuse posteriori grouping",
+        cold.sessions[0].seq.avg_atg_ops,
+        resumed.seq.avg_atg_ops
+    );
 }
 
 #[test]

@@ -206,6 +206,45 @@ fn drfc_cell_fanout_is_thread_invariant() {
 }
 
 #[test]
+fn project_intersect_fanout_is_thread_invariant() {
+    // The project stage's per-gaussian-chunk fan-out and the intersect
+    // stage's two-phase tile binning + per-block working-set fan-out: a
+    // dense scene under the extreme condition keeps every worker chunk
+    // non-empty and moves the visible set (and therefore the bins and
+    // block working sets) every frame. The splat list, bins, and working
+    // sets feed *every* downstream stat — sort cycles, SRAM reuse, blend
+    // pairs, DRAM traffic — so any partition leak shows up in the frame
+    // results. Frame 0 renders numerically so the exact blend-pair path
+    // crosses the fan-outs too.
+    let scene = SynthParams::new(SceneKind::DynamicLarge, 6000).with_seed(29).generate();
+    let base = PipelineConfig::paper(true).with_resolution(192, 108);
+    let seq = trajectory(&scene, ViewCondition::Extreme, 3, 192, 108);
+    let run = |config: PipelineConfig| -> Vec<FrameResult> {
+        let mut p = FramePipeline::new(&scene, config);
+        seq.iter()
+            .enumerate()
+            .map(|(i, (cam, t))| p.render_frame(cam, *t, i == 0))
+            .collect()
+    };
+
+    let serial = run(PipelineConfig { threads: 1, ..base.clone() });
+    assert!(
+        serial.iter().all(|r| r.intersections > 0 && r.n_visible > 0),
+        "the fan-outs must see real binning work"
+    );
+    for threads in [2, 8] {
+        let par = run(PipelineConfig { threads, ..base.clone() });
+        for (i, (a, b)) in serial.iter().zip(&par).enumerate() {
+            assert_frames_identical(a, b, &format!("project/intersect threads={threads} frame={i}"));
+        }
+    }
+
+    // And the fanned-out stage graph still matches the frozen monolith
+    // (which projects and bins through the serial single-pass path).
+    assert_engines_identical(&scene, base, ViewCondition::Extreme, 3, 3);
+}
+
+#[test]
 fn steady_state_frames_reuse_all_scratch_capacity() {
     // Static trajectory: identical views, so from frame 2 on every pooled
     // buffer has reached its working size — the capacity signature must
