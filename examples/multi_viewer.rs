@@ -5,7 +5,9 @@
 //! the sequential baseline vs the parallel batch, probes the intra-frame
 //! parallel executor (`pipeline::par`) on a single-viewer trajectory
 //! (per-stage host wall-clock at `threads = 1` vs the configured count),
-//! then runs the same specs through the **shared, contended event-queue
+//! times the scalar-vs-lane-batched blend datapath on numeric frames
+//! (`speedup_vs_serial.render_backend` + per-backend `stage_wall_render_*`
+//! blocks), then runs the same specs through the **shared, contended event-queue
 //! memory system** twice — single-threaded lockstep and the two-phase
 //! parallel scheme — asserting the contended roll-ups are bit-identical
 //! before reporting the parallel one. Everything lands in
@@ -35,6 +37,7 @@ use gaucim::coordinator::{
     SessionScript, SessionSpec, ViewerSpec,
 };
 use gaucim::pipeline::{resolve_threads, HostStageWall, PipelineConfig};
+use gaucim::render::RenderBackend;
 use gaucim::scene::synth::{SceneKind, SynthParams};
 use gaucim::util::cli::Args;
 use gaucim::util::json::Json;
@@ -56,6 +59,26 @@ fn executor_probe(
     }
     let wall = t0.elapsed().as_secs_f64();
     (pipeline.host_wall().clone(), wall)
+}
+
+/// Run one single-viewer trajectory with **numeric** rendering (the blend
+/// stage actually shades pixels) on the given blend datapath, and return
+/// the host per-stage wall-clock. Outputs are bit-identical across
+/// backends, so only the timing differs — this is the scalar-vs-lanes
+/// perf record.
+fn backend_probe(
+    server: &RenderServer,
+    spec: &ViewerSpec,
+    threads: usize,
+    backend: RenderBackend,
+) -> HostStageWall {
+    let cfg = PipelineConfig { threads, render_backend: backend, ..server.config.clone() };
+    let mut pipeline = server.shared.pipeline(cfg);
+    let traj = server.trajectory(spec);
+    for (cam, t) in &traj {
+        std::hint::black_box(pipeline.render_frame(cam, *t, true));
+    }
+    pipeline.host_wall().clone()
 }
 
 /// The built-in demo stream (used when no `--session-script` file is
@@ -190,8 +213,14 @@ fn main() -> anyhow::Result<()> {
     let threads = resolve_threads(args.get_usize("threads", 0));
 
     let scene = SynthParams::new(SceneKind::DynamicLarge, n).with_seed(42).generate();
-    let config =
+    let mut config =
         PipelineConfig::paper(true).with_resolution(width, height).with_threads(threads);
+    // Blend datapath override (default: PALLAS_RENDER_BACKEND env, else
+    // lanes). The scalar-vs-lanes probe below forces both explicitly.
+    if let Some(s) = args.get("render-backend") {
+        config.render_backend = RenderBackend::from_label(s)
+            .ok_or_else(|| anyhow::anyhow!("--render-backend must be scalar|lanes, got '{s}'"))?;
+    }
     let mut server = RenderServer::new(scene, config);
     println!(
         "multi-viewer server: {} gaussians, {n_viewers} viewers × {frames} frames @ \
@@ -321,6 +350,22 @@ fn main() -> anyhow::Result<()> {
         contended_serial.wall_s, contended.wall_s
     );
 
+    // ---- render-backend probe (scalar vs lane-batched blend datapath) --
+    // Numeric frames this time: the blend stage shades every pixel, so
+    // `blend_s` is dominated by the rasterizer inner loop the lane kernel
+    // vectorizes. Images and NMC stats are bit-identical across backends
+    // (asserted by `tests/render_backend.rs` and the CI report diff);
+    // only wall-clock may differ.
+    let wall_rb_scalar = backend_probe(&server, &specs[0], threads, RenderBackend::Scalar);
+    let wall_rb_lanes = backend_probe(&server, &specs[0], threads, RenderBackend::Lanes);
+    let backend_speedup = wall_rb_scalar.blend_s / wall_rb_lanes.blend_s.max(1e-12);
+    println!("\nrender backend (numeric blend datapath, {threads} threads):");
+    println!(
+        "  blend scalar {:.3} ms → lanes {:.3} ms  ({backend_speedup:.2}x)",
+        wall_rb_scalar.blend_s * 1e3,
+        wall_rb_lanes.blend_s * 1e3
+    );
+
     let mem = contended
         .contended_mem
         .as_ref()
@@ -394,6 +439,8 @@ fn main() -> anyhow::Result<()> {
         )
         .set("stage_wall_serial", stage_wall_json(&wall_serial))
         .set("stage_wall_parallel", stage_wall_json(&wall_par))
+        .set("stage_wall_render_scalar", stage_wall_json(&wall_rb_scalar))
+        .set("stage_wall_render_lanes", stage_wall_json(&wall_rb_lanes))
         .set(
             "speedup_vs_serial",
             Json::obj()
@@ -401,6 +448,7 @@ fn main() -> anyhow::Result<()> {
                 .set("blend", blend_speedup)
                 .set("frame", frame_speedup)
                 .set("contended", contended_speedup)
+                .set("render_backend", backend_speedup)
                 .set("sessions", sessions_speedup),
         )
         .set("contended_wall_serial_s", contended_serial.wall_s)

@@ -1,8 +1,9 @@
 fn main() {
-    use gaucim::coordinator::App;
-    use gaucim::scene::synth::SceneKind;
-    use gaucim::pipeline::FramePipeline;
     use gaucim::camera::ViewCondition;
+    use gaucim::coordinator::App;
+    use gaucim::pipeline::FramePipeline;
+    use gaucim::render::RenderBackend;
+    use gaucim::scene::synth::SceneKind;
     use std::time::Instant;
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(600_000);
@@ -12,9 +13,25 @@ fn main() {
     let t0 = Instant::now();
     let mut p = FramePipeline::new(&app.scene, app.config.clone());
     eprintln!("build (grid+layout): {:.1} ms", t0.elapsed().as_secs_f64()*1e3);
+    eprintln!("render backend: {}", app.config.render_backend.label());
     for (i, (cam, t)) in traj.iter().enumerate() {
         let t0 = Instant::now();
         let r = p.render_frame(cam, *t, false);
         eprintln!("frame {i}: {:.1} ms (visible {})", t0.elapsed().as_secs_f64()*1e3, r.n_visible);
+    }
+    // Numeric blend datapath: one shaded frame per backend (bit-identical
+    // pixels, different wall-clock — the lane kernel is the fast path).
+    for backend in [RenderBackend::Scalar, RenderBackend::Lanes] {
+        let cfg = app.config.clone().with_render_backend(backend);
+        let mut p = FramePipeline::new(&app.scene, cfg);
+        let (cam, t) = &traj[0];
+        let t0 = Instant::now();
+        let r = p.render_frame(cam, *t, true);
+        eprintln!(
+            "numeric frame [{}]: {:.1} ms (visible {})",
+            backend.label(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            r.n_visible
+        );
     }
 }

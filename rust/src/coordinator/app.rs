@@ -135,7 +135,8 @@ impl App {
             self.config.dcim.area_mm2,
             self.scene.dynamic,
         );
-        let reference = ReferenceRenderer::new(self.config.width, self.config.height);
+        let reference = ReferenceRenderer::new(self.config.width, self.config.height)
+            .with_backend(self.config.render_backend);
         let ref_img = reference.render(&self.scene, &cam, t);
         let image = r.image.expect("rendered");
         let p = psnr(&ref_img, &image);
@@ -345,7 +346,8 @@ pub(crate) fn run_frames_report(
     let width = pipeline.config.width;
     let height = pipeline.config.height;
     let dcim_area_mm2 = pipeline.config.dcim.area_mm2;
-    let reference = ReferenceRenderer::new(width, height);
+    let reference =
+        ReferenceRenderer::new(width, height).with_backend(pipeline.config.render_backend);
 
     let mut agg = SequenceAgg::new();
     for (i, (cam, t)) in seq.iter().enumerate() {

@@ -37,7 +37,7 @@ impl ExperimentConfig {
             "name", "scene", "gaussians", "seed", "width", "height",
             "condition", "frames", "psnr_every", "grid_n", "atg_threshold",
             "tile_block", "n_buckets", "use_drfc", "use_atg", "use_aii",
-            "sram_kb", "threads", "report_json", "frame_ppm",
+            "sram_kb", "threads", "render_backend", "report_json", "frame_ppm",
         ];
         if let Json::Obj(m) = doc {
             for k in m.keys() {
@@ -84,6 +84,12 @@ impl ExperimentConfig {
         // Executor threads: 0 = auto (PALLAS_THREADS env, else available
         // parallelism). Stat outputs are thread-count invariant.
         pipeline.threads = get_usize("threads", 0);
+        // Render backend: scalar | lanes (default: PALLAS_RENDER_BACKEND
+        // env, else lanes). Stat outputs are backend invariant too.
+        if let Some(s) = doc.get("render_backend").and_then(Json::as_str) {
+            pipeline.render_backend = crate::render::RenderBackend::from_label(s)
+                .ok_or_else(|| anyhow::anyhow!("render_backend must be scalar|lanes, got '{s}'"))?;
+        }
         pipeline.atg = AtgConfig {
             user_threshold: doc
                 .get("atg_threshold")

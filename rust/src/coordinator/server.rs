@@ -458,7 +458,8 @@ impl RenderServer {
         let port_ids: Vec<(PortId, PortId)> = built.iter().map(|&(_, ports)| ports).collect();
         let trajectories: Vec<Vec<(Camera, f32)>> =
             specs.iter().map(|s| self.trajectory(s)).collect();
-        let reference = ReferenceRenderer::new(self.config.width, self.config.height);
+        let reference = ReferenceRenderer::new(self.config.width, self.config.height)
+            .with_backend(self.config.render_backend);
 
         let n = specs.len();
         let max_frames = specs.iter().map(|s| s.frames).max().unwrap_or(0);

@@ -708,7 +708,8 @@ impl<'a> SessionScheduler<'a> {
         // lockstep path (full intra-frame parallelism per lone frame)
         // instead of one-thread trace pipelines.
         let engine = server.round_engine(script.peak_concurrency());
-        let reference = ReferenceRenderer::new(server.config.width, server.config.height);
+        let reference = ReferenceRenderer::new(server.config.width, server.config.height)
+            .with_backend(server.config.render_backend);
         let fallback_bytes_per_frame = shared.prep.layout.total_span_bytes() as f64 / 10.0;
         let mut seeded = std::mem::take(&mut self.seeded);
 

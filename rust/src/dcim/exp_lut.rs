@@ -87,6 +87,52 @@ impl ExpLut {
         acc * shifted
     }
 
+    /// Lane-vectorized [`ExpLut::exp2`]: 8 exponents at once for the
+    /// lane-batched rasterizer ([`crate::render::lanes`]). Each lane runs
+    /// the *identical* scalar op sequence — per-lane `floor`/subtract for
+    /// the bit-decomposed integer part, per-lane fraction LUT gather
+    /// through the same four FP16 cascade stages, same saturating casts —
+    /// so `exp2_lanes(x)[i]` is bit-identical to `exp2(x[i])` for every
+    /// input including ±∞, NaN, and subnormal-producing exponents. The
+    /// non-finite early return of the scalar path becomes a final
+    /// per-lane patch (the discarded finite-path arithmetic is defined
+    /// for any input — Rust float→int casts saturate).
+    pub fn exp2_lanes(&self, x: [f32; 8]) -> [f32; 8] {
+        // SIF decouple, element-wise.
+        let scale = (1u64 << self.frac_bits) as f32;
+        let q_max = (1u32 << self.frac_bits) - 1;
+        let mut int = [0.0f32; 8];
+        let mut q = [0u32; 8];
+        for i in 0..8 {
+            int[i] = x[i].floor();
+            let frac = x[i] - int[i];
+            q[i] = ((frac * scale) as u32).min(q_max);
+        }
+
+        // Cascaded LUT stages: per-lane gather, shared segment table.
+        let mask = (1u32 << self.bits_per_segment) - 1;
+        let mut acc = [1.0f32; 8];
+        for (k, seg) in self.lut.iter().enumerate() {
+            let shift = self.frac_bits - self.bits_per_segment * (k as u32 + 1);
+            for i in 0..8 {
+                let idx = ((q[i] >> shift) & mask) as usize;
+                acc[i] = f16::quantize(acc[i] * seg[idx.min(ENTRIES_PER_SEGMENT - 1)]);
+            }
+        }
+
+        let mut out = [0.0f32; 8];
+        for i in 0..8 {
+            out[i] = if x[i].is_finite() {
+                acc[i] * libm_exp2i(int[i] as i32)
+            } else if x[i] > 0.0 {
+                f32::INFINITY
+            } else {
+                0.0
+            };
+        }
+        out
+    }
+
     /// `e^x` with the ln2 base conversion applied here (in deployment the
     /// 1/ln2 is folded into the parameters offline — see `mapping`).
     pub fn exp(&self, x: f32) -> f32 {

@@ -76,6 +76,18 @@ impl NmcAccumulator {
         s
     }
 
+    /// Charge `blend_ops` blend steps of which `saturated` crossed the
+    /// [`T_MIN`] early-termination threshold — the lane-batched kernel's
+    /// counter path ([`crate::render::lanes`]): it performs the blend
+    /// arithmetic lane-wise itself and tallies the popcounts here, so the
+    /// integer counters (and the op-derived energy) stay bit-identical to
+    /// per-pixel [`NmcAccumulator::blend`] calls.
+    #[inline]
+    pub fn tally(&mut self, blend_ops: u64, saturated: u64) {
+        self.stats.blend_ops += blend_ops;
+        self.stats.saturated += saturated;
+    }
+
     /// Fold a partial (per-tile) counter set in; energy re-derives at
     /// [`NmcAccumulator::stats`] time.
     pub fn absorb(&mut self, o: &NmcStats) {

@@ -14,7 +14,7 @@ use gaucim::camera::ViewCondition;
 use gaucim::coordinator::App;
 use gaucim::culling::{GridConfig, GridPartition};
 use gaucim::pipeline::{profile_breakdown, PipelineConfig};
-use gaucim::render::ppm;
+use gaucim::render::{ppm, RenderBackend};
 use gaucim::scene::synth::SceneKind;
 use gaucim::scene::DramLayout;
 use gaucim::util::cli::Args;
@@ -44,7 +44,7 @@ fn usage() {
         "usage: gaucim <render|sequence|profile|table1|pjrt|run|info> \
          [--scene static|dynamic] [--gaussians N] [--frames N] \
          [--width W --height H] [--condition average|extreme|static] \
-         [--seed S] [--threads N] [--out FILE]"
+         [--seed S] [--threads N] [--render-backend scalar|lanes] [--out FILE]"
     );
 }
 
@@ -74,6 +74,17 @@ fn build_app(args: &Args) -> App {
     // parallelism). Simulated stats are thread-count invariant.
     let threads = args.get_usize("threads", 0);
     app.config = app.config.clone().with_resolution(w, h).with_threads(threads);
+    // Blend datapath: scalar | lanes (bit-identical outputs; lanes is the
+    // faster default — see rust/src/render/README.md).
+    if let Some(s) = args.get("render-backend") {
+        match RenderBackend::from_label(s) {
+            Some(b) => app.config.render_backend = b,
+            None => {
+                eprintln!("--render-backend must be scalar|lanes, got '{s}'");
+                std::process::exit(2);
+            }
+        }
+    }
     app
 }
 

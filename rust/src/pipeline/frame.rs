@@ -19,7 +19,7 @@ use crate::memory::sram::{SramBuffer, SramConfig};
 use crate::memory::{
     MemMode, MemPort, MemSimConfig, MemStage, MemorySystem, PortId, ShardMap, TrafficLog,
 };
-use crate::render::{HwRenderer, Image};
+use crate::render::{HwRenderer, Image, RenderBackend};
 use crate::scene::{DramLayout, Gaussian4D, Scene};
 use crate::sorting::{SortEngine, SortHwConfig, SortStats};
 use crate::tiles::atg::{Atg, AtgConfig};
@@ -77,6 +77,12 @@ pub struct PipelineConfig {
     /// `available_parallelism`). Every simulated stat output is
     /// bit-identical at any value — this knob only trades host wall-clock.
     pub threads: usize,
+    /// Blend datapath of the numeric rasterizers (scalar per-pixel loop
+    /// or the 8-wide lane kernel). Like `threads`, every output —
+    /// pixels, NMC statistics, report JSON — is bit-identical at either
+    /// value; the knob only trades host wall-clock. Defaults from the
+    /// `PALLAS_RENDER_BACKEND` environment variable.
+    pub render_backend: RenderBackend,
 }
 
 impl PipelineConfig {
@@ -96,6 +102,7 @@ impl PipelineConfig {
             sram_bytes: 256 * 1024,
             mem: MemSimConfig::default(),
             threads: 0,
+            render_backend: RenderBackend::from_env(),
         }
     }
 
@@ -120,6 +127,12 @@ impl PipelineConfig {
     /// Pin the executor thread count (`0` = auto).
     pub fn with_threads(mut self, threads: usize) -> PipelineConfig {
         self.threads = threads;
+        self
+    }
+
+    /// Pin the render backend (overrides the environment default).
+    pub fn with_render_backend(mut self, backend: RenderBackend) -> PipelineConfig {
+        self.render_backend = backend;
         self
     }
 
@@ -400,7 +413,10 @@ impl<'a> FramePipeline<'a> {
                     config.sort_hw,
                 ),
             },
-            blend_stage: BlendStage::new(sram, HwRenderer::new(config.width, config.height)),
+            blend_stage: BlendStage::new(
+                sram,
+                HwRenderer::new(config.width, config.height).with_backend(config.render_backend),
+            ),
             ctx,
             tile_grid,
             grid: prep.grid,
@@ -515,7 +531,11 @@ impl<'a> FramePipeline<'a> {
     /// [`FrameCtx::scratch_capacities`]) — steady-state frames must leave
     /// this unchanged (the zero-allocation contract).
     pub fn scratch_capacities(&self) -> Vec<usize> {
-        self.ctx.scratch_capacities()
+        let mut caps = self.ctx.scratch_capacities();
+        // The rasterizer's pooled scratch (depth orders, NMC partials,
+        // debug seen-bitmap) is part of the same contract.
+        caps.extend(self.blend_stage.render_scratch.capacities());
+        caps
     }
 
     /// Detach this pipeline's retained per-session state — the pooled
@@ -600,10 +620,21 @@ impl<'a> FramePipeline<'a> {
         let tile_grid = TileGrid::new(config.width, config.height);
         let (cull_port, blend_port, mem_sys, owns_mem) =
             Self::make_ports(&config, &prep, choice);
-        let SessionState { mut ctx, group_stage, sort_stage, blend_stage, frame_idx, host, .. } =
-            state;
+        let SessionState {
+            mut ctx,
+            group_stage,
+            sort_stage,
+            mut blend_stage,
+            frame_idx,
+            host,
+            ..
+        } = state;
         ctx.cull_port = cull_port;
         ctx.blend_port = blend_port;
+        // The blend datapath (scalar vs lane-batched) is host-side, not
+        // state-bearing — outputs are bit-identical — so the resumed run's
+        // choice wins over whatever the session was detached under.
+        blend_stage.renderer.backend = config.render_backend;
         // The executor pool is host-side state, resized to this run's
         // thread count (simulated stats are thread-count invariant).
         let threads = config.resolved_threads();

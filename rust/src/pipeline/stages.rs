@@ -41,7 +41,7 @@ use crate::dcim::nmc::NmcAccumulator;
 use crate::energy::ops;
 use crate::memory::sram::SramBuffer;
 use crate::memory::SramStats;
-use crate::render::HwRenderer;
+use crate::render::{HwRenderer, RenderScratch};
 use crate::sorting::{conventional_bucket_bitonic_into, AiiSort, SortEngine, SortStats};
 use crate::tiles::atg::Atg;
 use crate::tiles::intersect::{project_gaussian, Splat2D};
@@ -554,11 +554,20 @@ pub struct BlendStage {
     pub renderer: HwRenderer,
     /// Live early-termination factor (calibrated by rendered frames).
     pub et_factor: f64,
+    /// Pooled rasterizer scratch (depth orders, NMC partials) — part of
+    /// the zero-allocation contract, carried across detach/resume with
+    /// the stage.
+    pub render_scratch: RenderScratch,
 }
 
 impl BlendStage {
     pub fn new(sram: SramBuffer, renderer: HwRenderer) -> BlendStage {
-        BlendStage { sram, renderer, et_factor: EARLY_TERMINATION_FACTOR }
+        BlendStage {
+            sram,
+            renderer,
+            et_factor: EARLY_TERMINATION_FACTOR,
+            render_scratch: RenderScratch::default(),
+        }
     }
 
     pub fn run(
@@ -711,13 +720,18 @@ impl BlendStage {
         ctx.energy.sram_pj += ctx.traffic.blend_sram.energy_pj;
 
         // Numeric render (optional) gives the exact blended-pair count.
+        // Reuses the bins `IntersectStage` left in the context (identical
+        // to a fresh `bin_splats` pass by that stage's fan-out contract),
+        // so the hot path never re-bins.
         let mut nmc = NmcAccumulator::new();
         let (image, blend_pairs) = if render_image {
-            let img = self.renderer.render_splats_ordered_par(
+            let img = self.renderer.render_splats_binned_par(
                 &ctx.splats,
+                &ctx.bins,
                 &ctx.tile_order,
                 &mut nmc,
                 pool,
+                &mut self.render_scratch,
             );
             let exact = nmc.stats().blend_ops;
             if blend_pairs_upper > 0 {

@@ -10,6 +10,7 @@
 //! PSNR(reference, hw) is the paper's §3.4 fidelity claim: 12-bit fractions
 //! keep PSNR undegraded.
 
+use super::lanes::{self, RenderBackend, LANES};
 use super::Image;
 use crate::camera::Camera;
 use crate::dcim::nmc::{NmcAccumulator, NmcStats, PixelState};
@@ -18,9 +19,43 @@ use crate::math::f16;
 use crate::pipeline::par::{SharedSlice, WorkerPool};
 use crate::scene::Scene;
 use crate::tiles::intersect::{bin_splats, project_gaussian, splat_exponent, Splat2D, TileGrid};
+use crate::tiles::TILE_PX;
 
 /// Exponent cutoff shared with the reference renderer.
 use super::reference::EXP_CUTOFF;
+
+/// Pooled rasterizer scratch: per-worker depth-order buffers, the
+/// per-tile NMC partials of the parallel reduction, and the debug-only
+/// duplicate-tile bitmap. Hold one per long-lived renderer call site
+/// (`BlendStage` owns one) so steady-state rendering allocates nothing —
+/// the `FrameCtx` zero-allocation contract extended to the rasterizer.
+#[derive(Debug, Default)]
+pub struct RenderScratch {
+    /// Per-worker front-to-back depth order (index 0 serves the serial path).
+    order: Vec<Vec<u32>>,
+    /// Per-tile-position NMC partials (reduced in tile order).
+    tile_stats: Vec<NmcStats>,
+    /// Pooled seen-bitmap for the debug-only disjoint-tile check.
+    seen: Vec<bool>,
+}
+
+impl RenderScratch {
+    fn ensure_workers(&mut self, n: usize) {
+        if self.order.len() < n {
+            self.order.resize_with(n, Vec::new);
+        }
+    }
+
+    /// Capacities of the pooled buffers (zero-allocation contract probes).
+    pub fn capacities(&self) -> Vec<usize> {
+        vec![
+            self.order.capacity(),
+            self.order.iter().map(Vec::capacity).sum(),
+            self.tile_stats.capacity(),
+            self.seen.capacity(),
+        ]
+    }
+}
 
 /// The hardware-model renderer.
 #[derive(Debug)]
@@ -29,6 +64,10 @@ pub struct HwRenderer {
     pub exp: ExpLut,
     /// Quantize parameters through FP16 storage (paper's precision).
     pub fp16_params: bool,
+    /// Blend datapath: the scalar per-pixel loop or the 8-wide lane
+    /// kernel ([`crate::render::lanes`]) — bit-identical outputs, only
+    /// host wall-clock differs.
+    pub backend: RenderBackend,
 }
 
 impl HwRenderer {
@@ -37,12 +76,25 @@ impl HwRenderer {
             grid: TileGrid::new(width, height),
             exp: ExpLut::paper(),
             fp16_params: true,
+            backend: RenderBackend::from_env(),
         }
     }
 
     /// Ablation constructor with a custom-precision LUT.
     pub fn with_exp(width: usize, height: usize, exp: ExpLut) -> HwRenderer {
-        HwRenderer { grid: TileGrid::new(width, height), exp, fp16_params: true }
+        HwRenderer {
+            grid: TileGrid::new(width, height),
+            exp,
+            fp16_params: true,
+            backend: RenderBackend::from_env(),
+        }
+    }
+
+    /// Pin the blend datapath (builder form — `new` reads the
+    /// `PALLAS_RENDER_BACKEND` environment default).
+    pub fn with_backend(mut self, backend: RenderBackend) -> HwRenderer {
+        self.backend = backend;
+        self
     }
 
     /// Projection with FP16 parameter quantization (same frustum cull as
@@ -73,16 +125,17 @@ impl HwRenderer {
     }
 
     /// Front-to-back depth order of one tile's bin (stable by splat index
-    /// on ties — the exact order the serial rasterizer always used).
-    fn tile_depth_order(&self, splats: &[Splat2D], bin: &[u32]) -> Vec<u32> {
-        let mut order: Vec<u32> = bin.to_vec();
+    /// on ties — the exact order the serial rasterizer always used),
+    /// written into a pooled buffer.
+    fn tile_depth_order_into(&self, splats: &[Splat2D], bin: &[u32], order: &mut Vec<u32>) {
+        order.clear();
+        order.extend_from_slice(bin);
         order.sort_by(|&a, &b| {
             splats[a as usize]
                 .depth
                 .partial_cmp(&splats[b as usize].depth)
                 .unwrap_or(std::cmp::Ordering::Equal)
         });
-        order
     }
 
     /// Blend one pixel through the depth-ordered splat list (merged
@@ -118,40 +171,88 @@ impl HwRenderer {
         state.rgb
     }
 
+    /// Shade one tile row `[x0, x0 + row.len()) × {py}` into `row`.
+    /// The lanes backend batches 8-pixel spans through
+    /// [`lanes::shade_span_hw`] and falls back to the scalar
+    /// [`HwRenderer::shade_pixel`] for the ragged tail (tile widths not
+    /// divisible by [`LANES`]) — which is also the whole row on the scalar
+    /// backend, so both paths are literally the same code for the tail.
+    #[inline]
+    fn shade_row(
+        &self,
+        splats: &[Splat2D],
+        order: &[u32],
+        x0: usize,
+        py: usize,
+        nmc: &mut NmcAccumulator,
+        row: &mut [[f32; 3]],
+    ) {
+        let x1 = x0 + row.len();
+        let mut px = x0;
+        if self.backend == RenderBackend::Lanes {
+            while px + LANES <= x1 {
+                let span = lanes::shade_span_hw(&self.exp, splats, order, px, py, nmc);
+                row[px - x0..px - x0 + LANES].copy_from_slice(&span);
+                px += LANES;
+            }
+        }
+        while px < x1 {
+            row[px - x0] = self.shade_pixel(splats, order, px, py, nmc);
+            px += 1;
+        }
+    }
+
     /// Rasterize pre-projected splats visiting tiles in `tile_order`,
-    /// charging blend arithmetic to `nmc`.
+    /// charging blend arithmetic to `nmc` — convenience wrapper that bins
+    /// the splats itself (standalone / oracle use). The stage graph calls
+    /// [`HwRenderer::render_splats_binned`] with the bins `IntersectStage`
+    /// already produced.
     pub fn render_splats_ordered(
         &self,
         splats: &[Splat2D],
         tile_order: &[usize],
         nmc: &mut NmcAccumulator,
     ) -> Image {
-        let mut img = Image::new(self.grid.width, self.grid.height);
         let bins = bin_splats(&self.grid, splats);
+        self.render_splats_binned(splats, &bins, tile_order, nmc, &mut RenderScratch::default())
+    }
+
+    /// Rasterize with caller-provided per-tile bins (must be the
+    /// ascending-splat-index bins `bin_splats` produces for this grid —
+    /// exactly what `IntersectStage` leaves in `FrameCtx::bins`, so the
+    /// hot path never re-bins) and pooled scratch.
+    pub fn render_splats_binned(
+        &self,
+        splats: &[Splat2D],
+        bins: &[Vec<u32>],
+        tile_order: &[usize],
+        nmc: &mut NmcAccumulator,
+        scratch: &mut RenderScratch,
+    ) -> Image {
+        let mut img = Image::new(self.grid.width, self.grid.height);
+        scratch.ensure_workers(1);
+        let order = &mut scratch.order[0];
+        let mut row = [[0.0f32; 3]; TILE_PX];
 
         for &tile in tile_order {
             if bins[tile].is_empty() {
                 continue;
             }
-            let order = self.tile_depth_order(splats, &bins[tile]);
+            self.tile_depth_order_into(splats, &bins[tile], order);
             let (x0, y0, x1, y1) = self.grid.tile_pixels(tile);
+            let w = x1 - x0;
             for py in y0..y1 {
-                for px in x0..x1 {
-                    let rgb = self.shade_pixel(splats, &order, px, py, nmc);
-                    img.set_pixel(px, py, rgb);
+                self.shade_row(splats, order, x0, py, nmc, &mut row[..w]);
+                for (i, rgb) in row[..w].iter().enumerate() {
+                    img.set_pixel(x0 + i, py, *rgb);
                 }
             }
         }
         img
     }
 
-    /// Tile-parallel rasterization on a [`WorkerPool`]. Tiles own disjoint
-    /// pixel rectangles, so workers write the image without coordination
-    /// (`tile_order` must be a permutation of the tile indices, which every
-    /// ATG/raster order is); per-tile NMC counters reduce in tile order and
-    /// energy derives from op counts, so pixels *and* statistics are
-    /// bit-identical to [`HwRenderer::render_splats_ordered`] at any worker
-    /// count.
+    /// Tile-parallel wrapper that bins the splats itself — see
+    /// [`HwRenderer::render_splats_binned_par`].
     pub fn render_splats_ordered_par(
         &self,
         splats: &[Splat2D],
@@ -159,48 +260,100 @@ impl HwRenderer {
         nmc: &mut NmcAccumulator,
         pool: &WorkerPool,
     ) -> Image {
-        let mut img = Image::new(self.grid.width, self.grid.height);
         let bins = bin_splats(&self.grid, splats);
+        self.render_splats_binned_par(
+            splats,
+            &bins,
+            tile_order,
+            nmc,
+            pool,
+            &mut RenderScratch::default(),
+        )
+    }
+
+    /// Tile-parallel rasterization on a [`WorkerPool`] with caller-provided
+    /// bins and pooled scratch. Tiles own disjoint pixel rectangles, so
+    /// workers write the image without coordination (`tile_order` must be a
+    /// permutation of the tile indices, which every ATG/raster order is);
+    /// per-tile NMC counters reduce in tile order and energy derives from
+    /// op counts, so pixels *and* statistics are bit-identical to
+    /// [`HwRenderer::render_splats_binned`] at any worker count — and, via
+    /// the lane kernel's masked-select construction, at either backend.
+    pub fn render_splats_binned_par(
+        &self,
+        splats: &[Splat2D],
+        bins: &[Vec<u32>],
+        tile_order: &[usize],
+        nmc: &mut NmcAccumulator,
+        pool: &WorkerPool,
+        scratch: &mut RenderScratch,
+    ) -> Image {
+        let mut img = Image::new(self.grid.width, self.grid.height);
         let n_pos = tile_order.len();
         let width = self.grid.width;
-        // The disjoint-pixel contract requires each tile at most once —
-        // a repeated tile would hand the same pixels to two workers.
-        debug_assert!(
-            {
-                let mut seen = vec![false; self.grid.n_tiles()];
-                tile_order.iter().all(|&tile| !std::mem::replace(&mut seen[tile], true))
-            },
-            "tile_order must not repeat tiles (disjoint-pixel fan-out contract)"
-        );
-        let mut tile_stats: Vec<NmcStats> = vec![NmcStats::default(); n_pos];
         let t = pool.threads().max(1);
+        scratch.ensure_workers(t);
+        // The disjoint-pixel contract requires each tile at most once —
+        // a repeated tile would hand the same pixels to two workers. The
+        // seen-bitmap is pooled (set bits are cleared again afterwards).
+        if cfg!(debug_assertions) {
+            scratch.seen.resize(self.grid.n_tiles(), false);
+            for &tile in tile_order {
+                assert!(
+                    !std::mem::replace(&mut scratch.seen[tile], true),
+                    "tile_order must not repeat tiles (disjoint-pixel fan-out contract)"
+                );
+            }
+            for &tile in tile_order {
+                scratch.seen[tile] = false;
+            }
+        }
+        let RenderScratch { order, tile_stats, .. } = scratch;
+        tile_stats.clear();
+        tile_stats.resize(n_pos, NmcStats::default());
         {
             let data_sl = SharedSlice::new(img.data.as_mut_slice());
             let stats_sl = SharedSlice::new(tile_stats.as_mut_slice());
-            let bins = &bins;
+            let order_sl = SharedSlice::new(order.as_mut_slice());
             pool.scope(|scope| {
                 for w in 0..t {
                     scope.spawn(move || {
+                        // SAFETY: one depth-order buffer per worker.
+                        let order = unsafe { order_sl.get_mut(w) };
+                        let mut row = [[0.0f32; 3]; TILE_PX];
                         let mut pos = w;
                         while pos < n_pos {
                             let tile = tile_order[pos];
-                            if !bins[tile].is_empty() {
-                                let order = self.tile_depth_order(splats, &bins[tile]);
+                            if bins[tile].is_empty() {
+                                // Every order position writes its stats
+                                // cell, so the reduction is total by
+                                // construction.
+                                // SAFETY: one stats cell per position.
+                                unsafe { *stats_sl.get_mut(pos) = NmcStats::default() };
+                            } else {
+                                self.tile_depth_order_into(splats, &bins[tile], order);
                                 let mut local = NmcAccumulator::new();
                                 let (x0, y0, x1, y1) = self.grid.tile_pixels(tile);
+                                let tw = x1 - x0;
                                 for py in y0..y1 {
-                                    for px in x0..x1 {
-                                        let rgb =
-                                            self.shade_pixel(splats, &order, px, py, &mut local);
-                                        let i = (py * width + px) * 3;
+                                    self.shade_row(
+                                        splats,
+                                        order,
+                                        x0,
+                                        py,
+                                        &mut local,
+                                        &mut row[..tw],
+                                    );
+                                    for (i, rgb) in row[..tw].iter().enumerate() {
+                                        let j = (py * width + x0 + i) * 3;
                                         // SAFETY: tiles cover disjoint pixel
                                         // rectangles and order positions are
                                         // strided by worker — no index is
                                         // written twice.
                                         unsafe {
-                                            *data_sl.get_mut(i) = rgb[0];
-                                            *data_sl.get_mut(i + 1) = rgb[1];
-                                            *data_sl.get_mut(i + 2) = rgb[2];
+                                            *data_sl.get_mut(j) = rgb[0];
+                                            *data_sl.get_mut(j + 1) = rgb[1];
+                                            *data_sl.get_mut(j + 2) = rgb[2];
                                         }
                                     }
                                 }
@@ -214,7 +367,7 @@ impl HwRenderer {
             });
         }
         // Reduce the per-tile counters in fixed tile order.
-        for s in &tile_stats {
+        for s in tile_stats.iter() {
             nmc.absorb(s);
         }
         img

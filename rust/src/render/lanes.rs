@@ -1,0 +1,329 @@
+//! Lane-batched (SIMD-style) blend datapath — 8 horizontally-adjacent
+//! pixels per iteration.
+//!
+//! Std-only: [`F32x8`] is a plain `[f32; 8]` with element-wise operations
+//! the autovectorizer turns into vector code (no nightly `std::simd`, no
+//! dependencies). The payoff is not reordered arithmetic — it is amortized
+//! per-splat work (one depth-order walk, one parameter load per 8 pixels)
+//! plus straight-line loop bodies the compiler can vectorize.
+//!
+//! **Bit-identity contract.** Every lane performs the *identical scalar
+//! f32 op sequence* the per-pixel kernels run — same expression shapes,
+//! same evaluation order, same `f16` quantization points, same LUT
+//! gathers — and lanes that the scalar code would have skipped
+//! (`continue`) or stopped (`break` on saturation) are masked out with
+//! selects that leave their state untouched. IEEE f32 arithmetic is
+//! deterministic per op, so pixels *and* NMC integer op-counts are
+//! byte-identical to the scalar backend (see `render/README.md`).
+
+use crate::dcim::nmc::{NmcAccumulator, T_MIN};
+use crate::dcim::ExpLut;
+use crate::math::f16;
+use crate::render::reference::EXP_CUTOFF;
+use crate::tiles::intersect::Splat2D;
+
+/// Lane width of the batched kernels (one tile row holds two spans).
+pub const LANES: usize = 8;
+
+/// Which blend datapath the rasterizers run. Both produce bit-identical
+/// pixels and NMC statistics; the choice only trades host wall-clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RenderBackend {
+    /// The original per-pixel `shade_pixel` loop.
+    Scalar,
+    /// The 8-wide lane-batched kernel (this module).
+    Lanes,
+}
+
+impl RenderBackend {
+    /// Default when neither config nor environment says otherwise.
+    pub const DEFAULT: RenderBackend = RenderBackend::Lanes;
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RenderBackend::Scalar => "scalar",
+            RenderBackend::Lanes => "lanes",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<RenderBackend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(RenderBackend::Scalar),
+            "lanes" => Some(RenderBackend::Lanes),
+            _ => None,
+        }
+    }
+
+    /// Resolve from the `PALLAS_RENDER_BACKEND` environment variable
+    /// (`scalar` | `lanes`), else [`RenderBackend::DEFAULT`] — the same
+    /// shape as `resolve_threads`/`PALLAS_THREADS`.
+    pub fn from_env() -> RenderBackend {
+        std::env::var("PALLAS_RENDER_BACKEND")
+            .ok()
+            .and_then(|s| RenderBackend::from_label(&s))
+            .unwrap_or(RenderBackend::DEFAULT)
+    }
+}
+
+/// Eight f32 lanes; every operation is element-wise (same op per lane).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct F32x8(pub [f32; LANES]);
+
+impl F32x8 {
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; LANES])
+    }
+
+    #[inline(always)]
+    pub fn from_fn(f: impl FnMut(usize) -> f32) -> F32x8 {
+        F32x8(std::array::from_fn(f))
+    }
+
+    #[inline(always)]
+    pub fn map(self, mut f: impl FnMut(f32) -> f32) -> F32x8 {
+        F32x8(std::array::from_fn(|i| f(self.0[i])))
+    }
+
+    /// Per-lane `a < b` (false for NaN operands, like the scalar `<`).
+    #[inline(always)]
+    pub fn lt(self, o: F32x8) -> Mask8 {
+        Mask8(std::array::from_fn(|i| self.0[i] < o.0[i]))
+    }
+}
+
+impl std::ops::Add for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn add(self, o: F32x8) -> F32x8 {
+        F32x8(std::array::from_fn(|i| self.0[i] + o.0[i]))
+    }
+}
+
+impl std::ops::Sub for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn sub(self, o: F32x8) -> F32x8 {
+        F32x8(std::array::from_fn(|i| self.0[i] - o.0[i]))
+    }
+}
+
+impl std::ops::Mul for F32x8 {
+    type Output = F32x8;
+    #[inline(always)]
+    fn mul(self, o: F32x8) -> F32x8 {
+        F32x8(std::array::from_fn(|i| self.0[i] * o.0[i]))
+    }
+}
+
+/// Eight boolean lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mask8(pub [bool; LANES]);
+
+impl Mask8 {
+    pub const ALL: Mask8 = Mask8([true; LANES]);
+    pub const NONE: Mask8 = Mask8([false; LANES]);
+
+    #[inline(always)]
+    pub fn any(self) -> bool {
+        self.0.iter().any(|&b| b)
+    }
+
+    /// Number of set lanes (the NMC op-count increment).
+    #[inline(always)]
+    pub fn count(self) -> u64 {
+        self.0.iter().map(|&b| b as u64).sum()
+    }
+
+    #[inline(always)]
+    pub fn and(self, o: Mask8) -> Mask8 {
+        Mask8(std::array::from_fn(|i| self.0[i] && o.0[i]))
+    }
+
+    #[inline(always)]
+    pub fn and_not(self, o: Mask8) -> Mask8 {
+        Mask8(std::array::from_fn(|i| self.0[i] && !o.0[i]))
+    }
+
+    /// Per-lane `if mask { a } else { b }`.
+    #[inline(always)]
+    pub fn select(self, a: F32x8, b: F32x8) -> F32x8 {
+        F32x8(std::array::from_fn(|i| if self.0[i] { a.0[i] } else { b.0[i] }))
+    }
+}
+
+/// Per-lane merged exponent for 8 adjacent pixels of one row — the exact
+/// expression shape of [`splat_exponent`](crate::tiles::intersect::splat_exponent)
+/// (`dy` is row-constant, so its terms splat):
+/// `-0.5 * (a·dx·dx + (2a₁)·dx·dy + c·dy·dy)` with left-associated
+/// products and sums, identical per lane to the scalar evaluation.
+#[inline(always)]
+fn splat_exponent_lanes(s: &Splat2D, pxc: F32x8, pyc: f32) -> F32x8 {
+    let dx = pxc - F32x8::splat(s.mean.x);
+    let dy = pyc - s.mean.y;
+    let t1 = F32x8::splat(s.conic[0]) * dx * dx;
+    let t2 = F32x8::splat(2.0 * s.conic[1]) * dx * F32x8::splat(dy);
+    let t3 = F32x8::splat(s.conic[2] * dy * dy);
+    F32x8::splat(-0.5) * (t1 + t2 + t3)
+}
+
+/// Pixel-center x coordinates of the 8-lane span starting at `px0`.
+#[inline(always)]
+fn span_centers(px0: usize) -> F32x8 {
+    F32x8::from_fn(|i| (px0 + i) as f32 + 0.5)
+}
+
+/// Transpose three RGB lane vectors into 8 per-pixel triples.
+#[inline(always)]
+fn transpose_rgb(rgb: [F32x8; 3]) -> [[f32; 3]; LANES] {
+    std::array::from_fn(|i| [rgb[0].0[i], rgb[1].0[i], rgb[2].0[i]])
+}
+
+/// Hardware-path lane kernel: blend 8 adjacent pixels of row `py`
+/// (starting at `px0`) through the depth-ordered splat list, charging
+/// blend arithmetic to `nmc`. Bit-identical per lane to
+/// `HwRenderer::shade_pixel` — the skip masks are the *negations* of the
+/// scalar `continue` conditions (so NaN exponents take the same path) and
+/// saturation deactivates a lane exactly where the scalar loop breaks.
+pub fn shade_span_hw(
+    exp: &ExpLut,
+    splats: &[Splat2D],
+    order: &[u32],
+    px0: usize,
+    py: usize,
+    nmc: &mut NmcAccumulator,
+) -> [[f32; 3]; LANES] {
+    let pxc = span_centers(px0);
+    let pyc = py as f32 + 0.5;
+    let mut rgb = [F32x8::splat(0.0); 3];
+    let mut trans = F32x8::splat(1.0);
+    let mut active = Mask8::ALL;
+    let mut blend_ops = 0u64;
+    let mut saturated = 0u64;
+
+    let cutoff = F32x8::splat(EXP_CUTOFF);
+    let alpha_min = F32x8::splat(1.0 / 255.0);
+    let t_min = F32x8::splat(T_MIN);
+
+    for &si in order {
+        if !active.any() {
+            break;
+        }
+        let s = &splats[si as usize];
+        let e = splat_exponent_lanes(s, pxc, pyc);
+        let skip_far = e.lt(cutoff);
+        let e_hw = e.map(f16::quantize);
+        // DD3D-Flow: exponent pre-scaled by 1/ln2 offline.
+        let x = e_hw * F32x8::splat(std::f32::consts::LOG2_E);
+        let alpha = F32x8::splat(s.alpha_base) * F32x8(exp.exp2_lanes(x.0));
+        let skip_dim = alpha.lt(alpha_min);
+        let contribute = active.and_not(skip_far).and_not(skip_dim);
+        if !contribute.any() {
+            continue;
+        }
+        blend_ops += contribute.count();
+        // NmcAccumulator::blend, lane-wise with masked state updates.
+        let a = alpha.map(|v| v.clamp(0.0, 0.999));
+        let w = a * trans;
+        let color = [s.color.x, s.color.y, s.color.z];
+        for (acc, c) in rgb.iter_mut().zip(color) {
+            *acc = contribute.select(*acc + w * F32x8::splat(c), *acc);
+        }
+        let t_new = trans * (F32x8::splat(1.0) - a);
+        trans = contribute.select(t_new, trans);
+        let sat = contribute.and(t_new.lt(t_min));
+        saturated += sat.count();
+        active = active.and_not(sat);
+    }
+    nmc.tally(blend_ops, saturated);
+    transpose_rgb(rgb)
+}
+
+/// Reference-path lane kernel: exact `exp()` per lane, the precise op
+/// sequence of `ReferenceRenderer::render_splats`'s inner loop (note the
+/// reference clamps alpha with `.min(0.999)` *before* its dim-splat skip,
+/// and has no NMC counters).
+pub fn shade_span_reference(
+    splats: &[Splat2D],
+    order: &[u32],
+    px0: usize,
+    py: usize,
+) -> [[f32; 3]; LANES] {
+    let pxc = span_centers(px0);
+    let pyc = py as f32 + 0.5;
+    let mut rgb = [F32x8::splat(0.0); 3];
+    let mut trans = F32x8::splat(1.0);
+    let mut active = Mask8::ALL;
+
+    let cutoff = F32x8::splat(EXP_CUTOFF);
+    let alpha_min = F32x8::splat(1.0 / 255.0);
+
+    for &si in order {
+        if !active.any() {
+            break;
+        }
+        let s = &splats[si as usize];
+        let e = splat_exponent_lanes(s, pxc, pyc);
+        let skip_far = e.lt(cutoff);
+        let alpha = (F32x8::splat(s.alpha_base) * e.map(f32::exp)).map(|v| v.min(0.999));
+        let skip_dim = alpha.lt(alpha_min);
+        let contribute = active.and_not(skip_far).and_not(skip_dim);
+        if !contribute.any() {
+            continue;
+        }
+        let w = alpha * trans;
+        let color = [s.color.x, s.color.y, s.color.z];
+        for (acc, c) in rgb.iter_mut().zip(color) {
+            *acc = contribute.select(*acc + w * F32x8::splat(c), *acc);
+        }
+        let t_new = trans * (F32x8::splat(1.0) - alpha);
+        trans = contribute.select(t_new, trans);
+        let dead = contribute.and(t_new.lt(F32x8::splat(1.0 / 255.0)));
+        active = active.and_not(dead);
+    }
+    transpose_rgb(rgb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_select_and_count() {
+        let m = Mask8([true, false, true, false, true, false, true, false]);
+        assert_eq!(m.count(), 4);
+        let a = F32x8::splat(1.0);
+        let b = F32x8::splat(2.0);
+        let s = m.select(a, b);
+        assert_eq!(s.0, [1.0, 2.0, 1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+        assert!(Mask8::ALL.any() && !Mask8::NONE.any());
+    }
+
+    #[test]
+    fn lt_is_false_for_nan_like_scalar() {
+        let a = F32x8([f32::NAN, 1.0, f32::NAN, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let b = F32x8::splat(0.5);
+        let m = a.lt(b);
+        assert!(!m.0[0], "NaN < x must be false");
+        assert!(!m.0[1]);
+        assert!(m.0[3]);
+    }
+
+    #[test]
+    fn lane_arithmetic_is_elementwise() {
+        let a = F32x8::from_fn(|i| i as f32);
+        let b = F32x8::splat(2.0);
+        assert_eq!((a * b).0[3], 6.0);
+        assert_eq!((a + b).0[0], 2.0);
+        assert_eq!((a - b).0[1], -1.0);
+    }
+
+    #[test]
+    fn backend_labels_round_trip() {
+        for b in [RenderBackend::Scalar, RenderBackend::Lanes] {
+            assert_eq!(RenderBackend::from_label(b.label()), Some(b));
+        }
+        assert_eq!(RenderBackend::from_label(" LANES "), Some(RenderBackend::Lanes));
+        assert_eq!(RenderBackend::from_label("simd"), None);
+    }
+}

@@ -3,11 +3,13 @@
 //! exponential), PSNR computation, and PPM image output.
 
 pub mod hw;
+pub mod lanes;
 pub mod ppm;
 pub mod psnr;
 pub mod reference;
 
-pub use hw::HwRenderer;
+pub use hw::{HwRenderer, RenderScratch};
+pub use lanes::RenderBackend;
 pub use psnr::{mse, psnr, ssim};
 pub use reference::ReferenceRenderer;
 

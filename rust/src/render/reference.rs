@@ -6,6 +6,7 @@
 //! the standard 3DGS cutoffs (shared with the hardware path so both
 //! renderers draw the same primitive set).
 
+use super::lanes::{self, RenderBackend, LANES};
 use super::Image;
 use crate::camera::Camera;
 use crate::scene::Scene;
@@ -17,11 +18,24 @@ pub const EXP_CUTOFF: f32 = -14.0;
 /// The reference renderer.
 pub struct ReferenceRenderer {
     pub grid: TileGrid,
+    /// Blend datapath: scalar per-pixel loop or the 8-wide lane kernel
+    /// with exact `exp()` per lane — bit-identical images either way.
+    pub backend: RenderBackend,
 }
 
 impl ReferenceRenderer {
     pub fn new(width: usize, height: usize) -> ReferenceRenderer {
-        ReferenceRenderer { grid: TileGrid::new(width, height) }
+        ReferenceRenderer {
+            grid: TileGrid::new(width, height),
+            backend: RenderBackend::from_env(),
+        }
+    }
+
+    /// Pin the blend datapath (builder form — `new` reads the
+    /// `PALLAS_RENDER_BACKEND` environment default).
+    pub fn with_backend(mut self, backend: RenderBackend) -> ReferenceRenderer {
+        self.backend = backend;
+        self
     }
 
     /// Render the scene at time `t`.
@@ -44,16 +58,47 @@ impl ReferenceRenderer {
             .collect()
     }
 
+    /// Blend one pixel through the depth-ordered splat list — the exact
+    /// scalar inner loop (also the ragged-row tail of the lanes backend).
+    fn shade_pixel(&self, splats: &[Splat2D], order: &[u32], px: usize, py: usize) -> [f32; 3] {
+        let mut rgb = [0.0f32; 3];
+        let mut transmittance = 1.0f32;
+        for &si in order {
+            let s = &splats[si as usize];
+            let e = splat_exponent(s, px as f32 + 0.5, py as f32 + 0.5);
+            if e < EXP_CUTOFF {
+                continue;
+            }
+            let alpha = (s.alpha_base * e.exp()).min(0.999);
+            if alpha < 1.0 / 255.0 {
+                continue;
+            }
+            let w = alpha * transmittance;
+            rgb[0] += w * s.color.x;
+            rgb[1] += w * s.color.y;
+            rgb[2] += w * s.color.z;
+            transmittance *= 1.0 - alpha;
+            if transmittance < 1.0 / 255.0 {
+                break;
+            }
+        }
+        rgb
+    }
+
     /// Rasterize pre-projected splats.
     pub fn render_splats(&self, splats: &[Splat2D]) -> Image {
         let mut img = Image::new(self.grid.width, self.grid.height);
         let bins = bin_splats(&self.grid, splats);
+        // Pooled across tiles: one depth-order buffer for the whole frame
+        // instead of a `bins[tile].clone()` per non-empty tile.
+        let mut order: Vec<u32> = Vec::new();
 
         for tile in 0..self.grid.n_tiles() {
-            let mut order: Vec<u32> = bins[tile].clone();
-            if order.is_empty() {
+            if bins[tile].is_empty() {
                 continue;
             }
+            order.clear();
+            order.extend_from_slice(&bins[tile]);
             // Exact depth sort.
             order.sort_by(|&a, &b| {
                 splats[a as usize]
@@ -64,29 +109,19 @@ impl ReferenceRenderer {
 
             let (x0, y0, x1, y1) = self.grid.tile_pixels(tile);
             for py in y0..y1 {
-                for px in x0..x1 {
-                    let mut rgb = [0.0f32; 3];
-                    let mut transmittance = 1.0f32;
-                    for &si in &order {
-                        let s = &splats[si as usize];
-                        let e = splat_exponent(s, px as f32 + 0.5, py as f32 + 0.5);
-                        if e < EXP_CUTOFF {
-                            continue;
+                let mut px = x0;
+                if self.backend == RenderBackend::Lanes {
+                    while px + LANES <= x1 {
+                        let span = lanes::shade_span_reference(splats, &order, px, py);
+                        for (i, rgb) in span.iter().enumerate() {
+                            img.set_pixel(px + i, py, *rgb);
                         }
-                        let alpha = (s.alpha_base * e.exp()).min(0.999);
-                        if alpha < 1.0 / 255.0 {
-                            continue;
-                        }
-                        let w = alpha * transmittance;
-                        rgb[0] += w * s.color.x;
-                        rgb[1] += w * s.color.y;
-                        rgb[2] += w * s.color.z;
-                        transmittance *= 1.0 - alpha;
-                        if transmittance < 1.0 / 255.0 {
-                            break;
-                        }
+                        px += LANES;
                     }
-                    img.set_pixel(px, py, rgb);
+                }
+                while px < x1 {
+                    img.set_pixel(px, py, self.shade_pixel(splats, &order, px, py));
+                    px += 1;
                 }
             }
         }

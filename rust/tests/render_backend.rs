@@ -1,0 +1,181 @@
+//! Render-backend bit-identity: the lane-batched blend datapath
+//! (`RenderBackend::Lanes`) must produce byte-identical pixels *and*
+//! identical NMC integer statistics to the scalar per-pixel loop
+//! (`RenderBackend::Scalar`) — serial and tile-parallel, at any thread
+//! count, at any resolution (ragged tile tails included). The lane
+//! kernel earns this by performing the exact scalar f32 op sequence per
+//! lane and masking skipped/saturated lanes with selects; these tests
+//! are the contract's enforcement.
+
+use gaucim::camera::Camera;
+use gaucim::coordinator::App;
+use gaucim::dcim::{ExpLut, NmcAccumulator};
+use gaucim::math::Vec3;
+use gaucim::pipeline::WorkerPool;
+use gaucim::render::{HwRenderer, ReferenceRenderer, RenderBackend};
+use gaucim::scene::synth::{SceneKind, SynthParams};
+
+fn cam(w: usize, h: usize, dist: f32) -> Camera {
+    let mut c = Camera::look_at(
+        Vec3::new(0.0, 3.0, dist),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        60f32.to_radians(),
+        w as f32 / h as f32,
+        0.1,
+        200.0,
+    );
+    c.set_resolution(w, h);
+    c
+}
+
+/// Pixels AND NmcStats: lanes == scalar, serial and parallel at
+/// threads 1/4/8 — the headline acceptance test.
+#[test]
+fn render_backend_is_bit_identical() {
+    let scene = SynthParams::new(SceneKind::StaticLarge, 3000).generate();
+    let c = cam(160, 96, 25.0);
+    let scalar = HwRenderer::new(160, 96).with_backend(RenderBackend::Scalar);
+    let lanes = HwRenderer::new(160, 96).with_backend(RenderBackend::Lanes);
+    let splats = scalar.project_all(&scene, &c, 0.0);
+    let order: Vec<usize> = (0..scalar.grid.n_tiles()).collect();
+
+    let mut nmc_s = NmcAccumulator::new();
+    let img_s = scalar.render_splats_ordered(&splats, &order, &mut nmc_s);
+    let mut nmc_l = NmcAccumulator::new();
+    let img_l = lanes.render_splats_ordered(&splats, &order, &mut nmc_l);
+    assert_eq!(img_s, img_l, "serial pixels diverged between backends");
+    assert_eq!(nmc_s.stats(), nmc_l.stats(), "serial NMC stats diverged");
+
+    for threads in [1, 4, 8] {
+        let pool = WorkerPool::new(threads);
+        for r in [&scalar, &lanes] {
+            let mut nmc = NmcAccumulator::new();
+            let img = r.render_splats_ordered_par(&splats, &order, &mut nmc, &pool);
+            assert_eq!(
+                img_s, img,
+                "parallel pixels diverged ({:?} backend, {threads} threads)",
+                r.backend
+            );
+            assert_eq!(
+                nmc_s.stats(),
+                nmc.stats(),
+                "parallel NMC stats diverged ({:?} backend, {threads} threads)",
+                r.backend
+            );
+        }
+    }
+}
+
+/// 97×53 leaves 1-pixel-wide and 5-pixel-tall edge tiles — every row of
+/// every edge tile exercises the scalar ragged tail next to full 8-wide
+/// spans in interior tiles.
+#[test]
+fn odd_resolution_ragged_tail_is_bit_identical() {
+    let scene = SynthParams::new(SceneKind::StaticLarge, 1500).generate();
+    let c = cam(97, 53, 25.0);
+
+    let scalar = HwRenderer::new(97, 53).with_backend(RenderBackend::Scalar);
+    let lanes = HwRenderer::new(97, 53).with_backend(RenderBackend::Lanes);
+    let splats = scalar.project_all(&scene, &c, 0.0);
+    let order: Vec<usize> = (0..scalar.grid.n_tiles()).collect();
+    let mut nmc_s = NmcAccumulator::new();
+    let mut nmc_l = NmcAccumulator::new();
+    let img_s = scalar.render_splats_ordered(&splats, &order, &mut nmc_s);
+    let img_l = lanes.render_splats_ordered(&splats, &order, &mut nmc_l);
+    assert_eq!(img_s, img_l, "hw ragged-tail pixels diverged");
+    assert_eq!(nmc_s.stats(), nmc_l.stats(), "hw ragged-tail NMC stats diverged");
+
+    let ref_s = ReferenceRenderer::new(97, 53).with_backend(RenderBackend::Scalar);
+    let ref_l = ReferenceRenderer::new(97, 53).with_backend(RenderBackend::Lanes);
+    assert_eq!(
+        ref_s.render(&scene, &c, 0.0),
+        ref_l.render(&scene, &c, 0.0),
+        "reference ragged-tail pixels diverged"
+    );
+}
+
+/// The reference renderer's lane kernel (exact `exp()`, no LUT) must
+/// also be pixel-exact against its scalar loop at an even resolution.
+#[test]
+fn reference_backend_is_bit_identical() {
+    let scene = SynthParams::new(SceneKind::StaticLarge, 3000).generate();
+    let c = cam(160, 96, 25.0);
+    let img_s = ReferenceRenderer::new(160, 96)
+        .with_backend(RenderBackend::Scalar)
+        .render(&scene, &c, 0.0);
+    let img_l = ReferenceRenderer::new(160, 96)
+        .with_backend(RenderBackend::Lanes)
+        .render(&scene, &c, 0.0);
+    assert_eq!(img_s, img_l, "reference pixels diverged between backends");
+}
+
+/// `ExpLut::exp2_lanes` must match the scalar `exp2` bit-for-bit on
+/// every lane: a dense sweep over the interesting domain plus the edge
+/// cases (±∞, NaN, ±0, subnormals, extremes of the f32 range).
+#[test]
+fn exp2_lanes_matches_scalar_bitwise() {
+    let lut = ExpLut::paper();
+    let mut inputs: Vec<f32> = Vec::new();
+    // Dense sweep: the blend path feeds roughly [-21, 0] (EXP_CUTOFF
+    // times LOG2_E), but sweep far past it on both sides.
+    let (lo, hi, steps) = (-160.0f32, 40.0f32, 16_000usize);
+    for i in 0..=steps {
+        inputs.push(lo + (hi - lo) * (i as f32 / steps as f32));
+    }
+    // Edge cases: non-finite, signed zero, subnormal, range extremes.
+    inputs.extend([
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+        0.0,
+        -0.0,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1e-41,  // positive subnormal
+        -1e-41, // negative subnormal
+        f32::MAX,
+        f32::MIN,
+        -149.5, // deep into the subnormal *result* range
+        127.5,  // overflows to +inf through libm_exp2i
+    ]);
+    // Pad to a multiple of 8 so chunks_exact covers everything.
+    while inputs.len() % 8 != 0 {
+        inputs.push(0.0);
+    }
+    for chunk in inputs.chunks_exact(8) {
+        let x: [f32; 8] = chunk.try_into().unwrap();
+        let got = lut.exp2_lanes(x);
+        for i in 0..8 {
+            let want = lut.exp2(x[i]);
+            assert_eq!(
+                want.to_bits(),
+                got[i].to_bits(),
+                "exp2_lanes({}) = {} != scalar {}",
+                x[i],
+                got[i],
+                want
+            );
+        }
+    }
+}
+
+/// Whole-pipeline gate: the same experiment at scalar vs lanes produces
+/// byte-identical frames and bit-identical PSNR through `App` — the
+/// config seam (`PipelineConfig::render_backend`) end to end.
+#[test]
+fn pipeline_report_is_backend_invariant() {
+    let mut app = App::new(SceneKind::StaticLarge, 2000, 42);
+    app.config = app.config.clone().with_resolution(192, 108);
+
+    app.config = app.config.clone().with_render_backend(RenderBackend::Scalar);
+    let (img_s, rep_s) = app.render_one(0.5);
+    app.config = app.config.clone().with_render_backend(RenderBackend::Lanes);
+    let (img_l, rep_l) = app.render_one(0.5);
+    assert_eq!(img_s, img_l, "pipeline frames diverged between backends");
+    assert_eq!(
+        rep_s.psnr_db.to_bits(),
+        rep_l.psnr_db.to_bits(),
+        "pipeline PSNR diverged between backends"
+    );
+}
