@@ -27,6 +27,15 @@
 //! `sessions` block is diffed across thread counts by the CI
 //! `session-smoke` job). Pass `--sessions` to run the session layer only.
 //!
+//! Pass `--residency-mb MB` to run the **residency sweep** instead: DRAM
+//! becomes a shard-granular cache of that capacity over the compressed
+//! backing store ([`gaucim::memory::residency`]), and the contended batch
+//! runs once per prefetch policy (none / next-frame-cull / lookahead:2).
+//! Per-policy hit rate, evictions, stall time, and compression ratio land
+//! in the `residency` block (simulated-only, diffed across
+//! `PALLAS_THREADS` by the CI `residency-smoke` job); host fps deltas
+//! versus the fully-resident run land in `residency_host`.
+//!
 //! Run: `cargo run --release --example multi_viewer [-- --viewers 4 --frames 8 --threads 0]`
 //! (`--threads 0` = auto: `PALLAS_THREADS` env, else available parallelism)
 
@@ -36,6 +45,7 @@ use gaucim::coordinator::{
     ContendedMemReport, Percentiles, RenderServer, SchedPolicy, SessionBatchReport,
     SessionScript, SessionSpec, ViewerSpec,
 };
+use gaucim::memory::PrefetchPolicy;
 use gaucim::pipeline::{resolve_threads, HostStageWall, PipelineConfig};
 use gaucim::render::RenderBackend;
 use gaucim::scene::synth::{SceneKind, SynthParams};
@@ -234,6 +244,90 @@ fn main() -> anyhow::Result<()> {
     let specs: Vec<ViewerSpec> = (0..n_viewers)
         .map(|i| ViewerSpec::perf(conditions[i % conditions.len()], frames))
         .collect();
+
+    // ---- residency sweep (`--residency-mb MB`, CI `residency-smoke`) ---
+    // Treat DRAM as a shard-granular cache of the given capacity over the
+    // compressed backing store and sweep the prefetch policies. Each
+    // policy runs the contended batch under the lockstep (threads = 1)
+    // and two-phase parallel schedulers and asserts the simulated
+    // projections bit-identical; the `residency` block holds simulated
+    // quantities only (hit rate, evictions, stall time, compression
+    // ratio) so CI can diff it across PALLAS_THREADS, while host fps
+    // deltas land in the separate `residency_host` block.
+    let residency_mb = args.get_parsed("residency-mb", 0.0f64);
+    if residency_mb > 0.0 {
+        let baseline = server.render_batch_contended(&specs);
+        let base_fps = baseline.total_frames as f64 / baseline.wall_s.max(1e-12);
+        println!("\nresidency sweep ({residency_mb} MB DRAM over compressed backing store):");
+        let mut blocks = Json::obj();
+        let mut host = Json::obj();
+        let mut hit_rates: Vec<(String, f64)> = Vec::new();
+        for policy in [
+            PrefetchPolicy::None,
+            PrefetchPolicy::NextFrameCull,
+            PrefetchPolicy::TrajectoryLookahead { k: 2 },
+        ] {
+            let mut cfg = server.config.clone();
+            cfg.mem.residency.capacity_mb = residency_mb;
+            cfg.mem.residency.policy = policy;
+            let mut paged = RenderServer::new(server.shared.scene.clone(), cfg);
+            paged.set_threads(1);
+            let serial = paged.render_batch_contended(&specs);
+            paged.set_threads(threads);
+            let par = paged.render_batch_contended(&specs);
+            assert_eq!(
+                serial.simulated_projection(),
+                par.simulated_projection(),
+                "paged contended batch diverged between lockstep and two-phase ({})",
+                policy.label()
+            );
+            let mem = par.contended_mem.as_ref().expect("contended roll-up");
+            let res = mem
+                .residency
+                .as_ref()
+                .expect("sub-capacity residency run must produce a residency roll-up");
+            let fps = par.total_frames as f64 / par.wall_s.max(1e-12);
+            println!(
+                "  {:<16} hit-rate {:.3}  evictions {:>6}  stall {:>9.1} µs  \
+                 ratio {:.2}x  {:+.1} frames/s vs resident",
+                policy.label(),
+                res.stats.hit_rate(),
+                res.stats.evictions,
+                res.stats.stall_ns / 1e3,
+                res.compression_ratio,
+                fps - base_fps
+            );
+            hit_rates.push((policy.label(), res.stats.hit_rate()));
+            blocks = blocks.set(&policy.label(), res.to_json());
+            host = host.set(
+                &policy.label(),
+                Json::obj()
+                    .set("frames_per_s", fps)
+                    .set("fps_delta_vs_resident", fps - base_fps),
+            );
+        }
+        let rate = |label: &str| {
+            hit_rates.iter().find(|(l, _)| l == label).map(|&(_, r)| r).unwrap_or(0.0)
+        };
+        assert!(
+            rate("lookahead:2") > rate("none"),
+            "trajectory lookahead must beat no-prefetch on the standard trajectory \
+             (hit rates: {hit_rates:?})"
+        );
+        let record = Json::obj()
+            .set("gaussians", server.shared.scene.len())
+            .set("viewers", n_viewers)
+            .set("frames_per_viewer", frames)
+            .set("width", width)
+            .set("height", height)
+            .set("threads", threads)
+            .set("residency_mb", residency_mb)
+            .set("residency", blocks)
+            .set("residency_host", host);
+        write_bench_json("BENCH_server.json", &record)?;
+        println!("\nwrote BENCH_server.json (residency block only)");
+        return Ok(());
+    }
 
     // The session stream: a declarative JSON script from disk
     // (`--session-script path`), or the built-in demo.

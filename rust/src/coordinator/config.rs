@@ -37,7 +37,8 @@ impl ExperimentConfig {
             "name", "scene", "gaussians", "seed", "width", "height",
             "condition", "frames", "psnr_every", "grid_n", "atg_threshold",
             "tile_block", "n_buckets", "use_drfc", "use_atg", "use_aii",
-            "sram_kb", "threads", "render_backend", "report_json", "frame_ppm",
+            "sram_kb", "threads", "render_backend", "residency_mb",
+            "prefetch_policy", "report_json", "frame_ppm",
         ];
         if let Json::Obj(m) = doc {
             for k in m.keys() {
@@ -89,6 +90,17 @@ impl ExperimentConfig {
         if let Some(s) = doc.get("render_backend").and_then(Json::as_str) {
             pipeline.render_backend = crate::render::RenderBackend::from_label(s)
                 .ok_or_else(|| anyhow::anyhow!("render_backend must be scalar|lanes, got '{s}'"))?;
+        }
+        // Residency: DRAM capacity in MB (0 = fully resident, residency
+        // layer off) and the prefetch policy that pages ahead of demand.
+        if let Some(mb) = doc.get("residency_mb").and_then(Json::as_f64) {
+            pipeline.mem.residency.capacity_mb = mb.max(0.0);
+        }
+        if let Some(s) = doc.get("prefetch_policy").and_then(Json::as_str) {
+            pipeline.mem.residency.policy =
+                crate::memory::PrefetchPolicy::from_label(s).ok_or_else(|| {
+                    anyhow!("prefetch_policy must be none|next-frame-cull|lookahead[:K], got '{s}'")
+                })?;
         }
         pipeline.atg = AtgConfig {
             user_threshold: doc
@@ -174,7 +186,9 @@ mod tests {
                 "n_buckets": 16,
                 "use_aii": false,
                 "sram_kb": 64,
-                "threads": 3
+                "threads": 3,
+                "residency_mb": 0.25,
+                "prefetch_policy": "lookahead:3"
             }"#,
         )
         .unwrap();
@@ -190,6 +204,11 @@ mod tests {
         assert_eq!(cfg.pipeline.threads, 3);
         assert_eq!(cfg.pipeline.resolved_threads(), 3);
         assert_eq!(cfg.condition, ViewCondition::Extreme);
+        assert_eq!(cfg.pipeline.mem.residency.capacity_mb, 0.25);
+        assert_eq!(
+            cfg.pipeline.mem.residency.policy,
+            crate::memory::PrefetchPolicy::TrajectoryLookahead { k: 3 }
+        );
     }
 
     #[test]
@@ -199,6 +218,8 @@ mod tests {
         let doc = parse(r#"{"scene": "martian"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&doc).is_err());
         let doc = parse(r#"{"condition": "warp"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+        let doc = parse(r#"{"prefetch_policy": "psychic"}"#).unwrap();
         assert!(ExperimentConfig::from_json(&doc).is_err());
     }
 

@@ -44,8 +44,10 @@
 //! uniformly as `(cull, blend)` [`PortId`] pairs.
 
 use crate::camera::Camera;
-use crate::memory::{MemMode, MemStage, MemorySystem, PortId, ShardMap};
-use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig, SessionState, WorkerPool};
+use crate::memory::{MemMode, MemStage, MemorySystem, PortId};
+use crate::pipeline::{
+    FramePipeline, FrameResult, PipelineConfig, ScenePrep, SessionState, WorkerPool,
+};
 use crate::render::ReferenceRenderer;
 use crate::scene::Scene;
 use std::sync::{Arc, Mutex};
@@ -80,6 +82,9 @@ pub(crate) struct RoundOutcome {
 struct RoundFrame {
     result: FrameResult,
     scored: Option<(f64, f64)>,
+    /// Prefetch pages the frame's predictor issued before its demand reads
+    /// (replayed into the residency layer ahead of the cull trace).
+    prefetch: Vec<usize>,
     cull_trace: Vec<(u64, u64)>,
     blend_trace: Vec<(u64, u64)>,
 }
@@ -110,14 +115,20 @@ impl RoundEngine {
     /// pinning it to one thread.
     pub(crate) fn new(
         base: &PipelineConfig,
-        shard_map: ShardMap,
+        prep: &ScenePrep,
         parallel_units: usize,
     ) -> RoundEngine {
         let mut config = base.clone();
         config.mem.mode = MemMode::EventQueue;
         let threads = config.resolved_threads();
         let two_phase = threads > 1 && parallel_units > 1;
-        let sys = Arc::new(Mutex::new(MemorySystem::new(config.mem.clone(), shard_map)));
+        let mut sys = MemorySystem::new(config.mem.clone(), *prep.shard_map);
+        // Streaming residency: the shared system pages against the scene's
+        // compressed backing store (no-op when disabled / fully resident).
+        if let Some(store) = &prep.compressed {
+            sys.attach_residency(store);
+        }
+        let sys = Arc::new(Mutex::new(sys));
         let frame_cfg = PipelineConfig { threads: 1, ..config.clone() };
         RoundEngine {
             sys,
@@ -244,8 +255,10 @@ impl RoundEngine {
                 scope.spawn(move || {
                     let result = job.pipeline.render_frame(&job.cam, job.t, job.render);
                     let (cull_trace, blend_trace) = job.pipeline.take_frame_traces();
+                    let prefetch = job.pipeline.take_frame_prefetch();
                     let scored = score_frame(reference, scene, &job.cam, job.t, &result);
-                    *slot = Some(RoundFrame { result, scored, cull_trace, blend_trace });
+                    *slot =
+                        Some(RoundFrame { result, scored, prefetch, cull_trace, blend_trace });
                 });
             }
         });
@@ -258,26 +271,39 @@ impl RoundEngine {
         for (job, slot) in jobs.iter().zip(slots.iter_mut()) {
             let Some(mut frame) = slot.take() else { continue };
             let (cull_id, blend_id) = job.ports;
+            // Prefetch fills land before the frame's demand reads — the
+            // same issue order the lockstep cull stage produces.
+            let cull_pg_base = sys.port_stage_stats(cull_id, MemStage::Paging);
+            sys.residency_prefetch(cull_id, &frame.prefetch);
             let pre_base = sys.port_stage_stats(cull_id, MemStage::Preprocess);
             for &(addr, bytes) in &frame.cull_trace {
                 sys.read(cull_id, MemStage::Preprocess, addr, bytes);
             }
             let pre = sys.port_stage_stats(cull_id, MemStage::Preprocess).delta(&pre_base);
+            let cull_pg = sys.port_stage_stats(cull_id, MemStage::Paging).delta(&cull_pg_base);
             let blend_base = sys.port_stage_stats(blend_id, MemStage::Blend);
+            let blend_pg_base = sys.port_stage_stats(blend_id, MemStage::Paging);
             for &(addr, bytes) in &frame.blend_trace {
                 sys.read(blend_id, MemStage::Blend, addr, bytes);
             }
             let blend = sys.port_stage_stats(blend_id, MemStage::Blend).delta(&blend_base);
+            let blend_pg =
+                sys.port_stage_stats(blend_id, MemStage::Paging).delta(&blend_pg_base);
 
             let r = &mut frame.result;
             r.traffic.preprocess_dram = pre;
             r.traffic.blend_dram = blend;
+            r.traffic.paging_dram = cull_pg;
+            r.traffic.paging_dram.add(&blend_pg);
             // Trace-port frames carried zero DRAM energy/busy time, so
             // these recompute exactly what the lockstep stages produce:
-            // dram_pj = pre + blend, stage latency = max(compute, DRAM).
-            r.energy.dram_pj = pre.energy_pj + blend.energy_pj;
-            r.latency.preprocess_ns = r.latency.preprocess_ns.max(pre.busy_ns);
-            r.latency.blend_ns = r.latency.blend_ns.max(blend.busy_ns);
+            // dram_pj = pre + blend (+ paging), stage latency =
+            // max(compute, DRAM + stage-issued paging).
+            r.energy.dram_pj =
+                pre.energy_pj + blend.energy_pj + cull_pg.energy_pj + blend_pg.energy_pj;
+            r.latency.preprocess_ns =
+                r.latency.preprocess_ns.max(pre.busy_ns + cull_pg.busy_ns);
+            r.latency.blend_ns = r.latency.blend_ns.max(blend.busy_ns + blend_pg.busy_ns);
             out.push(RoundOutcome { key: job.key, result: frame.result, scored: frame.scored });
         }
         out
@@ -288,6 +314,6 @@ impl RenderServer {
     /// A round engine over this server's configuration and shard map (a
     /// fresh shared memory system per call).
     pub(crate) fn round_engine(&self, parallel_units: usize) -> RoundEngine {
-        RoundEngine::new(&self.config, *self.shared.prep.shard_map, parallel_units)
+        RoundEngine::new(&self.config, &self.shared.prep, parallel_units)
     }
 }

@@ -42,7 +42,7 @@
 //! sequence-runner over the exact same trajectories.
 
 use crate::camera::{Camera, ViewCondition};
-use crate::memory::{DramStats, MemStage, MemorySystem, PortId, ShardMap};
+use crate::memory::{DramStats, MemStage, MemorySystem, PortId, ResidencyReport, ShardMap};
 use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig, ScenePrep};
 use crate::render::ReferenceRenderer;
 use crate::scene::Scene;
@@ -192,11 +192,16 @@ pub struct ContendedMemReport {
     pub preprocess_latency_pctl: Percentiles,
     pub blend_latency_pctl: Percentiles,
     pub viewers: Vec<ViewerMemStats>,
+    /// Residency-layer roll-up. `Some` only when the shared memory system
+    /// pages against a compressed backing store; fully-resident batches
+    /// carry `None` so their reports stay byte-identical to a build
+    /// without the residency layer.
+    pub residency: Option<ResidencyReport>,
 }
 
 impl ContendedMemReport {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut js = Json::obj()
             .set("shards", self.shards)
             .set("channels", self.channels)
             .set("outstanding", self.outstanding)
@@ -212,7 +217,11 @@ impl ContendedMemReport {
             .set(
                 "viewers",
                 Json::Arr(self.viewers.iter().map(ViewerMemStats::to_json).collect()),
-            )
+            );
+        if let Some(res) = &self.residency {
+            js = js.set("residency", res.to_json());
+        }
+        js
     }
 }
 
@@ -304,6 +313,7 @@ pub(crate) fn contended_rollup(
         preprocess_latency_pctl: Percentiles::of(pre_latency),
         blend_latency_pctl: Percentiles::of(blend_latency),
         viewers: rows,
+        residency: sys.residency_stats(),
     }
 }
 

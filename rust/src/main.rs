@@ -13,6 +13,7 @@ use gaucim::baseline::{gscore, jetson, GscoreModel, JetsonModel};
 use gaucim::camera::ViewCondition;
 use gaucim::coordinator::App;
 use gaucim::culling::{GridConfig, GridPartition};
+use gaucim::memory::PrefetchPolicy;
 use gaucim::pipeline::{profile_breakdown, PipelineConfig};
 use gaucim::render::{ppm, RenderBackend};
 use gaucim::scene::synth::SceneKind;
@@ -44,7 +45,9 @@ fn usage() {
         "usage: gaucim <render|sequence|profile|table1|pjrt|run|info> \
          [--scene static|dynamic] [--gaussians N] [--frames N] \
          [--width W --height H] [--condition average|extreme|static] \
-         [--seed S] [--threads N] [--render-backend scalar|lanes] [--out FILE]"
+         [--seed S] [--threads N] [--render-backend scalar|lanes] \
+         [--residency-mb MB] [--prefetch-policy none|next-frame-cull|lookahead[:K]] \
+         [--out FILE]"
     );
 }
 
@@ -81,6 +84,21 @@ fn build_app(args: &Args) -> App {
             Some(b) => app.config.render_backend = b,
             None => {
                 eprintln!("--render-backend must be scalar|lanes, got '{s}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    // DRAM residency capacity in MB (0 = fully resident, paging layer off;
+    // default: PALLAS_RESIDENCY_MB env) and the prefetch policy that pages
+    // the compressed backing store ahead of demand misses.
+    if args.get("residency-mb").is_some() {
+        app.config.mem.residency.capacity_mb = args.get_parsed("residency-mb", 0.0f64).max(0.0);
+    }
+    if let Some(s) = args.get("prefetch-policy") {
+        match PrefetchPolicy::from_label(s) {
+            Some(p) => app.config.mem.residency.policy = p,
+            None => {
+                eprintln!("--prefetch-policy must be none|next-frame-cull|lookahead[:K], got '{s}'");
                 std::process::exit(2);
             }
         }

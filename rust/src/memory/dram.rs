@@ -136,17 +136,22 @@ impl DramStats {
     /// Counter-wise difference against an earlier snapshot of the same
     /// stream (`self` cumulative, `base` the snapshot). Used by shared-mode
     /// ports to report per-frame deltas without resetting channel state.
+    ///
+    /// Saturating: after trace replay the round engine *patches* a port's
+    /// cumulative counters, so a stale snapshot can momentarily exceed the
+    /// cumulative value. A paging-aware roll-up must never panic or wrap on
+    /// that — negative deltas clamp to zero.
     pub fn delta(&self, base: &DramStats) -> DramStats {
         DramStats {
-            reads: self.reads - base.reads,
-            bytes: self.bytes - base.bytes,
-            bursts: self.bursts - base.bursts,
-            row_hits: self.row_hits - base.row_hits,
-            row_misses: self.row_misses - base.row_misses,
-            energy_pj: self.energy_pj - base.energy_pj,
-            busy_ns: self.busy_ns - base.busy_ns,
-            wait_ns: self.wait_ns - base.wait_ns,
-            stalls: self.stalls - base.stalls,
+            reads: self.reads.saturating_sub(base.reads),
+            bytes: self.bytes.saturating_sub(base.bytes),
+            bursts: self.bursts.saturating_sub(base.bursts),
+            row_hits: self.row_hits.saturating_sub(base.row_hits),
+            row_misses: self.row_misses.saturating_sub(base.row_misses),
+            energy_pj: (self.energy_pj - base.energy_pj).max(0.0),
+            busy_ns: (self.busy_ns - base.busy_ns).max(0.0),
+            wait_ns: (self.wait_ns - base.wait_ns).max(0.0),
+            stalls: self.stalls.saturating_sub(base.stalls),
         }
     }
 
@@ -248,6 +253,45 @@ mod tests {
         assert!((d.busy_ns - 2.0).abs() < 1e-12);
         assert!((d.wait_ns - 1.0).abs() < 1e-12);
         assert_eq!(d.stalls, 1);
+    }
+
+    #[test]
+    fn delta_saturates_when_base_exceeds_cumulative() {
+        // Trace replay patches port counters; a snapshot taken before the
+        // patch can exceed the cumulative stream. The delta must clamp to
+        // zero instead of wrapping (u64) or going negative (f64).
+        let base = DramStats {
+            reads: 10,
+            bytes: 320,
+            bursts: 10,
+            row_hits: 8,
+            row_misses: 2,
+            energy_pj: 100.0,
+            busy_ns: 50.0,
+            wait_ns: 5.0,
+            stalls: 3,
+        };
+        let cum = DramStats {
+            reads: 4,
+            bytes: 128,
+            bursts: 4,
+            row_hits: 3,
+            row_misses: 1,
+            energy_pj: 40.0,
+            busy_ns: 20.0,
+            wait_ns: 1.0,
+            stalls: 1,
+        };
+        let d = cum.delta(&base);
+        assert_eq!(d, DramStats::default());
+        // Mixed direction: only the underflowing fields clamp.
+        let cum2 = DramStats { reads: 12, busy_ns: 60.0, ..cum };
+        let d2 = cum2.delta(&base);
+        assert_eq!(d2.reads, 2);
+        assert!((d2.busy_ns - 10.0).abs() < 1e-12);
+        assert_eq!(d2.bytes, 0);
+        assert_eq!(d2.stalls, 0);
+        assert_eq!(d2.wait_ns, 0.0);
     }
 
     #[test]

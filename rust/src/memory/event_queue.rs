@@ -45,7 +45,9 @@ use std::sync::{Arc, Mutex};
 
 use super::dram::{DramConfig, DramStats, MemSink};
 use super::oracle::SyncDramModel;
+use super::residency::{ResidencyConfig, ResidencyReport, ResidencyState};
 use super::shard::ShardMap;
+use crate::scene::CompressedStore;
 
 /// Which pipeline stage a request belongs to (per-stage stats + completion
 /// times are what let cull fetch and blend miss-fill overlap in the model).
@@ -55,6 +57,10 @@ pub enum MemStage {
     Preprocess,
     /// Blend-buffer miss fill.
     Blend,
+    /// Residency-layer paging traffic: demand/prefetch page fills and
+    /// eviction write-backs issued by the [`ResidencyState`] cache. Bypasses
+    /// the residency hook (a page fill must not page).
+    Paging,
 }
 
 impl MemStage {
@@ -63,6 +69,7 @@ impl MemStage {
         match self {
             MemStage::Preprocess => 0,
             MemStage::Blend => 1,
+            MemStage::Paging => 2,
         }
     }
 }
@@ -103,6 +110,9 @@ pub struct MemSimConfig {
     pub outstanding: usize,
     /// Scene shards = channel groups (≥ 1).
     pub shards: usize,
+    /// Streaming-residency layer (disabled by default: fully-resident DRAM,
+    /// bit-identical to the pre-residency model).
+    pub residency: ResidencyConfig,
 }
 
 impl Default for MemSimConfig {
@@ -112,6 +122,7 @@ impl Default for MemSimConfig {
             dram: DramConfig::default(),
             outstanding: 4,
             shards: 1,
+            residency: ResidencyConfig::default(),
         }
     }
 }
@@ -131,6 +142,7 @@ impl MemSimConfig {
             dram: DramConfig { channels: 1, ..DramConfig::default() },
             outstanding: 1,
             shards: 1,
+            residency: ResidencyConfig::default(),
         }
     }
 
@@ -169,10 +181,10 @@ struct PortState {
     /// Latest completion observed by this port (any stage).
     last_completion_ns: f64,
     /// Cumulative per-stage statistics.
-    stats: [DramStats; 2],
+    stats: [DramStats; 3],
     /// Per-stage first-issue / last-completion timestamps.
-    first_issue_ns: [f64; 2],
-    last_completion_stage_ns: [f64; 2],
+    first_issue_ns: [f64; 3],
+    last_completion_stage_ns: [f64; 3],
     /// Retired ports (departed viewer sessions) keep their statistics
     /// readable but issue no further traffic and are skipped by epoch
     /// barriers.
@@ -185,9 +197,9 @@ impl PortState {
             now_ns,
             inflight: VecDeque::new(),
             last_completion_ns: now_ns,
-            stats: [DramStats::default(); 2],
-            first_issue_ns: [f64::INFINITY; 2],
-            last_completion_stage_ns: [0.0; 2],
+            stats: [DramStats::default(); 3],
+            first_issue_ns: [f64::INFINITY; 3],
+            last_completion_stage_ns: [0.0; 3],
             retired: false,
         }
     }
@@ -205,6 +217,10 @@ pub struct MemorySystem {
     /// Per-request scratch (fast path): bursts / rows per group channel.
     svc_bursts: Vec<u64>,
     svc_rows: Vec<u64>,
+    /// Page-granular residency cache over the compressed backing store.
+    /// `None` when the scene is fully DRAM-resident (the default) — in that
+    /// state the system is bit-identical to the pre-residency model.
+    residency: Option<ResidencyState>,
 }
 
 impl MemorySystem {
@@ -223,7 +239,92 @@ impl MemorySystem {
             config,
             shard_map,
             ports: Vec::new(),
+            residency: None,
         }
+    }
+
+    /// Attach the residency layer: DRAM becomes a page-granular cache over
+    /// `store`. No-op (fully resident, zero model change) when residency is
+    /// disabled in the config or the configured capacity already holds the
+    /// whole scene span.
+    pub fn attach_residency(&mut self, store: &Arc<CompressedStore>) {
+        let cfg = &self.config.residency;
+        if !cfg.enabled() || cfg.capacity_bytes() >= store.span_bytes() {
+            self.residency = None;
+            return;
+        }
+        self.residency = Some(ResidencyState::new(cfg, Arc::clone(store)));
+    }
+
+    /// Is a residency layer attached (i.e. can reads page)?
+    pub fn residency_attached(&self) -> bool {
+        self.residency.is_some()
+    }
+
+    /// Residency snapshot for reports; `None` when fully resident.
+    pub fn residency_stats(&self) -> Option<ResidencyReport> {
+        self.residency.as_ref().map(|r| r.report())
+    }
+
+    /// Background-fill `pages` on behalf of `port` (sorted, deduplicated
+    /// page indices from a [`ResidencyPrefetcher`](super::residency::ResidencyPrefetcher)).
+    /// Already-resident pages only get their recency refreshed; fills that
+    /// would evict a recently-touched page are skipped (thrash guard).
+    pub fn residency_prefetch(&mut self, port: PortId, pages: &[usize]) {
+        let Some(mut r) = self.residency.take() else { return };
+        for &page in pages {
+            if page >= r.store().n_pages() {
+                continue;
+            }
+            if r.is_resident(page) {
+                r.refresh(page);
+            } else {
+                self.fill_page(&mut r, port, page, false);
+            }
+        }
+        self.residency = Some(r);
+    }
+
+    /// The demand-side residency hook: every non-paging request touches the
+    /// pages its byte span covers; misses stall the issuing port with a
+    /// demand fill. Runs in deterministic request order (the caller holds
+    /// the system lock), so hit/miss/eviction sequences are bit-identical
+    /// across thread counts.
+    fn residency_touch(&mut self, port: PortId, addr: u64, bytes: u64) {
+        let Some(mut r) = self.residency.take() else { return };
+        let first = r.store().page_of(addr);
+        let last = r.store().page_of(addr + bytes - 1);
+        for page in first..=last {
+            if r.is_resident(page) {
+                r.note_hit(page);
+            } else {
+                r.stats.misses += 1;
+                self.fill_page(&mut r, port, page, true);
+            }
+        }
+        self.residency = Some(r);
+    }
+
+    /// Fetch one page into DRAM: evict while at capacity (charging the
+    /// victim write-back as paging traffic), then charge the fill read over
+    /// the page's uncompressed span. Demand fills account the paging busy
+    /// delta plus the modeled decode time as stall; prefetch fills are
+    /// background traffic (and bail out instead of evicting hot pages).
+    fn fill_page(&mut self, r: &mut ResidencyState, port: PortId, page: usize, demand: bool) {
+        let pre = self.port_stage_stats(port, MemStage::Paging).busy_ns;
+        while r.at_capacity() {
+            let Some(victim) = r.evict_victim(demand) else { return };
+            let (a, b) = r.store().page_span(victim);
+            if b > a {
+                self.read(port, MemStage::Paging, a, b - a);
+            }
+        }
+        let (a, b) = r.store().page_span(page);
+        if b > a {
+            self.read(port, MemStage::Paging, a, b - a);
+        }
+        let busy_delta = self.port_stage_stats(port, MemStage::Paging).busy_ns - pre;
+        r.complete_fill(page, demand, busy_delta);
     }
 
     /// Register a new request port (one per stage per viewer). Ports
@@ -269,6 +370,9 @@ impl MemorySystem {
     pub fn read(&mut self, port: PortId, stage: MemStage, addr: u64, bytes: u64) {
         if bytes == 0 {
             return;
+        }
+        if stage != MemStage::Paging {
+            self.residency_touch(port, addr, bytes);
         }
         let map = self.shard_map;
         map.split(addr, bytes, |shard, a, b| {
@@ -539,9 +643,15 @@ pub struct MemPort {
     /// Snapshot taken by `begin_frame` (shared backend): frame statistics
     /// are reported as deltas so channel state persists across frames.
     frame_base: DramStats,
+    /// `begin_frame` snapshot of this port's [`MemStage::Paging`] stream —
+    /// residency traffic the port's demand reads triggered this frame.
+    frame_base_paging: DramStats,
     /// Lifetime totals of frames already retired by `begin_frame`
     /// (synchronous backend only — the model itself resets per frame).
     sync_lifetime: DramStats,
+    /// Prefetch page lists recorded by a trace backend this frame, for the
+    /// coordinator to replay before the frame's demand trace.
+    trace_prefetch: Vec<usize>,
 }
 
 #[derive(Debug)]
@@ -564,7 +674,9 @@ impl MemPort {
             stage,
             backend: PortBackend::Sync(SyncDramModel::new(config)),
             frame_base: DramStats::default(),
+            frame_base_paging: DramStats::default(),
             sync_lifetime: DramStats::default(),
+            trace_prefetch: Vec::new(),
         }
     }
 
@@ -574,7 +686,9 @@ impl MemPort {
             stage,
             backend: PortBackend::Trace(Vec::new()),
             frame_base: DramStats::default(),
+            frame_base_paging: DramStats::default(),
             sync_lifetime: DramStats::default(),
+            trace_prefetch: Vec::new(),
         }
     }
 
@@ -595,7 +709,9 @@ impl MemPort {
             stage,
             backend: PortBackend::Shared { sys: Arc::clone(sys), id },
             frame_base: DramStats::default(),
+            frame_base_paging: DramStats::default(),
             sync_lifetime: DramStats::default(),
+            trace_prefetch: Vec::new(),
         }
     }
 
@@ -625,12 +741,47 @@ impl MemPort {
                 m.reset();
             }
             PortBackend::Shared { sys, id } => {
-                self.frame_base = sys
-                    .lock()
-                    .expect("memory system lock poisoned")
-                    .port_stage_stats(*id, stage);
+                let sys = sys.lock().expect("memory system lock poisoned");
+                self.frame_base = sys.port_stage_stats(*id, stage);
+                self.frame_base_paging = sys.port_stage_stats(*id, MemStage::Paging);
             }
-            PortBackend::Trace(log) => log.clear(),
+            PortBackend::Trace(log) => {
+                log.clear();
+                self.trace_prefetch.clear();
+            }
+        }
+    }
+
+    /// Hand a prefetch page list to the memory system (shared backend) or
+    /// record it for replay (trace backend). No-op on the synchronous
+    /// backend, which has no residency layer.
+    pub fn prefetch(&mut self, pages: &[usize]) {
+        match &mut self.backend {
+            PortBackend::Sync(_) => {}
+            PortBackend::Shared { sys, id } => sys
+                .lock()
+                .expect("memory system lock poisoned")
+                .residency_prefetch(*id, pages),
+            PortBackend::Trace(_) => self.trace_prefetch.extend_from_slice(pages),
+        }
+    }
+
+    /// Drain the recorded prefetch list (trace backend; empty otherwise).
+    pub fn take_prefetch(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.trace_prefetch)
+    }
+
+    /// Paging traffic this port's requests triggered since the last
+    /// `begin_frame` (shared backend; zero otherwise — the synchronous
+    /// backend never pages and trace ports report zero until replayed).
+    pub fn paging_stats(&self) -> DramStats {
+        match &self.backend {
+            PortBackend::Shared { sys, id } => sys
+                .lock()
+                .expect("memory system lock poisoned")
+                .port_stage_stats(*id, MemStage::Paging)
+                .delta(&self.frame_base_paging),
+            PortBackend::Sync(_) | PortBackend::Trace(_) => DramStats::default(),
         }
     }
 
@@ -719,6 +870,7 @@ mod tests {
             dram: DramConfig { channels: 2, ..DramConfig::default() },
             outstanding: 8,
             shards: 1,
+            ..MemSimConfig::default()
         };
         let mut sys = MemorySystem::new(cfg, ShardMap::single(1 << 24));
         let p = sys.register_port();
@@ -745,6 +897,7 @@ mod tests {
             dram: DramConfig { channels: 2, ..DramConfig::default() },
             outstanding: 4,
             shards: 1,
+            ..MemSimConfig::default()
         };
         let mk = || MemorySystem::new(cfg.clone(), ShardMap::single(1 << 24));
 
@@ -850,6 +1003,7 @@ mod tests {
             dram: DramConfig { channels: 1, ..DramConfig::default() },
             outstanding: 1,
             shards: 4,
+            ..MemSimConfig::default()
         };
         let map = ShardMap::build(1 << 20, 4, 2048);
         let mut sys = MemorySystem::new(cfg, map);
@@ -875,6 +1029,7 @@ mod tests {
                 dram: DramConfig { channels, ..DramConfig::default() },
                 outstanding: 4,
                 shards: 1,
+                ..MemSimConfig::default()
             };
             MemorySystem::new(cfg, ShardMap::single(1 << 24))
         };

@@ -24,6 +24,7 @@
 pub mod dram;
 pub mod event_queue;
 pub mod oracle;
+pub mod residency;
 pub mod shard;
 pub mod sram;
 pub mod traffic;
@@ -33,6 +34,10 @@ pub use event_queue::{
     MemMode, MemPort, MemRequest, MemSimConfig, MemStage, MemorySystem, PortId,
 };
 pub use oracle::SyncDramModel;
+pub use residency::{
+    EvictPolicy, PrefetchPolicy, ResidencyConfig, ResidencyPrefetcher, ResidencyReport,
+    ResidencyState, ResidencyStats,
+};
 pub use shard::ShardMap;
 pub use sram::{SegmentWalker, SramBuffer, SramConfig, SramStats};
 pub use traffic::TrafficLog;

@@ -1,0 +1,690 @@
+//! Streaming scene residency: DRAM as a page-granular cache over the
+//! compressed backing store (`scene::compressed`).
+//!
+//! When a [`ResidencyConfig`] caps DRAM capacity below the scene span, the
+//! event-queue [`MemorySystem`](super::event_queue::MemorySystem) routes
+//! every cull/blend request through a [`ResidencyState`] page table first:
+//! a touched non-resident page triggers a *demand fill* — an eviction
+//! (clock or cost-aware victim) plus a fill transaction, both charged to
+//! the issuing port on the [`MemStage::Paging`](super::event_queue::MemStage)
+//! stream so contention, fairness, and latency percentiles see the paging
+//! traffic. Demand fills additionally model the backing-store decode cost
+//! (`compressed bytes × decode_ns_per_byte`) as stall time.
+//!
+//! [`ResidencyPrefetcher`] turns misses into background fills: the
+//! `NextFrameCull` policy replays the previous frame's visible-cell pages;
+//! `TrajectoryLookahead{k}` extrapolates the camera path and frustum-tests
+//! grid cells for the next `k` frames (with a zero-velocity fallback on
+//! the first frame, so a still camera prefetches exactly its own working
+//! set). Prefetch fills never evict recently-touched pages (thrash guard)
+//! and are not counted as misses.
+//!
+//! **Determinism:** every decision is a pure function of the request
+//! stream and the camera path — both byte-identical across thread counts
+//! (lockstep and two-phase replay drive the same deterministic order), so
+//! residency statistics inherit the repo-wide thread-matrix contract.
+
+use std::sync::Arc;
+
+use crate::camera::Camera;
+use crate::culling::{Containment, GridPartition};
+use crate::math::Vec3;
+use crate::scene::CompressedStore;
+use crate::util::json::Json;
+
+/// Which pages to pull ahead of demand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchPolicy {
+    /// Demand paging only.
+    None,
+    /// Prefetch the pages of the cells the *previous* frame's cull pass
+    /// found visible.
+    NextFrameCull,
+    /// Extrapolate the camera path (position + forward, linear) and
+    /// prefetch the pages of every cell the next `k` predicted frames
+    /// would cull in.
+    TrajectoryLookahead { k: usize },
+}
+
+impl PrefetchPolicy {
+    /// Parse a CLI/config label: `none`, `next-frame-cull`, `lookahead`
+    /// (k = 2) or `lookahead:<k>`.
+    pub fn from_label(s: &str) -> Option<PrefetchPolicy> {
+        match s {
+            "none" => Some(PrefetchPolicy::None),
+            "next-frame-cull" => Some(PrefetchPolicy::NextFrameCull),
+            "lookahead" => Some(PrefetchPolicy::TrajectoryLookahead { k: 2 }),
+            _ => {
+                let k = s.strip_prefix("lookahead:")?.parse::<usize>().ok()?;
+                Some(PrefetchPolicy::TrajectoryLookahead { k: k.max(1) })
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PrefetchPolicy::None => "none".into(),
+            PrefetchPolicy::NextFrameCull => "next-frame-cull".into(),
+            PrefetchPolicy::TrajectoryLookahead { k } => format!("lookahead:{k}"),
+        }
+    }
+}
+
+/// Victim choice when a fill needs space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Second-chance clock sweep over reference bits.
+    Clock,
+    /// Oldest last-touch first; ties broken by smallest compressed size
+    /// (cheapest to re-fetch), then page index.
+    CostAware,
+}
+
+impl EvictPolicy {
+    pub fn from_label(s: &str) -> Option<EvictPolicy> {
+        match s {
+            "clock" => Some(EvictPolicy::Clock),
+            "cost-aware" => Some(EvictPolicy::CostAware),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictPolicy::Clock => "clock",
+            EvictPolicy::CostAware => "cost-aware",
+        }
+    }
+}
+
+/// Residency configuration carried by
+/// [`MemSimConfig`](super::event_queue::MemSimConfig). Disabled by default
+/// (`capacity_mb = 0`): the scene is fully DRAM-resident and no paging
+/// layer is attached, preserving pre-residency reports byte-for-byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResidencyConfig {
+    /// DRAM capacity available to the scene, in MiB. `0` disables the
+    /// residency layer; a capacity at or above the scene span is treated
+    /// as fully resident (also no paging layer).
+    pub capacity_mb: f64,
+    /// Prefetch policy.
+    pub policy: PrefetchPolicy,
+    /// Page count to partition the scene span into (row-aligned).
+    pub pages: usize,
+    /// Eviction victim choice.
+    pub evict: EvictPolicy,
+    /// Modeled backing-store decode cost per *compressed* byte (ns).
+    pub decode_ns_per_byte: f64,
+}
+
+impl Default for ResidencyConfig {
+    fn default() -> Self {
+        ResidencyConfig {
+            capacity_mb: 0.0,
+            policy: PrefetchPolicy::None,
+            pages: 64,
+            evict: EvictPolicy::Clock,
+            decode_ns_per_byte: 0.25,
+        }
+    }
+}
+
+impl ResidencyConfig {
+    /// Defaults with the `PALLAS_RESIDENCY_MB` environment override
+    /// (mirrors `PALLAS_THREADS` / `PALLAS_RENDER_BACKEND`).
+    pub fn from_env() -> ResidencyConfig {
+        let mut cfg = ResidencyConfig::default();
+        if let Ok(v) = std::env::var("PALLAS_RESIDENCY_MB") {
+            if let Ok(mb) = v.trim().parse::<f64>() {
+                cfg.capacity_mb = mb.max(0.0);
+            }
+        }
+        cfg
+    }
+
+    /// Is the residency layer requested at all?
+    pub fn enabled(&self) -> bool {
+        self.capacity_mb > 0.0
+    }
+
+    /// Capacity in bytes (MiB-based).
+    pub fn capacity_bytes(&self) -> u64 {
+        (self.capacity_mb * (1u64 << 20) as f64) as u64
+    }
+}
+
+/// Raw residency counters (all deterministic functions of the request
+/// stream).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResidencyStats {
+    /// Page touches that found the page resident.
+    pub hits: u64,
+    /// Page touches that required a demand fill.
+    pub misses: u64,
+    /// Pages evicted (demand + prefetch fills).
+    pub evictions: u64,
+    /// Fills triggered by a miss (stall the issuing stage).
+    pub demand_fills: u64,
+    /// Fills issued ahead of demand (background traffic).
+    pub prefetch_fills: u64,
+    /// Compressed bytes fetched from the backing store.
+    pub fetched_compressed_bytes: u64,
+    /// Time demand fills stalled the issuing stage: paging busy delta plus
+    /// decode time (ns).
+    pub stall_ns: f64,
+    /// Modeled backing-store decode time, all fills (ns).
+    pub decode_ns: f64,
+}
+
+impl ResidencyStats {
+    /// Page-touch hit rate; 0 before any traffic.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Snapshot surfaced into reports (`contended_mem.residency` and the
+/// `multi_viewer` residency sweep).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidencyReport {
+    pub stats: ResidencyStats,
+    pub capacity_pages: usize,
+    pub total_pages: usize,
+    pub resident_pages: usize,
+    pub page_size_bytes: u64,
+    pub compression_ratio: f64,
+}
+
+impl ResidencyReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("hits", self.stats.hits)
+            .set("misses", self.stats.misses)
+            .set("hit_rate", self.stats.hit_rate())
+            .set("evictions", self.stats.evictions)
+            .set("demand_fills", self.stats.demand_fills)
+            .set("prefetch_fills", self.stats.prefetch_fills)
+            .set("fetched_compressed_bytes", self.stats.fetched_compressed_bytes)
+            .set("stall_ns", self.stats.stall_ns)
+            .set("decode_ns", self.stats.decode_ns)
+            .set("capacity_pages", self.capacity_pages as u64)
+            .set("total_pages", self.total_pages as u64)
+            .set("resident_pages", self.resident_pages as u64)
+            .set("page_size_bytes", self.page_size_bytes)
+            .set("compression_ratio", self.compression_ratio)
+    }
+}
+
+/// The page table the event-queue memory system consults on every
+/// non-paging request. Owned by `MemorySystem`; all mutation happens under
+/// its lock, in deterministic request order.
+#[derive(Debug)]
+pub struct ResidencyState {
+    store: Arc<CompressedStore>,
+    evict: EvictPolicy,
+    decode_ns_per_byte: f64,
+    resident: Vec<bool>,
+    /// Second-chance reference bits (set on touch/fill, cleared by the
+    /// clock sweep; the prefetch thrash guard reads them under both
+    /// eviction policies).
+    ref_bit: Vec<bool>,
+    /// Logical touch stamps for the cost-aware policy.
+    last_touch: Vec<u64>,
+    touch_counter: u64,
+    hand: usize,
+    capacity_pages: usize,
+    n_resident: usize,
+    pub stats: ResidencyStats,
+}
+
+impl ResidencyState {
+    pub fn new(cfg: &ResidencyConfig, store: Arc<CompressedStore>) -> ResidencyState {
+        let n = store.n_pages();
+        let page = store.page_size().max(1);
+        let capacity_pages = ((cfg.capacity_bytes() / page) as usize).clamp(1, n.max(1));
+        ResidencyState {
+            evict: cfg.evict,
+            decode_ns_per_byte: cfg.decode_ns_per_byte,
+            resident: vec![false; n],
+            ref_bit: vec![false; n],
+            last_touch: vec![0; n],
+            touch_counter: 0,
+            hand: 0,
+            capacity_pages,
+            n_resident: 0,
+            store,
+            stats: ResidencyStats::default(),
+        }
+    }
+
+    pub fn store(&self) -> &Arc<CompressedStore> {
+        &self.store
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.capacity_pages
+    }
+
+    pub fn n_resident(&self) -> usize {
+        self.n_resident
+    }
+
+    pub fn is_resident(&self, page: usize) -> bool {
+        self.resident[page]
+    }
+
+    /// Record a resident touch: hit count + recency state.
+    pub fn note_hit(&mut self, page: usize) {
+        self.stats.hits += 1;
+        self.touch(page);
+    }
+
+    /// Refresh recency without counting a demand touch (prefetch of an
+    /// already-resident page keeps the working set warm but is neither a
+    /// hit nor a miss).
+    pub fn refresh(&mut self, page: usize) {
+        self.touch(page);
+    }
+
+    /// Mark a page resident after its fill traffic was charged.
+    /// `busy_delta_ns` is the paging busy time the fill added on the
+    /// issuing port.
+    pub fn complete_fill(&mut self, page: usize, demand: bool, busy_delta_ns: f64) {
+        let compressed = self.store.page_compressed_bytes(page);
+        let decode = compressed as f64 * self.decode_ns_per_byte;
+        self.stats.decode_ns += decode;
+        self.stats.fetched_compressed_bytes += compressed;
+        if demand {
+            self.stats.demand_fills += 1;
+            self.stats.stall_ns += busy_delta_ns + decode;
+        } else {
+            self.stats.prefetch_fills += 1;
+        }
+        if !self.resident[page] {
+            self.resident[page] = true;
+            self.n_resident += 1;
+        }
+        self.touch(page);
+    }
+
+    /// Does a fill need an eviction first?
+    pub fn at_capacity(&self) -> bool {
+        self.n_resident >= self.capacity_pages
+    }
+
+    /// Pick and evict a victim page, returning it so the caller can charge
+    /// the write-back transaction. Demand fills may evict anything;
+    /// prefetch fills only evict pages with a clear reference bit (thrash
+    /// guard) and return `None` when every resident page was recently
+    /// touched.
+    pub fn evict_victim(&mut self, demand: bool) -> Option<usize> {
+        let victim = match self.evict {
+            EvictPolicy::Clock => self.clock_victim(demand),
+            EvictPolicy::CostAware => self.cost_victim(demand),
+        }?;
+        self.resident[victim] = false;
+        self.ref_bit[victim] = false;
+        self.n_resident -= 1;
+        self.stats.evictions += 1;
+        Some(victim)
+    }
+
+    pub fn report(&self) -> ResidencyReport {
+        ResidencyReport {
+            stats: self.stats,
+            capacity_pages: self.capacity_pages,
+            total_pages: self.store.n_pages(),
+            resident_pages: self.n_resident,
+            page_size_bytes: self.store.page_size(),
+            compression_ratio: self.store.compression_ratio(),
+        }
+    }
+
+    fn touch(&mut self, page: usize) {
+        self.ref_bit[page] = true;
+        self.touch_counter += 1;
+        self.last_touch[page] = self.touch_counter;
+    }
+
+    fn clock_victim(&mut self, demand: bool) -> Option<usize> {
+        let n = self.resident.len();
+        if demand {
+            // Second chance: first pass clears reference bits, so at most
+            // two sweeps find a victim whenever anything is resident.
+            for _ in 0..2 * n + 1 {
+                let p = self.hand;
+                self.hand = (self.hand + 1) % n;
+                if !self.resident[p] {
+                    continue;
+                }
+                if self.ref_bit[p] {
+                    self.ref_bit[p] = false;
+                    continue;
+                }
+                return Some(p);
+            }
+            None
+        } else {
+            // Thrash guard: scan without disturbing reference bits.
+            for i in 0..n {
+                let p = (self.hand + i) % n;
+                if self.resident[p] && !self.ref_bit[p] {
+                    self.hand = (p + 1) % n;
+                    return Some(p);
+                }
+            }
+            None
+        }
+    }
+
+    fn cost_victim(&self, demand: bool) -> Option<usize> {
+        let mut best: Option<(u64, u64, usize)> = None;
+        for p in 0..self.resident.len() {
+            if !self.resident[p] || (!demand && self.ref_bit[p]) {
+                continue;
+            }
+            let key = (self.last_touch[p], self.store.page_compressed_bytes(p), p);
+            if best.map(|b| key < b).unwrap_or(true) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, p)| p)
+    }
+}
+
+/// Camera pose sample for trajectory extrapolation.
+#[derive(Debug, Clone, Copy)]
+struct CamSample {
+    eye: Vec3,
+    fwd: Vec3,
+}
+
+/// Host-side prefetch predictor. Lives in the pipeline's `FrameCtx` (so it
+/// rides session detach/resume) and runs *before* the cull stage issues
+/// demand reads; its page list is handed to the cull port, which either
+/// issues the prefetch fills directly (lockstep) or records them for the
+/// round engine's policy-ordered replay (two-phase). Prediction only reads
+/// the camera path and the grid — never simulated timing — so both modes
+/// see identical prefetch streams.
+#[derive(Debug)]
+pub struct ResidencyPrefetcher {
+    policy: PrefetchPolicy,
+    grid: Arc<GridPartition>,
+    store: Arc<CompressedStore>,
+    prev: Option<CamSample>,
+    last_cull_pages: Vec<usize>,
+    pages: Vec<usize>,
+    cells: Vec<usize>,
+}
+
+impl ResidencyPrefetcher {
+    pub fn new(
+        policy: PrefetchPolicy,
+        grid: Arc<GridPartition>,
+        store: Arc<CompressedStore>,
+    ) -> ResidencyPrefetcher {
+        ResidencyPrefetcher {
+            policy,
+            grid,
+            store,
+            prev: None,
+            last_cull_pages: Vec::new(),
+            pages: Vec::new(),
+            cells: Vec::new(),
+        }
+    }
+
+    pub fn policy(&self) -> PrefetchPolicy {
+        self.policy
+    }
+
+    /// Pages to prefetch for the frame about to render at `(cam, t)`.
+    /// Sorted and deduplicated — a deterministic fill order.
+    pub fn predict(&mut self, cam: &Camera, t: f32) -> &[usize] {
+        match self.policy {
+            PrefetchPolicy::None => &[],
+            PrefetchPolicy::NextFrameCull => &self.last_cull_pages,
+            PrefetchPolicy::TrajectoryLookahead { k } => {
+                self.cells.clear();
+                // Anchor step: the current pose. With no history this is
+                // the zero-velocity fallback — a still camera prefetches
+                // exactly the working set it is about to cull.
+                visible_cells(&self.grid, cam, t, &mut self.cells);
+                if let Some(p) = self.prev {
+                    let eye = cam.position;
+                    let fwd = forward_of(cam);
+                    let up = up_of(cam);
+                    let vel = eye - p.eye;
+                    let dfw = fwd - p.fwd;
+                    for i in 1..=k {
+                        let s = i as f32;
+                        let eye_i = eye + vel * s;
+                        let mut fwd_i = fwd + dfw * s;
+                        if fwd_i.length() < 1e-6 {
+                            fwd_i = fwd;
+                        }
+                        let mut c = *cam;
+                        c.set_pose(eye_i, eye_i + fwd_i, up);
+                        visible_cells(&self.grid, &c, t, &mut self.cells);
+                    }
+                }
+                self.pages.clear();
+                for &flat in &self.cells {
+                    for &p in self.store.cell_pages(flat) {
+                        self.pages.push(p as usize);
+                    }
+                }
+                self.pages.sort_unstable();
+                self.pages.dedup();
+                &self.pages
+            }
+        }
+    }
+
+    /// Record the frame that just culled at `(cam, t)`: its visible-cell
+    /// pages (NextFrameCull) and its pose (trajectory history).
+    pub fn observe(&mut self, cam: &Camera, t: f32) {
+        match self.policy {
+            PrefetchPolicy::None => {}
+            PrefetchPolicy::NextFrameCull => {
+                self.cells.clear();
+                visible_cells(&self.grid, cam, t, &mut self.cells);
+                self.last_cull_pages.clear();
+                for &flat in &self.cells {
+                    for &p in self.store.cell_pages(flat) {
+                        self.last_cull_pages.push(p as usize);
+                    }
+                }
+                self.last_cull_pages.sort_unstable();
+                self.last_cull_pages.dedup();
+            }
+            PrefetchPolicy::TrajectoryLookahead { .. } => {
+                self.prev = Some(CamSample { eye: cam.position, fwd: forward_of(cam) });
+            }
+        }
+    }
+}
+
+fn forward_of(cam: &Camera) -> Vec3 {
+    Vec3::new(cam.view.m[2][0], cam.view.m[2][1], cam.view.m[2][2])
+}
+
+fn up_of(cam: &Camera) -> Vec3 {
+    Vec3::new(cam.view.m[1][0], cam.view.m[1][1], cam.view.m[1][2])
+}
+
+/// Non-empty grid cells of `t`'s temporal slice whose AABB intersects the
+/// camera frustum — the same pass-1 test DR-FC culling schedules with.
+fn visible_cells(grid: &GridPartition, cam: &Camera, t: f32, out: &mut Vec<usize>) {
+    let frustum = cam.frustum();
+    let cps = grid.config.cells_per_slice();
+    let slice = {
+        let (t0, t1) = grid.time_span;
+        let n = grid.config.n_temporal;
+        if n <= 1 || t1 <= t0 {
+            0
+        } else {
+            let f = ((t - t0) / (t1 - t0)).clamp(0.0, 1.0);
+            ((f * n as f32) as usize).min(n - 1)
+        }
+    };
+    for flat in slice * cps..(slice + 1) * cps {
+        let cell = &grid.cells[flat];
+        if cell.central.is_empty() && cell.refs.is_empty() {
+            continue;
+        }
+        if frustum.test_aabb(&grid.cell_aabb(flat)) != Containment::Outside {
+            out.push(flat);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::culling::GridConfig;
+    use crate::scene::synth::{SceneKind, SynthParams};
+    use crate::scene::{DramLayout, Gaussian4D};
+
+    fn small_store() -> (Arc<GridPartition>, Arc<CompressedStore>) {
+        let scene = SynthParams::new(SceneKind::DynamicLarge, 600).generate();
+        let grid = GridPartition::build(&scene, GridConfig::new(4));
+        let layout = DramLayout::build(&scene, &grid);
+        let quantized: Vec<Gaussian4D> =
+            scene.gaussians.iter().map(|g| g.quantized_fp16()).collect();
+        let store = CompressedStore::build(&quantized, scene.dynamic, &layout, 32, 2048);
+        (Arc::new(grid), Arc::new(store))
+    }
+
+    fn test_cam() -> Camera {
+        Camera::look_at(
+            Vec3::new(0.0, 0.0, 26.0),
+            Vec3::ZERO,
+            Vec3::new(0.0, 1.0, 0.0),
+            60f32.to_radians(),
+            16.0 / 9.0,
+            0.1,
+            200.0,
+        )
+    }
+
+    #[test]
+    fn policy_labels_round_trip() {
+        for p in [
+            PrefetchPolicy::None,
+            PrefetchPolicy::NextFrameCull,
+            PrefetchPolicy::TrajectoryLookahead { k: 2 },
+            PrefetchPolicy::TrajectoryLookahead { k: 7 },
+        ] {
+            assert_eq!(PrefetchPolicy::from_label(&p.label()), Some(p));
+        }
+        assert_eq!(
+            PrefetchPolicy::from_label("lookahead"),
+            Some(PrefetchPolicy::TrajectoryLookahead { k: 2 })
+        );
+        assert_eq!(PrefetchPolicy::from_label("bogus"), None);
+        for e in [EvictPolicy::Clock, EvictPolicy::CostAware] {
+            assert_eq!(EvictPolicy::from_label(e.label()), Some(e));
+        }
+    }
+
+    #[test]
+    fn config_defaults_are_disabled() {
+        let cfg = ResidencyConfig::default();
+        assert!(!cfg.enabled());
+        assert_eq!(cfg.capacity_bytes(), 0);
+        let on = ResidencyConfig { capacity_mb: 0.5, ..ResidencyConfig::default() };
+        assert!(on.enabled());
+        assert_eq!(on.capacity_bytes(), 1 << 19);
+    }
+
+    #[test]
+    fn clock_eviction_gives_second_chances() {
+        let (_, store) = small_store();
+        let cfg = ResidencyConfig {
+            capacity_mb: 1.0,
+            evict: EvictPolicy::Clock,
+            ..ResidencyConfig::default()
+        };
+        let mut st = ResidencyState::new(&cfg, store);
+        // Fill pages 0..3; touch 0 and 2 so their ref bits are set.
+        for p in 0..4 {
+            st.complete_fill(p, false, 0.0);
+        }
+        // All ref bits are set by the fills; one demand sweep clears them
+        // and the second finds page 0 (hand order).
+        let v = st.evict_victim(true).unwrap();
+        assert_eq!(v, 0);
+        // Page 1's bit was cleared by that sweep; it goes next.
+        assert_eq!(st.evict_victim(true).unwrap(), 1);
+        // A prefetch eviction only takes ref-clear pages.
+        st.note_hit(2);
+        st.note_hit(3);
+        assert_eq!(st.evict_victim(false), None, "all remaining pages recently touched");
+    }
+
+    #[test]
+    fn cost_aware_prefers_oldest_then_smallest() {
+        let (_, store) = small_store();
+        let cfg = ResidencyConfig {
+            capacity_mb: 1.0,
+            evict: EvictPolicy::CostAware,
+            ..ResidencyConfig::default()
+        };
+        let mut st = ResidencyState::new(&cfg, store);
+        st.complete_fill(5, false, 0.0);
+        st.complete_fill(3, false, 0.0);
+        st.complete_fill(7, false, 0.0);
+        // 5 is the oldest touch → demand-evicted first.
+        assert_eq!(st.evict_victim(true).unwrap(), 5);
+        st.note_hit(3); // 3 is now newer than 7
+        assert_eq!(st.evict_victim(true).unwrap(), 7);
+    }
+
+    #[test]
+    fn lookahead_fallback_predicts_current_working_set() {
+        let (grid, store) = small_store();
+        let mut pf = ResidencyPrefetcher::new(
+            PrefetchPolicy::TrajectoryLookahead { k: 2 },
+            Arc::clone(&grid),
+            Arc::clone(&store),
+        );
+        let cam = test_cam();
+        // No history yet: the prediction is the current pose's cells.
+        let predicted: Vec<usize> = pf.predict(&cam, 0.5).to_vec();
+        assert!(!predicted.is_empty(), "camera looking at the scene must predict pages");
+        let mut cells = Vec::new();
+        visible_cells(&grid, &cam, 0.5, &mut cells);
+        let mut want: Vec<usize> = cells
+            .iter()
+            .flat_map(|&c| store.cell_pages(c).iter().map(|&p| p as usize))
+            .collect();
+        want.sort_unstable();
+        want.dedup();
+        assert_eq!(predicted, want);
+    }
+
+    #[test]
+    fn next_frame_cull_replays_observed_frame() {
+        let (grid, store) = small_store();
+        let mut pf = ResidencyPrefetcher::new(
+            PrefetchPolicy::NextFrameCull,
+            Arc::clone(&grid),
+            Arc::clone(&store),
+        );
+        let cam = test_cam();
+        assert!(pf.predict(&cam, 0.5).is_empty(), "no history on the first frame");
+        pf.observe(&cam, 0.5);
+        assert!(!pf.predict(&cam, 0.5).is_empty());
+        // None policy never predicts.
+        let mut none =
+            ResidencyPrefetcher::new(PrefetchPolicy::None, Arc::clone(&grid), store);
+        none.observe(&cam, 0.5);
+        assert!(none.predict(&cam, 0.5).is_empty());
+    }
+}

@@ -13,6 +13,10 @@ pub struct TrafficLog {
     pub preprocess_dram: DramStats,
     /// DRAM traffic during blending (buffer miss fills).
     pub blend_dram: DramStats,
+    /// Paging traffic (residency miss fills, prefetch, eviction
+    /// write-backs) charged by the residency layer. Zero when the scene is
+    /// fully DRAM-resident.
+    pub paging_dram: DramStats,
     /// SRAM buffer activity during blending.
     pub blend_sram: SramStats,
     /// Gaussian parameter records fetched from DRAM (count, dedup applied).
@@ -35,35 +39,43 @@ impl TrafficLog {
 
     /// Total DRAM bytes across stages.
     pub fn total_dram_bytes(&self) -> u64 {
-        self.preprocess_dram.bytes + self.blend_dram.bytes
+        self.preprocess_dram.bytes + self.blend_dram.bytes + self.paging_dram.bytes
     }
 
     /// Total DRAM energy (pJ).
     pub fn total_dram_energy_pj(&self) -> f64 {
-        self.preprocess_dram.energy_pj + self.blend_dram.energy_pj
+        self.preprocess_dram.energy_pj + self.blend_dram.energy_pj + self.paging_dram.energy_pj
     }
 
     /// Total DRAM *access count* — the Fig. 9 / Fig. 10(a) metric. The paper
     /// counts parameter-fetch transactions; we count bursts, which is what a
     /// DRAM controller issues.
     pub fn total_dram_accesses(&self) -> u64 {
-        self.preprocess_dram.bursts + self.blend_dram.bursts
+        self.preprocess_dram.bursts + self.blend_dram.bursts + self.paging_dram.bursts
     }
 
     pub fn add(&mut self, o: &TrafficLog) {
         self.preprocess_dram.add(&o.preprocess_dram);
         self.blend_dram.add(&o.blend_dram);
+        self.paging_dram.add(&o.paging_dram);
         self.blend_sram.add(&o.blend_sram);
         self.gaussians_fetched += o.gaussians_fetched;
         self.gaussians_visible += o.gaussians_visible;
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut js = Json::obj()
             // Full per-stage DRAM statistics (busy/wait/hit-rate included)
             // so benches consume them instead of recomputing.
             .set("preprocess_dram", self.preprocess_dram.to_json())
-            .set("blend_dram", self.blend_dram.to_json())
+            .set("blend_dram", self.blend_dram.to_json());
+        // The paging stage appears only when the residency layer actually
+        // moved data — fully-resident reports stay byte-identical to the
+        // pre-residency schema.
+        if self.paging_dram != DramStats::default() {
+            js = js.set("paging_dram", self.paging_dram.to_json());
+        }
+        js
             // Flat legacy keys, kept for existing report consumers.
             .set("preprocess_dram_bytes", self.preprocess_dram.bytes)
             .set("preprocess_dram_bursts", self.preprocess_dram.bursts)
@@ -120,6 +132,18 @@ mod tests {
         let s = t.to_json().pretty();
         assert!(s.contains("sram_hit_rate"));
         assert!(s.contains("gaussians_visible"));
+    }
+
+    #[test]
+    fn paging_block_only_present_when_nonzero() {
+        let mut t = TrafficLog::new();
+        assert!(!t.to_json().pretty().contains("\"paging_dram\""));
+        t.paging_dram.bytes = 2048;
+        t.paging_dram.bursts = 64;
+        let s = t.to_json().pretty();
+        assert!(s.contains("\"paging_dram\""), "{s}");
+        assert_eq!(t.total_dram_bytes(), 2048);
+        assert_eq!(t.total_dram_accesses(), 64);
     }
 
     #[test]

@@ -35,7 +35,7 @@
 use crate::culling::{CullOutput, GridPartition};
 use crate::dcim::{DcimConfig, DcimMacro};
 use crate::energy::{FrameEnergy, StageLatency};
-use crate::memory::{MemPort, SramStats, TrafficLog};
+use crate::memory::{MemPort, ResidencyPrefetcher, SramStats, TrafficLog};
 use crate::pipeline::PipelineConfig;
 use crate::render::Image;
 use crate::scene::{DramLayout, Gaussian4D, Scene};
@@ -110,6 +110,11 @@ pub struct FrameCtx {
     pub cull_port: MemPort,
     /// DRAM request port of the blend miss-fill path.
     pub blend_port: MemPort,
+    /// Streaming-residency prefetch predictor (`None` when the residency
+    /// layer is disabled). Carried per-session state: the cull stage asks
+    /// it for next-frame pages before issuing demand reads and feeds it the
+    /// frame it just culled.
+    pub prefetcher: Option<ResidencyPrefetcher>,
     pub atg_ops: u64,
     pub atg_flags: u64,
     pub intersections: u64,
@@ -179,6 +184,7 @@ impl FrameCtx {
             cull: CullOutput::default(),
             cull_port,
             blend_port,
+            prefetcher: None,
             atg_ops: 0,
             atg_flags: 0,
             intersections: 0,

@@ -17,10 +17,11 @@ use crate::dcim::DcimConfig;
 use crate::energy::{FrameEnergy, StageLatency};
 use crate::memory::sram::{SramBuffer, SramConfig};
 use crate::memory::{
-    MemMode, MemPort, MemSimConfig, MemStage, MemorySystem, PortId, ShardMap, TrafficLog,
+    MemMode, MemPort, MemSimConfig, MemStage, MemorySystem, PortId, ResidencyConfig,
+    ResidencyPrefetcher, ShardMap, TrafficLog,
 };
 use crate::render::{HwRenderer, Image, RenderBackend};
-use crate::scene::{DramLayout, Gaussian4D, Scene};
+use crate::scene::{CompressedStore, DramLayout, Gaussian4D, Scene};
 use crate::sorting::{SortEngine, SortHwConfig, SortStats};
 use crate::tiles::atg::{Atg, AtgConfig};
 use crate::tiles::connection::ConnectionGraph;
@@ -100,7 +101,10 @@ impl PipelineConfig {
             dcim: if dynamic { DcimConfig::paper_dynamic() } else { DcimConfig::paper_static() },
             sort_hw: SortHwConfig::default(),
             sram_bytes: 256 * 1024,
-            mem: MemSimConfig::default(),
+            mem: MemSimConfig {
+                residency: ResidencyConfig::from_env(),
+                ..MemSimConfig::default()
+            },
             threads: 0,
             render_backend: RenderBackend::from_env(),
         }
@@ -208,6 +212,10 @@ pub struct ScenePrep {
     /// Row-aligned partition of the layout's full span (records + pointer
     /// tables) into `config.mem.shards` channel-group shards.
     pub shard_map: Arc<ShardMap>,
+    /// Delta/FP16-compressed backing store over the layout's span — built
+    /// only when the streaming-residency layer is enabled
+    /// (`config.mem.residency`), `None` for fully-resident configs.
+    pub compressed: Option<Arc<CompressedStore>>,
 }
 
 impl ScenePrep {
@@ -228,7 +236,18 @@ impl ScenePrep {
             config.mem.shards,
             config.mem.dram.row_bytes,
         ));
-        ScenePrep { grid, layout, quantized, shard_map }
+        let compressed = if config.mem.residency.enabled() {
+            Some(Arc::new(CompressedStore::build(
+                &quantized,
+                scene.dynamic,
+                &layout,
+                config.mem.residency.pages,
+                config.mem.dram.row_bytes,
+            )))
+        } else {
+            None
+        };
+        ScenePrep { grid, layout, quantized, shard_map, compressed }
     }
 }
 
@@ -354,10 +373,11 @@ impl<'a> FramePipeline<'a> {
                     false,
                 ),
                 MemMode::EventQueue => {
-                    let sys = Arc::new(Mutex::new(MemorySystem::new(
-                        config.mem.clone(),
-                        *prep.shard_map,
-                    )));
+                    let mut sys = MemorySystem::new(config.mem.clone(), *prep.shard_map);
+                    if let Some(store) = &prep.compressed {
+                        sys.attach_residency(store);
+                    }
+                    let sys = Arc::new(Mutex::new(sys));
                     let cull = MemPort::shared(&sys, MemStage::Preprocess);
                     let blend = MemPort::shared(&sys, MemStage::Blend);
                     (cull, blend, Some(sys), true)
@@ -389,7 +409,7 @@ impl<'a> FramePipeline<'a> {
             Self::make_ports(&config, &prep, choice);
 
         let threads = config.resolved_threads();
-        let ctx = FrameCtx::new(
+        let mut ctx = FrameCtx::new(
             conn,
             config.dcim,
             n_blocks,
@@ -398,6 +418,16 @@ impl<'a> FramePipeline<'a> {
             blend_port,
         )
         .with_workers(threads);
+        // The residency prefetcher rides the pooled context so it survives
+        // session detach/resume (trajectory history and the previous
+        // frame's cull pages are retained per-session state).
+        ctx.prefetcher = prep.compressed.as_ref().map(|store| {
+            ResidencyPrefetcher::new(
+                config.mem.residency.policy,
+                Arc::clone(&prep.grid),
+                Arc::clone(store),
+            )
+        });
         FramePipeline {
             pool: WorkerPool::new(threads),
             host: HostStageWall::default(),
@@ -516,6 +546,14 @@ impl<'a> FramePipeline<'a> {
         (self.ctx.cull_port.take_trace(), self.ctx.blend_port.take_trace())
     }
 
+    /// Drain the prefetch page list the cull port recorded this frame
+    /// (trace-port pipelines only; empty otherwise). The two-phase round
+    /// engine replays it into the shared system *before* the frame's cull
+    /// trace, mirroring the lockstep issue order.
+    pub fn take_frame_prefetch(&mut self) -> Vec<usize> {
+        self.ctx.cull_port.take_prefetch()
+    }
+
     /// Host wall-clock per-stage accounting across all frames rendered so
     /// far (see [`HostStageWall`]).
     pub fn host_wall(&self) -> &HostStageWall {
@@ -631,6 +669,24 @@ impl<'a> FramePipeline<'a> {
         } = state;
         ctx.cull_port = cull_port;
         ctx.blend_port = blend_port;
+        // Align the carried prefetcher with the resuming configuration:
+        // keep it only when residency is still enabled under the *same*
+        // policy (its history is policy-shaped); otherwise rebuild fresh
+        // (or drop it when residency is off).
+        ctx.prefetcher = if config.mem.residency.enabled() {
+            match ctx.prefetcher.take() {
+                Some(p) if p.policy() == config.mem.residency.policy => Some(p),
+                _ => prep.compressed.as_ref().map(|store| {
+                    ResidencyPrefetcher::new(
+                        config.mem.residency.policy,
+                        Arc::clone(&prep.grid),
+                        Arc::clone(store),
+                    )
+                }),
+            }
+        } else {
+            None
+        };
         // The blend datapath (scalar vs lane-batched) is host-side, not
         // state-bearing — outputs are bit-identical — so the resumed run's
         // choice wins over whatever the session was detached under.

@@ -72,6 +72,16 @@ impl CullStage {
         pool: &WorkerPool,
     ) {
         ctx.cull_port.begin_frame();
+        // Residency prefetch: predict the pages the upcoming frames touch
+        // and hand them to the memory system *before* any demand read of
+        // this frame — background fills land first in both the lockstep
+        // order and the two-phase trace replay.
+        if let Some(pf) = &mut ctx.prefetcher {
+            let pages = pf.predict(cam, t);
+            if !pages.is_empty() {
+                ctx.cull_port.prefetch(pages);
+            }
+        }
         {
             let FrameCtx { cull, cull_port, energy, workers, .. } = ctx;
             if bind.config.use_drfc {
@@ -118,6 +128,15 @@ impl CullStage {
         }
         ctx.traffic.preprocess_dram = ctx.cull_port.stats();
         ctx.energy.dram_pj += ctx.traffic.preprocess_dram.energy_pj;
+        // Paging traffic this frame's prefetch + cull demand reads
+        // triggered on the residency layer (zero when fully resident).
+        ctx.traffic.paging_dram = ctx.cull_port.paging_stats();
+        ctx.energy.dram_pj += ctx.traffic.paging_dram.energy_pj;
+        // Feed the predictor the frame that just culled (pose history /
+        // visible pages for the next frame's prediction).
+        if let Some(pf) = &mut ctx.prefetcher {
+            pf.observe(cam, t);
+        }
         ctx.traffic.gaussians_fetched = ctx.cull.fetched;
         ctx.traffic.gaussians_visible = ctx.cull.visible.len() as u64;
     }
@@ -392,12 +411,18 @@ impl GroupStage {
         }
 
         // Preprocess latency: DRAM fetch ∥ grid tests + projection + binning.
+        // Paging traffic on `traffic.paging_dram` is cull-issued at this
+        // point in the frame (the blend stage adds its own later): demand
+        // fills serialize ahead of the fetch stream, so the DRAM term is
+        // fetch + paging.
         let proj_ns = ctx.dcim.busy_ns();
         let test_ns = (ctx.cull.fetched as f64
             + bind.grid.n_cells() as f64
             + ctx.intersections as f64 / 4.0)
             / DIGITAL_FREQ_GHZ;
-        ctx.latency.preprocess_ns = ctx.traffic.preprocess_dram.busy_ns.max(proj_ns + test_ns);
+        ctx.latency.preprocess_ns = (ctx.traffic.preprocess_dram.busy_ns
+            + ctx.traffic.paging_dram.busy_ns)
+            .max(proj_ns + test_ns);
     }
 }
 
@@ -718,6 +743,12 @@ impl BlendStage {
         ctx.traffic.blend_sram = self.sram.stats();
         ctx.energy.dram_pj += ctx.traffic.blend_dram.energy_pj;
         ctx.energy.sram_pj += ctx.traffic.blend_sram.energy_pj;
+        // Paging traffic the miss fills triggered on the residency layer
+        // (zero when fully resident) — added on top of the cull-issued
+        // paging already captured by the cull stage.
+        let blend_paging = ctx.blend_port.paging_stats();
+        ctx.traffic.paging_dram.add(&blend_paging);
+        ctx.energy.dram_pj += blend_paging.energy_pj;
 
         // Numeric render (optional) gives the exact blended-pair count.
         // Reuses the bins `IntersectStage` left in the context (identical
@@ -757,7 +788,8 @@ impl BlendStage {
             let blend_ops = counts.macs + counts.lut_lookups;
             blend_ops as f64 / bind.config.dcim.macs_per_cycle() / bind.config.dcim.freq_ghz
         };
-        ctx.latency.blend_ns = blend_dcim_ns.max(ctx.traffic.blend_dram.busy_ns);
+        ctx.latency.blend_ns =
+            blend_dcim_ns.max(ctx.traffic.blend_dram.busy_ns + blend_paging.busy_ns);
         ctx.image = image;
         ctx.blend_pairs = blend_pairs;
     }

@@ -1,0 +1,420 @@
+//! Compressed backing-store layout for streaming scene residency.
+//!
+//! When a scene is larger than the DRAM capacity the residency layer is
+//! given (`memory::residency`), DRAM acts as a page-granular cache over a
+//! *compressed backing store* modeled by [`CompressedStore`]. The store
+//! mirrors the uncompressed [`DramLayout`] address space — every page of
+//! the scene span has a compressed byte count, a decode cost, and (for the
+//! parameter region) an exactly-invertible encoding:
+//!
+//! * **Record codec** — each Gaussian is its FP16 storage image (38 halves
+//!   static / 43 dynamic, the same words `Gaussian4D::quantized_fp16`
+//!   models). Within one cell's contiguous run, records are XOR-delta
+//!   encoded against the previous record word-for-word (the first record
+//!   deltas against zero), and each 16-bit delta gets a 2-bit size code in
+//!   a packed per-record header: `0` = delta is zero (no payload), `1` =
+//!   low byte only, `2` = full 16 bits. Spatially sorted runs make most
+//!   high bytes repeat, so deltas are short — and the round trip is exact
+//!   by construction (bit-equal FP16 words).
+//! * **Pointer tables** — neighbor reference tables are counted
+//!   incompressible (ratio 1.0): they are already dense 4-byte indices.
+//!
+//! The store also pre-resolves the *cell → page* mapping the prefetch
+//! policies need: central-run pages plus the cell's pointer-table pages.
+
+use crate::math::f16::F16;
+use crate::memory::ShardMap;
+use crate::scene::gaussian::{Gaussian4D, SH_COEFFS};
+use crate::scene::DramLayout;
+
+/// FP16 words per stored record.
+fn words_per_record(dynamic: bool) -> usize {
+    let static_words = 3 + 4 + 3 + 1 + 3 * SH_COEFFS;
+    if dynamic {
+        static_words + 5
+    } else {
+        static_words
+    }
+}
+
+/// Serialize one Gaussian into its FP16 storage words (the canonical field
+/// order: position, rotation (w,x,y,z), scale, opacity, SH, then the
+/// dynamic extension μₜ, σₜ, velocity).
+fn record_words(g: &Gaussian4D, dynamic: bool, out: &mut Vec<u16>) {
+    out.clear();
+    let mut push = |v: f32| out.push(F16::from_f32(v).0);
+    push(g.mu.x);
+    push(g.mu.y);
+    push(g.mu.z);
+    push(g.rot.w);
+    push(g.rot.x);
+    push(g.rot.y);
+    push(g.rot.z);
+    push(g.scale.x);
+    push(g.scale.y);
+    push(g.scale.z);
+    push(g.opacity);
+    for c in &g.sh {
+        push(c.x);
+        push(c.y);
+        push(c.z);
+    }
+    if dynamic {
+        push(g.mu_t);
+        push(g.sigma_t);
+        push(g.velocity.x);
+        push(g.velocity.y);
+        push(g.velocity.z);
+    }
+}
+
+/// Rebuild a Gaussian from its FP16 storage words (exact inverse of
+/// [`record_words`] for FP16-quantized inputs).
+fn gaussian_from_words(w: &[u16], dynamic: bool) -> Gaussian4D {
+    use crate::math::{Quat, Vec3};
+    let f = |i: usize| F16(w[i]).to_f32();
+    let mut sh = [Vec3::ZERO; SH_COEFFS];
+    for (k, c) in sh.iter_mut().enumerate() {
+        *c = Vec3::new(f(11 + 3 * k), f(12 + 3 * k), f(13 + 3 * k));
+    }
+    let base = 11 + 3 * SH_COEFFS;
+    Gaussian4D {
+        mu: Vec3::new(f(0), f(1), f(2)),
+        rot: Quat::new(f(3), f(4), f(5), f(6)),
+        scale: Vec3::new(f(7), f(8), f(9)),
+        opacity: f(10),
+        sh,
+        mu_t: if dynamic { f(base) } else { 0.0 },
+        sigma_t: if dynamic { f(base + 1) } else { f32::INFINITY },
+        velocity: if dynamic {
+            Vec3::new(f(base + 2), f(base + 3), f(base + 4))
+        } else {
+            Vec3::ZERO
+        },
+    }
+}
+
+/// Append one record's XOR-delta encoding against `prev` to `out`,
+/// returning the encoded byte count. `prev` is updated to this record's
+/// words.
+fn encode_record(words: &[u16], prev: &mut [u16], out: &mut Vec<u8>) -> usize {
+    debug_assert_eq!(words.len(), prev.len());
+    let header_bytes = (words.len() * 2).div_ceil(8);
+    let header_at = out.len();
+    out.resize(header_at + header_bytes, 0u8);
+    for (i, (&w, p)) in words.iter().zip(prev.iter_mut()).enumerate() {
+        let d = w ^ *p;
+        *p = w;
+        let code: u8 = if d == 0 {
+            0
+        } else if d <= 0xFF {
+            out.push(d as u8);
+            1
+        } else {
+            out.extend_from_slice(&d.to_le_bytes());
+            2
+        };
+        out[header_at + i / 4] |= code << ((i % 4) * 2);
+    }
+    out.len() - header_at
+}
+
+/// Decode one record from `bytes`, XORing deltas into `prev` (which then
+/// holds the record's words). Returns the number of bytes consumed.
+fn decode_record(bytes: &[u8], prev: &mut [u16]) -> usize {
+    let header_bytes = (prev.len() * 2).div_ceil(8);
+    let mut cursor = header_bytes;
+    for (i, p) in prev.iter_mut().enumerate() {
+        let code = (bytes[i / 4] >> ((i % 4) * 2)) & 0b11;
+        let d: u16 = match code {
+            0 => 0,
+            1 => {
+                let b = bytes[cursor] as u16;
+                cursor += 1;
+                b
+            }
+            _ => {
+                let d = u16::from_le_bytes([bytes[cursor], bytes[cursor + 1]]);
+                cursor += 2;
+                d
+            }
+        };
+        *p ^= d;
+    }
+    cursor
+}
+
+/// The compressed backing store behind the residency layer: per-page
+/// compressed sizes over the scene's DRAM span, per-cell encoded record
+/// runs, and the cell → page mapping used by prefetch.
+#[derive(Debug)]
+pub struct CompressedStore {
+    /// Page partition of the scene span (row-aligned, like channel shards
+    /// but independent of them).
+    pages: ShardMap,
+    /// Compressed bytes attributed to each page.
+    page_bytes: Vec<u64>,
+    /// Uncompressed span (records + pointer tables).
+    span_bytes: u64,
+    /// Total compressed footprint.
+    total_compressed: u64,
+    /// Encoded record run per cell (delta chain restarts at each cell).
+    cell_blobs: Vec<Vec<u8>>,
+    /// Record count per cell.
+    cell_records: Vec<usize>,
+    /// Sorted, deduplicated pages each cell touches (central run +
+    /// pointer table).
+    cell_pages: Vec<Vec<u32>>,
+    dynamic: bool,
+}
+
+impl CompressedStore {
+    /// Build the store over a scene's FP16-quantized records and its DRAM
+    /// layout. `n_pages` is the residency page count, `row_align` the DRAM
+    /// row size (page boundaries stay row-aligned so fills stripe cleanly).
+    pub fn build(
+        quantized: &[Gaussian4D],
+        dynamic: bool,
+        layout: &DramLayout,
+        n_pages: usize,
+        row_align: u64,
+    ) -> CompressedStore {
+        let span = layout.total_span_bytes();
+        let pages = ShardMap::build(span.max(1), n_pages, row_align);
+        let mut page_bytes = vec![0u64; pages.shards];
+        let n_words = words_per_record(dynamic);
+        let stride = layout.bytes_per_gaussian.max(1);
+
+        let n_cells = layout.cell_ranges.len();
+        let mut cell_blobs = Vec::with_capacity(n_cells);
+        let mut cell_records = Vec::with_capacity(n_cells);
+        let mut cell_pages = Vec::with_capacity(n_cells);
+        let mut total_compressed = 0u64;
+        let mut words = Vec::with_capacity(n_words);
+        let mut prev = vec![0u16; n_words];
+
+        for ci in 0..n_cells {
+            let (start, end) = layout.cell_ranges[ci];
+            let i0 = (start / stride) as usize;
+            let i1 = (end / stride) as usize;
+            let mut blob = Vec::new();
+            prev.fill(0);
+            for &gi in &layout.order[i0..i1] {
+                record_words(&quantized[gi as usize], dynamic, &mut words);
+                let encoded = encode_record(&words, &mut prev, &mut blob) as u64;
+                let page = pages.shard_of(layout.addr[gi as usize]);
+                page_bytes[page] += encoded;
+                total_compressed += encoded;
+            }
+            cell_records.push(i1 - i0);
+            cell_blobs.push(blob);
+
+            // Pointer tables are stored as-is (incompressible): attribute
+            // their exact byte overlap to each page they cross.
+            let (ps, pe) = layout.pointer_table_range(ci);
+            total_compressed += pe - ps;
+            pages.split(ps, pe - ps, |page, _, bytes| {
+                page_bytes[page] += bytes;
+            });
+
+            // Cell → page mapping: central run plus pointer table.
+            let mut touched: Vec<u32> = Vec::new();
+            let mut collect = |a: u64, b: u64| {
+                if b > a {
+                    for p in pages.shard_of(a)..=pages.shard_of(b - 1) {
+                        touched.push(p as u32);
+                    }
+                }
+            };
+            collect(start, end);
+            collect(ps, pe);
+            touched.sort_unstable();
+            touched.dedup();
+            cell_pages.push(touched);
+        }
+
+        CompressedStore {
+            pages,
+            page_bytes,
+            span_bytes: span,
+            total_compressed,
+            cell_blobs,
+            cell_records,
+            cell_pages,
+            dynamic,
+        }
+    }
+
+    /// Number of residency pages over the span.
+    pub fn n_pages(&self) -> usize {
+        self.pages.shards
+    }
+
+    /// Uncompressed page size (last page may cover less of the span).
+    pub fn page_size(&self) -> u64 {
+        self.pages.shard_bytes
+    }
+
+    /// Uncompressed scene span (records + pointer tables).
+    pub fn span_bytes(&self) -> u64 {
+        self.span_bytes
+    }
+
+    /// Total compressed footprint.
+    pub fn total_compressed_bytes(&self) -> u64 {
+        self.total_compressed
+    }
+
+    /// Uncompressed-to-compressed ratio (≥ 1 in practice; 1.0 on an empty
+    /// store).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.total_compressed == 0 {
+            1.0
+        } else {
+            self.span_bytes as f64 / self.total_compressed as f64
+        }
+    }
+
+    /// Page index owning byte address `addr` (clamped like `ShardMap`).
+    pub fn page_of(&self, addr: u64) -> usize {
+        self.pages.shard_of(addr)
+    }
+
+    /// Inclusive page index range touched by `[addr, addr + bytes)`.
+    pub fn page_range(&self, addr: u64, bytes: u64) -> (usize, usize) {
+        let last = addr + bytes.max(1) - 1;
+        (self.pages.shard_of(addr), self.pages.shard_of(last))
+    }
+
+    /// Uncompressed byte span of a page, clamped to the scene span.
+    pub fn page_span(&self, page: usize) -> (u64, u64) {
+        let (s, e) = self.pages.shard_range(page);
+        (s.min(self.span_bytes), e.min(self.span_bytes))
+    }
+
+    /// Compressed bytes attributed to a page (drives decode cost and the
+    /// cost-aware eviction tie-break).
+    pub fn page_compressed_bytes(&self, page: usize) -> u64 {
+        self.page_bytes[page]
+    }
+
+    /// Pages cell `ci` touches (central run + pointer table), sorted.
+    pub fn cell_pages(&self, ci: usize) -> &[u32] {
+        &self.cell_pages[ci]
+    }
+
+    /// Decode cell `ci`'s record run back into Gaussians — bit-exact
+    /// against the FP16-quantized inputs the store was built from.
+    pub fn decode_cell(&self, ci: usize) -> Vec<Gaussian4D> {
+        let n_words = words_per_record(self.dynamic);
+        let blob = &self.cell_blobs[ci];
+        let mut prev = vec![0u16; n_words];
+        let mut out = Vec::with_capacity(self.cell_records[ci]);
+        let mut cursor = 0usize;
+        for _ in 0..self.cell_records[ci] {
+            cursor += decode_record(&blob[cursor..], &mut prev);
+            out.push(gaussian_from_words(&prev, self.dynamic));
+        }
+        debug_assert_eq!(cursor, blob.len());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::culling::{GridConfig, GridPartition};
+    use crate::scene::synth::{SceneKind, SynthParams};
+    use crate::scene::Scene;
+
+    fn build_store(kind: SceneKind, n: usize) -> (Scene, DramLayout, CompressedStore) {
+        let scene = SynthParams::new(kind, n).generate();
+        let grid = GridPartition::build(
+            &scene,
+            if scene.dynamic { GridConfig::new(4) } else { GridConfig::static_scene(4) },
+        );
+        let layout = DramLayout::build(&scene, &grid);
+        let quantized: Vec<Gaussian4D> =
+            scene.gaussians.iter().map(|g| g.quantized_fp16()).collect();
+        let store = CompressedStore::build(&quantized, scene.dynamic, &layout, 64, 2048);
+        (scene, layout, store)
+    }
+
+    #[test]
+    fn record_codec_round_trips_bit_exactly() {
+        for kind in [SceneKind::DynamicLarge, SceneKind::StaticLarge] {
+            let (scene, layout, store) = build_store(kind, 800);
+            let stride = layout.bytes_per_gaussian;
+            for ci in 0..layout.cell_ranges.len() {
+                let (s, e) = layout.cell_ranges[ci];
+                let decoded = store.decode_cell(ci);
+                let run = &layout.order[(s / stride) as usize..(e / stride) as usize];
+                assert_eq!(decoded.len(), run.len());
+                for (&gi, got) in run.iter().zip(&decoded) {
+                    let want = scene.gaussians[gi as usize].quantized_fp16();
+                    let mut ww = Vec::new();
+                    let mut gw = Vec::new();
+                    record_words(&want, scene.dynamic, &mut ww);
+                    record_words(got, scene.dynamic, &mut gw);
+                    assert_eq!(ww, gw, "cell {ci} gaussian {gi} round-trip mismatch");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_coding_compresses_sorted_runs() {
+        let (_, layout, store) = build_store(SceneKind::DynamicLarge, 2000);
+        assert!(store.total_compressed_bytes() < layout.total_span_bytes());
+        assert!(
+            store.compression_ratio() > 1.2,
+            "ratio {} too low for delta-coded FP16 records",
+            store.compression_ratio()
+        );
+    }
+
+    #[test]
+    fn page_accounting_is_consistent() {
+        let (_, layout, store) = build_store(SceneKind::DynamicLarge, 1500);
+        let per_page: u64 = (0..store.n_pages()).map(|p| store.page_compressed_bytes(p)).sum();
+        assert_eq!(per_page, store.total_compressed_bytes());
+        assert_eq!(store.span_bytes(), layout.total_span_bytes());
+        // Page spans tile the scene span without gaps.
+        let mut cursor = 0u64;
+        for p in 0..store.n_pages() {
+            let (s, e) = store.page_span(p);
+            if s >= store.span_bytes() {
+                break;
+            }
+            assert_eq!(s, cursor);
+            cursor = e;
+        }
+        assert_eq!(cursor, store.span_bytes());
+        // Every cell's pages are valid indices.
+        for ci in 0..layout.cell_ranges.len() {
+            for &p in store.cell_pages(ci) {
+                assert!((p as usize) < store.n_pages());
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_single_word_deltas_take_the_short_paths() {
+        let mut prev = vec![0u16; 4];
+        let mut out = Vec::new();
+        // First record vs zero: all full words.
+        let n = encode_record(&[0x1234, 0x00AB, 0, 0x8000], &mut prev, &mut out);
+        // header (1 byte) + 2 + 1 + 0 + 2 payload bytes.
+        assert_eq!(n, 6);
+        // Identical record: header only, all-zero codes.
+        let n2 = encode_record(&[0x1234, 0x00AB, 0, 0x8000], &mut prev, &mut out);
+        assert_eq!(n2, 1);
+        // Decode both against a fresh chain.
+        let mut chain = vec![0u16; 4];
+        let used = decode_record(&out, &mut chain);
+        assert_eq!(chain, vec![0x1234, 0x00AB, 0, 0x8000]);
+        let used2 = decode_record(&out[used..], &mut chain);
+        assert_eq!(chain, vec![0x1234, 0x00AB, 0, 0x8000]);
+        assert_eq!(used + used2, out.len());
+    }
+}

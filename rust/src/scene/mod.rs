@@ -4,11 +4,13 @@
 //! DESIGN.md §2), binary scene I/O, and the DRAM placement layout used by
 //! DR-FC.
 
+pub mod compressed;
 pub mod gaussian;
 pub mod io;
 pub mod layout;
 pub mod synth;
 
+pub use compressed::CompressedStore;
 pub use gaussian::{Gaussian4D, SH_COEFFS};
 pub use layout::DramLayout;
 pub use synth::{SceneKind, SynthParams};

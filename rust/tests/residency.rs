@@ -1,0 +1,165 @@
+//! Residency-layer contract: DRAM as a shard-granular cache over the
+//! compressed backing store.
+//!
+//! * Fully-resident configs (residency off, or capacity at/above the scene
+//!   span) must be **byte-identical** to the direct path — the paging layer
+//!   may not perturb a single simulated number when it has nothing to do.
+//! * Sub-capacity runs must be bit-identical across the host thread matrix
+//!   (1/4/8) for every prefetch policy — paging traffic replays in policy
+//!   order, never host-scheduling order.
+//! * Shrinking the capacity must strictly raise demand-stall time (the
+//!   eviction/refetch loop is really modeled, not just counted).
+//! * The compressed record format round-trips bit-exactly, and the
+//!   trajectory-lookahead prefetcher beats no-prefetch on the standard
+//!   orbit trajectory.
+
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::{RenderServer, ViewerSpec};
+use gaucim::memory::{PrefetchPolicy, ResidencyReport};
+use gaucim::pipeline::PipelineConfig;
+use gaucim::scene::synth::{SceneKind, SynthParams};
+use gaucim::scene::Scene;
+
+fn scene() -> Scene {
+    SynthParams::new(SceneKind::DynamicLarge, 4000).with_seed(42).generate()
+}
+
+fn server_with(capacity_mb: f64, policy: PrefetchPolicy) -> RenderServer {
+    let mut config = PipelineConfig::paper(true).with_resolution(192, 108).with_threads(1);
+    // Explicit capacity: tests must not inherit PALLAS_RESIDENCY_MB.
+    config.mem.residency.capacity_mb = capacity_mb;
+    config.mem.residency.policy = policy;
+    RenderServer::new(scene(), config)
+}
+
+fn specs(frames: usize) -> Vec<ViewerSpec> {
+    vec![
+        ViewerSpec::perf(ViewCondition::Average, frames),
+        ViewerSpec::perf(ViewCondition::Extreme, frames),
+    ]
+}
+
+/// Scene span in MiB, read off a probe preparation's compressed store.
+fn span_mb() -> f64 {
+    let probe = server_with(1e-4, PrefetchPolicy::None);
+    let store = probe.shared.prep.compressed.as_ref().expect("probe builds the store");
+    store.span_bytes() as f64 / (1u64 << 20) as f64
+}
+
+fn residency_block(server: &RenderServer, specs: &[ViewerSpec]) -> ResidencyReport {
+    server
+        .render_batch_contended(specs)
+        .contended_mem
+        .as_ref()
+        .expect("contended roll-up")
+        .residency
+        .expect("sub-capacity run must report residency")
+}
+
+#[test]
+fn fully_resident_is_byte_identical_to_direct_path() {
+    let specs = specs(3);
+    let off = server_with(0.0, PrefetchPolicy::None);
+    let off_rep = off.render_batch_contended(&specs);
+    // Capacity well above the span: the store is built, but the paging
+    // layer must detach itself and change nothing.
+    let over = server_with(span_mb() * 4.0, PrefetchPolicy::TrajectoryLookahead { k: 2 });
+    let over_rep = over.render_batch_contended(&specs);
+
+    assert!(off_rep.contended_mem.as_ref().unwrap().residency.is_none());
+    assert!(over_rep.contended_mem.as_ref().unwrap().residency.is_none());
+    assert_eq!(
+        off_rep.simulated_projection(),
+        over_rep.simulated_projection(),
+        "an at-capacity residency config must not perturb the direct path"
+    );
+}
+
+#[test]
+fn thread_matrix_is_bit_identical_per_policy() {
+    let specs = specs(3);
+    let half = span_mb() * 0.5;
+    for policy in [
+        PrefetchPolicy::None,
+        PrefetchPolicy::NextFrameCull,
+        PrefetchPolicy::TrajectoryLookahead { k: 2 },
+    ] {
+        let mut server = server_with(half, policy);
+        let reference = server.render_batch_contended(&specs).simulated_projection();
+        for threads in [4usize, 8] {
+            server.set_threads(threads);
+            assert_eq!(
+                reference,
+                server.render_batch_contended(&specs).simulated_projection(),
+                "paged batch diverged at {threads} threads ({})",
+                policy.label()
+            );
+        }
+        server.set_threads(1);
+        let res = residency_block(&server, &specs);
+        assert!(
+            res.stats.demand_fills + res.stats.prefetch_fills > 0,
+            "a half-capacity run must page ({})",
+            policy.label()
+        );
+        assert!(res.compression_ratio > 1.0);
+    }
+}
+
+#[test]
+fn smaller_capacity_strictly_raises_stall_time() {
+    let specs = specs(4);
+    let span = span_mb();
+    let half = residency_block(&server_with(span * 0.5, PrefetchPolicy::None), &specs);
+    let eighth = residency_block(&server_with(span * 0.125, PrefetchPolicy::None), &specs);
+    assert!(half.stats.stall_ns > 0.0, "cold demand fills must stall");
+    assert!(
+        eighth.stats.stall_ns > half.stats.stall_ns,
+        "an eighth of the span must stall strictly longer than half ({} vs {} ns)",
+        eighth.stats.stall_ns,
+        half.stats.stall_ns
+    );
+    assert!(eighth.stats.evictions > half.stats.evictions);
+    assert!(eighth.capacity_pages < half.capacity_pages);
+}
+
+#[test]
+fn compressed_records_round_trip_bit_exactly() {
+    let probe = server_with(1e-4, PrefetchPolicy::None);
+    let prep = &probe.shared.prep;
+    let store = prep.compressed.as_ref().unwrap();
+    let stride = prep.layout.bytes_per_gaussian.max(1);
+    for (ci, &(start, end)) in prep.layout.cell_ranges.iter().enumerate() {
+        let i0 = (start / stride) as usize;
+        let i1 = (end / stride) as usize;
+        let decoded = store.decode_cell(ci);
+        assert_eq!(decoded.len(), i1 - i0);
+        for (k, &gi) in prep.layout.order[i0..i1].iter().enumerate() {
+            assert_eq!(
+                decoded[k], prep.quantized[gi as usize],
+                "cell {ci} record {k} (gaussian {gi}) did not round-trip"
+            );
+        }
+    }
+    assert!(store.compression_ratio() > 1.0, "delta/FP16 coding must compress");
+    assert!(store.total_compressed_bytes() < store.span_bytes());
+}
+
+#[test]
+fn trajectory_lookahead_beats_no_prefetch() {
+    let specs = specs(4);
+    let half = span_mb() * 0.5;
+    let none = residency_block(&server_with(half, PrefetchPolicy::None), &specs);
+    let ahead = residency_block(
+        &server_with(half, PrefetchPolicy::TrajectoryLookahead { k: 2 }),
+        &specs,
+    );
+    assert!(
+        ahead.stats.hit_rate() > none.stats.hit_rate(),
+        "lookahead must raise the hit rate on the standard trajectory ({} vs {})",
+        ahead.stats.hit_rate(),
+        none.stats.hit_rate()
+    );
+    assert!(ahead.stats.prefetch_fills > 0);
+    assert_eq!(none.stats.prefetch_fills, 0);
+}
