@@ -1,17 +1,24 @@
 //! End-to-end driver on a dynamic scene — the repository's E2E validation
 //! run (EXPERIMENTS.md §E2E).
 //!
-//! Renders a head-movement trajectory over a Neural-3D-Video-class dynamic
+//! Serves a head-movement trajectory over a Neural-3D-Video-class dynamic
 //! scene through the full system: DR-FC culling of the 4D grid, ATG with
-//! posteriori reuse, AII-Sort, DD3D-Flow blending — and, for the first
-//! frame, cross-checks the AOT artifacts by rendering one tile through the
-//! PJRT runtime (L1 Pallas kernel) and comparing against the native path.
+//! posteriori reuse, AII-Sort, DD3D-Flow blending — with the per-frame
+//! gaussian update stream enabled, so XOR-delta writes contend with render
+//! reads on the shared memory system. For the first frame it cross-checks
+//! the AOT artifacts by rendering one tile through the PJRT runtime (L1
+//! Pallas kernel) and comparing against the native path.
+//!
+//! The trajectory runs as a **served session**: one `SessionSpec` stream
+//! through the `SessionScript`/`RoundEngine` machinery the multi-viewer
+//! server uses, not a stand-alone render loop — so the E2E run exercises
+//! admission, deadline accounting, and the contended event-queue DRAM
+//! model exactly as production serving does.
 //!
 //! Run: `cargo run --release --example dynamic_scene [-- --frames 24]`
 
 use gaucim::camera::ViewCondition;
-use gaucim::coordinator::App;
-use gaucim::pipeline::FramePipeline;
+use gaucim::coordinator::{App, RenderServer, SchedPolicy, SessionScript, SessionSpec};
 use gaucim::render::ppm;
 use gaucim::scene::synth::SceneKind;
 use gaucim::util::cli::Args;
@@ -23,6 +30,9 @@ fn main() -> anyhow::Result<()> {
 
     let mut app = App::new(SceneKind::DynamicLarge, n, 42);
     app.config = app.config.clone().with_resolution(640, 360);
+    // Dynamic serving: stream per-frame gaussian update deltas into DRAM
+    // (MemStage::Update) with dirty-cell cull reuse + AII retention on top.
+    app.config.dynamic_updates = true;
     println!(
         "dynamic scene: {} gaussians, {} frames, average head-movement condition",
         app.scene.len(),
@@ -67,31 +77,40 @@ fn main() -> anyhow::Result<()> {
     #[cfg(not(feature = "xla"))]
     println!("(built without the `xla` feature — PJRT cross-check skipped)");
 
-    // --- full trajectory through the pipeline ----------------------------
-    let seq = app.trajectory(ViewCondition::Average, frames);
-    let mut pipeline = FramePipeline::new(&app.scene, app.config.clone());
-    let mut first_img = None;
-    for (i, (cam, t)) in seq.iter().enumerate() {
-        let render = i == 0 || i + 1 == frames;
-        let r = pipeline.render_frame(cam, *t, render);
-        if i == 0 {
-            first_img = r.image.clone();
-        }
+    // --- the trajectory as a served session ------------------------------
+    let server = RenderServer::new(app.scene.clone(), app.config.clone());
+    let script = SessionScript::new().join_at(
+        0,
+        SessionSpec::stream(ViewCondition::Average, frames).with_deadline_fps(60.0),
+    );
+    let batch = server.render_sessions(&script, SchedPolicy::RoundRobin);
+    let s = &batch.sessions[0];
+    println!(
+        "session: {} frames in {} rounds, miss-rate {:.3}, \
+         simulated latency p50/p99 {:.1}/{:.1} µs",
+        s.frames,
+        batch.rounds,
+        s.deadline_miss_rate,
+        s.frame_latency_pctl.p50 / 1e3,
+        s.frame_latency_pctl.p99 / 1e3
+    );
+    if let Some(d) = &s.seq.dynamic {
         println!(
-            "frame {i:>3}: t={t:.3} visible={:>6} dram={:>6.2} MB sramHit={:>5.1}% \
-             atgOps={:>7} sortCyc={:>8} fps={:>7.1}",
-            r.n_visible,
-            r.traffic.total_dram_bytes() as f64 / 1e6,
-            r.traffic.blend_sram.hit_rate() * 100.0,
-            r.atg_ops,
-            r.sort.cycles,
-            1e9 / r.latency.pipelined_ns()
+            "update stream: {} records over {} dirty / {} clean cells, \
+             {:.1} KB delta vs {:.1} KB raw, cull-reuse hit {:.3}",
+            d.update.updated_records,
+            d.update.dirty_cells,
+            d.update.clean_cells,
+            d.update.delta_bytes as f64 / 1e3,
+            d.update.raw_bytes as f64 / 1e3,
+            d.cull_reuse.cell_hit_rate()
         );
     }
-    if let Some(img) = first_img {
-        ppm::save(&img, std::path::Path::new("dynamic_frame0.ppm"))?;
-        println!("wrote dynamic_frame0.ppm");
-    }
+
+    // Frame-0 image through the single-frame App path (same pipeline).
+    let (img, _) = app.render_one(app.scene.time_span.0);
+    ppm::save(&img, std::path::Path::new("dynamic_frame0.ppm"))?;
+    println!("wrote dynamic_frame0.ppm");
 
     let rep = app.run_sequence(ViewCondition::Average, frames.min(8), 4);
     println!("\nsummary: {}", rep.report.row());

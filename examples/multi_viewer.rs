@@ -42,8 +42,8 @@
 use gaucim::bench::write_bench_json;
 use gaucim::camera::ViewCondition;
 use gaucim::coordinator::{
-    ContendedMemReport, Percentiles, RenderServer, SchedPolicy, SessionBatchReport,
-    SessionScript, SessionSpec, ViewerSpec,
+    ContendedMemReport, DynamicSequenceStats, Percentiles, RenderServer, SchedPolicy,
+    SequenceReport, SessionBatchReport, SessionScript, SessionSpec, ViewerSpec,
 };
 use gaucim::memory::PrefetchPolicy;
 use gaucim::pipeline::{resolve_threads, HostStageWall, PipelineConfig};
@@ -326,6 +326,150 @@ fn main() -> anyhow::Result<()> {
             .set("residency_host", host);
         write_bench_json("BENCH_server.json", &record)?;
         println!("\nwrote BENCH_server.json (residency block only)");
+        return Ok(());
+    }
+
+    // ---- dynamic serving sweep (`--dynamic`, CI `dynamic-smoke`) -------
+    // Stream per-frame gaussian update deltas through the MemStage::Update
+    // DRAM port while the same specs render, and measure the temporal-
+    // coherence savings built on top: XOR-delta vs raw update bytes,
+    // dirty-cell cull-reuse hit rate, and AII posteriori retention vs
+    // cold-start sort cycles. The `dynamic` block holds simulated
+    // quantities only, so CI can diff it across PALLAS_THREADS.
+    if args.flag("dynamic") {
+        // Static reference: the identical specs with the update stream off.
+        server.set_threads(1);
+        let static_serial = server.render_batch_contended(&specs);
+        server.set_threads(threads);
+        let static_par = server.render_batch_contended(&specs);
+        assert_eq!(
+            static_serial.simulated_projection(),
+            static_par.simulated_projection(),
+            "static contended batch diverged between lockstep and two-phase"
+        );
+
+        // Dynamic serving: update writes contend with render reads, clean
+        // cells replay last frame's cull verdict, AII posteriori intervals
+        // stay live across scene updates.
+        let mut cfg = server.config.clone();
+        cfg.dynamic_updates = true;
+        let mut warm = RenderServer::new(server.shared.scene.clone(), cfg.clone());
+        warm.set_threads(1);
+        let warm_serial = warm.render_batch_contended(&specs);
+        warm.set_threads(threads);
+        let warm_par = warm.render_batch_contended(&specs);
+        assert_eq!(
+            warm_serial.simulated_projection(),
+            warm_par.simulated_projection(),
+            "dynamic contended batch diverged between lockstep and two-phase"
+        );
+
+        // AII cold-start reference: the identical update stream, but the
+        // sorter's posteriori intervals drop on every scene update —
+        // isolating what frame-to-frame retention saves.
+        let mut cold_cfg = cfg.clone();
+        cold_cfg.aii_retain = false;
+        let mut cold = RenderServer::new(server.shared.scene.clone(), cold_cfg);
+        cold.set_threads(threads);
+        let cold_par = cold.render_batch_contended(&specs);
+
+        let fold = |reps: &[SequenceReport]| {
+            let mut d = DynamicSequenceStats::default();
+            for r in reps.iter().filter_map(|r| r.dynamic.as_ref()) {
+                d.update.add(&r.update);
+                d.cull_reuse.add(&r.cull_reuse);
+                d.update_dram_bytes += r.update_dram_bytes;
+            }
+            d
+        };
+        let mean_frame_bytes = |reps: &[SequenceReport]| {
+            reps.iter().map(|r| r.avg_dram_bytes).sum::<f64>() / reps.len().max(1) as f64
+        };
+        let mean_sort_cycles = |reps: &[SequenceReport]| {
+            reps.iter().map(|r| r.avg_sort_cycles).sum::<f64>() / reps.len().max(1) as f64
+        };
+        let totals = fold(&warm_par.viewers);
+        let warm_sort = mean_sort_cycles(&warm_par.viewers);
+        let cold_sort = mean_sort_cycles(&cold_par.viewers);
+        let mem = warm_par
+            .contended_mem
+            .as_ref()
+            .expect("contended batch must produce a memory roll-up");
+        let update_busy_ns: f64 =
+            mem.viewers.iter().filter_map(|v| v.update).map(|u| u.busy_ns).sum();
+
+        assert!(
+            totals.update.delta_bytes < totals.update.raw_bytes,
+            "temporal XOR-delta must ship fewer bytes than raw record refresh \
+             ({} vs {})",
+            totals.update.delta_bytes,
+            totals.update.raw_bytes
+        );
+        assert!(
+            warm_sort < cold_sort,
+            "AII posteriori retention must beat cold-start sort cycles \
+             ({warm_sort:.1} vs {cold_sort:.1})"
+        );
+
+        println!("\ndynamic serving (update stream + temporal coherence):");
+        println!(
+            "  traffic: static {:.1} KB/frame → dynamic {:.1} KB/frame \
+             (update stream busy {:.1} µs)",
+            mean_frame_bytes(&static_par.viewers) / 1e3,
+            mean_frame_bytes(&warm_par.viewers) / 1e3,
+            update_busy_ns / 1e3
+        );
+        println!(
+            "  updates: {} records over {} dirty / {} clean cells, \
+             {:.1} KB delta vs {:.1} KB raw ({:.2}x)",
+            totals.update.updated_records,
+            totals.update.dirty_cells,
+            totals.update.clean_cells,
+            totals.update.delta_bytes as f64 / 1e3,
+            totals.update.raw_bytes as f64 / 1e3,
+            totals.update.raw_bytes as f64 / totals.update.delta_bytes.max(1) as f64
+        );
+        println!(
+            "  cull reuse: {:.3} cell hit rate ({} reused / {} fetched, {:.1} KB saved)",
+            totals.cull_reuse.cell_hit_rate(),
+            totals.cull_reuse.cells_reused,
+            totals.cull_reuse.cells_fetched,
+            totals.cull_reuse.bytes_saved as f64 / 1e3
+        );
+        println!(
+            "  AII: warm {warm_sort:.1} sort cycles/frame vs cold {cold_sort:.1} \
+             ({:.2}x)",
+            cold_sort / warm_sort.max(1e-12)
+        );
+
+        let record = Json::obj()
+            .set("gaussians", server.shared.scene.len())
+            .set("viewers", n_viewers)
+            .set("frames_per_viewer", frames)
+            .set("width", width)
+            .set("height", height)
+            .set("threads", threads)
+            .set(
+                "dynamic",
+                Json::obj()
+                    .set("static_mean_frame_bytes", mean_frame_bytes(&static_par.viewers))
+                    .set("dynamic_mean_frame_bytes", mean_frame_bytes(&warm_par.viewers))
+                    .set("update_raw_bytes", totals.update.raw_bytes)
+                    .set("update_delta_bytes", totals.update.delta_bytes)
+                    .set("update_dram_bytes", totals.update_dram_bytes)
+                    .set("update_busy_ns", update_busy_ns)
+                    .set("updated_records", totals.update.updated_records)
+                    .set("dirty_cells", totals.update.dirty_cells)
+                    .set("clean_cells", totals.update.clean_cells)
+                    .set("cull_cells_reused", totals.cull_reuse.cells_reused)
+                    .set("cull_cells_fetched", totals.cull_reuse.cells_fetched)
+                    .set("cull_bytes_saved", totals.cull_reuse.bytes_saved)
+                    .set("cull_cell_hit_rate", totals.cull_reuse.cell_hit_rate())
+                    .set("aii_warm_sort_cycles", warm_sort)
+                    .set("aii_cold_sort_cycles", cold_sort),
+            );
+        write_bench_json("BENCH_server.json", &record)?;
+        println!("\nwrote BENCH_server.json (dynamic block only)");
         return Ok(());
     }
 

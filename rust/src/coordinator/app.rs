@@ -2,12 +2,13 @@
 //! table/figure benches.
 
 use crate::camera::{Camera, Trajectory, ViewCondition};
+use crate::culling::CullReuseStats;
 use crate::energy::{FrameEnergy, PowerReport, StageLatency};
 use crate::math::Vec3;
 use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig};
 use crate::render::{psnr, Image, ReferenceRenderer};
 use crate::scene::synth::{SceneKind, SynthParams};
-use crate::scene::Scene;
+use crate::scene::{Scene, UpdateFrameStats};
 use crate::util::json::Json;
 use anyhow::Result;
 use std::path::PathBuf;
@@ -31,12 +32,15 @@ pub struct SequenceReport {
     pub psnr_db: f64,
     /// Mean SSIM over the same sampled frames (NaN when none rendered).
     pub ssim: f64,
+    /// Temporal-serving roll-up — `None` on static runs (and sequences that
+    /// never shipped an update) so their reports stay byte-identical.
+    pub dynamic: Option<DynamicSequenceStats>,
     pub report: PowerReport,
 }
 
 impl SequenceReport {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut js = Json::obj()
             .set("label", self.label.as_str())
             .set("frames", self.frames)
             .set("fps", self.report.fps)
@@ -49,7 +53,41 @@ impl SequenceReport {
             .set("avg_dram_bytes", self.avg_dram_bytes)
             .set("sram_hit_rate", self.sram_hit_rate)
             .set("avg_sort_cycles", self.avg_sort_cycles)
-            .set("avg_atg_ops", self.avg_atg_ops)
+            .set("avg_atg_ops", self.avg_atg_ops);
+        if let Some(d) = &self.dynamic {
+            js = js.set("dynamic", d.to_json());
+        }
+        js
+    }
+}
+
+/// Sequence totals of the dynamic update stream and the temporal-coherence
+/// savings built on it (frame-0 baseline bake excluded by construction).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DynamicSequenceStats {
+    /// Update-delta totals over the sequence.
+    pub update: UpdateFrameStats,
+    /// Dirty-cell cull-reuse totals (all-zero when reuse is disabled).
+    pub cull_reuse: CullReuseStats,
+    /// Bytes actually streamed through the `MemStage::Update` DRAM port
+    /// (delta bytes after burst rounding).
+    pub update_dram_bytes: u64,
+}
+
+impl DynamicSequenceStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("dirty_cells", self.update.dirty_cells)
+            .set("clean_cells", self.update.clean_cells)
+            .set("updated_records", self.update.updated_records)
+            .set("update_delta_bytes", self.update.delta_bytes)
+            .set("update_raw_bytes", self.update.raw_bytes)
+            .set("update_dram_bytes", self.update_dram_bytes)
+            .set("cull_cells_reused", self.cull_reuse.cells_reused)
+            .set("cull_cells_fetched", self.cull_reuse.cells_fetched)
+            .set("cull_refs_reused", self.cull_reuse.refs_reused)
+            .set("cull_bytes_saved", self.cull_reuse.bytes_saved)
+            .set("cull_cell_hit_rate", self.cull_reuse.cell_hit_rate())
     }
 }
 
@@ -154,6 +192,7 @@ impl App {
             avg_atg_ops: r.atg_ops as f64,
             psnr_db: p,
             ssim: s,
+            dynamic: dynamic_block(r.update, r.cull_reuse, r.traffic.update_dram.bytes),
             report,
         };
         (image, seq)
@@ -247,9 +286,23 @@ pub(crate) struct SequenceAgg {
     sram_lookups: u64,
     sort_cycles: f64,
     atg_ops: f64,
+    update: UpdateFrameStats,
+    reuse: CullReuseStats,
+    update_dram_bytes: u64,
     psnr_sum: f64,
     ssim_sum: f64,
     psnr_count: usize,
+}
+
+/// `Some` only when the sequence actually carried dynamic-serving state —
+/// static runs fold all-zero stats and keep their reports byte-identical.
+fn dynamic_block(
+    update: UpdateFrameStats,
+    cull_reuse: CullReuseStats,
+    update_dram_bytes: u64,
+) -> Option<DynamicSequenceStats> {
+    let d = DynamicSequenceStats { update, cull_reuse, update_dram_bytes };
+    (d != DynamicSequenceStats::default()).then_some(d)
 }
 
 impl SequenceAgg {
@@ -265,6 +318,9 @@ impl SequenceAgg {
             sram_lookups: 0,
             sort_cycles: 0.0,
             atg_ops: 0.0,
+            update: UpdateFrameStats::default(),
+            reuse: CullReuseStats::default(),
+            update_dram_bytes: 0,
             psnr_sum: 0.0,
             ssim_sum: 0.0,
             psnr_count: 0,
@@ -284,6 +340,9 @@ impl SequenceAgg {
         self.sram_lookups += r.traffic.blend_sram.lookups;
         self.sort_cycles += r.sort.cycles as f64;
         self.atg_ops += r.atg_ops as f64;
+        self.update.add(&r.update);
+        self.reuse.add(&r.cull_reuse);
+        self.update_dram_bytes += r.traffic.update_dram.bytes;
         if let Some((p, s)) = scored {
             self.psnr_sum += p;
             self.ssim_sum += s;
@@ -326,6 +385,7 @@ impl SequenceAgg {
             } else {
                 f64::NAN
             },
+            dynamic: dynamic_block(self.update, self.reuse, self.update_dram_bytes),
             report,
         }
     }

@@ -38,7 +38,8 @@ impl ExperimentConfig {
             "condition", "frames", "psnr_every", "grid_n", "atg_threshold",
             "tile_block", "n_buckets", "use_drfc", "use_atg", "use_aii",
             "sram_kb", "threads", "render_backend", "residency_mb",
-            "prefetch_policy", "report_json", "frame_ppm",
+            "prefetch_policy", "dynamic_updates", "cull_reuse", "aii_retain",
+            "report_json", "frame_ppm",
         ];
         if let Json::Obj(m) = doc {
             for k in m.keys() {
@@ -102,6 +103,12 @@ impl ExperimentConfig {
                     anyhow!("prefetch_policy must be none|next-frame-cull|lookahead[:K], got '{s}'")
                 })?;
         }
+        // Dynamic serving: stream per-frame gaussian update deltas into
+        // DRAM (off by default — static runs stay byte-identical), with
+        // dirty-cell cull reuse and cross-update AII retention on top.
+        pipeline.dynamic_updates = get_bool("dynamic_updates", false);
+        pipeline.cull_reuse = get_bool("cull_reuse", pipeline.cull_reuse);
+        pipeline.aii_retain = get_bool("aii_retain", pipeline.aii_retain);
         pipeline.atg = AtgConfig {
             user_threshold: doc
                 .get("atg_threshold")

@@ -24,7 +24,7 @@ pub(crate) mod rounds;
 pub mod server;
 pub mod session;
 
-pub use app::{App, SequenceReport};
+pub use app::{App, DynamicSequenceStats, SequenceReport};
 pub use config::ExperimentConfig;
 pub use server::{
     ContendedMemReport, Percentiles, RenderServer, ServerReport, SharedScene, ViewerMemStats,

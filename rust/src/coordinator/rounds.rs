@@ -55,6 +55,18 @@ use std::sync::{Arc, Mutex};
 use super::app::score_frame;
 use super::server::{RenderServer, SharedScene};
 
+/// One participant's ports on the shared system: the cull/blend read
+/// streams plus, for dynamic serving (`PipelineConfig::dynamic_updates`),
+/// the update-write stream.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RoundPorts {
+    pub cull: PortId,
+    pub blend: PortId,
+    /// The [`MemStage::Update`] write port (None for static serving, so
+    /// static port registration — and every static report — is untouched).
+    pub update: Option<PortId>,
+}
+
 /// One frame of work inside a round, in the caller's policy order.
 pub(crate) struct RoundJob<'j, 'scene> {
     /// Caller's participant id (viewer / session), handed back on the
@@ -64,8 +76,8 @@ pub(crate) struct RoundJob<'j, 'scene> {
     pub t: f32,
     /// Render this frame numerically (PSNR scoring).
     pub render: bool,
-    /// The participant's `(cull, blend)` ports on the shared system.
-    pub ports: (PortId, PortId),
+    /// The participant's ports on the shared system.
+    pub ports: RoundPorts,
     pub pipeline: &'j mut FramePipeline<'scene>,
 }
 
@@ -85,6 +97,9 @@ struct RoundFrame {
     /// Prefetch pages the frame's predictor issued before its demand reads
     /// (replayed into the residency layer ahead of the cull trace).
     prefetch: Vec<usize>,
+    /// Update-stream writes the frame staged *before* any render read —
+    /// replayed first, mirroring the lockstep issue order.
+    update_trace: Vec<(u64, u64)>,
     cull_trace: Vec<(u64, u64)>,
     blend_trace: Vec<(u64, u64)>,
 }
@@ -149,14 +164,17 @@ impl RoundEngine {
         &self.config
     }
 
-    /// Register one participant's `(cull, blend)` port pair on the shared
-    /// system (two-phase mode; lockstep pipelines register through their
-    /// own shared ports).
-    fn register_ports(&self) -> (PortId, PortId) {
+    /// Register one participant's ports on the shared system (two-phase
+    /// mode; lockstep pipelines register through their own shared ports).
+    /// Same order as `FramePipeline::make_ports`: cull, blend, then — for
+    /// dynamic serving only — the update-write port, so per-port statistics
+    /// line up bit-for-bit across modes.
+    fn register_ports(&self) -> RoundPorts {
         let mut sys = self.sys.lock().expect("memory system lock poisoned");
         let cull = sys.register_port();
         let blend = sys.register_port();
-        (cull, blend)
+        let update = self.config.dynamic_updates.then(|| sys.register_port());
+        RoundPorts { cull, blend, update }
     }
 
     /// Build a participant's pipeline for the engine's mode. Ports are
@@ -165,7 +183,7 @@ impl RoundEngine {
     pub(crate) fn make_pipeline<'s>(
         &self,
         shared: &'s SharedScene,
-    ) -> (FramePipeline<'s>, (PortId, PortId)) {
+    ) -> (FramePipeline<'s>, RoundPorts) {
         if self.two_phase {
             let pipeline = FramePipeline::with_trace_ports(
                 &shared.scene,
@@ -176,10 +194,11 @@ impl RoundEngine {
         } else {
             let pipeline =
                 shared.pipeline_with_memory(self.config.clone(), Arc::clone(&self.sys));
-            let ports = pipeline
+            let (cull, blend) = pipeline
                 .mem_port_ids()
                 .expect("shared-memory pipelines register ports");
-            (pipeline, ports)
+            let update = pipeline.update_port_id();
+            (pipeline, RoundPorts { cull, blend, update })
         }
     }
 
@@ -193,7 +212,7 @@ impl RoundEngine {
         &self,
         shared: &'s SharedScene,
         state: SessionState,
-    ) -> (FramePipeline<'s>, (PortId, PortId)) {
+    ) -> (FramePipeline<'s>, RoundPorts) {
         if self.two_phase {
             let pipeline = FramePipeline::resume_with_trace_ports(
                 &shared.scene,
@@ -210,10 +229,11 @@ impl RoundEngine {
                 Arc::clone(&self.sys),
                 state,
             );
-            let ports = pipeline
+            let (cull, blend) = pipeline
                 .mem_port_ids()
                 .expect("shared-memory pipelines register ports");
-            (pipeline, ports)
+            let update = pipeline.update_port_id();
+            (pipeline, RoundPorts { cull, blend, update })
         }
     }
 
@@ -254,11 +274,18 @@ impl RoundEngine {
             for (job, slot) in jobs.iter_mut().zip(slots.iter_mut()) {
                 scope.spawn(move || {
                     let result = job.pipeline.render_frame(&job.cam, job.t, job.render);
-                    let (cull_trace, blend_trace) = job.pipeline.take_frame_traces();
+                    let (cull_trace, blend_trace, update_trace) =
+                        job.pipeline.take_frame_traces();
                     let prefetch = job.pipeline.take_frame_prefetch();
                     let scored = score_frame(reference, scene, &job.cam, job.t, &result);
-                    *slot =
-                        Some(RoundFrame { result, scored, prefetch, cull_trace, blend_trace });
+                    *slot = Some(RoundFrame {
+                        result,
+                        scored,
+                        prefetch,
+                        update_trace,
+                        cull_trace,
+                        blend_trace,
+                    });
                 });
             }
         });
@@ -270,7 +297,16 @@ impl RoundEngine {
         let mut out = Vec::with_capacity(jobs.len());
         for (job, slot) in jobs.iter().zip(slots.iter_mut()) {
             let Some(mut frame) = slot.take() else { continue };
-            let (cull_id, blend_id) = job.ports;
+            let RoundPorts { cull: cull_id, blend: blend_id, update: update_id } = job.ports;
+            // Update writes issue first — render_frame stages them before
+            // any render read, and the replay mirrors that order.
+            let update = update_id.map(|uid| {
+                let base = sys.port_stage_stats(uid, MemStage::Update);
+                for &(addr, bytes) in &frame.update_trace {
+                    sys.read(uid, MemStage::Update, addr, bytes);
+                }
+                sys.port_stage_stats(uid, MemStage::Update).delta(&base)
+            });
             // Prefetch fills land before the frame's demand reads — the
             // same issue order the lockstep cull stage produces.
             let cull_pg_base = sys.port_stage_stats(cull_id, MemStage::Paging);
@@ -304,6 +340,14 @@ impl RoundEngine {
             r.latency.preprocess_ns =
                 r.latency.preprocess_ns.max(pre.busy_ns + cull_pg.busy_ns);
             r.latency.blend_ns = r.latency.blend_ns.max(blend.busy_ns + blend_pg.busy_ns);
+            // The update stream patches last: its busy time never enters
+            // the stage latencies (writes are double-buffered per cell, so
+            // the frame's reads don't wait on them) — it contends only
+            // through the shared channels, exactly as in lockstep.
+            if let Some(upd) = update {
+                r.traffic.update_dram = upd;
+                r.energy.dram_pj += upd.energy_pj;
+            }
             out.push(RoundOutcome { key: job.key, result: frame.result, scored: frame.scored });
         }
         out

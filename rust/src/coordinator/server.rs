@@ -42,7 +42,7 @@
 //! sequence-runner over the exact same trajectories.
 
 use crate::camera::{Camera, ViewCondition};
-use crate::memory::{DramStats, MemStage, MemorySystem, PortId, ResidencyReport, ShardMap};
+use crate::memory::{DramStats, MemStage, MemorySystem, ResidencyReport, ShardMap};
 use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig, ScenePrep};
 use crate::render::ReferenceRenderer;
 use crate::scene::Scene;
@@ -53,7 +53,7 @@ use std::time::Instant;
 use super::app::{
     camera_template, run_frames_report, scene_trajectory, viewer_label, SequenceAgg,
 };
-use super::rounds::RoundJob;
+use super::rounds::{RoundJob, RoundPorts};
 use super::SequenceReport;
 
 /// A scene plus its shared, immutable preparation.
@@ -118,27 +118,37 @@ pub struct ViewerMemStats {
     pub viewer: usize,
     pub preprocess: DramStats,
     pub blend: DramStats,
+    /// Update-write stream (dynamic serving only — `None` keeps static
+    /// reports byte-identical).
+    pub update: Option<DramStats>,
 }
 
 impl ViewerMemStats {
     pub fn total_busy_ns(&self) -> f64 {
-        self.preprocess.busy_ns + self.blend.busy_ns
+        self.preprocess.busy_ns
+            + self.blend.busy_ns
+            + self.update.map_or(0.0, |u| u.busy_ns)
     }
 
     pub fn total_wait_ns(&self) -> f64 {
-        self.preprocess.wait_ns + self.blend.wait_ns
+        self.preprocess.wait_ns
+            + self.blend.wait_ns
+            + self.update.map_or(0.0, |u| u.wait_ns)
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.preprocess.bytes + self.blend.bytes
+        self.preprocess.bytes + self.blend.bytes + self.update.map_or(0, |u| u.bytes)
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut js = Json::obj()
             .set("viewer", self.viewer)
             .set("preprocess", self.preprocess.to_json())
-            .set("blend", self.blend.to_json())
-            .set("total_busy_ns", self.total_busy_ns())
+            .set("blend", self.blend.to_json());
+        if let Some(upd) = &self.update {
+            js = js.set("update", upd.to_json());
+        }
+        js.set("total_busy_ns", self.total_busy_ns())
             .set("total_wait_ns", self.total_wait_ns())
     }
 }
@@ -285,7 +295,7 @@ impl ServerReport {
 /// round-robin report bit-comparable to `render_batch_contended`.
 pub(crate) fn contended_rollup(
     sys: &Arc<Mutex<MemorySystem>>,
-    port_ids: &[(PortId, PortId)],
+    port_ids: &[RoundPorts],
     outstanding: usize,
     pre_latency: &[f64],
     blend_latency: &[f64],
@@ -294,10 +304,11 @@ pub(crate) fn contended_rollup(
     let rows: Vec<ViewerMemStats> = port_ids
         .iter()
         .enumerate()
-        .map(|(i, &(cull_port, blend_port))| ViewerMemStats {
+        .map(|(i, ports)| ViewerMemStats {
             viewer: i,
-            preprocess: sys.port_stage_stats(cull_port, MemStage::Preprocess),
-            blend: sys.port_stage_stats(blend_port, MemStage::Blend),
+            preprocess: sys.port_stage_stats(ports.cull, MemStage::Preprocess),
+            blend: sys.port_stage_stats(ports.blend, MemStage::Blend),
+            update: ports.update.map(|uid| sys.port_stage_stats(uid, MemStage::Update)),
         })
         .collect();
     let busy: Vec<f64> = rows.iter().map(ViewerMemStats::total_busy_ns).collect();
@@ -463,9 +474,9 @@ impl RenderServer {
     pub fn render_batch_contended(&self, specs: &[ViewerSpec]) -> ServerReport {
         let t0 = Instant::now();
         let engine = self.round_engine(specs.len());
-        let mut built: Vec<(FramePipeline<'_>, (PortId, PortId))> =
+        let mut built: Vec<(FramePipeline<'_>, RoundPorts)> =
             specs.iter().map(|_| engine.make_pipeline(&self.shared)).collect();
-        let port_ids: Vec<(PortId, PortId)> = built.iter().map(|&(_, ports)| ports).collect();
+        let port_ids: Vec<RoundPorts> = built.iter().map(|&(_, ports)| ports).collect();
         let trajectories: Vec<Vec<(Camera, f32)>> =
             specs.iter().map(|s| self.trajectory(s)).collect();
         let reference = ReferenceRenderer::new(self.config.width, self.config.height)
@@ -509,7 +520,7 @@ impl RenderServer {
     fn finish_contended(
         &self,
         sys: &Arc<Mutex<MemorySystem>>,
-        port_ids: &[(PortId, PortId)],
+        port_ids: &[RoundPorts],
         config: &PipelineConfig,
         run: ContendedAgg,
         specs: &[ViewerSpec],

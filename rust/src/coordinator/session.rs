@@ -57,7 +57,6 @@
 //! diffs the `sessions` block at `PALLAS_THREADS=1/4/8`).
 
 use crate::camera::ViewCondition;
-use crate::memory::PortId;
 use crate::pipeline::{FramePipeline, SessionState};
 use crate::render::ReferenceRenderer;
 use crate::util::json::Json;
@@ -65,7 +64,7 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 use super::app::{scene_trajectory_from, viewer_label, SequenceAgg};
-use super::rounds::{RoundEngine, RoundJob};
+use super::rounds::{RoundEngine, RoundJob, RoundPorts};
 use super::server::{
     contended_rollup, ContendedMemReport, Percentiles, RenderServer, ViewerMemStats, ViewerSpec,
 };
@@ -568,7 +567,7 @@ impl SessionBatchReport {
 struct ViewerSession<'s> {
     spec: SessionSpec,
     pipeline: Option<FramePipeline<'s>>,
-    ports: Option<(PortId, PortId)>,
+    ports: Option<RoundPorts>,
     traj: Vec<(crate::camera::Camera, f32)>,
     /// Frames rendered so far (the camera-trajectory cursor, relative to
     /// `spec.start_frame`).
@@ -770,9 +769,12 @@ impl<'a> SessionScheduler<'a> {
                     s.retained = Some(pipeline.detach_session());
                     let mut sys_l =
                         engine.sys().lock().expect("memory system lock poisoned");
-                    if let Some((cull, blend)) = s.ports {
-                        sys_l.retire_port(cull);
-                        sys_l.retire_port(blend);
+                    if let Some(ports) = s.ports {
+                        sys_l.retire_port(ports.cull);
+                        sys_l.retire_port(ports.blend);
+                        if let Some(update) = ports.update {
+                            sys_l.retire_port(update);
+                        }
                     }
                 }
                 ring.retain(|&x| x != id);
@@ -956,8 +958,9 @@ impl<'a> SessionScheduler<'a> {
                 if frame_ns > s.spec.deadline_ns() {
                     s.missed += 1;
                 }
-                let frame_busy =
-                    r.traffic.preprocess_dram.busy_ns + r.traffic.blend_dram.busy_ns;
+                let frame_busy = r.traffic.preprocess_dram.busy_ns
+                    + r.traffic.blend_dram.busy_ns
+                    + r.traffic.update_dram.busy_ns;
                 s.busy_ns += frame_busy;
                 let frame_bytes = r.traffic.total_dram_bytes() as f64;
                 measured_bytes += frame_bytes;
@@ -998,7 +1001,7 @@ impl<'a> SessionScheduler<'a> {
         let config = engine.config();
         // Port list of admitted sessions, in session-id order (un-admitted
         // sessions rendered nothing and own no ports).
-        let port_ids: Vec<(PortId, PortId)> =
+        let port_ids: Vec<RoundPorts> =
             sessions.iter().flatten().filter_map(|s| s.ports).collect();
         let mut contended =
             contended_rollup(sys, &port_ids, config.mem.outstanding, &pre_latency, &blend_latency);
@@ -1052,6 +1055,7 @@ impl<'a> SessionScheduler<'a> {
                     viewer: id,
                     preprocess: Default::default(),
                     blend: Default::default(),
+                    update: None,
                 });
             reports.push(SessionReport {
                 session: id,

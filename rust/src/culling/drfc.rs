@@ -57,6 +57,91 @@ impl CullOutput {
     }
 }
 
+/// Persistent cross-frame fetch-residency state for
+/// [`DrFc::cull_scheduled_reuse`]: which cell runs (central records +
+/// pointer table) and which individually-referenced records are still held
+/// on-chip from an earlier frame's fetch. The model idealizes the paper's
+/// on-chip retention of the visible working set — a fetched run stays
+/// resident until the update stream dirties it ([`CullReuse::invalidate`]
+/// drops residency for dirtied cells/records each frame), so a reused
+/// fetch is always bit-fresh: *clean* means the DRAM bytes are unchanged
+/// since they were last read.
+#[derive(Debug, Clone, Default)]
+pub struct CullReuse {
+    /// Per-cell: central run + pointer table held from a prior fetch.
+    cell_resident: Vec<bool>,
+    /// Per-record (original Gaussian index): record bytes held from a
+    /// prior fetch (central-run or individual neighbor-reference read).
+    record_resident: Vec<bool>,
+}
+
+impl CullReuse {
+    /// Fresh (nothing resident) state for a scene with `n_cells` grid
+    /// cells and `n_records` Gaussians.
+    pub fn new(n_cells: usize, n_records: usize) -> CullReuse {
+        CullReuse {
+            cell_resident: vec![false; n_cells],
+            record_resident: vec![false; n_records],
+        }
+    }
+
+    /// Drop residency for everything this frame's update stream changed.
+    /// Must run after [`TemporalStream::advance`](crate::scene::TemporalStream)
+    /// and *before* culling: a dirtied cell run (or record) is stale
+    /// on-chip and must be re-fetched from DRAM.
+    pub fn invalidate(&mut self, dirty_cells: &[bool], dirty_records: &[bool]) {
+        debug_assert_eq!(dirty_cells.len(), self.cell_resident.len());
+        debug_assert_eq!(dirty_records.len(), self.record_resident.len());
+        for (res, &dirty) in self.cell_resident.iter_mut().zip(dirty_cells) {
+            *res &= !dirty;
+        }
+        for (res, &dirty) in self.record_resident.iter_mut().zip(dirty_records) {
+            *res &= !dirty;
+        }
+    }
+
+    /// Forget everything (cold start — e.g. a session resume on fresh
+    /// hardware state).
+    pub fn reset(&mut self) {
+        self.cell_resident.iter_mut().for_each(|r| *r = false);
+        self.record_resident.iter_mut().for_each(|r| *r = false);
+    }
+}
+
+/// Per-frame statistics of one [`DrFc::cull_scheduled_reuse`] pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CullReuseStats {
+    /// Visible cells whose run (+ pointer table) replayed a prior fetch.
+    pub cells_reused: u64,
+    /// Visible cells whose run was (re-)fetched from DRAM this frame.
+    pub cells_fetched: u64,
+    /// Neighbor-referenced records that replayed a prior fetch.
+    pub refs_reused: u64,
+    /// Neighbor-referenced records fetched from DRAM this frame.
+    pub refs_fetched: u64,
+    /// DRAM bytes the reused fetches would have cost.
+    pub bytes_saved: u64,
+}
+
+impl CullReuseStats {
+    pub fn add(&mut self, o: &CullReuseStats) {
+        self.cells_reused += o.cells_reused;
+        self.cells_fetched += o.cells_fetched;
+        self.refs_reused += o.refs_reused;
+        self.refs_fetched += o.refs_fetched;
+        self.bytes_saved += o.bytes_saved;
+    }
+
+    /// Fraction of visible-cell fetches served from retained state.
+    pub fn cell_hit_rate(&self) -> f64 {
+        let total = self.cells_reused + self.cells_fetched;
+        if total == 0 {
+            return 0.0;
+        }
+        self.cells_reused as f64 / total as f64
+    }
+}
+
 /// The DR-FC engine: borrows the offline-built partition + layout.
 pub struct DrFc<'a> {
     pub scene: &'a Scene,
@@ -196,6 +281,104 @@ impl<'a> DrFc<'a> {
                 visible.push(gi);
             }
         }
+    }
+
+    /// Passes 2–3 with dirty-cell-aware fetch reuse — the temporal
+    /// extension of DR-FC. Outputs (`visible_cells` / `candidates` /
+    /// `visible` / `fetched`) are bit-identical to [`DrFc::cull_scheduled`]
+    /// by construction: every visibility decision is recomputed from the
+    /// immutable 4D scene exactly as the full pass does. Only the *DRAM
+    /// traffic* changes: a cell run (or neighbor-referenced record) that
+    /// was fetched by an earlier frame and whose records did not change
+    /// since ([`CullReuse`] residency, invalidated per frame from the
+    /// update stream's dirty flags) replays last frame's fetch instead of
+    /// re-reading DRAM. The caller must run
+    /// [`CullReuse::invalidate`] with the frame's dirty flags *before*
+    /// culling.
+    pub fn cull_scheduled_reuse<M: MemSink>(
+        &self,
+        cam: &Camera,
+        t: f32,
+        mem: &mut M,
+        out: &mut CullOutput,
+        reuse: &mut CullReuse,
+    ) -> CullReuseStats {
+        let frustum = cam.frustum();
+        let CullOutput { visible_cells, candidates, visible, fetched, seen, ref_addrs } = out;
+        let mut stats = CullReuseStats::default();
+
+        // Pass 2: schedule DRAM reads, skipping runs that are still clean
+        // since their last fetch. The candidate list is built identically
+        // either way — reuse replays the verdict, not the records.
+        seen.clear();
+        seen.resize(self.scene.len(), false);
+        for &flat in visible_cells.iter() {
+            let (start, end) = self.layout.cell_ranges[flat];
+            // Pointer tables are immutable under updates (record *values*
+            // change, references don't), so they ride the cell's residency.
+            let (ps, pe) = self.layout.pointer_table_range(flat);
+            if reuse.cell_resident[flat] {
+                stats.cells_reused += 1;
+                stats.bytes_saved += (end - start) + (pe - ps);
+            } else {
+                stats.cells_fetched += 1;
+                reuse.cell_resident[flat] = true;
+                if end > start {
+                    mem.read(start, end - start);
+                }
+                if pe > ps {
+                    mem.read(ps, pe - ps);
+                }
+            }
+            for &gi in &self.grid.cells[flat].central {
+                reuse.record_resident[gi as usize] = true;
+                if !seen[gi as usize] {
+                    seen[gi as usize] = true;
+                    candidates.push(gi);
+                }
+            }
+        }
+        let stride = self.layout.bytes_per_gaussian;
+        ref_addrs.clear();
+        for &flat in visible_cells.iter() {
+            for &gi in &self.layout.cell_refs[flat] {
+                if seen[gi as usize] {
+                    continue; // central run already read (or earlier ref)
+                }
+                seen[gi as usize] = true;
+                candidates.push(gi);
+                if reuse.record_resident[gi as usize] {
+                    stats.refs_reused += 1;
+                    stats.bytes_saved += stride;
+                } else {
+                    stats.refs_fetched += 1;
+                    reuse.record_resident[gi as usize] = true;
+                    ref_addrs.push(self.layout.addr[gi as usize]);
+                }
+            }
+        }
+        ref_addrs.sort_unstable();
+        let mut i = 0;
+        while i < ref_addrs.len() {
+            let start = ref_addrs[i];
+            let mut end = start + stride;
+            let mut j = i + 1;
+            while j < ref_addrs.len() && ref_addrs[j] <= end {
+                end = ref_addrs[j] + stride;
+                j += 1;
+            }
+            mem.read(start, end - start);
+            i = j;
+        }
+        *fetched = candidates.len() as u64;
+
+        // Pass 3: exact per-Gaussian culling, identical to the full pass.
+        for &gi in candidates.iter() {
+            if super::gaussian_visible_in(&self.scene.gaussians[gi as usize], &frustum, t) {
+                visible.push(gi);
+            }
+        }
+        stats
     }
 
     /// Which temporal slice contains scene time `t`.
@@ -349,6 +532,84 @@ mod tests {
         assert_eq!(out.visible, single.visible);
         assert_eq!(out.fetched, single.fetched);
         assert_eq!(d1.stats(), d2.stats(), "identical request streams");
+    }
+
+    #[test]
+    fn reuse_outputs_match_full_recull_bit_exactly() {
+        let (scene, grid, layout) = setup(3000, 4);
+        let drfc = DrFc::new(&scene, &grid, &layout);
+        let cam = camera();
+        let t = 0.4;
+        let frustum = cam.frustum();
+
+        let pass1 = |out: &mut CullOutput| {
+            out.clear();
+            for flat in drfc.slice_cell_range(t) {
+                if drfc.cell_test(flat, &frustum) {
+                    out.visible_cells.push(flat);
+                }
+            }
+        };
+
+        let mut full = CullOutput::default();
+        let mut d_full = DramModel::default_lpddr5();
+        pass1(&mut full);
+        drfc.cull_scheduled(&cam, t, &mut d_full, &mut full);
+
+        // Cold reuse pass: nothing resident yet, everything fetches.
+        let mut reuse = CullReuse::new(grid.cells.len(), scene.len());
+        let mut out = CullOutput::default();
+        let mut d_cold = DramModel::default_lpddr5();
+        pass1(&mut out);
+        let cold = drfc.cull_scheduled_reuse(&cam, t, &mut d_cold, &mut out, &mut reuse);
+        assert_eq!(out.visible_cells, full.visible_cells);
+        assert_eq!(out.candidates, full.candidates);
+        assert_eq!(out.visible, full.visible);
+        assert_eq!(out.fetched, full.fetched);
+        assert_eq!(cold.cells_reused, 0);
+        assert_eq!(cold.refs_reused, 0);
+        assert_eq!(
+            d_cold.stats().bytes,
+            d_full.stats().bytes,
+            "cold reuse fetches exactly the full pass's bytes"
+        );
+
+        // Warm pass, nothing dirtied: outputs identical, zero DRAM bytes.
+        let mut d_warm = DramModel::default_lpddr5();
+        pass1(&mut out);
+        let warm = drfc.cull_scheduled_reuse(&cam, t, &mut d_warm, &mut out, &mut reuse);
+        assert_eq!(out.candidates, full.candidates);
+        assert_eq!(out.visible, full.visible);
+        assert_eq!(out.fetched, full.fetched);
+        assert_eq!(warm.cells_fetched, 0);
+        assert_eq!(warm.refs_fetched, 0);
+        assert_eq!(d_warm.stats().bytes, 0, "fully-clean frame re-reads nothing");
+        assert!(warm.bytes_saved > 0);
+
+        // Dirty half the cells: outputs still identical, partial re-fetch.
+        let mut dirty_cells = vec![false; grid.cells.len()];
+        let mut dirty_records = vec![false; scene.len()];
+        let stride = layout.bytes_per_gaussian;
+        for (ci, flag) in dirty_cells.iter_mut().enumerate() {
+            if ci % 2 == 0 {
+                *flag = true;
+                let (start, end) = layout.cell_ranges[ci];
+                for k in (start / stride) as usize..(end / stride) as usize {
+                    dirty_records[layout.order[k] as usize] = true;
+                }
+            }
+        }
+        reuse.invalidate(&dirty_cells, &dirty_records);
+        let mut d_dirty = DramModel::default_lpddr5();
+        pass1(&mut out);
+        let part = drfc.cull_scheduled_reuse(&cam, t, &mut d_dirty, &mut out, &mut reuse);
+        assert_eq!(out.candidates, full.candidates);
+        assert_eq!(out.visible, full.visible);
+        assert_eq!(out.fetched, full.fetched);
+        assert!(part.cells_fetched > 0, "dirtied cells must re-fetch");
+        assert!(part.cells_reused > 0, "clean cells must replay");
+        assert!(d_dirty.stats().bytes > 0);
+        assert!(d_dirty.stats().bytes < d_full.stats().bytes);
     }
 
     #[test]

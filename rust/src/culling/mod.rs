@@ -6,7 +6,7 @@ pub mod conventional;
 pub mod drfc;
 pub mod grid;
 
-pub use drfc::{CullOutput, DrFc};
+pub use drfc::{CullOutput, CullReuse, CullReuseStats, DrFc};
 pub use grid::{GridCell, GridConfig, GridPartition};
 
 pub use crate::math::frustum::Containment;

@@ -47,7 +47,7 @@ fn usage() {
          [--width W --height H] [--condition average|extreme|static] \
          [--seed S] [--threads N] [--render-backend scalar|lanes] \
          [--residency-mb MB] [--prefetch-policy none|next-frame-cull|lookahead[:K]] \
-         [--out FILE]"
+         [--dynamic] [--out FILE]"
     );
 }
 
@@ -102,6 +102,11 @@ fn build_app(args: &Args) -> App {
                 std::process::exit(2);
             }
         }
+    }
+    // Dynamic serving: stream per-frame gaussian update deltas into DRAM
+    // (MemStage::Update) with dirty-cell cull reuse + AII retention on top.
+    if args.flag("dynamic") {
+        app.config.dynamic_updates = true;
     }
     app
 }

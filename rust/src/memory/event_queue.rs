@@ -61,6 +61,15 @@ pub enum MemStage {
     /// eviction write-backs issued by the [`ResidencyState`] cache. Bypasses
     /// the residency hook (a page fill must not page).
     Paging,
+    /// Dynamic-scene update stream: per-frame temporal-delta writes of
+    /// changed Gaussian records into their cell runs
+    /// (`scene::temporal`). Modeled with the read service timing (LPDDR5
+    /// write bursts walk the same row buffers) and double-buffered per
+    /// cell, so a frame's render reads never stall on its own updates —
+    /// updates contend on the channels like any other stream but add no
+    /// read-after-write dependency. Bypasses the residency hook (updates
+    /// target the resident working set directly).
+    Update,
 }
 
 impl MemStage {
@@ -70,6 +79,7 @@ impl MemStage {
             MemStage::Preprocess => 0,
             MemStage::Blend => 1,
             MemStage::Paging => 2,
+            MemStage::Update => 3,
         }
     }
 }
@@ -181,10 +191,10 @@ struct PortState {
     /// Latest completion observed by this port (any stage).
     last_completion_ns: f64,
     /// Cumulative per-stage statistics.
-    stats: [DramStats; 3],
+    stats: [DramStats; 4],
     /// Per-stage first-issue / last-completion timestamps.
-    first_issue_ns: [f64; 3],
-    last_completion_stage_ns: [f64; 3],
+    first_issue_ns: [f64; 4],
+    last_completion_stage_ns: [f64; 4],
     /// Retired ports (departed viewer sessions) keep their statistics
     /// readable but issue no further traffic and are skipped by epoch
     /// barriers.
@@ -197,9 +207,9 @@ impl PortState {
             now_ns,
             inflight: VecDeque::new(),
             last_completion_ns: now_ns,
-            stats: [DramStats::default(); 3],
-            first_issue_ns: [f64::INFINITY; 3],
-            last_completion_stage_ns: [0.0; 3],
+            stats: [DramStats::default(); 4],
+            first_issue_ns: [f64::INFINITY; 4],
+            last_completion_stage_ns: [0.0; 4],
             retired: false,
         }
     }
@@ -371,7 +381,7 @@ impl MemorySystem {
         if bytes == 0 {
             return;
         }
-        if stage != MemStage::Paging {
+        if stage != MemStage::Paging && stage != MemStage::Update {
             self.residency_touch(port, addr, bytes);
         }
         let map = self.shard_map;

@@ -17,6 +17,10 @@ pub struct TrafficLog {
     /// write-backs) charged by the residency layer. Zero when the scene is
     /// fully DRAM-resident.
     pub paging_dram: DramStats,
+    /// Dynamic-scene update-stream traffic (temporal-delta writes of
+    /// changed Gaussian records, `scene::temporal`). Zero for static
+    /// scenes or when no update stream is attached.
+    pub update_dram: DramStats,
     /// SRAM buffer activity during blending.
     pub blend_sram: SramStats,
     /// Gaussian parameter records fetched from DRAM (count, dedup applied).
@@ -39,25 +43,35 @@ impl TrafficLog {
 
     /// Total DRAM bytes across stages.
     pub fn total_dram_bytes(&self) -> u64 {
-        self.preprocess_dram.bytes + self.blend_dram.bytes + self.paging_dram.bytes
+        self.preprocess_dram.bytes
+            + self.blend_dram.bytes
+            + self.paging_dram.bytes
+            + self.update_dram.bytes
     }
 
     /// Total DRAM energy (pJ).
     pub fn total_dram_energy_pj(&self) -> f64 {
-        self.preprocess_dram.energy_pj + self.blend_dram.energy_pj + self.paging_dram.energy_pj
+        self.preprocess_dram.energy_pj
+            + self.blend_dram.energy_pj
+            + self.paging_dram.energy_pj
+            + self.update_dram.energy_pj
     }
 
     /// Total DRAM *access count* — the Fig. 9 / Fig. 10(a) metric. The paper
     /// counts parameter-fetch transactions; we count bursts, which is what a
     /// DRAM controller issues.
     pub fn total_dram_accesses(&self) -> u64 {
-        self.preprocess_dram.bursts + self.blend_dram.bursts + self.paging_dram.bursts
+        self.preprocess_dram.bursts
+            + self.blend_dram.bursts
+            + self.paging_dram.bursts
+            + self.update_dram.bursts
     }
 
     pub fn add(&mut self, o: &TrafficLog) {
         self.preprocess_dram.add(&o.preprocess_dram);
         self.blend_dram.add(&o.blend_dram);
         self.paging_dram.add(&o.paging_dram);
+        self.update_dram.add(&o.update_dram);
         self.blend_sram.add(&o.blend_sram);
         self.gaussians_fetched += o.gaussians_fetched;
         self.gaussians_visible += o.gaussians_visible;
@@ -74,6 +88,11 @@ impl TrafficLog {
         // pre-residency schema.
         if self.paging_dram != DramStats::default() {
             js = js.set("paging_dram", self.paging_dram.to_json());
+        }
+        // Likewise the update stream: only dynamic runs with an attached
+        // update stream emit it, so static reports stay byte-identical.
+        if self.update_dram != DramStats::default() {
+            js = js.set("update_dram", self.update_dram.to_json());
         }
         js
             // Flat legacy keys, kept for existing report consumers.
@@ -144,6 +163,18 @@ mod tests {
         assert!(s.contains("\"paging_dram\""), "{s}");
         assert_eq!(t.total_dram_bytes(), 2048);
         assert_eq!(t.total_dram_accesses(), 64);
+    }
+
+    #[test]
+    fn update_block_only_present_when_nonzero() {
+        let mut t = TrafficLog::new();
+        assert!(!t.to_json().pretty().contains("\"update_dram\""));
+        t.update_dram.bytes = 4096;
+        t.update_dram.bursts = 128;
+        let s = t.to_json().pretty();
+        assert!(s.contains("\"update_dram\""), "{s}");
+        assert_eq!(t.total_dram_bytes(), 4096);
+        assert_eq!(t.total_dram_accesses(), 128);
     }
 
     #[test]

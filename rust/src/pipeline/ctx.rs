@@ -32,13 +32,13 @@
 //! request streams. Workers receive disjoint `&mut WorkerScratch`
 //! entries, so the fan-out never shares hot scratch.
 
-use crate::culling::{CullOutput, GridPartition};
+use crate::culling::{CullOutput, CullReuse, CullReuseStats, GridPartition};
 use crate::dcim::{DcimConfig, DcimMacro};
 use crate::energy::{FrameEnergy, StageLatency};
 use crate::memory::{MemPort, ResidencyPrefetcher, SramStats, TrafficLog};
 use crate::pipeline::PipelineConfig;
 use crate::render::Image;
-use crate::scene::{DramLayout, Gaussian4D, Scene};
+use crate::scene::{DramLayout, Gaussian4D, Scene, TemporalStream, UpdateFrameStats};
 use crate::sorting::{SortItem, SortStats};
 use crate::tiles::connection::ConnectionGraph;
 use crate::tiles::intersect::{Splat2D, TileGrid};
@@ -110,6 +110,24 @@ pub struct FrameCtx {
     pub cull_port: MemPort,
     /// DRAM request port of the blend miss-fill path.
     pub blend_port: MemPort,
+    /// DRAM write port of the dynamic-scene update stream
+    /// ([`crate::memory::MemStage::Update`]) — `None` unless
+    /// `PipelineConfig::dynamic_updates` is on.
+    pub update_port: Option<MemPort>,
+    /// Temporal-delta producer of the update stream (carried per-session
+    /// state: the previous frame's baked record words are the delta
+    /// baseline). `None` unless dynamic updates are on.
+    pub temporal: Option<TemporalStream>,
+    /// Cross-frame fetch-residency state of the dirty-cell-aware cull
+    /// reuse (the temporal extension of DR-FC). `None` when dynamic
+    /// updates or the reuse knob are off.
+    pub cull_reuse: Option<CullReuse>,
+    /// Per-frame statistics of the update stream's advance (zero when the
+    /// stream is off or the frame shipped nothing).
+    pub update_stats: UpdateFrameStats,
+    /// Per-frame statistics of the dirty-cell-aware cull reuse pass (zero
+    /// when reuse is off).
+    pub reuse_stats: CullReuseStats,
     /// Streaming-residency prefetch predictor (`None` when the residency
     /// layer is disabled). Carried per-session state: the cull stage asks
     /// it for next-frame pages before issuing demand reads and feeds it the
@@ -184,6 +202,11 @@ impl FrameCtx {
             cull: CullOutput::default(),
             cull_port,
             blend_port,
+            update_port: None,
+            temporal: None,
+            cull_reuse: None,
+            update_stats: UpdateFrameStats::default(),
+            reuse_stats: CullReuseStats::default(),
             prefetcher: None,
             atg_ops: 0,
             atg_flags: 0,
@@ -224,6 +247,8 @@ impl FrameCtx {
         self.traffic.clear();
         self.latency = StageLatency::default();
         self.sort = SortStats::default();
+        self.update_stats = UpdateFrameStats::default();
+        self.reuse_stats = CullReuseStats::default();
         self.dcim.reset();
         self.atg_ops = 0;
         self.atg_flags = 0;

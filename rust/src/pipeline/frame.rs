@@ -12,7 +12,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::camera::Camera;
-use crate::culling::{GridConfig, GridPartition};
+use crate::culling::{CullReuse, CullReuseStats, GridConfig, GridPartition};
 use crate::dcim::DcimConfig;
 use crate::energy::{FrameEnergy, StageLatency};
 use crate::memory::sram::{SramBuffer, SramConfig};
@@ -21,7 +21,9 @@ use crate::memory::{
     ResidencyPrefetcher, ShardMap, TrafficLog,
 };
 use crate::render::{HwRenderer, Image, RenderBackend};
-use crate::scene::{CompressedStore, DramLayout, Gaussian4D, Scene};
+use crate::scene::{
+    CompressedStore, DramLayout, Gaussian4D, Scene, TemporalStream, UpdateFrameStats,
+};
 use crate::sorting::{SortEngine, SortHwConfig, SortStats};
 use crate::tiles::atg::{Atg, AtgConfig};
 use crate::tiles::connection::ConnectionGraph;
@@ -73,6 +75,21 @@ pub struct PipelineConfig {
     /// to the frozen monolith) or the event-queue memory system with
     /// outstanding transactions, shard channel groups, and contention.
     pub mem: MemSimConfig,
+    /// Dynamic-scene update streaming: bake the scene's FP16 records at
+    /// each frame's scene time, XOR-delta them against frame t-1, and
+    /// stream the dirty-cell writes into DRAM through a dedicated
+    /// [`MemStage::Update`] port that contends with render reads. Off by
+    /// default — static serving stays byte-identical.
+    pub dynamic_updates: bool,
+    /// Dirty-cell-aware cull reuse (the temporal extension of DR-FC):
+    /// clean cell runs replay last frame's fetch instead of re-reading
+    /// DRAM. Only active when `dynamic_updates` and `use_drfc` are on.
+    pub cull_reuse: bool,
+    /// Keep the AII sort's posteriori intervals live across scene updates
+    /// (the paper's warm path). `false` cold-starts the engine whenever an
+    /// update frame changed any record — the comparison baseline for the
+    /// warm-vs-cold BENCH numbers.
+    pub aii_retain: bool,
     /// Host threads of the intra-frame parallel executor (`pipeline::par`):
     /// `0` = auto (the `PALLAS_THREADS` environment variable, else
     /// `available_parallelism`). Every simulated stat output is
@@ -105,6 +122,9 @@ impl PipelineConfig {
                 residency: ResidencyConfig::from_env(),
                 ..MemSimConfig::default()
             },
+            dynamic_updates: false,
+            cull_reuse: true,
+            aii_retain: true,
             threads: 0,
             render_backend: RenderBackend::from_env(),
         }
@@ -125,6 +145,13 @@ impl PipelineConfig {
     pub fn with_resolution(mut self, w: usize, h: usize) -> PipelineConfig {
         self.width = w;
         self.height = h;
+        self
+    }
+
+    /// Switch the dynamic-scene update stream (and its coherence
+    /// optimizations) on or off.
+    pub fn with_dynamic_updates(mut self, on: bool) -> PipelineConfig {
+        self.dynamic_updates = on;
         self
     }
 
@@ -198,6 +225,11 @@ pub struct FrameResult {
     pub blend_pairs: u64,
     /// Splat-tile intersection pairs.
     pub intersections: u64,
+    /// Dynamic update-stream statistics (zero for static serving / when
+    /// the stream is off).
+    pub update: UpdateFrameStats,
+    /// Dirty-cell cull-reuse statistics (zero when reuse is off).
+    pub cull_reuse: CullReuseStats,
 }
 
 /// The offline, immutable scene preparation: grid partition, DRAM layout,
@@ -344,24 +376,31 @@ impl<'a> FramePipeline<'a> {
         FramePipeline::build(scene, prep, config, MemChoice::Trace)
     }
 
-    /// Build the (cull, blend) [`MemPort`] pair for a backend choice —
+    /// Build the (cull, blend, update) [`MemPort`]s for a backend choice —
     /// shared by [`FramePipeline::build`] and the session-resume
     /// constructors (a resumed session re-registers fresh ports; retained
-    /// state never carries another system's port handles).
+    /// state never carries another system's port handles). The update port
+    /// exists only under `config.dynamic_updates` and always registers
+    /// **third** (after cull, then blend) so port registration — and with
+    /// it static-scene per-port statistics — is untouched when the stream
+    /// is off.
     fn make_ports(
         config: &PipelineConfig,
         prep: &ScenePrep,
         choice: MemChoice,
-    ) -> (MemPort, MemPort, Option<Arc<Mutex<MemorySystem>>>, bool) {
+    ) -> (MemPort, MemPort, Option<MemPort>, Option<Arc<Mutex<MemorySystem>>>, bool) {
+        let dynamic = config.dynamic_updates;
         match choice {
             MemChoice::Shared(sys) => {
                 let cull = MemPort::shared(&sys, MemStage::Preprocess);
                 let blend = MemPort::shared(&sys, MemStage::Blend);
-                (cull, blend, Some(sys), false)
+                let update = dynamic.then(|| MemPort::shared(&sys, MemStage::Update));
+                (cull, blend, update, Some(sys), false)
             }
             MemChoice::Trace => (
                 MemPort::trace(MemStage::Preprocess),
                 MemPort::trace(MemStage::Blend),
+                dynamic.then(|| MemPort::trace(MemStage::Update)),
                 None,
                 false,
             ),
@@ -369,6 +408,7 @@ impl<'a> FramePipeline<'a> {
                 MemMode::Sync => (
                     MemPort::sync(config.mem.dram, MemStage::Preprocess),
                     MemPort::sync(config.mem.dram, MemStage::Blend),
+                    dynamic.then(|| MemPort::sync(config.mem.dram, MemStage::Update)),
                     None,
                     false,
                 ),
@@ -380,7 +420,8 @@ impl<'a> FramePipeline<'a> {
                     let sys = Arc::new(Mutex::new(sys));
                     let cull = MemPort::shared(&sys, MemStage::Preprocess);
                     let blend = MemPort::shared(&sys, MemStage::Blend);
-                    (cull, blend, Some(sys), true)
+                    let update = dynamic.then(|| MemPort::shared(&sys, MemStage::Update));
+                    (cull, blend, update, Some(sys), true)
                 }
             },
         }
@@ -405,7 +446,7 @@ impl<'a> FramePipeline<'a> {
         });
         let buffer_lines = sram.capacity_lines();
 
-        let (cull_port, blend_port, mem_sys, owns_mem) =
+        let (cull_port, blend_port, update_port, mem_sys, owns_mem) =
             Self::make_ports(&config, &prep, choice);
 
         let threads = config.resolved_threads();
@@ -428,6 +469,23 @@ impl<'a> FramePipeline<'a> {
                 Arc::clone(store),
             )
         });
+        // Dynamic update streaming: the temporal-delta producer and (under
+        // DR-FC) the dirty-cell cull-reuse residency ride the context too —
+        // both are carried per-session state.
+        ctx.update_port = update_port;
+        if config.dynamic_updates {
+            ctx.temporal = Some(TemporalStream::new(
+                scene.dynamic,
+                prep.quantized.len(),
+                prep.layout.cell_ranges.len(),
+            ));
+            if config.cull_reuse && config.use_drfc {
+                ctx.cull_reuse = Some(CullReuse::new(
+                    prep.layout.cell_ranges.len(),
+                    prep.quantized.len(),
+                ));
+            }
+        }
         FramePipeline {
             pool: WorkerPool::new(threads),
             host: HostStageWall::default(),
@@ -474,11 +532,60 @@ impl<'a> FramePipeline<'a> {
         Some((self.ctx.cull_port.shared_id()?, self.ctx.blend_port.shared_id()?))
     }
 
+    /// The [`PortId`] of the dynamic update stream on the shared
+    /// event-queue system (None when the stream is off or the backend is
+    /// private/trace).
+    pub fn update_port_id(&self) -> Option<PortId> {
+        self.ctx.update_port.as_ref().and_then(MemPort::shared_id)
+    }
+
     /// Reset posteriori state and frame counter (scene cut).
     pub fn reset(&mut self) {
         self.group_stage.atg.reset();
         self.sort_stage.engine.reset();
+        // Cold-start the temporal machinery too: the next advance re-bakes
+        // the baseline (ships nothing) and nothing is fetch-resident.
+        if let Some(ts) = &mut self.ctx.temporal {
+            *ts = TemporalStream::new(
+                self.scene.dynamic,
+                self.quantized.len(),
+                self.layout.cell_ranges.len(),
+            );
+        }
+        if let Some(reuse) = &mut self.ctx.cull_reuse {
+            reuse.reset();
+        }
         self.frame_idx = 0;
+    }
+
+    /// Advance the dynamic update stream for scene time `t`: bake + diff
+    /// every record, issue the dirty-cell delta writes through the update
+    /// port, drop cull-reuse residency for everything that changed, and
+    /// (under `aii_retain = false`) cold-start the AII sort whenever any
+    /// record moved. No-op unless the pipeline was built with
+    /// `dynamic_updates`. Runs before the cull stage; the update writes are
+    /// double-buffered per cell, so the frame's own reads never wait on
+    /// them — the stream contends only through the shared channels.
+    fn run_update_stream(&mut self, t: f32) {
+        let FrameCtx { temporal, update_port, cull_reuse, traffic, energy, update_stats, .. } =
+            &mut self.ctx;
+        let (Some(temporal), Some(port)) = (temporal.as_mut(), update_port.as_mut()) else {
+            return;
+        };
+        port.begin_frame();
+        let stats = temporal.advance(&self.quantized, &self.layout, t);
+        for (addr, bytes) in temporal.take_writes() {
+            port.read(addr, bytes);
+        }
+        *update_stats = stats;
+        traffic.update_dram = port.stats();
+        energy.dram_pj += traffic.update_dram.energy_pj;
+        if let Some(reuse) = cull_reuse.as_mut() {
+            reuse.invalidate(temporal.dirty_cells(), temporal.dirty_records());
+        }
+        if !self.config.aii_retain && stats.updated_records > 0 {
+            self.sort_stage.engine.reset();
+        }
     }
 
     /// Process one frame. `render_image = false` runs only the performance
@@ -495,6 +602,11 @@ impl<'a> FramePipeline<'a> {
                 sys.lock().expect("memory system lock poisoned").advance_epoch();
             }
         }
+        let frame_t0 = Instant::now();
+        self.ctx.begin_frame();
+        // Dynamic scenes: stage the frame's update writes before any render
+        // read is issued (no-op for static serving).
+        self.run_update_stream(t);
         let bind = FrameBind {
             scene: self.scene,
             grid: &self.grid,
@@ -503,8 +615,6 @@ impl<'a> FramePipeline<'a> {
             config: &self.config,
             tile_grid: &self.tile_grid,
         };
-        let frame_t0 = Instant::now();
-        self.ctx.begin_frame();
         self.cull_stage.run(&bind, cam, t, &mut self.ctx, &self.pool);
         self.project_stage.run(&bind, cam, t, &mut self.ctx, &self.pool);
         self.intersect_stage.run(&bind, &mut self.ctx, &self.pool);
@@ -529,6 +639,8 @@ impl<'a> FramePipeline<'a> {
             n_visible: self.ctx.splats.len(),
             blend_pairs: self.ctx.blend_pairs,
             intersections: self.ctx.intersections,
+            update: self.ctx.update_stats,
+            cull_reuse: self.ctx.reuse_stats,
         }
     }
 
@@ -538,12 +650,19 @@ impl<'a> FramePipeline<'a> {
         self.blend_stage.et_factor
     }
 
-    /// Drain the per-frame DRAM request traces of both ports — `(cull,
-    /// blend)` streams of `(addr, bytes)` in issue order. Non-empty only
-    /// for pipelines built via [`FramePipeline::with_trace_ports`]; call
-    /// once after each `render_frame`.
-    pub fn take_frame_traces(&mut self) -> (Vec<(u64, u64)>, Vec<(u64, u64)>) {
-        (self.ctx.cull_port.take_trace(), self.ctx.blend_port.take_trace())
+    /// Drain the per-frame DRAM request traces — `(cull, blend, update)`
+    /// streams of `(addr, bytes)` in issue order (the update stream is
+    /// empty unless dynamic updates are on). Non-empty only for pipelines
+    /// built via [`FramePipeline::with_trace_ports`]; call once after each
+    /// `render_frame`.
+    pub fn take_frame_traces(
+        &mut self,
+    ) -> (Vec<(u64, u64)>, Vec<(u64, u64)>, Vec<(u64, u64)>) {
+        (
+            self.ctx.cull_port.take_trace(),
+            self.ctx.blend_port.take_trace(),
+            self.ctx.update_port.as_mut().map(MemPort::take_trace).unwrap_or_default(),
+        )
     }
 
     /// Drain the prefetch page list the cull port recorded this frame
@@ -656,7 +775,7 @@ impl<'a> FramePipeline<'a> {
             "session state detached under a different pipeline shape"
         );
         let tile_grid = TileGrid::new(config.width, config.height);
-        let (cull_port, blend_port, mem_sys, owns_mem) =
+        let (cull_port, blend_port, update_port, mem_sys, owns_mem) =
             Self::make_ports(&config, &prep, choice);
         let SessionState {
             mut ctx,
@@ -669,6 +788,34 @@ impl<'a> FramePipeline<'a> {
         } = state;
         ctx.cull_port = cull_port;
         ctx.blend_port = blend_port;
+        ctx.update_port = update_port;
+        // Align the carried temporal machinery with the resuming
+        // configuration: the delta baseline and the cull-reuse residency
+        // are retained per-session state (the resume is bit-identical to
+        // an uninterrupted stream), created fresh when the resuming run
+        // turns the stream on, dropped when it turns it off.
+        if config.dynamic_updates {
+            if ctx.temporal.is_none() {
+                ctx.temporal = Some(TemporalStream::new(
+                    scene.dynamic,
+                    prep.quantized.len(),
+                    prep.layout.cell_ranges.len(),
+                ));
+            }
+            if config.cull_reuse && config.use_drfc {
+                if ctx.cull_reuse.is_none() {
+                    ctx.cull_reuse = Some(CullReuse::new(
+                        prep.layout.cell_ranges.len(),
+                        prep.quantized.len(),
+                    ));
+                }
+            } else {
+                ctx.cull_reuse = None;
+            }
+        } else {
+            ctx.temporal = None;
+            ctx.cull_reuse = None;
+        }
         // Align the carried prefetcher with the resuming configuration:
         // keep it only when residency is still enabled under the *same*
         // policy (its history is policy-shaped); otherwise rebuild fresh

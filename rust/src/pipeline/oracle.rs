@@ -333,6 +333,8 @@ impl<'a> MonolithPipeline<'a> {
             n_visible: splats.len(),
             blend_pairs,
             intersections,
+            update: Default::default(),
+            cull_reuse: Default::default(),
         }
     }
 

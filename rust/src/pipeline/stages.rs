@@ -83,7 +83,7 @@ impl CullStage {
             }
         }
         {
-            let FrameCtx { cull, cull_port, energy, workers, .. } = ctx;
+            let FrameCtx { cull, cull_port, energy, workers, cull_reuse, reuse_stats, .. } = ctx;
             if bind.config.use_drfc {
                 let drfc = DrFc::new(bind.scene, bind.grid, bind.layout);
                 cull.clear();
@@ -117,7 +117,14 @@ impl CullStage {
                 for ws in workers.iter() {
                     cull.visible_cells.extend_from_slice(&ws.cells);
                 }
-                drfc.cull_scheduled(cam, t, cull_port, cull);
+                // Dirty-cell-aware reuse (dynamic serving): clean cell runs
+                // replay last frame's fetch — identical cull output, fewer
+                // DRAM reads. Full re-fetch otherwise.
+                if let Some(reuse) = cull_reuse.as_mut() {
+                    *reuse_stats = drfc.cull_scheduled_reuse(cam, t, cull_port, cull, reuse);
+                } else {
+                    drfc.cull_scheduled(cam, t, cull_port, cull);
+                }
                 energy.cull_pj += bind.grid.n_cells() as f64 * ops::E_GRID_TEST_PJ
                     + cull.fetched as f64 * ops::E_FRUSTUM_PJ;
             } else {

@@ -28,7 +28,7 @@ use crate::scene::gaussian::{Gaussian4D, SH_COEFFS};
 use crate::scene::DramLayout;
 
 /// FP16 words per stored record.
-fn words_per_record(dynamic: bool) -> usize {
+pub(crate) fn words_per_record(dynamic: bool) -> usize {
     let static_words = 3 + 4 + 3 + 1 + 3 * SH_COEFFS;
     if dynamic {
         static_words + 5
@@ -40,7 +40,7 @@ fn words_per_record(dynamic: bool) -> usize {
 /// Serialize one Gaussian into its FP16 storage words (the canonical field
 /// order: position, rotation (w,x,y,z), scale, opacity, SH, then the
 /// dynamic extension μₜ, σₜ, velocity).
-fn record_words(g: &Gaussian4D, dynamic: bool, out: &mut Vec<u16>) {
+pub(crate) fn record_words(g: &Gaussian4D, dynamic: bool, out: &mut Vec<u16>) {
     out.clear();
     let mut push = |v: f32| out.push(F16::from_f32(v).0);
     push(g.mu.x);
@@ -70,7 +70,7 @@ fn record_words(g: &Gaussian4D, dynamic: bool, out: &mut Vec<u16>) {
 
 /// Rebuild a Gaussian from its FP16 storage words (exact inverse of
 /// [`record_words`] for FP16-quantized inputs).
-fn gaussian_from_words(w: &[u16], dynamic: bool) -> Gaussian4D {
+pub(crate) fn gaussian_from_words(w: &[u16], dynamic: bool) -> Gaussian4D {
     use crate::math::{Quat, Vec3};
     let f = |i: usize| F16(w[i]).to_f32();
     let mut sh = [Vec3::ZERO; SH_COEFFS];
@@ -97,7 +97,7 @@ fn gaussian_from_words(w: &[u16], dynamic: bool) -> Gaussian4D {
 /// Append one record's XOR-delta encoding against `prev` to `out`,
 /// returning the encoded byte count. `prev` is updated to this record's
 /// words.
-fn encode_record(words: &[u16], prev: &mut [u16], out: &mut Vec<u8>) -> usize {
+pub(crate) fn encode_record(words: &[u16], prev: &mut [u16], out: &mut Vec<u8>) -> usize {
     debug_assert_eq!(words.len(), prev.len());
     let header_bytes = (words.len() * 2).div_ceil(8);
     let header_at = out.len();
@@ -121,7 +121,7 @@ fn encode_record(words: &[u16], prev: &mut [u16], out: &mut Vec<u8>) -> usize {
 
 /// Decode one record from `bytes`, XORing deltas into `prev` (which then
 /// holds the record's words). Returns the number of bytes consumed.
-fn decode_record(bytes: &[u8], prev: &mut [u16]) -> usize {
+pub(crate) fn decode_record(bytes: &[u8], prev: &mut [u16]) -> usize {
     let header_bytes = (prev.len() * 2).div_ceil(8);
     let mut cursor = header_bytes;
     for (i, p) in prev.iter_mut().enumerate() {

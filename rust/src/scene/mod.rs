@@ -9,11 +9,13 @@ pub mod gaussian;
 pub mod io;
 pub mod layout;
 pub mod synth;
+pub mod temporal;
 
 pub use compressed::CompressedStore;
 pub use gaussian::{Gaussian4D, SH_COEFFS};
 pub use layout::DramLayout;
 pub use synth::{SceneKind, SynthParams};
+pub use temporal::{TemporalStream, UpdateFrameStats};
 
 use crate::math::Aabb;
 

@@ -17,7 +17,8 @@ pub struct Args {
 impl Args {
     /// Known boolean flags (everything else with `--` takes a value unless
     /// it is last or followed by another `--` token).
-    pub const KNOWN_FLAGS: &'static [&'static str] = &["verbose", "quiet", "help", "sessions"];
+    pub const KNOWN_FLAGS: &'static [&'static str] =
+        &["verbose", "quiet", "help", "sessions", "dynamic"];
 
     /// Parse raw arguments (without argv[0]). `subcommands` lists words that,
     /// when found first, become the subcommand.

@@ -1,0 +1,279 @@
+//! Dynamic-serving contract (`scene::temporal` + the `MemStage::Update`
+//! stream + the temporal-coherence savings built on top):
+//!
+//! 1. **Temporal codec** — the XOR-delta/FP16 update stream round-trips
+//!    exactly: re-advancing at an already-applied scene time finds every
+//!    cell clean and ships zero bytes; dirty frames ship one write burst
+//!    per dirty cell, and the delta is strictly smaller than a raw
+//!    full-record refresh.
+//! 2. **Thread matrix** — dynamic sessions (update writes contending with
+//!    render reads) replay byte-identically at `PALLAS_THREADS = 1/4/8`
+//!    under every scheduling policy (lockstep vs two-phase trace/replay,
+//!    with update-write traces recorded alongside read traces).
+//! 3. **Cull reuse** — dirty-cell-aware cull reuse driven by the real
+//!    update stream's dirty flags produces outputs bit-identical to a full
+//!    re-cull while fetching strictly fewer DRAM bytes.
+//! 4. **AII retention** — keeping posteriori intervals live across scene
+//!    updates renders bit-identical frames with strictly fewer
+//!    `minmax_scanned` (and sort cycles) than the cold-start policy.
+//! 5. **Static regression** — static-scene reports carry no `update_dram`
+//!    / `dynamic` keys and register no update ports: byte-identical to a
+//!    build without the feature.
+
+use gaucim::camera::{Camera, ViewCondition};
+use gaucim::coordinator::App;
+use gaucim::coordinator::{RenderServer, SchedPolicy, SessionScript, SessionSpec};
+use gaucim::culling::{CullOutput, CullReuse, CullReuseStats, DrFc, GridConfig, GridPartition};
+use gaucim::math::Vec3;
+use gaucim::memory::DramModel;
+use gaucim::pipeline::{FramePipeline, PipelineConfig};
+use gaucim::scene::synth::{SceneKind, SynthParams};
+use gaucim::scene::{DramLayout, Scene, TemporalStream, UpdateFrameStats};
+
+fn scene_prep(n: usize) -> (Scene, GridPartition, DramLayout) {
+    let scene = SynthParams::new(SceneKind::DynamicLarge, n).with_seed(9).generate();
+    let grid = GridPartition::build(&scene, GridConfig::new(4));
+    let layout = DramLayout::build(&scene, &grid);
+    (scene, grid, layout)
+}
+
+#[test]
+fn temporal_delta_round_trips_exactly_and_clean_cells_ship_zero_bytes() {
+    let (scene, grid, layout) = scene_prep(800);
+    let n_cells = grid.cells.len();
+    let mut ts = TemporalStream::new(scene.dynamic, scene.len(), n_cells);
+
+    // Frame 0 bakes the baseline: scene prep, not an update — nothing ships.
+    let s0 = ts.advance(&scene.gaussians, &layout, 0.1);
+    assert_eq!(s0, UpdateFrameStats::default());
+    assert!(ts.take_writes().is_empty());
+    assert!(ts.dirty_cells().iter().all(|&d| !d), "baseline reads clean");
+
+    // Frame 1 at a new scene time ships deltas for moved cells only.
+    let s1 = ts.advance(&scene.gaussians, &layout, 0.6);
+    assert!(s1.updated_records > 0, "a dynamic scene must move between frames");
+    assert!(s1.delta_bytes > 0);
+    assert!(
+        s1.delta_bytes < s1.raw_bytes,
+        "XOR-delta ({}) must undercut a raw refresh ({})",
+        s1.delta_bytes,
+        s1.raw_bytes
+    );
+    let writes = ts.take_writes();
+    assert_eq!(writes.len() as u64, s1.dirty_cells, "one write burst per dirty cell");
+    assert!(writes.iter().all(|&(_, bytes)| bytes > 0));
+
+    // Round-trip exactness: the stream applied its own deltas to the
+    // baseline, so re-advancing at the same scene time finds every record
+    // image already bit-equal — all cells read clean, zero bytes ship.
+    let s2 = ts.advance(&scene.gaussians, &layout, 0.6);
+    assert_eq!(s2.dirty_cells, 0, "applied deltas must reproduce the frame exactly");
+    assert_eq!(s2.updated_records, 0);
+    assert_eq!(s2.delta_bytes, 0);
+    let nonempty = layout.cell_ranges.iter().filter(|&&(s, e)| e > s).count();
+    assert_eq!(s2.clean_cells as usize, nonempty, "every occupied cell reads clean");
+    assert!(ts.take_writes().is_empty());
+}
+
+fn dynamic_server(threads: usize) -> RenderServer {
+    let scene = SynthParams::new(SceneKind::DynamicLarge, 1500).with_seed(21).generate();
+    let mut config =
+        PipelineConfig::paper(true).with_resolution(128, 72).with_threads(threads);
+    config.dynamic_updates = true;
+    RenderServer::new(scene, config)
+}
+
+fn join_leave_script() -> SessionScript {
+    SessionScript::new()
+        .join_at(0, SessionSpec::stream(ViewCondition::Average, 5).with_deadline_fps(120.0))
+        .join_at(
+            0,
+            SessionSpec::stream(ViewCondition::Static, 5)
+                .with_deadline_fps(60.0)
+                .with_weight(2.0),
+        )
+        .join_at(
+            2,
+            SessionSpec::stream(ViewCondition::Extreme, 3)
+                .with_start(2)
+                .with_deadline_fps(90.0),
+        )
+        .leave_at(4, 0)
+}
+
+#[test]
+fn dynamic_sessions_replay_byte_identically_across_thread_counts_per_policy() {
+    let script = join_leave_script();
+    for policy in SchedPolicy::ALL {
+        let baseline = dynamic_server(1).render_sessions(&script, policy);
+        // The update stream actually flowed: per-session dynamic blocks and
+        // contended update rows are populated.
+        assert!(
+            baseline.sessions.iter().filter(|s| s.frames > 1).all(|s| {
+                s.seq.dynamic.is_some_and(|d| d.update.updated_records > 0)
+            }),
+            "{}: multi-frame dynamic sessions must ship updates",
+            policy.label()
+        );
+        assert!(
+            baseline
+                .contended
+                .viewers
+                .iter()
+                .all(|v| v.update.is_some_and(|u| u.bytes > 0)),
+            "{}: every admitted session must own a live update port",
+            policy.label()
+        );
+        let projection = baseline.simulated_projection();
+        for threads in [4, 8] {
+            assert_eq!(
+                projection,
+                dynamic_server(threads).render_sessions(&script, policy).simulated_projection(),
+                "{} dynamic stream diverged at threads={threads}",
+                policy.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn update_driven_cull_reuse_matches_full_recull_bit_exactly() {
+    let (scene, grid, layout) = scene_prep(2000);
+    let drfc = DrFc::new(&scene, &grid, &layout);
+    let cam = Camera::look_at(
+        Vec3::new(0.0, 4.0, 25.0),
+        Vec3::ZERO,
+        Vec3::new(0.0, 1.0, 0.0),
+        60f32.to_radians(),
+        16.0 / 9.0,
+        0.1,
+        200.0,
+    );
+    let pass1 = |out: &mut CullOutput, t: f32| {
+        out.clear();
+        let frustum = cam.frustum();
+        for flat in drfc.slice_cell_range(t) {
+            if drfc.cell_test(flat, &frustum) {
+                out.visible_cells.push(flat);
+            }
+        }
+    };
+
+    // Stream five frames: the real update stream dirties cells, reuse
+    // invalidates from those flags, and every frame's reuse outputs must
+    // equal the full re-cull bit-for-bit while DRAM traffic only shrinks.
+    let mut ts = TemporalStream::new(scene.dynamic, scene.len(), grid.cells.len());
+    let mut reuse = CullReuse::new(grid.cells.len(), scene.len());
+    let mut totals = CullReuseStats::default();
+    let (mut full_bytes, mut reuse_bytes) = (0u64, 0u64);
+    let mut full_out = CullOutput::default();
+    let mut reuse_out = CullOutput::default();
+    for i in 0..5 {
+        let t = 0.1 + 0.08 * i as f32;
+        ts.advance(&scene.gaussians, &layout, t);
+        reuse.invalidate(ts.dirty_cells(), ts.dirty_records());
+
+        let mut d_full = DramModel::default_lpddr5();
+        pass1(&mut full_out, t);
+        drfc.cull_scheduled(&cam, t, &mut d_full, &mut full_out);
+
+        let mut d_reuse = DramModel::default_lpddr5();
+        pass1(&mut reuse_out, t);
+        let stats =
+            drfc.cull_scheduled_reuse(&cam, t, &mut d_reuse, &mut reuse_out, &mut reuse);
+
+        assert_eq!(reuse_out.visible_cells, full_out.visible_cells, "frame {i}");
+        assert_eq!(reuse_out.candidates, full_out.candidates, "frame {i}");
+        assert_eq!(reuse_out.visible, full_out.visible, "frame {i}");
+        assert_eq!(reuse_out.fetched, full_out.fetched, "frame {i}");
+        assert!(
+            d_reuse.stats().bytes <= d_full.stats().bytes,
+            "frame {i}: reuse must never fetch more than the full pass"
+        );
+        full_bytes += d_full.stats().bytes;
+        reuse_bytes += d_reuse.stats().bytes;
+        totals.add(&stats);
+    }
+    assert!(
+        reuse_bytes < full_bytes,
+        "clean cells must replay prior fetches ({reuse_bytes} vs {full_bytes} bytes)"
+    );
+    assert!(totals.cells_reused > 0, "some visible cells must stay clean across frames");
+    assert!(totals.bytes_saved > 0);
+    assert_eq!(totals.bytes_saved, full_bytes - reuse_bytes);
+}
+
+#[test]
+fn aii_retention_is_bit_identical_with_strictly_fewer_minmax_scans() {
+    let mut app = App::new(SceneKind::DynamicLarge, 1500, 21);
+    app.config = app.config.clone().with_resolution(128, 72);
+    let mut warm_cfg = app.config.clone();
+    warm_cfg.dynamic_updates = true;
+    assert!(warm_cfg.aii_retain, "retention is the default");
+    let mut cold_cfg = warm_cfg.clone();
+    cold_cfg.aii_retain = false;
+
+    let seq = app.trajectory(ViewCondition::Average, 5);
+    let mut warm = FramePipeline::new(&app.scene, warm_cfg);
+    let mut cold = FramePipeline::new(&app.scene, cold_cfg);
+    let (mut warm_minmax, mut cold_minmax) = (0u64, 0u64);
+    let (mut warm_cycles, mut cold_cycles) = (0u64, 0u64);
+    for (i, (cam, t)) in seq.iter().enumerate() {
+        let rw = warm.render_frame(cam, *t, true);
+        let rc = cold.render_frame(cam, *t, true);
+        // Bit-identical sort *output*: the blended image and everything
+        // downstream of the sorted order must match exactly.
+        assert_eq!(
+            rw.image.as_ref().expect("rendered").data,
+            rc.image.as_ref().expect("rendered").data,
+            "frame {i}: retained-AII frame diverged from cold-start"
+        );
+        assert_eq!(rw.n_visible, rc.n_visible, "frame {i}");
+        assert_eq!(
+            rw.traffic.total_dram_bytes(),
+            rc.traffic.total_dram_bytes(),
+            "frame {i}: retention must not change what is transferred"
+        );
+        assert_eq!(rw.update, rc.update, "frame {i}: identical update streams");
+        warm_minmax += rw.sort.minmax_scanned;
+        cold_minmax += rc.sort.minmax_scanned;
+        warm_cycles += rw.sort.cycles;
+        cold_cycles += rc.sort.cycles;
+    }
+    assert!(
+        warm_minmax < cold_minmax,
+        "posteriori intervals must skip min/max scans ({warm_minmax} vs {cold_minmax})"
+    );
+    assert!(
+        warm_cycles < cold_cycles,
+        "retained sort must cost fewer cycles ({warm_cycles} vs {cold_cycles})"
+    );
+}
+
+#[test]
+fn static_runs_emit_no_dynamic_keys() {
+    // Sequence path: a static scene through the standard App run — the
+    // report JSON must not grow `dynamic` / `update_dram` keys.
+    let mut app = App::new(SceneKind::StaticLarge, 1200, 7);
+    app.config = app.config.clone().with_resolution(128, 72);
+    let rep = app.run_sequence(ViewCondition::Static, 2, 0);
+    assert!(rep.dynamic.is_none());
+    let js = rep.to_json().pretty();
+    assert!(!js.contains("update"), "static sequence report grew an update key:\n{js}");
+    assert!(!js.contains("dynamic"), "static sequence report grew a dynamic key:\n{js}");
+
+    // Contended server path: no update ports register, no `update` rows
+    // appear in the shared roll-up.
+    let scene = SynthParams::new(SceneKind::StaticLarge, 1200).with_seed(7).generate();
+    let config = PipelineConfig::paper(false).with_resolution(128, 72).with_threads(1);
+    assert!(!config.dynamic_updates, "static default keeps the update stream off");
+    let server = RenderServer::new(scene, config);
+    let script = SessionScript::new()
+        .join_at(0, SessionSpec::stream(ViewCondition::Static, 2))
+        .join_at(0, SessionSpec::stream(ViewCondition::Average, 2));
+    let sessions = server.render_sessions(&script, SchedPolicy::RoundRobin);
+    assert!(sessions.sessions.iter().all(|s| s.seq.dynamic.is_none()));
+    assert!(sessions.contended.viewers.iter().all(|v| v.update.is_none()));
+    let mem_js = sessions.contended.to_json().pretty();
+    assert!(!mem_js.contains("update"), "static roll-up grew an update key:\n{mem_js}");
+}
