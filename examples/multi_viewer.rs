@@ -36,22 +36,45 @@
 //! `PALLAS_THREADS` by the CI `residency-smoke` job); host fps deltas
 //! versus the fully-resident run land in `residency_host`.
 //!
+//! Every mode also assembles a schema-versioned `metrics` block through
+//! [`gaucim::obs::Registry`] — `metrics.deterministic` holds the
+//! simulated-only roll-ups CI diffs across `PALLAS_THREADS`
+//! (`obs-smoke`), `metrics.host` the wall-clock-derived numbers. Pass
+//! `--trace-out trace.json` to additionally record every contended batch
+//! / session stream as a **simulated-time** Chrome trace (stage spans,
+//! per-channel DRAM spans, session lifecycle instants) loadable in
+//! Perfetto — see `rust/src/obs/README.md`.
+//!
 //! Run: `cargo run --release --example multi_viewer [-- --viewers 4 --frames 8 --threads 0]`
 //! (`--threads 0` = auto: `PALLAS_THREADS` env, else available parallelism)
 
 use gaucim::bench::write_bench_json;
 use gaucim::camera::ViewCondition;
 use gaucim::coordinator::{
-    ContendedMemReport, DynamicSequenceStats, Percentiles, RenderServer, SchedPolicy,
-    SequenceReport, SessionBatchReport, SessionScript, SessionSpec, ViewerSpec,
+    ContendedMemReport, DynamicSequenceStats, RenderServer, SchedPolicy, SequenceReport,
+    SessionBatchReport, SessionScript, SessionSpec, ViewerSpec,
 };
 use gaucim::memory::PrefetchPolicy;
+use gaucim::obs::{sink, Component, Registry, TraceSink};
 use gaucim::pipeline::{resolve_threads, HostStageWall, PipelineConfig};
 use gaucim::render::RenderBackend;
 use gaucim::scene::synth::{SceneKind, SynthParams};
 use gaucim::util::cli::Args;
 use gaucim::util::json::Json;
 use std::time::Instant;
+
+/// Dump the recorded simulated-time trace as Chrome trace-event JSON
+/// (`--trace-out <path>`; load in Perfetto / `chrome://tracing`). A no-op
+/// when tracing was not requested.
+fn write_trace(path: Option<&str>, trace: Option<&TraceSink>) -> anyhow::Result<()> {
+    if let (Some(path), Some(trace)) = (path, trace) {
+        let doc = trace.lock().expect("tracer lock poisoned").chrome_json().pretty();
+        std::fs::write(path, doc)
+            .map_err(|e| anyhow::anyhow!("--trace-out {path}: {e}"))?;
+        println!("wrote {path} (Chrome trace-event JSON, simulated timeline)");
+    }
+    Ok(())
+}
 
 /// Run one single-viewer trajectory at a fixed thread count and return the
 /// pipeline's host per-stage wall-clock accounting.
@@ -200,17 +223,19 @@ fn session_bench(
 }
 
 fn stage_wall_json(wall: &HostStageWall) -> Json {
-    let sort_pctl = Percentiles::of(&wall.sort_samples);
-    let blend_pctl = Percentiles::of(&wall.blend_samples);
+    let sort_pctl = wall.sort_ladder();
+    let blend_pctl = wall.blend_ladder();
     Json::obj()
-        .set("frames", wall.frames)
-        .set("sort_s_total", wall.sort_s)
-        .set("blend_s_total", wall.blend_s)
-        .set("frame_s_total", wall.frame_s)
+        .set("frames", wall.frames())
+        .set("sort_s_total", wall.sort_s())
+        .set("blend_s_total", wall.blend_s())
+        .set("frame_s_total", wall.frame_s())
         .set("sort_s_p50", sort_pctl.p50)
         .set("sort_s_p99", sort_pctl.p99)
         .set("blend_s_p50", blend_pctl.p50)
         .set("blend_s_p99", blend_pctl.p99)
+        .set("sort_s_pctl", sort_pctl.to_json())
+        .set("blend_s_pctl", blend_pctl.to_json())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -232,6 +257,15 @@ fn main() -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--render-backend must be scalar|lanes, got '{s}'"))?;
     }
     let mut server = RenderServer::new(scene, config);
+    // Opt-in simulated-time frame tracing: every contended batch / session
+    // stream below records stage + DRAM-channel spans into one sink, dumped
+    // as Chrome trace-event JSON on exit. Timestamps are simulated ns, so
+    // the file is byte-identical across PALLAS_THREADS (CI `obs-smoke`).
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let trace_sink = trace_out.as_ref().map(|_| sink());
+    if let Some(trace) = &trace_sink {
+        server.set_tracer(trace.clone());
+    }
     println!(
         "multi-viewer server: {} gaussians, {n_viewers} viewers × {frames} frames @ \
          {width}x{height}, {threads} executor threads",
@@ -314,6 +348,10 @@ fn main() -> anyhow::Result<()> {
             "trajectory lookahead must beat no-prefetch on the standard trajectory \
              (hit rates: {hit_rates:?})"
         );
+        let mut metrics = Registry::new();
+        metrics.deterministic =
+            Component::new().set("residency", blocks.clone());
+        metrics.host = Component::new().set("residency_host", host.clone());
         let record = Json::obj()
             .set("gaussians", server.shared.scene.len())
             .set("viewers", n_viewers)
@@ -323,9 +361,11 @@ fn main() -> anyhow::Result<()> {
             .set("threads", threads)
             .set("residency_mb", residency_mb)
             .set("residency", blocks)
-            .set("residency_host", host);
+            .set("residency_host", host)
+            .set("metrics", metrics.to_json());
         write_bench_json("BENCH_server.json", &record)?;
         println!("\nwrote BENCH_server.json (residency block only)");
+        write_trace(trace_out.as_deref(), trace_sink.as_ref())?;
         return Ok(());
     }
 
@@ -442,6 +482,26 @@ fn main() -> anyhow::Result<()> {
             cold_sort / warm_sort.max(1e-12)
         );
 
+        // Assembled through the registry: every value is a simulated
+        // quantity, so the whole block lives in the deterministic section.
+        let dynamic_block = Component::new()
+            .set("static_mean_frame_bytes", mean_frame_bytes(&static_par.viewers))
+            .set("dynamic_mean_frame_bytes", mean_frame_bytes(&warm_par.viewers))
+            .set("update_raw_bytes", totals.update.raw_bytes)
+            .set("update_delta_bytes", totals.update.delta_bytes)
+            .set("update_dram_bytes", totals.update_dram_bytes)
+            .set("update_busy_ns", update_busy_ns)
+            .set("updated_records", totals.update.updated_records)
+            .set("dirty_cells", totals.update.dirty_cells)
+            .set("clean_cells", totals.update.clean_cells)
+            .set("cull_cells_reused", totals.cull_reuse.cells_reused)
+            .set("cull_cells_fetched", totals.cull_reuse.cells_fetched)
+            .set("cull_bytes_saved", totals.cull_reuse.bytes_saved)
+            .set("cull_cell_hit_rate", totals.cull_reuse.cell_hit_rate())
+            .set("aii_warm_sort_cycles", warm_sort)
+            .set("aii_cold_sort_cycles", cold_sort);
+        let mut metrics = Registry::new();
+        metrics.deterministic = Component::new().set("dynamic", dynamic_block.clone());
         let record = Json::obj()
             .set("gaussians", server.shared.scene.len())
             .set("viewers", n_viewers)
@@ -449,27 +509,11 @@ fn main() -> anyhow::Result<()> {
             .set("width", width)
             .set("height", height)
             .set("threads", threads)
-            .set(
-                "dynamic",
-                Json::obj()
-                    .set("static_mean_frame_bytes", mean_frame_bytes(&static_par.viewers))
-                    .set("dynamic_mean_frame_bytes", mean_frame_bytes(&warm_par.viewers))
-                    .set("update_raw_bytes", totals.update.raw_bytes)
-                    .set("update_delta_bytes", totals.update.delta_bytes)
-                    .set("update_dram_bytes", totals.update_dram_bytes)
-                    .set("update_busy_ns", update_busy_ns)
-                    .set("updated_records", totals.update.updated_records)
-                    .set("dirty_cells", totals.update.dirty_cells)
-                    .set("clean_cells", totals.update.clean_cells)
-                    .set("cull_cells_reused", totals.cull_reuse.cells_reused)
-                    .set("cull_cells_fetched", totals.cull_reuse.cells_fetched)
-                    .set("cull_bytes_saved", totals.cull_reuse.bytes_saved)
-                    .set("cull_cell_hit_rate", totals.cull_reuse.cell_hit_rate())
-                    .set("aii_warm_sort_cycles", warm_sort)
-                    .set("aii_cold_sort_cycles", cold_sort),
-            );
+            .set("dynamic", dynamic_block.to_json())
+            .set("metrics", metrics.to_json());
         write_bench_json("BENCH_server.json", &record)?;
         println!("\nwrote BENCH_server.json (dynamic block only)");
+        write_trace(trace_out.as_deref(), trace_sink.as_ref())?;
         return Ok(());
     }
 
@@ -500,6 +544,10 @@ fn main() -> anyhow::Result<()> {
         server.set_threads(threads);
         let (sessions, rr_wall_s) =
             session_bench(&server, &specs, &script, None, Some(&sessions_serial));
+        let sessions_speedup = sessions_serial.wall_s / rr_wall_s.max(1e-12);
+        let mut metrics = Registry::new();
+        metrics.deterministic = Component::new().set("sessions", sessions.clone());
+        metrics.host = Component::new().set("speedup_sessions", sessions_speedup);
         let record = Json::obj()
             .set("gaussians", server.shared.scene.len())
             .set("viewers", n_viewers)
@@ -507,13 +555,12 @@ fn main() -> anyhow::Result<()> {
             .set("width", width)
             .set("height", height)
             .set("threads", threads)
-            .set(
-                "speedup_vs_serial",
-                Json::obj().set("sessions", sessions_serial.wall_s / rr_wall_s.max(1e-12)),
-            )
-            .set("sessions", sessions);
+            .set("speedup_vs_serial", Json::obj().set("sessions", sessions_speedup))
+            .set("sessions", sessions)
+            .set("metrics", metrics.to_json());
         write_bench_json("BENCH_server.json", &record)?;
         println!("\nwrote BENCH_server.json (sessions block only)");
+        write_trace(trace_out.as_deref(), trace_sink.as_ref())?;
         return Ok(());
     }
 
@@ -568,20 +615,20 @@ fn main() -> anyhow::Result<()> {
     // ---- intra-frame executor probe (sort + blend host wall-clock) -----
     let (wall_serial, frame_wall_serial) = executor_probe(&server, &specs[0], 1);
     let (wall_par, frame_wall_par) = executor_probe(&server, &specs[0], threads);
-    let sort_speedup = wall_serial.sort_s / wall_par.sort_s.max(1e-12);
-    let blend_speedup = wall_serial.blend_s / wall_par.blend_s.max(1e-12);
+    let sort_speedup = wall_serial.sort_s() / wall_par.sort_s().max(1e-12);
+    let blend_speedup = wall_serial.blend_s() / wall_par.blend_s().max(1e-12);
     let frame_speedup = frame_wall_serial / frame_wall_par.max(1e-12);
     let contended_speedup = contended_serial.wall_s / contended.wall_s.max(1e-12);
     println!("\nintra-frame executor ({threads} threads vs serial, single viewer):");
     println!(
         "  sort  {:.3} ms → {:.3} ms  ({sort_speedup:.2}x)",
-        wall_serial.sort_s * 1e3,
-        wall_par.sort_s * 1e3
+        wall_serial.sort_s() * 1e3,
+        wall_par.sort_s() * 1e3
     );
     println!(
         "  blend {:.3} ms → {:.3} ms  ({blend_speedup:.2}x)",
-        wall_serial.blend_s * 1e3,
-        wall_par.blend_s * 1e3
+        wall_serial.blend_s() * 1e3,
+        wall_par.blend_s() * 1e3
     );
     println!(
         "  contended batch {:.3} s → {:.3} s  ({contended_speedup:.2}x)",
@@ -596,12 +643,12 @@ fn main() -> anyhow::Result<()> {
     // only wall-clock may differ.
     let wall_rb_scalar = backend_probe(&server, &specs[0], threads, RenderBackend::Scalar);
     let wall_rb_lanes = backend_probe(&server, &specs[0], threads, RenderBackend::Lanes);
-    let backend_speedup = wall_rb_scalar.blend_s / wall_rb_lanes.blend_s.max(1e-12);
+    let backend_speedup = wall_rb_scalar.blend_s() / wall_rb_lanes.blend_s().max(1e-12);
     println!("\nrender backend (numeric blend datapath, {threads} threads):");
     println!(
         "  blend scalar {:.3} ms → lanes {:.3} ms  ({backend_speedup:.2}x)",
-        wall_rb_scalar.blend_s * 1e3,
-        wall_rb_lanes.blend_s * 1e3
+        wall_rb_scalar.blend_s() * 1e3,
+        wall_rb_lanes.blend_s() * 1e3
     );
 
     let mem = contended
@@ -659,6 +706,36 @@ fn main() -> anyhow::Result<()> {
         sessions_serial.wall_s, rr_wall_s
     );
 
+    let speedups = Json::obj()
+        .set("sort", sort_speedup)
+        .set("blend", blend_speedup)
+        .set("frame", frame_speedup)
+        .set("contended", contended_speedup)
+        .set("render_backend", backend_speedup)
+        .set("sessions", sessions_speedup);
+
+    // The typed metrics registry: `deterministic` holds only simulated
+    // quantities (byte-identical across PALLAS_THREADS — the CI `obs-smoke`
+    // diff surface), `host` holds wall-clock-derived numbers and is
+    // excluded from cross-thread diffs.
+    let mut metrics = Registry::new();
+    metrics.deterministic = Component::new()
+        .set("contended_mem", mem.component())
+        .set("sessions", sessions.clone());
+    metrics.host = Component::new()
+        .set("sequential_wall_s", seq_wall_s)
+        .set("batch_wall_s", batch.wall_s)
+        .set("sequential_frames_per_s", seq_fps)
+        .set("aggregate_frames_per_s", batch.aggregate_frames_per_s)
+        .set("speedup", speedup)
+        .set("contended_wall_serial_s", contended_serial.wall_s)
+        .set("contended_wall_parallel_s", contended.wall_s)
+        .set("stage_wall_serial", stage_wall_json(&wall_serial))
+        .set("stage_wall_parallel", stage_wall_json(&wall_par))
+        .set("stage_wall_render_scalar", stage_wall_json(&wall_rb_scalar))
+        .set("stage_wall_render_lanes", stage_wall_json(&wall_rb_lanes))
+        .set("speedup_vs_serial", speedups.clone());
+
     let record = Json::obj()
         .set("gaussians", server.shared.scene.len())
         .set("viewers", n_viewers)
@@ -679,21 +756,14 @@ fn main() -> anyhow::Result<()> {
         .set("stage_wall_parallel", stage_wall_json(&wall_par))
         .set("stage_wall_render_scalar", stage_wall_json(&wall_rb_scalar))
         .set("stage_wall_render_lanes", stage_wall_json(&wall_rb_lanes))
-        .set(
-            "speedup_vs_serial",
-            Json::obj()
-                .set("sort", sort_speedup)
-                .set("blend", blend_speedup)
-                .set("frame", frame_speedup)
-                .set("contended", contended_speedup)
-                .set("render_backend", backend_speedup)
-                .set("sessions", sessions_speedup),
-        )
+        .set("speedup_vs_serial", speedups)
         .set("contended_wall_serial_s", contended_serial.wall_s)
         .set("contended_wall_parallel_s", contended.wall_s)
         .set("contended_mem", mem.to_json())
-        .set("sessions", sessions);
+        .set("sessions", sessions)
+        .set("metrics", metrics.to_json());
     write_bench_json("BENCH_server.json", &record)?;
-    println!("\nwrote BENCH_server.json (contended_mem + stage_wall + speedup_vs_serial + sessions)");
+    println!("\nwrote BENCH_server.json (contended_mem + stage_wall + speedup_vs_serial + sessions + metrics)");
+    write_trace(trace_out.as_deref(), trace_sink.as_ref())?;
     Ok(())
 }

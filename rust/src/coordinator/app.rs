@@ -5,6 +5,7 @@ use crate::camera::{Camera, Trajectory, ViewCondition};
 use crate::culling::CullReuseStats;
 use crate::energy::{FrameEnergy, PowerReport, StageLatency};
 use crate::math::Vec3;
+use crate::obs::Component;
 use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig};
 use crate::render::{psnr, Image, ReferenceRenderer};
 use crate::scene::synth::{SceneKind, SynthParams};
@@ -39,8 +40,10 @@ pub struct SequenceReport {
 }
 
 impl SequenceReport {
-    pub fn to_json(&self) -> Json {
-        let mut js = Json::obj()
+    /// Registry [`Component`] of the sequence roll-up (keys unchanged from
+    /// the pre-registry encoding — every value is a simulated quantity).
+    pub fn component(&self) -> Component {
+        let mut c = Component::new()
             .set("label", self.label.as_str())
             .set("frames", self.frames)
             .set("fps", self.report.fps)
@@ -55,9 +58,13 @@ impl SequenceReport {
             .set("avg_sort_cycles", self.avg_sort_cycles)
             .set("avg_atg_ops", self.avg_atg_ops);
         if let Some(d) = &self.dynamic {
-            js = js.set("dynamic", d.to_json());
+            c.insert("dynamic", d.component());
         }
-        js
+        c
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.component().to_json()
     }
 }
 
@@ -75,8 +82,10 @@ pub struct DynamicSequenceStats {
 }
 
 impl DynamicSequenceStats {
-    pub fn to_json(&self) -> Json {
-        Json::obj()
+    /// Registry [`Component`] of the dynamic-serving totals (counters plus
+    /// the hit-rate gauge).
+    pub fn component(&self) -> Component {
+        Component::new()
             .set("dirty_cells", self.update.dirty_cells)
             .set("clean_cells", self.update.clean_cells)
             .set("updated_records", self.update.updated_records)
@@ -88,6 +97,10 @@ impl DynamicSequenceStats {
             .set("cull_refs_reused", self.cull_reuse.refs_reused)
             .set("cull_bytes_saved", self.cull_reuse.bytes_saved)
             .set("cull_cell_hit_rate", self.cull_reuse.cell_hit_rate())
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.component().to_json()
     }
 }
 

@@ -27,8 +27,7 @@ pub mod session;
 pub use app::{App, DynamicSequenceStats, SequenceReport};
 pub use config::ExperimentConfig;
 pub use server::{
-    ContendedMemReport, Percentiles, RenderServer, ServerReport, SharedScene, ViewerMemStats,
-    ViewerSpec,
+    ContendedMemReport, RenderServer, ServerReport, SharedScene, ViewerMemStats, ViewerSpec,
 };
 pub use session::{
     SchedPolicy, SessionBatchReport, SessionEvent, SessionReport, SessionScheduler,

@@ -45,11 +45,13 @@
 
 use crate::camera::Camera;
 use crate::memory::{MemMode, MemStage, MemorySystem, PortId};
+use crate::obs::{TraceSink, Track};
 use crate::pipeline::{
     FramePipeline, FrameResult, PipelineConfig, ScenePrep, SessionState, WorkerPool,
 };
 use crate::render::ReferenceRenderer;
 use crate::scene::Scene;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use super::app::score_frame;
@@ -117,6 +119,15 @@ pub(crate) struct RoundEngine {
     /// the round is the parallel unit, so frames run their intra-frame
     /// executor serially instead of oversubscribing the host.
     frame_cfg: PipelineConfig,
+    /// Simulated-time trace sink plus this engine's Chrome-trace process
+    /// id (opt-in). Frame spans are emitted post-replay in the round's
+    /// policy order — identical in lockstep and two-phase mode, so the
+    /// recorded stream is bit-identical across host thread counts.
+    tracer: Option<(TraceSink, u64)>,
+    /// Per-participant frame counters for span labels (`frame {n}`),
+    /// touched only when a tracer is attached. Interior mutability because
+    /// `run_round` takes `&self`.
+    frame_counts: Mutex<BTreeMap<usize, usize>>,
 }
 
 impl RoundEngine {
@@ -151,12 +162,51 @@ impl RoundEngine {
             two_phase,
             config,
             frame_cfg,
+            tracer: None,
+            frame_counts: Mutex::new(BTreeMap::new()),
         }
     }
 
     /// The shared, contended memory system the engine replays into.
     pub(crate) fn sys(&self) -> &Arc<Mutex<MemorySystem>> {
         &self.sys
+    }
+
+    /// Attach a simulated-time trace sink: opens one Chrome-trace process
+    /// named `label`, wires the shared memory system's per-channel DRAM
+    /// spans onto it, and makes every subsequent round emit per-frame
+    /// stage spans (post-replay, in policy order). Lock order is always
+    /// system → tracer, never the reverse.
+    pub(crate) fn set_tracer(&mut self, sink: &TraceSink, label: &str) {
+        let pid = sink.lock().expect("tracer lock poisoned").begin_process(label);
+        self.sys
+            .lock()
+            .expect("memory system lock poisoned")
+            .set_tracer(sink.clone(), pid);
+        self.tracer = Some((sink.clone(), pid));
+    }
+
+    /// The attached trace sink and process id, if any (session schedulers
+    /// emit lifecycle instants onto the engine's process).
+    pub(crate) fn tracer(&self) -> Option<&(TraceSink, u64)> {
+        self.tracer.as_ref()
+    }
+
+    /// Emit one round's frame spans in outcome (= policy) order. Each
+    /// participant's frames chain on its own viewer track: a frame starts
+    /// at `max(track cursor, round epoch)` — rounds never overlap the
+    /// epoch barrier, and a participant's frames never overlap each other.
+    fn trace_outcomes(&self, outcomes: &[RoundOutcome], round_epoch: f64) {
+        let Some((sink, pid)) = &self.tracer else { return };
+        let mut tr = sink.lock().expect("tracer lock poisoned");
+        let mut counts = self.frame_counts.lock().expect("frame counter lock poisoned");
+        for out in outcomes {
+            let track = Track::Viewer(out.key);
+            let idx = counts.entry(out.key).or_insert(0);
+            let t0 = tr.cursor(*pid, track).max(round_epoch);
+            out.result.trace_spans(&mut tr, *pid, track, *idx, t0);
+            *idx += 1;
+        }
     }
 
     /// The event-queue configuration the engine runs under.
@@ -252,11 +302,16 @@ impl RoundEngine {
     ) -> Vec<RoundOutcome> {
         // Frame barrier: all in-flight transactions retire, port clocks
         // align — every participant's next frame starts at the same epoch
-        // and contends on the channels within the round.
-        self.sys.lock().expect("memory system lock poisoned").advance_epoch();
+        // and contends on the channels within the round. The epoch horizon
+        // anchors this round's trace spans in both modes.
+        let round_epoch = {
+            let mut sys = self.sys.lock().expect("memory system lock poisoned");
+            sys.advance_epoch();
+            sys.horizon_ns()
+        };
 
         if !self.two_phase {
-            return jobs
+            let out: Vec<RoundOutcome> = jobs
                 .iter_mut()
                 .map(|job| {
                     let result = job.pipeline.render_frame(&job.cam, job.t, job.render);
@@ -264,6 +319,8 @@ impl RoundEngine {
                     RoundOutcome { key: job.key, result, scored }
                 })
                 .collect();
+            self.trace_outcomes(&out, round_epoch);
+            return out;
         }
 
         // Phase 1 — render this round's frames in parallel against the
@@ -350,6 +407,8 @@ impl RoundEngine {
             }
             out.push(RoundOutcome { key: job.key, result: frame.result, scored: frame.scored });
         }
+        drop(sys);
+        self.trace_outcomes(&out, round_epoch);
         out
     }
 }

@@ -43,6 +43,7 @@
 
 use crate::camera::{Camera, ViewCondition};
 use crate::memory::{DramStats, MemStage, MemorySystem, ResidencyReport, ShardMap};
+use crate::obs::{Component, LatencyLadder, TraceSink};
 use crate::pipeline::{FramePipeline, FrameResult, PipelineConfig, ScenePrep};
 use crate::render::ReferenceRenderer;
 use crate::scene::Scene;
@@ -140,46 +141,22 @@ impl ViewerMemStats {
         self.preprocess.bytes + self.blend.bytes + self.update.map_or(0, |u| u.bytes)
     }
 
-    pub fn to_json(&self) -> Json {
-        let mut js = Json::obj()
+    /// Registry [`Component`] of this viewer's contended-memory stats
+    /// (nested DRAM stats ride along as raw nodes).
+    pub fn component(&self) -> Component {
+        let mut c = Component::new()
             .set("viewer", self.viewer)
             .set("preprocess", self.preprocess.to_json())
             .set("blend", self.blend.to_json());
         if let Some(upd) = &self.update {
-            js = js.set("update", upd.to_json());
+            c.insert("update", upd.to_json());
         }
-        js.set("total_busy_ns", self.total_busy_ns())
+        c.set("total_busy_ns", self.total_busy_ns())
             .set("total_wait_ns", self.total_wait_ns())
-    }
-}
-
-/// p50/p90/p99 summary of a sample set (simulated-time quantities).
-#[derive(Debug, Clone, Copy)]
-pub struct Percentiles {
-    pub p50: f64,
-    pub p90: f64,
-    pub p99: f64,
-}
-
-impl Percentiles {
-    /// Nearest-rank percentiles (same convention as
-    /// `math::stats::percentile`), with a single sort shared by all three
-    /// ranks — the latency vectors grow as viewers × frames.
-    pub fn of(samples: &[f64]) -> Percentiles {
-        if samples.is_empty() {
-            return Percentiles { p50: 0.0, p90: 0.0, p99: 0.0 };
-        }
-        let mut v: Vec<f64> = samples.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-        let pick = |p: f64| {
-            let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-            v[rank.min(v.len() - 1)]
-        };
-        Percentiles { p50: pick(50.0), p90: pick(90.0), p99: pick(99.0) }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj().set("p50", self.p50).set("p90", self.p90).set("p99", self.p99)
+        self.component().to_json()
     }
 }
 
@@ -197,10 +174,10 @@ pub struct ContendedMemReport {
     pub fairness: f64,
     /// Per-channel occupancy over the makespan.
     pub channel_util: Vec<f64>,
-    pub channel_util_pctl: Percentiles,
+    pub channel_util_pctl: LatencyLadder,
     /// Per-frame simulated stage latencies across all viewers (ns).
-    pub preprocess_latency_pctl: Percentiles,
-    pub blend_latency_pctl: Percentiles,
+    pub preprocess_latency_pctl: LatencyLadder,
+    pub blend_latency_pctl: LatencyLadder,
     pub viewers: Vec<ViewerMemStats>,
     /// Residency-layer roll-up. `Some` only when the shared memory system
     /// pages against a compressed backing store; fully-resident batches
@@ -210,8 +187,12 @@ pub struct ContendedMemReport {
 }
 
 impl ContendedMemReport {
-    pub fn to_json(&self) -> Json {
-        let mut js = Json::obj()
+    /// Registry [`Component`] of the roll-up. Every pre-registry JSON key
+    /// is preserved; the percentile blocks carry the full
+    /// [`LatencyLadder`] (a strict superset of the old `{p50,p90,p99}`
+    /// triple, identical at the shared ranks).
+    pub fn component(&self) -> Component {
+        let mut c = Component::new()
             .set("shards", self.shards)
             .set("channels", self.channels)
             .set("outstanding", self.outstanding)
@@ -221,17 +202,21 @@ impl ContendedMemReport {
                 "channel_util",
                 Json::Arr(self.channel_util.iter().map(|&u| Json::from(u)).collect()),
             )
-            .set("channel_util_pctl", self.channel_util_pctl.to_json())
-            .set("preprocess_latency_ns_pctl", self.preprocess_latency_pctl.to_json())
-            .set("blend_latency_ns_pctl", self.blend_latency_pctl.to_json())
+            .set("channel_util_pctl", self.channel_util_pctl)
+            .set("preprocess_latency_ns_pctl", self.preprocess_latency_pctl)
+            .set("blend_latency_ns_pctl", self.blend_latency_pctl)
             .set(
                 "viewers",
                 Json::Arr(self.viewers.iter().map(ViewerMemStats::to_json).collect()),
             );
         if let Some(res) = &self.residency {
-            js = js.set("residency", res.to_json());
+            c.insert("residency", res.to_json());
         }
-        js
+        c
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.component().to_json()
     }
 }
 
@@ -319,10 +304,10 @@ pub(crate) fn contended_rollup(
         outstanding,
         makespan_ns: sys.horizon_ns(),
         fairness: jain_fairness(&busy),
-        channel_util_pctl: Percentiles::of(&channel_util),
+        channel_util_pctl: LatencyLadder::of(&channel_util),
         channel_util,
-        preprocess_latency_pctl: Percentiles::of(pre_latency),
-        blend_latency_pctl: Percentiles::of(blend_latency),
+        preprocess_latency_pctl: LatencyLadder::of(pre_latency),
+        blend_latency_pctl: LatencyLadder::of(blend_latency),
         viewers: rows,
         residency: sys.residency_stats(),
     }
@@ -349,6 +334,9 @@ pub struct RenderServer {
     /// Camera orbit radius (matches [`super::App`]'s default so viewer
     /// trajectories are identical to single-viewer runs).
     pub orbit_radius: f32,
+    /// Simulated-time trace sink contended batches and session streams
+    /// record into (opt-in; `None` keeps the hot path untouched).
+    pub(crate) tracer: Option<TraceSink>,
 }
 
 impl RenderServer {
@@ -356,7 +344,7 @@ impl RenderServer {
     /// state once).
     pub fn new(scene: Scene, config: PipelineConfig) -> RenderServer {
         let shared = SharedScene::prepare(scene, &config);
-        RenderServer { shared, config, orbit_radius: 26.0 }
+        RenderServer { shared, config, orbit_radius: 26.0, tracer: None }
     }
 
     /// Promote a single-viewer [`super::App`] into a server, reusing its
@@ -365,7 +353,16 @@ impl RenderServer {
         let orbit_radius = app.orbit_radius;
         let config = app.config.clone();
         let shared = SharedScene::prepare(app.scene, &config);
-        RenderServer { shared, config, orbit_radius }
+        RenderServer { shared, config, orbit_radius, tracer: None }
+    }
+
+    /// Attach a simulated-time trace sink: subsequent contended batches
+    /// ([`RenderServer::render_batch_contended`]) and session streams
+    /// record frame/DRAM spans into it, one Chrome-trace process per run.
+    /// Recorded timestamps are simulated ns, so the stream is bit-identical
+    /// across host thread counts (enforced by the `observability` suite).
+    pub fn set_tracer(&mut self, sink: TraceSink) {
+        self.tracer = Some(sink);
     }
 
     /// The camera template every viewer starts from.
@@ -473,7 +470,10 @@ impl RenderServer {
     /// rounds through the same engine.
     pub fn render_batch_contended(&self, specs: &[ViewerSpec]) -> ServerReport {
         let t0 = Instant::now();
-        let engine = self.round_engine(specs.len());
+        let mut engine = self.round_engine(specs.len());
+        if let Some(sink) = &self.tracer {
+            engine.set_tracer(sink, "contended-batch");
+        }
         let mut built: Vec<(FramePipeline<'_>, RoundPorts)> =
             specs.iter().map(|_| engine.make_pipeline(&self.shared)).collect();
         let port_ids: Vec<RoundPorts> = built.iter().map(|&(_, ports)| ports).collect();
@@ -667,16 +667,23 @@ mod tests {
     }
 
     #[test]
-    fn percentiles_match_nearest_rank_convention() {
+    fn ladder_matches_nearest_rank_convention() {
         use crate::math::stats::percentile;
         let xs: Vec<f64> = (0..100).map(|i| (i * 7 % 100) as f64).collect();
-        let p = Percentiles::of(&xs);
+        let p = LatencyLadder::of(&xs);
         assert_eq!(p.p50, percentile(&xs, 50.0));
         assert_eq!(p.p90, percentile(&xs, 90.0));
         assert_eq!(p.p99, percentile(&xs, 99.0));
-        let empty = Percentiles::of(&[]);
+        let empty = LatencyLadder::of(&[]);
+        assert_eq!(empty.count, 0);
         assert_eq!(empty.p50, 0.0);
         assert_eq!(empty.p99, 0.0);
+        // The ladder JSON keeps the pre-registry percentile keys — the
+        // contended report's `*_pctl` blocks stay a superset.
+        let js = p.to_json().pretty();
+        for key in ["p50", "p90", "p99", "p75", "p95", "p99_9", "count", "mean"] {
+            assert!(js.contains(key), "ladder JSON missing {key}");
+        }
     }
 
     #[test]

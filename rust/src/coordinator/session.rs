@@ -57,6 +57,7 @@
 //! diffs the `sessions` block at `PALLAS_THREADS=1/4/8`).
 
 use crate::camera::ViewCondition;
+use crate::obs::{Component, LatencyLadder, Track};
 use crate::pipeline::{FramePipeline, SessionState};
 use crate::render::ReferenceRenderer;
 use crate::util::json::Json;
@@ -66,7 +67,7 @@ use std::time::Instant;
 use super::app::{scene_trajectory_from, viewer_label, SequenceAgg};
 use super::rounds::{RoundEngine, RoundJob, RoundPorts};
 use super::server::{
-    contended_rollup, ContendedMemReport, Percentiles, RenderServer, ViewerMemStats, ViewerSpec,
+    contended_rollup, ContendedMemReport, RenderServer, ViewerMemStats, ViewerSpec,
 };
 use super::SequenceReport;
 
@@ -481,7 +482,7 @@ pub struct SessionReport {
     pub deadline_miss_rate: f64,
     /// Simulated frame-latency percentiles (pipelined ns) over the
     /// session's lifetime.
-    pub frame_latency_pctl: Percentiles,
+    pub frame_latency_pctl: LatencyLadder,
     /// Retained-state hit rate of AII interval initialization: the
     /// fraction of sorted elements that skipped the phase-1 min/max scan
     /// because their block's intervals were carried across frames.
@@ -493,8 +494,11 @@ pub struct SessionReport {
 }
 
 impl SessionReport {
-    pub fn to_json(&self) -> Json {
-        Json::obj()
+    /// Registry [`Component`] of the session's lifetime stats (same JSON
+    /// keys as the pre-registry report; the latency block carries the full
+    /// [`LatencyLadder`]).
+    pub fn component(&self) -> Component {
+        Component::new()
             .set("session", self.session)
             .set("joined_round", self.joined_round)
             .set("admitted_round", self.admitted_round)
@@ -507,10 +511,14 @@ impl SessionReport {
             .set("resumed", self.resumed)
             .set("missed_deadlines", self.missed_deadlines as f64)
             .set("deadline_miss_rate", self.deadline_miss_rate)
-            .set("frame_latency_ns_pctl", self.frame_latency_pctl.to_json())
+            .set("frame_latency_ns_pctl", self.frame_latency_pctl)
             .set("aii_interval_hit_rate", self.aii_interval_hit_rate)
-            .set("mem", self.mem.to_json())
+            .set("mem", self.mem.component())
             .set("report", self.seq.to_json())
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.component().to_json()
     }
 }
 
@@ -526,7 +534,7 @@ pub struct SessionBatchReport {
     /// Missed-deadline fraction across all deadline-bearing frames.
     pub deadline_miss_rate: f64,
     /// Frame-latency percentiles across every session frame.
-    pub frame_latency_pctl: Percentiles,
+    pub frame_latency_pctl: LatencyLadder,
     pub sessions: Vec<SessionReport>,
     /// The shared-memory roll-up, structurally identical to the batch
     /// path's `contended_mem` block.
@@ -539,22 +547,25 @@ impl SessionBatchReport {
         self.contended.fairness
     }
 
-    /// Simulated-statistics JSON: everything except host wall-clock — the
-    /// surface that must be bit-identical across host thread counts (the
-    /// CI `session-smoke` diff and the determinism suite compare this).
-    pub fn to_json(&self) -> Json {
-        Json::obj()
+    /// Registry [`Component`] of the stream report — the deterministic
+    /// section of the run (host wall-clock deliberately excluded).
+    pub fn component(&self) -> Component {
+        Component::new()
             .set("policy", self.policy.label())
             .set("rounds", self.rounds)
             .set("total_frames", self.total_frames)
             .set("deadline_miss_rate", self.deadline_miss_rate)
-            .set("frame_latency_ns_pctl", self.frame_latency_pctl.to_json())
+            .set("frame_latency_ns_pctl", self.frame_latency_pctl)
             .set("fairness", self.fairness())
-            .set(
-                "sessions",
-                Json::Arr(self.sessions.iter().map(SessionReport::to_json).collect()),
-            )
-            .set("contended_mem", self.contended.to_json())
+            .list("sessions", self.sessions.iter().map(SessionReport::component))
+            .set("contended_mem", self.contended.component())
+    }
+
+    /// Simulated-statistics JSON: everything except host wall-clock — the
+    /// surface that must be bit-identical across host thread counts (the
+    /// CI `session-smoke` diff and the determinism suite compare this).
+    pub fn to_json(&self) -> Json {
+        self.component().to_json()
     }
 
     /// The wall-clock-free projection used by determinism assertions.
@@ -706,7 +717,11 @@ impl<'a> SessionScheduler<'a> {
         // total joins: a stream whose sessions never overlap gets the
         // lockstep path (full intra-frame parallelism per lone frame)
         // instead of one-thread trace pipelines.
-        let engine = server.round_engine(script.peak_concurrency());
+        let mut engine = server.round_engine(script.peak_concurrency());
+        if let Some(sink) = &server.tracer {
+            engine.set_tracer(sink, &format!("sessions-{}", self.policy.label()));
+        }
+        let engine = engine;
         let reference = ReferenceRenderer::new(server.config.width, server.config.height)
             .with_backend(server.config.render_backend);
         let fallback_bytes_per_frame = shared.prep.layout.total_span_bytes() as f64 / 10.0;
@@ -753,6 +768,15 @@ impl<'a> SessionScheduler<'a> {
 
         let mut round = 0usize;
         loop {
+            // Simulated timestamp this round's lifecycle instants anchor
+            // to: the shared system's horizon entering the round —
+            // deterministic across host thread counts.
+            let round_t = if engine.tracer().is_some() {
+                engine.sys().lock().expect("memory system lock poisoned").horizon_ns()
+            } else {
+                0.0
+            };
+
             // 1 — departures scheduled this round (before joins, so a
             // leaver's bandwidth is released to the admission check). The
             // session record always exists here: its join round is
@@ -777,11 +801,19 @@ impl<'a> SessionScheduler<'a> {
                         }
                     }
                 }
+                let detached = s.retained.is_some();
                 ring.retain(|&x| x != id);
                 // A session deferred past its own leave never streams: drop
                 // it from the admission queue too, or a later round would
                 // admit a departed viewer and leak its bandwidth demand.
                 pending.retain(|&x| x != id);
+                lifecycle_instant(
+                    &engine,
+                    Track::Viewer(id),
+                    "leave",
+                    round_t,
+                    vec![("round", Json::from(round)), ("detached", Json::from(detached))],
+                );
             }
 
             // 2 — arrivals scheduled this round enter the wait queue.
@@ -819,6 +851,13 @@ impl<'a> SessionScheduler<'a> {
                     retained: None,
                 });
                 pending.push_back(id);
+                lifecycle_instant(
+                    &engine,
+                    Track::Viewer(id),
+                    "join",
+                    round_t,
+                    vec![("round", Json::from(round))],
+                );
             }
 
             // 3 — admission control (join order; work-conserving).
@@ -905,11 +944,28 @@ impl<'a> SessionScheduler<'a> {
                 s.demand_bytes_per_s = demand;
                 admitted_demand += demand;
                 ring.push(cand);
+                lifecycle_instant(
+                    &engine,
+                    Track::Viewer(cand),
+                    if resumed { "resume" } else { "admit" },
+                    round_t,
+                    vec![
+                        ("round", Json::from(round)),
+                        ("warm_started", Json::from(warm_started)),
+                    ],
+                );
             }
             for &id in &pending {
                 if let Some(s) = sessions[id].as_mut() {
                     s.deferred_rounds += 1;
                 }
+                lifecycle_instant(
+                    &engine,
+                    Track::Scheduler,
+                    "defer",
+                    round_t,
+                    vec![("session", Json::from(id)), ("round", Json::from(round))],
+                );
             }
 
             // 4 — stream end?
@@ -1074,7 +1130,7 @@ impl<'a> SessionScheduler<'a> {
                 } else {
                     0.0
                 },
-                frame_latency_pctl: Percentiles::of(&s.latency),
+                frame_latency_pctl: LatencyLadder::of(&s.latency),
                 aii_interval_hit_rate: if s.bucketed > 0 {
                     1.0 - s.minmax_scanned as f64 / s.bucketed as f64
                 } else {
@@ -1095,12 +1151,29 @@ impl<'a> SessionScheduler<'a> {
             } else {
                 0.0
             },
-            frame_latency_pctl: Percentiles::of(&all_latency),
+            frame_latency_pctl: LatencyLadder::of(&all_latency),
             sessions: reports,
             contended,
         };
         self.detached = detached;
         report
+    }
+}
+
+/// Emit one session-lifecycle instant onto the engine's trace process (a
+/// no-op without an attached tracer). `ts_ns` is a simulated-time
+/// quantity and the call sites run in deterministic script order, so the
+/// recorded stream is bit-identical across host thread counts.
+fn lifecycle_instant(
+    engine: &RoundEngine,
+    track: Track,
+    name: &str,
+    ts_ns: f64,
+    args: Vec<(&'static str, Json)>,
+) {
+    if let Some((sink, pid)) = engine.tracer() {
+        let mut tr = sink.lock().expect("tracer lock poisoned");
+        tr.instant(*pid, track, name, "session", ts_ns, args);
     }
 }
 

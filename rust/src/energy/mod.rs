@@ -9,7 +9,7 @@
 
 pub mod report;
 
-pub use report::{PowerReport, StageLatency};
+pub use report::{PowerReport, PreprocessBreakdown, StageLatency};
 
 /// 16 nm digital per-op energies (pJ).
 pub mod ops {

@@ -39,6 +39,28 @@ impl StageLatency {
     }
 }
 
+/// Modeled sub-stage attribution of the preprocess superstage (ns), for
+/// the six-granular stage spans the frame tracer emits
+/// (`obs::trace`). `cull_ns`/`intersect_ns`/`group_ns` are digital-logic
+/// op counts over `DIGITAL_FREQ_GHZ`; `project_ns` is the DCIM macro busy
+/// time. These are attribution detail *inside*
+/// [`StageLatency::preprocess_ns`] (which models DRAM fetch ∥ compute),
+/// not an independent latency model — their sum can differ from
+/// `preprocess_ns` and the tracer clamps nesting accordingly. All inputs
+/// are simulated/modeled quantities, so the breakdown is bit-identical
+/// across host thread counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PreprocessBreakdown {
+    /// DR-FC grid tests + record fetch issue (compute side of culling).
+    pub cull_ns: f64,
+    /// Projection / covariance / SH compute on the DCIM tier.
+    pub project_ns: f64,
+    /// Splat–tile intersection tests.
+    pub intersect_ns: f64,
+    /// ATG regrouping (scan + union-find) ops.
+    pub group_ns: f64,
+}
+
 /// A Table-I style report for one configuration + scene.
 #[derive(Debug, Clone)]
 pub struct PowerReport {

@@ -66,6 +66,7 @@ pub mod dcim;
 pub mod energy;
 pub mod math;
 pub mod memory;
+pub mod obs;
 pub mod pipeline;
 pub mod render;
 #[cfg(feature = "xla")]

@@ -72,15 +72,12 @@ pub fn median(xs: &[f32]) -> f32 {
     }
 }
 
-/// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy. Thin
+/// delegation to the crate's single percentile implementation in
+/// [`crate::obs::registry`] (kept here so callers of `math::stats` don't
+/// need to know about the observability layer).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    crate::obs::registry::percentile(xs, p)
 }
 
 /// Coefficient of variation of bucket occupancies — the balance metric for

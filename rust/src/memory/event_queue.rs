@@ -47,7 +47,9 @@ use super::dram::{DramConfig, DramStats, MemSink};
 use super::oracle::SyncDramModel;
 use super::residency::{ResidencyConfig, ResidencyReport, ResidencyState};
 use super::shard::ShardMap;
+use crate::obs::{TraceSink, Track};
 use crate::scene::CompressedStore;
+use crate::util::json::Json;
 
 /// Which pipeline stage a request belongs to (per-stage stats + completion
 /// times are what let cull fetch and blend miss-fill overlap in the model).
@@ -80,6 +82,16 @@ impl MemStage {
             MemStage::Blend => 1,
             MemStage::Paging => 2,
             MemStage::Update => 3,
+        }
+    }
+
+    /// Stable lowercase name (trace span names, report keys).
+    pub fn label(self) -> &'static str {
+        match self {
+            MemStage::Preprocess => "preprocess",
+            MemStage::Blend => "blend",
+            MemStage::Paging => "paging",
+            MemStage::Update => "update",
         }
     }
 }
@@ -231,6 +243,11 @@ pub struct MemorySystem {
     /// `None` when the scene is fully DRAM-resident (the default) — in that
     /// state the system is bit-identical to the pre-residency model.
     residency: Option<ResidencyState>,
+    /// Opt-in frame tracer `(sink, pid)`: when attached, every served
+    /// request slice emits a span on its channel's [`Track::Channel`]
+    /// timeline. Request order under the system lock is deterministic, so
+    /// the emitted stream is bit-identical across host thread counts.
+    tracer: Option<(TraceSink, u64)>,
 }
 
 impl MemorySystem {
@@ -250,7 +267,17 @@ impl MemorySystem {
             shard_map,
             ports: Vec::new(),
             residency: None,
+            tracer: None,
         }
+    }
+
+    /// Attach an opt-in frame tracer: every subsequently served request
+    /// slice emits a DRAM transaction span on its channel's track under
+    /// `pid`. Lock ordering is system → tracer (the caller holds the
+    /// system lock while requests are served); never lock the system while
+    /// holding the tracer.
+    pub fn set_tracer(&mut self, sink: TraceSink, pid: u64) {
+        self.tracer = Some((sink, pid));
     }
 
     /// Attach the residency layer: DRAM becomes a page-granular cache over
@@ -506,6 +533,11 @@ impl MemorySystem {
         let mut involved = 0usize;
         let mut single_ns = 0.0f64;
         let mut single_start = issue;
+        // Channel transaction spans for the tracer: collected locally
+        // (the channel array is mutably borrowed here), emitted once the
+        // request's wait attribution is known. No allocation unless a
+        // tracer is attached.
+        let mut spans: Option<Vec<(usize, f64, f64)>> = self.tracer.is_some().then(Vec::new);
         for c in 0..group {
             let ns = svc_ns[c];
             if ns <= 0.0 {
@@ -517,6 +549,9 @@ impl MemorySystem {
             ch.free_at_ns = comp;
             ch.service_ns += ns;
             ch.served += 1;
+            if let Some(spans) = &mut spans {
+                spans.push((base_ch + c, start, ns));
+            }
             // Contention wait: channel busy time beyond this port's own
             // completion horizon (`base`). Queueing behind the port's own
             // earlier in-flight transactions is pipelining, not
@@ -571,6 +606,29 @@ impl MemorySystem {
         s.wait_ns += wait;
         if wait > 0.0 {
             s.stalls += 1;
+        }
+
+        // Emit the collected channel spans (system → tracer lock order;
+        // the caller already holds the system lock).
+        if let Some(spans) = spans {
+            if let Some((sink, pid)) = &self.tracer {
+                let mut tr = sink.lock().expect("tracer lock poisoned");
+                for (ch, start, ns) in spans {
+                    tr.span(
+                        *pid,
+                        Track::Channel(ch),
+                        req.stage.label(),
+                        "dram",
+                        start,
+                        ns,
+                        vec![
+                            ("port", Json::from(port as u64)),
+                            ("bytes", Json::from(req.bytes)),
+                            ("wait_ns", Json::from(wait)),
+                        ],
+                    );
+                }
+            }
         }
     }
 

@@ -201,8 +201,11 @@ pub struct ResidencyReport {
 }
 
 impl ResidencyReport {
-    pub fn to_json(&self) -> Json {
-        Json::obj()
+    /// Registry [`Component`](crate::obs::Component) of the residency
+    /// roll-up: counters for the event counts, gauges for the rates and
+    /// simulated times (keys unchanged from the pre-registry encoding).
+    pub fn component(&self) -> crate::obs::Component {
+        crate::obs::Component::new()
             .set("hits", self.stats.hits)
             .set("misses", self.stats.misses)
             .set("hit_rate", self.stats.hit_rate())
@@ -212,11 +215,15 @@ impl ResidencyReport {
             .set("fetched_compressed_bytes", self.stats.fetched_compressed_bytes)
             .set("stall_ns", self.stats.stall_ns)
             .set("decode_ns", self.stats.decode_ns)
-            .set("capacity_pages", self.capacity_pages as u64)
-            .set("total_pages", self.total_pages as u64)
-            .set("resident_pages", self.resident_pages as u64)
+            .set("capacity_pages", self.capacity_pages)
+            .set("total_pages", self.total_pages)
+            .set("resident_pages", self.resident_pages)
             .set("page_size_bytes", self.page_size_bytes)
             .set("compression_ratio", self.compression_ratio)
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.component().to_json()
     }
 }
 

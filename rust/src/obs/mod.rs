@@ -1,0 +1,13 @@
+//! Deterministic observability layer: the typed metrics registry
+//! ([`registry`]) every report assembles its JSON through, and the
+//! simulated-time frame tracer ([`trace`]) exporting Chrome trace-event
+//! JSON. See `README.md` in this directory for the schema, the
+//! determinism contract, and how to open a trace in Perfetto.
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    percentile, percentile_sorted, Component, LatencyLadder, Node, Registry, SCHEMA_VERSION,
+};
+pub use trace::{sink, TraceEvent, TraceSink, Tracer, Track, DEFAULT_TRACE_CAPACITY};

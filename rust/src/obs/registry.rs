@@ -1,0 +1,344 @@
+//! Typed metrics registry: the single percentile/ladder implementation and
+//! the hierarchical component tree every report in the crate assembles its
+//! JSON through.
+//!
+//! # Why a registry
+//!
+//! Before this module, ~14 report types hand-rolled their `to_json`
+//! assembly and at least four modules carried private percentile code. The
+//! registry replaces both: [`LatencyLadder::of`] is the one place sample
+//! vectors become percentile ladders (nearest-rank, the convention the
+//! pre-registry `Percentiles`/`math::stats::percentile` code used, so
+//! existing `p50`/`p90`/`p99` JSON values are byte-identical), and
+//! [`Component`] is the one place metric trees become [`Json`] objects.
+//!
+//! # Determinism contract
+//!
+//! A [`Registry`] splits its tree into two sections:
+//!
+//! - `deterministic` — metrics derived from *simulated* time and modeled
+//!   counters only. This section must be byte-identical across
+//!   `PALLAS_THREADS=1/4/8` for every scheduling policy; CI diffs it.
+//! - `host` — wall-clock measurements, speedups, fps: anything the host
+//!   machine or thread count can perturb. Excluded from CI diffs.
+//!
+//! Because [`Component`] stores children in a `BTreeMap`, JSON key order is
+//! insertion-order independent — re-assembling an existing report through
+//! the registry cannot reorder its keys.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Version stamp of the registry JSON encoding ([`Registry::to_json`]'s
+/// `schema` key). Bump when the section layout or ladder shape changes.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// p-th percentile (0..=100) of an ascending-sorted slice by nearest rank:
+/// `rank = round(p/100 · (n−1))`. Empty input ⇒ 0.0.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy — the
+/// crate's single percentile implementation (`math::stats::percentile`
+/// delegates here; everything else goes through [`LatencyLadder::of`]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    percentile_sorted(&v, p)
+}
+
+/// The full latency ladder of one sample population:
+/// count/min/mean/p50/p75/p90/p95/p99/p99.9/max, all computed from a
+/// single sort. `p90` is carried alongside the ladder rungs the yb_stats
+/// schema uses so the pre-registry `{p50, p90, p99}` values survive
+/// byte-identically in re-assembled reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyLadder {
+    pub count: u64,
+    pub min: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub p99_9: f64,
+    pub max: f64,
+}
+
+impl LatencyLadder {
+    /// Build the ladder from unsorted samples (one sort; empty ⇒ all-zero).
+    pub fn of(samples: &[f64]) -> LatencyLadder {
+        if samples.is_empty() {
+            return LatencyLadder::default();
+        }
+        let mut v: Vec<f64> = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let count = v.len() as u64;
+        // Summing in ascending order keeps the mean deterministic for any
+        // input permutation of the same multiset.
+        let mean = v.iter().sum::<f64>() / count as f64;
+        LatencyLadder {
+            count,
+            min: v[0],
+            mean,
+            p50: percentile_sorted(&v, 50.0),
+            p75: percentile_sorted(&v, 75.0),
+            p90: percentile_sorted(&v, 90.0),
+            p95: percentile_sorted(&v, 95.0),
+            p99: percentile_sorted(&v, 99.0),
+            p99_9: percentile_sorted(&v, 99.9),
+            max: v[v.len() - 1],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("count", self.count)
+            .set("min", self.min)
+            .set("mean", self.mean)
+            .set("p50", self.p50)
+            .set("p75", self.p75)
+            .set("p90", self.p90)
+            .set("p95", self.p95)
+            .set("p99", self.p99)
+            .set("p99_9", self.p99_9)
+            .set("max", self.max)
+    }
+}
+
+/// One node of the metric tree: a typed leaf metric, a nested component, a
+/// list (per-viewer / per-session report rows), or a raw [`Json`] escape
+/// hatch for sub-blocks that already have a stable encoding (e.g. the
+/// per-stage `DramStats` objects of `TrafficLog`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Node {
+    /// Monotone integer count (reads, frames, evictions, …).
+    Counter(u64),
+    /// Point-in-time float (rates, ratios, simulated ns, …).
+    Gauge(f64),
+    Flag(bool),
+    Text(String),
+    Ladder(LatencyLadder),
+    Component(Component),
+    List(Vec<Node>),
+    Raw(Json),
+}
+
+impl Node {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Node::Counter(v) => Json::from(*v),
+            Node::Gauge(v) => Json::from(*v),
+            Node::Flag(v) => Json::from(*v),
+            Node::Text(v) => Json::from(v.as_str()),
+            Node::Ladder(l) => l.to_json(),
+            Node::Component(c) => c.to_json(),
+            Node::List(xs) => Json::Arr(xs.iter().map(Node::to_json).collect()),
+            Node::Raw(j) => j.clone(),
+        }
+    }
+}
+
+impl From<u64> for Node {
+    fn from(v: u64) -> Node {
+        Node::Counter(v)
+    }
+}
+impl From<usize> for Node {
+    fn from(v: usize) -> Node {
+        Node::Counter(v as u64)
+    }
+}
+impl From<f64> for Node {
+    fn from(v: f64) -> Node {
+        Node::Gauge(v)
+    }
+}
+impl From<bool> for Node {
+    fn from(v: bool) -> Node {
+        Node::Flag(v)
+    }
+}
+impl From<&str> for Node {
+    fn from(v: &str) -> Node {
+        Node::Text(v.to_string())
+    }
+}
+impl From<String> for Node {
+    fn from(v: String) -> Node {
+        Node::Text(v)
+    }
+}
+impl From<LatencyLadder> for Node {
+    fn from(v: LatencyLadder) -> Node {
+        Node::Ladder(v)
+    }
+}
+impl From<Component> for Node {
+    fn from(v: Component) -> Node {
+        Node::Component(v)
+    }
+}
+impl From<Json> for Node {
+    fn from(v: Json) -> Node {
+        Node::Raw(v)
+    }
+}
+
+/// A named subtree of metrics (native-link-style component hierarchy).
+/// Children live in a `BTreeMap`, so the JSON encoding is independent of
+/// insertion order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Component {
+    children: BTreeMap<String, Node>,
+}
+
+impl Component {
+    pub fn new() -> Component {
+        Component::default()
+    }
+
+    /// Insert any node (builder-style, like `Json::set`).
+    pub fn set(mut self, name: &str, node: impl Into<Node>) -> Component {
+        self.children.insert(name.to_string(), node.into());
+        self
+    }
+
+    /// In-place insert, for loops building lists of siblings.
+    pub fn insert(&mut self, name: &str, node: impl Into<Node>) {
+        self.children.insert(name.to_string(), node.into());
+    }
+
+    /// Insert a list of components (per-viewer rows and the like).
+    pub fn list(self, name: &str, items: impl IntoIterator<Item = Component>) -> Component {
+        self.set(name, Node::List(items.into_iter().map(Node::Component).collect()))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Node> {
+        self.children.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        for (k, v) in &self.children {
+            m.insert(k.clone(), v.to_json());
+        }
+        Json::Obj(m)
+    }
+}
+
+/// The two-section metrics registry: everything under `deterministic` obeys
+/// the cross-thread-count byte-identity contract; everything under `host`
+/// is wall-clock territory and excluded from CI diffs.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    pub deterministic: Component,
+    pub host: Component,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Schema-versioned encoding: `{"schema": N, "deterministic": {...},
+    /// "host": {...}}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema", SCHEMA_VERSION)
+            .set("deterministic", self.deterministic.to_json())
+            .set("host", self.host.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_empty_single_and_ties() {
+        let empty = LatencyLadder::of(&[]);
+        assert_eq!(empty, LatencyLadder::default());
+        assert_eq!(empty.count, 0);
+
+        let one = LatencyLadder::of(&[7.0]);
+        assert_eq!(one.count, 1);
+        assert_eq!(one.min, 7.0);
+        assert_eq!(one.mean, 7.0);
+        assert_eq!(one.p50, 7.0);
+        assert_eq!(one.p99_9, 7.0);
+        assert_eq!(one.max, 7.0);
+
+        let ties = LatencyLadder::of(&[3.0, 3.0, 3.0, 3.0]);
+        assert_eq!(ties.p50, 3.0);
+        assert_eq!(ties.p75, 3.0);
+        assert_eq!(ties.max, 3.0);
+    }
+
+    #[test]
+    fn ladder_matches_percentile_helper() {
+        let xs: Vec<f64> = (0..=100).rev().map(|i| i as f64).collect();
+        let l = LatencyLadder::of(&xs);
+        assert_eq!(l.p50, percentile(&xs, 50.0));
+        assert_eq!(l.p75, percentile(&xs, 75.0));
+        assert_eq!(l.p90, percentile(&xs, 90.0));
+        assert_eq!(l.p95, percentile(&xs, 95.0));
+        assert_eq!(l.p99, percentile(&xs, 99.0));
+        assert_eq!(l.p99_9, percentile(&xs, 99.9));
+        assert_eq!(l.min, 0.0);
+        assert_eq!(l.max, 100.0);
+        assert_eq!(l.mean, 50.0);
+    }
+
+    #[test]
+    fn component_json_is_insertion_order_independent() {
+        let a = Component::new().set("b", 1u64).set("a", 2.0);
+        let b = Component::new().set("a", 2.0).set("b", 1u64);
+        assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+    }
+
+    #[test]
+    fn registry_sections_and_schema() {
+        let mut r = Registry::new();
+        r.deterministic = r.deterministic.set("frames", 3u64);
+        r.host = r.host.set("wall_s", 0.5);
+        let js = r.to_json();
+        assert_eq!(js.get("schema").unwrap().as_usize(), Some(1));
+        assert!(js.get("deterministic").unwrap().get("frames").is_some());
+        assert!(js.get("host").unwrap().get("wall_s").is_some());
+    }
+
+    #[test]
+    fn node_json_shapes() {
+        let c = Component::new()
+            .set("n", 3u64)
+            .set("g", 1.5)
+            .set("f", true)
+            .set("t", "x")
+            .set("l", LatencyLadder::of(&[1.0, 2.0]))
+            .set("raw", Json::Arr(vec![Json::Num(1.0)]))
+            .list("rows", vec![Component::new().set("v", 0u64)]);
+        let js = c.to_json();
+        assert_eq!(js.get("n").unwrap().as_usize(), Some(3));
+        assert_eq!(js.get("g").unwrap().as_f64(), Some(1.5));
+        assert_eq!(js.get("f").unwrap().as_bool(), Some(true));
+        assert_eq!(js.get("t").unwrap().as_str(), Some("x"));
+        assert!(js.get("l").unwrap().get("p99_9").is_some());
+        assert!(matches!(js.get("raw"), Some(Json::Arr(_))));
+        assert!(matches!(js.get("rows"), Some(Json::Arr(v)) if v.len() == 1));
+    }
+}

@@ -1,0 +1,343 @@
+//! Simulated-time frame tracer: an opt-in ring-buffered event sink that
+//! records stage spans, per-channel DRAM transaction spans, and session
+//! lifecycle instants — all stamped in **simulated nanoseconds** — and
+//! exports them as Chrome trace-event JSON loadable in Perfetto /
+//! `chrome://tracing`.
+//!
+//! # Determinism contract
+//!
+//! Every timestamp recorded here comes from the simulated timeline (the
+//! event-queue memory system's clocks and the modeled stage latencies),
+//! never from host wall-clock, and every emission site runs in the
+//! deterministic order the round engine already guarantees (lockstep
+//! serial, or policy-ordered replay in the two-phase path). The exported
+//! byte stream is therefore bit-identical across `PALLAS_THREADS=1/4/8`
+//! for every scheduling policy — `tests/observability.rs` and the CI
+//! `obs-smoke` job diff it.
+//!
+//! # Track model
+//!
+//! One Chrome *process* (`pid`) per traced run section (a contended batch,
+//! one session-policy run, a standalone pipeline); within a process, one
+//! *thread* track per viewer/session ([`Track::Viewer`]), one per DRAM
+//! channel ([`Track::Channel`]), and one for scheduler lifecycle events
+//! ([`Track::Scheduler`]). Span nesting on a track is monotone: frames
+//! enclose stages, stages enclose their sub-spans, and the per-track
+//! cursor lays consecutive frames out without overlap.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Default ring capacity (events). Old events are dropped (and counted)
+/// once the buffer is full — deterministically, since recording order is.
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+/// Shared handle to a [`Tracer`] — the form it is threaded through
+/// `FrameCtx`, the round engine, and the memory system in.
+pub type TraceSink = Arc<Mutex<Tracer>>;
+
+/// New shared tracer at the default ring capacity.
+pub fn sink() -> TraceSink {
+    Arc::new(Mutex::new(Tracer::new()))
+}
+
+/// A timeline within one traced process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Track {
+    /// Scheduler / lifecycle events (admission, rounds).
+    Scheduler,
+    /// One viewer or session stream.
+    Viewer(usize),
+    /// One DRAM channel of the shared memory system.
+    Channel(usize),
+}
+
+impl Track {
+    /// Stable Chrome `tid` encoding: scheduler = 1, viewers from 10,
+    /// channels from 1000.
+    pub fn tid(self) -> u64 {
+        match self {
+            Track::Scheduler => 1,
+            Track::Viewer(v) => 10 + v as u64,
+            Track::Channel(c) => 1000 + c as u64,
+        }
+    }
+
+    pub fn label(self) -> String {
+        match self {
+            Track::Scheduler => "scheduler".to_string(),
+            Track::Viewer(v) => format!("viewer-{v}"),
+            Track::Channel(c) => format!("dram-ch{c}"),
+        }
+    }
+}
+
+/// One recorded event: a complete span (`dur_ns = Some`) or an instant.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Chrome category (filterable in the UI): `"stage"`, `"dram"`,
+    /// `"session"`, …
+    pub cat: &'static str,
+    pub pid: u64,
+    pub track: Track,
+    /// Simulated nanoseconds.
+    pub ts_ns: f64,
+    /// Span duration in simulated ns; `None` ⇒ instant event.
+    pub dur_ns: Option<f64>,
+    pub args: Vec<(&'static str, Json)>,
+}
+
+/// The ring-buffered simulated-time event sink.
+#[derive(Debug)]
+pub struct Tracer {
+    capacity: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+    /// Process labels in creation order; `pid = index + 1`.
+    processes: Vec<String>,
+    /// Registered `(pid, tid) → label` track names (export metadata).
+    tracks: BTreeMap<(u64, u64), String>,
+    /// Per-`(pid, tid)` simulated-time cursor: where the next frame span
+    /// on that track may start (sequential, non-overlapping layout).
+    cursors: BTreeMap<(u64, u64), f64>,
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Tracer {
+        Tracer {
+            capacity: capacity.max(1),
+            events: VecDeque::new(),
+            dropped: 0,
+            processes: Vec::new(),
+            tracks: BTreeMap::new(),
+            cursors: BTreeMap::new(),
+        }
+    }
+
+    /// Open a new traced run section; returns its `pid`. Section creation
+    /// follows program order, which is thread-count independent.
+    pub fn begin_process(&mut self, label: &str) -> u64 {
+        self.processes.push(label.to_string());
+        self.processes.len() as u64
+    }
+
+    /// Register `track` under `pid` (idempotent) so the export carries its
+    /// `thread_name` metadata.
+    pub fn ensure_track(&mut self, pid: u64, track: Track) {
+        self.tracks.entry((pid, track.tid())).or_insert_with(|| track.label());
+    }
+
+    /// Record a complete span (`ph: "X"`).
+    pub fn span(
+        &mut self,
+        pid: u64,
+        track: Track,
+        name: &str,
+        cat: &'static str,
+        ts_ns: f64,
+        dur_ns: f64,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.ensure_track(pid, track);
+        self.record(TraceEvent {
+            name: name.to_string(),
+            cat,
+            pid,
+            track,
+            ts_ns,
+            dur_ns: Some(dur_ns),
+            args,
+        });
+    }
+
+    /// Record an instant event (`ph: "i"`).
+    pub fn instant(
+        &mut self,
+        pid: u64,
+        track: Track,
+        name: &str,
+        cat: &'static str,
+        ts_ns: f64,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        self.ensure_track(pid, track);
+        self.record(TraceEvent {
+            name: name.to_string(),
+            cat,
+            pid,
+            track,
+            ts_ns,
+            dur_ns: None,
+            args,
+        });
+    }
+
+    fn record(&mut self, ev: TraceEvent) {
+        if self.events.len() == self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    /// The sequential-layout cursor of a track (0 before any span).
+    pub fn cursor(&self, pid: u64, track: Track) -> f64 {
+        self.cursors.get(&(pid, track.tid())).copied().unwrap_or(0.0)
+    }
+
+    pub fn set_cursor(&mut self, pid: u64, track: Track, ts_ns: f64) {
+        self.cursors.insert((pid, track.tid()), ts_ns);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted by the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Export as a Chrome trace-event document: metadata (process/thread
+    /// names) first, then the events in recording order. `ts`/`dur` are in
+    /// microseconds per the trace-event spec (simulated ns / 1000).
+    pub fn chrome_json(&self) -> Json {
+        let mut evs: Vec<Json> = Vec::with_capacity(
+            self.events.len() + self.processes.len() + self.tracks.len(),
+        );
+        for (i, label) in self.processes.iter().enumerate() {
+            evs.push(
+                Json::obj()
+                    .set("args", Json::obj().set("name", label.as_str()))
+                    .set("cat", "__metadata")
+                    .set("name", "process_name")
+                    .set("ph", "M")
+                    .set("pid", (i + 1) as u64)
+                    .set("tid", 0u64)
+                    .set("ts", 0.0),
+            );
+        }
+        for ((pid, tid), label) in &self.tracks {
+            evs.push(
+                Json::obj()
+                    .set("args", Json::obj().set("name", label.as_str()))
+                    .set("cat", "__metadata")
+                    .set("name", "thread_name")
+                    .set("ph", "M")
+                    .set("pid", *pid)
+                    .set("tid", *tid)
+                    .set("ts", 0.0),
+            );
+        }
+        for ev in &self.events {
+            let mut args = Json::obj();
+            for (k, v) in &ev.args {
+                args = args.set(k, v.clone());
+            }
+            let mut js = Json::obj()
+                .set("args", args)
+                .set("cat", ev.cat)
+                .set("name", ev.name.as_str())
+                .set("pid", ev.pid)
+                .set("tid", ev.track.tid())
+                .set("ts", ev.ts_ns / 1000.0);
+            js = match ev.dur_ns {
+                Some(d) => js.set("ph", "X").set("dur", d / 1000.0),
+                // Thread-scoped instant: renders as a tick on its track.
+                None => js.set("ph", "i").set("s", "t"),
+            };
+            evs.push(js);
+        }
+        Json::obj()
+            .set("traceEvents", Json::Arr(evs))
+            .set("displayTimeUnit", "ms")
+            .set(
+                "otherData",
+                Json::obj()
+                    .set("clock", "simulated-ns")
+                    .set("dropped_events", self.dropped),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn track_tids_are_disjoint() {
+        assert_ne!(Track::Scheduler.tid(), Track::Viewer(0).tid());
+        assert_ne!(Track::Viewer(989).tid(), Track::Channel(0).tid());
+        assert_eq!(Track::Viewer(3).label(), "viewer-3");
+        assert_eq!(Track::Channel(2).label(), "dram-ch2");
+    }
+
+    #[test]
+    fn ring_drops_oldest_deterministically() {
+        let mut t = Tracer::with_capacity(2);
+        let pid = t.begin_process("p");
+        for i in 0..5 {
+            t.span(pid, Track::Viewer(0), &format!("e{i}"), "stage", i as f64, 1.0, vec![]);
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 3);
+        let js = t.chrome_json().pretty();
+        assert!(js.contains("\"e3\""));
+        assert!(js.contains("\"e4\""));
+        assert!(!js.contains("\"e0\""));
+    }
+
+    #[test]
+    fn chrome_export_parses_and_carries_metadata() {
+        let mut t = Tracer::new();
+        let pid = t.begin_process("run-a");
+        t.span(pid, Track::Viewer(1), "frame", "stage", 2000.0, 1000.0, vec![
+            ("frame", Json::from(0u64)),
+        ]);
+        t.instant(pid, Track::Scheduler, "join", "session", 0.0, vec![]);
+        let js = t.chrome_json();
+        let parsed = crate::util::json::parse(&js.pretty()).expect("valid JSON");
+        let evs = match parsed.get("traceEvents") {
+            Some(Json::Arr(v)) => v.clone(),
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        // 1 process_name + 2 thread_name + 2 events.
+        assert_eq!(evs.len(), 5);
+        assert!(evs.iter().any(|e| e.get("name").and_then(Json::as_str)
+            == Some("process_name")));
+        let frame = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("frame"))
+            .unwrap();
+        assert_eq!(frame.get("ts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(frame.get("dur").unwrap().as_f64(), Some(1.0));
+        assert_eq!(frame.get("ph").unwrap().as_str(), Some("X"));
+    }
+
+    #[test]
+    fn cursors_default_zero_and_persist() {
+        let mut t = Tracer::new();
+        let pid = t.begin_process("p");
+        assert_eq!(t.cursor(pid, Track::Viewer(0)), 0.0);
+        t.set_cursor(pid, Track::Viewer(0), 42.0);
+        assert_eq!(t.cursor(pid, Track::Viewer(0)), 42.0);
+        assert_eq!(t.cursor(pid, Track::Viewer(1)), 0.0);
+    }
+}

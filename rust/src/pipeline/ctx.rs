@@ -34,7 +34,7 @@
 
 use crate::culling::{CullOutput, CullReuse, CullReuseStats, GridPartition};
 use crate::dcim::{DcimConfig, DcimMacro};
-use crate::energy::{FrameEnergy, StageLatency};
+use crate::energy::{FrameEnergy, PreprocessBreakdown, StageLatency};
 use crate::memory::{MemPort, ResidencyPrefetcher, SramStats, TrafficLog};
 use crate::pipeline::PipelineConfig;
 use crate::render::Image;
@@ -94,6 +94,10 @@ pub struct FrameCtx {
     pub energy: FrameEnergy,
     pub traffic: TrafficLog,
     pub latency: StageLatency,
+    /// Modeled sub-stage attribution inside `latency.preprocess_ns` (the
+    /// six-granular cull/project/intersect/group spans of the frame
+    /// tracer). Filled by the group stage alongside `preprocess_ns`.
+    pub preprocess_breakdown: PreprocessBreakdown,
     pub sort: SortStats,
     /// Per-frame DCIM event counter (preprocess MACs charged by the project
     /// stage, blend ops by the blend stage). Stats reset per frame; the
@@ -197,6 +201,7 @@ impl FrameCtx {
             energy: FrameEnergy::default(),
             traffic: TrafficLog::new(),
             latency: StageLatency::default(),
+            preprocess_breakdown: PreprocessBreakdown::default(),
             sort: SortStats::default(),
             dcim: DcimMacro::new(dcim),
             cull: CullOutput::default(),
@@ -246,6 +251,7 @@ impl FrameCtx {
         self.energy = FrameEnergy::default();
         self.traffic.clear();
         self.latency = StageLatency::default();
+        self.preprocess_breakdown = PreprocessBreakdown::default();
         self.sort = SortStats::default();
         self.update_stats = UpdateFrameStats::default();
         self.reuse_stats = CullReuseStats::default();

@@ -9,12 +9,15 @@
 //! [`crate::coordinator::RenderServer`]).
 
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::camera::Camera;
 use crate::culling::{CullReuse, CullReuseStats, GridConfig, GridPartition};
 use crate::dcim::DcimConfig;
-use crate::energy::{FrameEnergy, StageLatency};
+use crate::energy::{FrameEnergy, PreprocessBreakdown, StageLatency};
+use crate::obs::{TraceSink, Track, Tracer};
+use crate::util::json::Json;
+use crate::util::timer::PhaseProfile;
 use crate::memory::sram::{SramBuffer, SramConfig};
 use crate::memory::{
     MemMode, MemPort, MemSimConfig, MemStage, MemorySystem, PortId, ResidencyConfig,
@@ -175,37 +178,56 @@ impl PipelineConfig {
 }
 
 /// Host wall-clock accounting of the intra-frame executor — the BENCH
-/// layer's per-stage timing source. Simulated-time latencies live in
-/// [`StageLatency`]; this is what actually elapsed on the host, so it is
-/// *not* part of any determinism contract.
+/// layer's per-stage timing source, a thin frame-count wrapper over
+/// [`PhaseProfile`] (phases `"sort"`, `"blend"`, `"frame"`). Simulated-time
+/// latencies live in [`StageLatency`]; this is what actually elapsed on the
+/// host, so it is *not* part of any determinism contract and reports must
+/// route it into the registry's nondeterministic `host` section.
 #[derive(Debug, Clone, Default)]
 pub struct HostStageWall {
-    /// Frames measured.
-    pub frames: u64,
-    /// Cumulative host seconds inside the sort stage / blend stage / the
-    /// whole frame.
-    pub sort_s: f64,
-    pub blend_s: f64,
-    pub frame_s: f64,
-    /// Per-frame samples (capped at [`HOST_WALL_SAMPLES`]) for percentile
-    /// reporting.
-    pub sort_samples: Vec<f64>,
-    pub blend_samples: Vec<f64>,
+    profile: PhaseProfile,
 }
-
-/// Sample cap of [`HostStageWall`] (keeps long sequences bounded).
-pub const HOST_WALL_SAMPLES: usize = 4096;
 
 impl HostStageWall {
     fn push(&mut self, sort_s: f64, blend_s: f64, frame_s: f64) {
-        self.frames += 1;
-        self.sort_s += sort_s;
-        self.blend_s += blend_s;
-        self.frame_s += frame_s;
-        if self.sort_samples.len() < HOST_WALL_SAMPLES {
-            self.sort_samples.push(sort_s);
-            self.blend_samples.push(blend_s);
-        }
+        self.profile.add("sort", Duration::from_secs_f64(sort_s));
+        self.profile.add("blend", Duration::from_secs_f64(blend_s));
+        self.profile.add("frame", Duration::from_secs_f64(frame_s));
+    }
+
+    /// Frames measured.
+    pub fn frames(&self) -> u64 {
+        self.profile.count("frame")
+    }
+
+    /// Cumulative host seconds inside the sort stage.
+    pub fn sort_s(&self) -> f64 {
+        self.profile.total("sort").as_secs_f64()
+    }
+
+    /// Cumulative host seconds inside the blend stage.
+    pub fn blend_s(&self) -> f64 {
+        self.profile.total("blend").as_secs_f64()
+    }
+
+    /// Cumulative host seconds across whole frames.
+    pub fn frame_s(&self) -> f64 {
+        self.profile.total("frame").as_secs_f64()
+    }
+
+    /// Full percentile ladder of per-frame sort-stage seconds.
+    pub fn sort_ladder(&self) -> crate::obs::LatencyLadder {
+        self.profile.ladder("sort")
+    }
+
+    /// Full percentile ladder of per-frame blend-stage seconds.
+    pub fn blend_ladder(&self) -> crate::obs::LatencyLadder {
+        self.profile.ladder("blend")
+    }
+
+    /// The underlying phase profile (phases `"sort"`, `"blend"`, `"frame"`).
+    pub fn profile(&self) -> &PhaseProfile {
+        &self.profile
     }
 }
 
@@ -216,6 +238,9 @@ pub struct FrameResult {
     pub traffic: TrafficLog,
     pub energy: FrameEnergy,
     pub latency: StageLatency,
+    /// Modeled sub-stage attribution inside `latency.preprocess_ns` (the
+    /// tracer's cull/project/intersect/group spans).
+    pub preprocess_breakdown: PreprocessBreakdown,
     pub sort: SortStats,
     /// ATG work + flags (0 work when ATG disabled).
     pub atg_ops: u64,
@@ -230,6 +255,105 @@ pub struct FrameResult {
     pub update: UpdateFrameStats,
     /// Dirty-cell cull-reuse statistics (zero when reuse is off).
     pub cull_reuse: CullReuseStats,
+}
+
+impl FrameResult {
+    /// Emit this frame's simulated-time spans into `tracer` on `track`
+    /// starting at `t0_ns`: a `frame` span covering the sequential stage
+    /// walk, `preprocess`/`sort`/`blend` children laid end to end, and the
+    /// cull/project/intersect/group attribution spans nested inside
+    /// `preprocess`. The breakdown attributes a DRAM ∥ compute superstage,
+    /// so its sequential layout is clamped to the preprocess envelope; the
+    /// unclamped modeled values ride every span's args. All inputs are
+    /// simulated quantities and the caller invokes this in deterministic
+    /// order, so the recorded stream is bit-identical across host thread
+    /// counts. Returns the frame span's end time (ns) — the track cursor
+    /// for the next frame.
+    pub fn trace_spans(
+        &self,
+        tracer: &mut Tracer,
+        pid: u64,
+        track: Track,
+        frame_idx: usize,
+        t0_ns: f64,
+    ) -> f64 {
+        let l = &self.latency;
+        let frame_end = t0_ns + l.sequential_ns();
+        tracer.span(
+            pid,
+            track,
+            &format!("frame {frame_idx}"),
+            "frame",
+            t0_ns,
+            l.sequential_ns(),
+            vec![
+                ("n_visible", Json::from(self.n_visible as u64)),
+                ("blend_pairs", Json::from(self.blend_pairs)),
+                ("intersections", Json::from(self.intersections)),
+                ("dram_bytes", Json::from(self.traffic.total_dram_bytes())),
+            ],
+        );
+        let pre_t0 = t0_ns;
+        let pre_end = pre_t0 + l.preprocess_ns;
+        tracer.span(
+            pid,
+            track,
+            "preprocess",
+            "stage",
+            pre_t0,
+            l.preprocess_ns,
+            vec![
+                ("dram_busy_ns", Json::from(self.traffic.preprocess_dram.busy_ns)),
+                ("paging_busy_ns", Json::from(self.traffic.paging_dram.busy_ns)),
+            ],
+        );
+        // The four attribution sub-spans, laid sequentially and clamped to
+        // the preprocess envelope (they model the compute side of a
+        // DRAM ∥ compute superstage, so their sum can exceed it).
+        let b = &self.preprocess_breakdown;
+        let mut sub_t = pre_t0;
+        for (name, modeled_ns) in [
+            ("cull", b.cull_ns),
+            ("project", b.project_ns),
+            ("intersect", b.intersect_ns),
+            ("group", b.group_ns),
+        ] {
+            let dur = modeled_ns.min((pre_end - sub_t).max(0.0));
+            tracer.span(
+                pid,
+                track,
+                name,
+                "stage",
+                sub_t,
+                dur,
+                vec![("modeled_ns", Json::from(modeled_ns))],
+            );
+            sub_t += dur;
+        }
+        tracer.span(
+            pid,
+            track,
+            "sort",
+            "stage",
+            pre_end,
+            l.sort_ns,
+            vec![("cycles", Json::from(self.sort.cycles))],
+        );
+        tracer.span(
+            pid,
+            track,
+            "blend",
+            "stage",
+            pre_end + l.sort_ns,
+            l.blend_ns,
+            vec![
+                ("dram_busy_ns", Json::from(self.traffic.blend_dram.busy_ns)),
+                ("sram_lookups", Json::from(self.traffic.blend_sram.lookups)),
+            ],
+        );
+        tracer.set_cursor(pid, track, frame_end);
+        frame_end
+    }
 }
 
 /// The offline, immutable scene preparation: grid partition, DRAM layout,
@@ -316,6 +440,11 @@ pub struct FramePipeline<'a> {
     pool: WorkerPool,
     /// Host wall-clock per-stage accounting (BENCH layer).
     host: HostStageWall,
+    /// Opt-in frame tracer `(sink, pid)` for standalone pipelines
+    /// ([`FramePipeline::set_tracer`]). Round-managed pipelines leave this
+    /// `None` — the round engine emits their spans post-replay in policy
+    /// order instead.
+    tracer: Option<(TraceSink, u64)>,
 }
 
 /// Which memory backend [`FramePipeline::build`] wires the context's ports
@@ -489,6 +618,7 @@ impl<'a> FramePipeline<'a> {
         FramePipeline {
             pool: WorkerPool::new(threads),
             host: HostStageWall::default(),
+            tracer: None,
             cull_stage: CullStage,
             project_stage: ProjectStage,
             intersect_stage: IntersectStage,
@@ -626,13 +756,15 @@ impl<'a> FramePipeline<'a> {
         self.blend_stage.run(&bind, render_image, &mut self.ctx, &self.pool);
         let blend_s = blend_t0.elapsed().as_secs_f64();
         self.host.push(sort_s, blend_s, frame_t0.elapsed().as_secs_f64());
+        let fidx = self.frame_idx;
         self.frame_idx += 1;
 
-        FrameResult {
+        let result = FrameResult {
             image: self.ctx.image.take(),
             traffic: self.ctx.traffic.clone(),
             energy: self.ctx.energy,
             latency: self.ctx.latency,
+            preprocess_breakdown: self.ctx.preprocess_breakdown,
             sort: self.ctx.sort,
             atg_ops: self.ctx.atg_ops,
             atg_flags: self.ctx.atg_flags,
@@ -641,7 +773,33 @@ impl<'a> FramePipeline<'a> {
             intersections: self.ctx.intersections,
             update: self.ctx.update_stats,
             cull_reuse: self.ctx.reuse_stats,
+        };
+        // Standalone tracing: emit this frame's simulated spans on the
+        // pipeline's single viewer track. Round-managed pipelines have no
+        // tracer here — their owner emits post-replay in policy order.
+        if let Some((sink, pid)) = &self.tracer {
+            let mut tr = sink.lock().expect("tracer lock poisoned");
+            let t0 = tr.cursor(*pid, Track::Viewer(0));
+            result.trace_spans(&mut tr, *pid, Track::Viewer(0), fidx, t0);
         }
+        result
+    }
+
+    /// Attach an opt-in frame tracer: opens a traced process section named
+    /// `label` on `sink`, records every subsequent frame's simulated-time
+    /// stage spans on [`Track::Viewer`]\(0\), and — when this pipeline owns
+    /// a private event-queue memory system — attaches the sink to it so
+    /// per-channel DRAM transaction spans land in the same section.
+    pub fn set_tracer(&mut self, sink: &TraceSink, label: &str) {
+        let pid = sink.lock().expect("tracer lock poisoned").begin_process(label);
+        if self.owns_mem {
+            if let Some(sys) = &self.mem_sys {
+                sys.lock()
+                    .expect("memory system lock poisoned")
+                    .set_tracer(sink.clone(), pid);
+            }
+        }
+        self.tracer = Some((sink.clone(), pid));
     }
 
     /// The live early-termination factor (initially
@@ -845,6 +1003,7 @@ impl<'a> FramePipeline<'a> {
         FramePipeline {
             pool: WorkerPool::new(threads),
             host,
+            tracer: None,
             cull_stage: CullStage,
             project_stage: ProjectStage,
             intersect_stage: IntersectStage,

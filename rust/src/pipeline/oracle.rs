@@ -333,6 +333,7 @@ impl<'a> MonolithPipeline<'a> {
             n_visible: splats.len(),
             blend_pairs,
             intersections,
+            preprocess_breakdown: Default::default(),
             update: Default::default(),
             cull_reuse: Default::default(),
         }

@@ -38,7 +38,7 @@ use crate::culling::conventional::ConventionalCulling;
 use crate::culling::DrFc;
 use crate::dcim::mapping::BlendOpCounts;
 use crate::dcim::nmc::NmcAccumulator;
-use crate::energy::ops;
+use crate::energy::{ops, PreprocessBreakdown};
 use crate::memory::sram::SramBuffer;
 use crate::memory::SramStats;
 use crate::render::{HwRenderer, RenderScratch};
@@ -430,6 +430,15 @@ impl GroupStage {
         ctx.latency.preprocess_ns = (ctx.traffic.preprocess_dram.busy_ns
             + ctx.traffic.paging_dram.busy_ns)
             .max(proj_ns + test_ns);
+        // Sub-stage attribution of the same modeled quantities, for the
+        // tracer's six-granular stage spans (`obs::trace`). `test_ns`
+        // splits back into its cull and intersect terms.
+        ctx.preprocess_breakdown = PreprocessBreakdown {
+            cull_ns: (ctx.cull.fetched as f64 + bind.grid.n_cells() as f64) / DIGITAL_FREQ_GHZ,
+            project_ns: proj_ns,
+            intersect_ns: ctx.intersections as f64 / 4.0 / DIGITAL_FREQ_GHZ,
+            group_ns: ctx.atg_ops as f64 / DIGITAL_FREQ_GHZ,
+        };
     }
 }
 

@@ -4,6 +4,8 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+use crate::obs::registry::LatencyLadder;
+
 /// A simple start/stop timer.
 #[derive(Debug)]
 pub struct Timer {
@@ -24,12 +26,50 @@ impl Timer {
     }
 }
 
+/// Per-frame sample cap of [`PhaseProfile`] (keeps long sequences bounded;
+/// totals and counts keep accumulating past it).
+pub const PHASE_SAMPLES: usize = 4096;
+
+/// Accumulated statistics of one named phase: total/count plus the capped
+/// per-call sample vector percentiles are computed from.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseStats {
+    pub total: Duration,
+    pub count: u64,
+    samples: Vec<f64>,
+}
+
+impl PhaseStats {
+    fn add(&mut self, d: Duration) {
+        self.total += d;
+        self.count += 1;
+        if self.samples.len() < PHASE_SAMPLES {
+            self.samples.push(d.as_secs_f64());
+        }
+    }
+
+    /// Per-call samples in seconds (capped at [`PHASE_SAMPLES`]).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Full percentile ladder over the recorded samples (seconds) — the
+    /// same shared helper every simulated-latency report uses.
+    pub fn ladder(&self) -> LatencyLadder {
+        LatencyLadder::of(&self.samples)
+    }
+}
+
 /// Accumulates named phase durations across frames — the instrumentation
-/// behind the Fig. 2(a) profiling reproduction.
-#[derive(Debug, Default)]
+/// behind the Fig. 2(a) profiling reproduction and the `stage_wall_*`
+/// BENCH blocks. Phase names are interned `&'static str` keys (no
+/// per-`add` allocation on the hot path), and each phase records a capped
+/// sample vector so reports get p50/p99 from [`LatencyLadder`] instead of
+/// bare totals. Host wall-clock only — never part of a determinism
+/// contract.
+#[derive(Debug, Clone, Default)]
 pub struct PhaseProfile {
-    totals: BTreeMap<String, Duration>,
-    counts: BTreeMap<String, u64>,
+    phases: BTreeMap<&'static str, PhaseStats>,
 }
 
 impl PhaseProfile {
@@ -38,33 +78,47 @@ impl PhaseProfile {
     }
 
     /// Time a closure under a phase name.
-    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
         let t = Instant::now();
         let out = f();
         self.add(phase, t.elapsed());
         out
     }
 
-    pub fn add(&mut self, phase: &str, d: Duration) {
-        *self.totals.entry(phase.to_string()).or_default() += d;
-        *self.counts.entry(phase.to_string()).or_default() += 1;
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        self.phases.entry(phase).or_default().add(d);
+    }
+
+    /// Statistics of one phase (`None` if it never ran).
+    pub fn stats(&self, phase: &str) -> Option<&PhaseStats> {
+        self.phases.get(phase)
     }
 
     pub fn total(&self, phase: &str) -> Duration {
-        self.totals.get(phase).copied().unwrap_or_default()
+        self.phases.get(phase).map(|s| s.total).unwrap_or_default()
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.phases.get(phase).map(|s| s.count).unwrap_or_default()
+    }
+
+    /// Percentile ladder of a phase's per-call seconds (all-zero if the
+    /// phase never ran).
+    pub fn ladder(&self, phase: &str) -> LatencyLadder {
+        self.phases.get(phase).map(PhaseStats::ladder).unwrap_or_default()
     }
 
     pub fn grand_total(&self) -> Duration {
-        self.totals.values().sum()
+        self.phases.values().map(|s| s.total).sum()
     }
 
     /// (phase, total seconds, share of grand total) sorted by share desc.
-    pub fn breakdown(&self) -> Vec<(String, f64, f64)> {
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
         let grand = self.grand_total().as_secs_f64().max(1e-12);
-        let mut rows: Vec<(String, f64, f64)> = self
-            .totals
+        let mut rows: Vec<(&'static str, f64, f64)> = self
+            .phases
             .iter()
-            .map(|(k, v)| (k.clone(), v.as_secs_f64(), v.as_secs_f64() / grand))
+            .map(|(k, v)| (*k, v.total.as_secs_f64(), v.total.as_secs_f64() / grand))
             .collect();
         rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
         rows
@@ -89,10 +143,27 @@ mod tests {
         p.add("sort", Duration::from_millis(30));
         p.add("blend", Duration::from_millis(40));
         assert_eq!(p.total("sort"), Duration::from_millis(60));
+        assert_eq!(p.count("sort"), 2);
         assert_eq!(p.grand_total(), Duration::from_millis(100));
         let rows = p.breakdown();
         assert_eq!(rows[0].0, "sort");
         assert!((rows[0].2 - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phase_ladder_from_samples() {
+        let mut p = PhaseProfile::new();
+        for ms in [10u64, 20, 30, 40] {
+            p.add("sort", Duration::from_millis(ms));
+        }
+        let l = p.ladder("sort");
+        assert_eq!(l.count, 4);
+        assert!((l.min - 0.010).abs() < 1e-9);
+        assert!((l.max - 0.040).abs() < 1e-9);
+        assert!((l.mean - 0.025).abs() < 1e-9);
+        // Nearest-rank: p50 of 4 samples picks rank round(0.5·3) = 2.
+        assert!((l.p50 - 0.030).abs() < 1e-9);
+        assert_eq!(p.ladder("never-ran"), LatencyLadder::default());
     }
 
     #[test]
@@ -101,5 +172,6 @@ mod tests {
         let v = p.time("work", || 21 * 2);
         assert_eq!(v, 42);
         assert!(p.total("work") > Duration::ZERO);
+        assert_eq!(p.stats("work").unwrap().samples().len(), 1);
     }
 }

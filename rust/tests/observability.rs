@@ -1,0 +1,255 @@
+//! Observability-layer contract (`obs::registry` + `obs::trace`):
+//!
+//! 1. **Ladder reference** — [`LatencyLadder::of`] matches a naive
+//!    sort-then-nearest-rank reference at every rung, including the empty /
+//!    single-sample / all-ties edge cases.
+//! 2. **Registry determinism** — the `deterministic` section of a
+//!    [`Registry`] assembled from a session run is byte-identical at
+//!    threads 1/4/8 for every scheduling policy, static *and* dynamic
+//!    serving, while the `host` section is free to differ.
+//! 3. **Trace determinism** — the exported Chrome trace stream (frame /
+//!    stage spans, per-channel DRAM spans, lifecycle instants — all in
+//!    simulated ns) is bit-identical across thread counts per policy, for
+//!    both the contended-batch path and join/leave session streams.
+//! 4. **Trace well-formedness** — the export round-trips through the
+//!    crate's JSON parser, carries process/thread metadata, and every
+//!    viewer track nests monotonically: stages inside frames, consecutive
+//!    frames laid out without overlap.
+
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::{
+    RenderServer, SchedPolicy, SessionScript, SessionSpec, ViewerSpec,
+};
+use gaucim::obs::{percentile, sink, Component, LatencyLadder, Registry};
+use gaucim::pipeline::PipelineConfig;
+use gaucim::scene::synth::{SceneKind, SynthParams};
+use gaucim::util::json::{parse, Json};
+
+fn server(threads: usize, dynamic: bool) -> RenderServer {
+    let scene = SynthParams::new(SceneKind::DynamicLarge, 1500).with_seed(21).generate();
+    let mut config =
+        PipelineConfig::paper(true).with_resolution(128, 72).with_threads(threads);
+    config.dynamic_updates = dynamic;
+    RenderServer::new(scene, config)
+}
+
+fn join_leave_script() -> SessionScript {
+    SessionScript::new()
+        .join_at(0, SessionSpec::stream(ViewCondition::Average, 4).with_deadline_fps(120.0))
+        .join_at(
+            0,
+            SessionSpec::stream(ViewCondition::Static, 4)
+                .with_deadline_fps(60.0)
+                .with_weight(2.0),
+        )
+        .join_at(2, SessionSpec::stream(ViewCondition::Extreme, 2).with_start(2))
+        .leave_at(3, 0)
+}
+
+// ---------------------------------------------------------------- ladder --
+
+/// Naive reference: sort a copy, then nearest-rank per rung.
+fn naive_ladder(samples: &[f64]) -> LatencyLadder {
+    if samples.is_empty() {
+        return LatencyLadder::default();
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = |p: f64| v[(((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize).min(v.len() - 1)];
+    LatencyLadder {
+        count: v.len() as u64,
+        min: v[0],
+        mean: v.iter().sum::<f64>() / v.len() as f64,
+        p50: rank(50.0),
+        p75: rank(75.0),
+        p90: rank(90.0),
+        p95: rank(95.0),
+        p99: rank(99.0),
+        p99_9: rank(99.9),
+        max: v[v.len() - 1],
+    }
+}
+
+#[test]
+fn ladder_matches_naive_reference_on_edge_cases() {
+    // Deterministic pseudo-random population (LCG — no host entropy).
+    let mut x = 12345u64;
+    let mut noisy = Vec::new();
+    for _ in 0..997 {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        noisy.push((x >> 33) as f64 / 1e6);
+    }
+    let cases: Vec<Vec<f64>> = vec![
+        vec![],
+        vec![42.0],
+        vec![3.0; 64],
+        vec![2.0, 1.0],
+        (0..100).rev().map(|i| i as f64).collect(),
+        noisy,
+    ];
+    for samples in &cases {
+        let ladder = LatencyLadder::of(samples);
+        let reference = naive_ladder(samples);
+        assert_eq!(ladder, reference, "ladder diverged on {} samples", samples.len());
+        // The shared percentile helper agrees with the ladder rungs.
+        assert_eq!(ladder.p50, percentile(samples, 50.0));
+        assert_eq!(ladder.p99, percentile(samples, 99.0));
+    }
+}
+
+// -------------------------------------------------------------- registry --
+
+#[test]
+fn registry_deterministic_section_is_byte_identical_across_threads() {
+    let script = join_leave_script();
+    for dynamic in [false, true] {
+        for policy in SchedPolicy::ALL {
+            let registry_at = |threads: usize| {
+                let rep = server(threads, dynamic).render_sessions(&script, policy);
+                let mut metrics = Registry::new();
+                metrics.deterministic =
+                    Component::new().set("sessions", rep.component());
+                metrics.host = Component::new().set("wall_s", rep.wall_s);
+                metrics.to_json()
+            };
+            let baseline = registry_at(1);
+            let baseline_det = baseline.get("deterministic").expect("section").pretty();
+            assert_eq!(baseline.get("schema").unwrap().as_usize(), Some(1));
+            for threads in [4, 8] {
+                let other = registry_at(threads);
+                assert_eq!(
+                    baseline_det,
+                    other.get("deterministic").expect("section").pretty(),
+                    "{} (dynamic={dynamic}) deterministic section diverged at \
+                     threads={threads}",
+                    policy.label()
+                );
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- trace --
+
+fn session_trace(threads: usize, policy: SchedPolicy) -> String {
+    let mut server = server(threads, false);
+    let trace = sink();
+    server.set_tracer(trace.clone());
+    server.render_sessions(&join_leave_script(), policy);
+    let chrome = trace.lock().unwrap().chrome_json().pretty();
+    chrome
+}
+
+#[test]
+fn session_trace_stream_is_bit_identical_across_threads_per_policy() {
+    for policy in SchedPolicy::ALL {
+        let baseline = session_trace(1, policy);
+        // The stream is substantive: frame spans, DRAM channel spans, and
+        // lifecycle instants all present.
+        assert!(baseline.contains("\"frame 0\""), "{}: no frame spans", policy.label());
+        assert!(baseline.contains("\"dram\""), "{}: no DRAM spans", policy.label());
+        assert!(baseline.contains("\"join\""), "{}: no join instants", policy.label());
+        assert!(baseline.contains("\"leave\""), "{}: no leave instants", policy.label());
+        for threads in [4, 8] {
+            assert_eq!(
+                baseline,
+                session_trace(threads, policy),
+                "{} trace diverged at threads={threads}",
+                policy.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn contended_batch_trace_is_bit_identical_across_threads() {
+    let specs = [
+        ViewerSpec::perf(ViewCondition::Average, 3),
+        ViewerSpec::perf(ViewCondition::Static, 2),
+        ViewerSpec::perf(ViewCondition::Extreme, 3),
+    ];
+    let run = |threads: usize| {
+        let mut server = server(threads, false);
+        let trace = sink();
+        server.set_tracer(trace.clone());
+        server.render_batch_contended(&specs);
+        let chrome = trace.lock().unwrap().chrome_json().pretty();
+        chrome
+    };
+    // threads=1 drives the lockstep path, threads>1 the two-phase
+    // trace/replay path — both must record the very same event stream.
+    let baseline = run(1);
+    assert!(baseline.contains("\"contended-batch\""));
+    for threads in [4, 8] {
+        assert_eq!(baseline, run(threads), "batch trace diverged at threads={threads}");
+    }
+}
+
+// ------------------------------------------------------- well-formedness --
+
+#[test]
+fn chrome_trace_parses_with_monotone_span_nesting() {
+    let text = session_trace(1, SchedPolicy::RoundRobin);
+    let doc = parse(&text).expect("trace must be valid JSON");
+    let events = match doc.get("traceEvents") {
+        Some(Json::Arr(v)) => v,
+        other => panic!("traceEvents missing: {other:?}"),
+    };
+    assert!(
+        events.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("process_name")
+        }),
+        "process metadata missing"
+    );
+    assert!(
+        events.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("thread_name")
+        }),
+        "thread metadata missing"
+    );
+
+    // Per viewer track, replay the complete spans through a nesting stack:
+    // a span either nests inside the still-open span above it or starts at
+    // (or after) that span's end. Frames therefore enclose their stages and
+    // consecutive frames never overlap.
+    let mut tracks: std::collections::BTreeMap<(u64, u64), Vec<(f64, f64)>> =
+        std::collections::BTreeMap::new();
+    let mut spans = 0usize;
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        spans += 1;
+        let pid = e.get("pid").and_then(Json::as_usize).unwrap() as u64;
+        let tid = e.get("tid").and_then(Json::as_usize).unwrap() as u64;
+        let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+        let dur = e.get("dur").and_then(Json::as_f64).unwrap();
+        assert!(ts >= 0.0 && dur >= 0.0, "negative time in span {e:?}");
+        if (10..1000).contains(&tid) {
+            tracks.entry((pid, tid)).or_default().push((ts, ts + dur));
+        }
+    }
+    assert!(spans > 0, "no complete spans recorded");
+    assert!(!tracks.is_empty(), "no viewer tracks recorded");
+    for ((pid, tid), spans) in &tracks {
+        let mut stack: Vec<(f64, f64)> = Vec::new();
+        for &(start, end) in spans {
+            let eps = 1e-6 * (1.0 + end.abs());
+            while let Some(&(_, top_end)) = stack.last() {
+                if top_end <= start + eps {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(top_start, top_end)) = stack.last() {
+                assert!(
+                    start + eps >= top_start && end <= top_end + eps,
+                    "span [{start}, {end}] escapes enclosing [{top_start}, {top_end}] \
+                     on pid={pid} tid={tid}"
+                );
+            }
+            stack.push((start, end));
+        }
+    }
+}
