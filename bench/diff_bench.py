@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_server.json against the committed baseline.
+
+Two surfaces, two rules:
+
+* ``metrics.deterministic`` (and the top-level blocks it mirrors) holds
+  simulated quantities only — byte-identical across machines, thread
+  counts, and runs. Any difference there is a real behavioural change
+  and fails the diff (exit 1).
+* ``metrics.host`` holds wall-clock-derived numbers (throughput,
+  speedups, overhead ladders). Those drift with the machine, so numeric
+  leaves are compared with a relative tolerance and only *reported* by
+  default; ``--strict`` turns out-of-tolerance host drift into a
+  failure too.
+
+Usage:
+    python3 bench/diff_bench.py                  # compare ./BENCH_server.json vs bench/BENCH_server.json
+    python3 bench/diff_bench.py --write          # promote the fresh record to the committed baseline
+    python3 bench/diff_bench.py --strict --tolerance 0.5
+
+The committed baseline starts life as a ``{"bootstrap": true}`` marker
+(no machine has recorded a run yet); the first ``--write`` replaces it
+with a real record.
+"""
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def canon(value):
+    """Canonical byte form of a JSON subtree (sorted keys, fixed indent)."""
+    return json.dumps(value, indent=1, sort_keys=True)
+
+
+def walk_numeric(value, prefix=""):
+    """Yield (path, number) for every numeric leaf of a JSON subtree."""
+    if isinstance(value, dict):
+        for k in sorted(value):
+            yield from walk_numeric(value[k], f"{prefix}.{k}" if prefix else k)
+    elif isinstance(value, list):
+        for i, v in enumerate(value):
+            yield from walk_numeric(v, f"{prefix}[{i}]")
+    elif isinstance(value, bool):
+        pass
+    elif isinstance(value, (int, float)):
+        yield prefix, float(value)
+
+
+def first_diff_line(a, b):
+    """First differing line between two canonical dumps (context for CI logs)."""
+    for la, lb in zip(a.splitlines(), b.splitlines()):
+        if la != lb:
+            return f"-{la.strip()}\n  +{lb.strip()}"
+    return "(one record is a prefix of the other)"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="BENCH_server.json", help="freshly-written record")
+    ap.add_argument(
+        "--record",
+        default=str(Path(__file__).resolve().parent / "BENCH_server.json"),
+        help="committed baseline",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="relative drift allowed on host (wall-clock) numeric leaves",
+    )
+    ap.add_argument(
+        "--strict", action="store_true", help="fail on out-of-tolerance host drift too"
+    )
+    ap.add_argument(
+        "--write", action="store_true", help="promote the fresh record to the baseline"
+    )
+    args = ap.parse_args()
+
+    fresh = load(args.fresh)
+    if fresh is None:
+        print(f"no fresh record at {args.fresh} — run a multi_viewer mode first", file=sys.stderr)
+        return 2
+    record = load(args.record)
+
+    if args.write:
+        shutil.copyfile(args.fresh, args.record)
+        print(f"promoted {args.fresh} -> {args.record}")
+        return 0
+
+    if record is None or record.get("bootstrap"):
+        print(
+            f"baseline {args.record} is a bootstrap placeholder — nothing to compare.\n"
+            f"Promote the fresh record with: python3 bench/diff_bench.py --write"
+        )
+        return 0
+
+    fresh_metrics = fresh.get("metrics", {})
+    record_metrics = record.get("metrics", {})
+
+    # Deterministic surface: byte-for-byte.
+    det_fresh = canon(fresh_metrics.get("deterministic", {}))
+    det_record = canon(record_metrics.get("deterministic", {}))
+    failed = False
+    if det_fresh != det_record:
+        print("DETERMINISTIC DIFF (simulated surface changed — a real behavioural change):")
+        print("  " + first_diff_line(det_record, det_fresh))
+        failed = True
+    else:
+        print("deterministic surface: identical")
+
+    # Host surface: tolerant numeric comparison, leaf by leaf.
+    host_fresh = dict(walk_numeric(fresh_metrics.get("host", {})))
+    host_record = dict(walk_numeric(record_metrics.get("host", {})))
+    drifted = []
+    for path in sorted(set(host_fresh) & set(host_record)):
+        a, b = host_record[path], host_fresh[path]
+        base = max(abs(a), abs(b), 1e-12)
+        rel = abs(a - b) / base
+        if rel > args.tolerance:
+            drifted.append((path, a, b, rel))
+    missing = sorted(set(host_record) - set(host_fresh))
+    added = sorted(set(host_fresh) - set(host_record))
+    if drifted:
+        print(f"host drift beyond {args.tolerance:.0%} on {len(drifted)} leaves:")
+        for path, a, b, rel in drifted[:20]:
+            print(f"  {path}: {a:.4g} -> {b:.4g}  ({rel:+.0%})")
+        if args.strict:
+            failed = True
+    else:
+        print(f"host surface: {len(host_fresh)} numeric leaves within {args.tolerance:.0%}")
+    if missing:
+        print(f"host leaves missing from the fresh record: {missing[:10]}")
+    if added:
+        print(f"new host leaves (not in the baseline): {added[:10]}")
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

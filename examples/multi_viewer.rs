@@ -27,6 +27,18 @@
 //! `sessions` block is diffed across thread counts by the CI
 //! `session-smoke` job). Pass `--sessions` to run the session layer only.
 //!
+//! Pass `--loadgen steady|flash|diurnal` to run the **scale harness**
+//! instead: a seeded synthetic workload from [`gaucim::coordinator::loadgen`]
+//! (default 10k sessions, `--loadgen-sessions N --loadgen-seed S`) streams
+//! through the session scheduler at a session-count ladder, once under the
+//! indexed hot path and once under the historical full-sort reference
+//! bookkeeping, asserting the two reports byte-identical at every rung
+//! and for every policy. Simulated roll-ups (loadgen parameters, per-rung
+//! report digests, full per-policy reports at the smallest rung) land in
+//! the `scale` block (diffed across `PALLAS_THREADS` by the CI
+//! `scale-smoke` job); scheduler-overhead ns/round ladders, rounds/s, and
+//! the indexed-vs-reference speedup land in `scale_host`.
+//!
 //! Pass `--residency-mb MB` to run the **residency sweep** instead: DRAM
 //! becomes a shard-granular cache of that capacity over the compressed
 //! backing store ([`gaucim::memory::residency`]), and the contended batch
@@ -50,12 +62,13 @@
 
 use gaucim::bench::write_bench_json;
 use gaucim::camera::ViewCondition;
+use gaucim::coordinator::session::DEFAULT_STREAM_FPS;
 use gaucim::coordinator::{
-    ContendedMemReport, DynamicSequenceStats, RenderServer, SchedPolicy, SequenceReport,
-    SessionBatchReport, SessionScript, SessionSpec, ViewerSpec,
+    ContendedMemReport, DynamicSequenceStats, LoadGen, LoadPreset, RenderServer, SchedImpl,
+    SchedPolicy, SequenceReport, SessionBatchReport, SessionScript, SessionSpec, ViewerSpec,
 };
 use gaucim::memory::PrefetchPolicy;
-use gaucim::obs::{sink, Component, Registry, TraceSink};
+use gaucim::obs::{sink, Component, LatencyLadder, Registry, TraceSink};
 use gaucim::pipeline::{resolve_threads, HostStageWall, PipelineConfig};
 use gaucim::render::RenderBackend;
 use gaucim::scene::synth::{SceneKind, SynthParams};
@@ -220,6 +233,38 @@ fn session_bench(
             .set("policies", policies),
         rr_wall_s,
     )
+}
+
+/// One scale-harness scheduler run: the script under `policy` with the
+/// given bookkeeping implementation, detached-state collection off (the
+/// 10k-session memory contract), and the optional admission budget.
+/// Returns the report plus the per-round scheduler-overhead samples.
+fn scale_run(
+    server: &RenderServer,
+    script: &SessionScript,
+    policy: SchedPolicy,
+    budget_gbps: Option<f64>,
+    imp: SchedImpl,
+) -> (SessionBatchReport, Vec<f64>) {
+    let mut sched = server.sessions(policy).with_sched_impl(imp).discard_detached();
+    if let Some(gbps) = budget_gbps {
+        sched = sched.dram_budget_gbps(gbps);
+    }
+    let rep = sched.run(script);
+    let overhead = sched.last_overhead_ns().to_vec();
+    (rep, overhead)
+}
+
+/// FNV-1a 64-bit digest of a report's simulated projection — a compact
+/// deterministic fingerprint for the large-N rungs whose full JSON would
+/// bloat the BENCH record.
+fn fnv1a64(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 fn stage_wall_json(wall: &HostStageWall) -> Json {
@@ -513,6 +558,157 @@ fn main() -> anyhow::Result<()> {
             .set("metrics", metrics.to_json());
         write_bench_json("BENCH_server.json", &record)?;
         println!("\nwrote BENCH_server.json (dynamic block only)");
+        write_trace(trace_out.as_deref(), trace_sink.as_ref())?;
+        return Ok(());
+    }
+
+    // ---- scale harness (`--loadgen <preset>`, CI `scale-smoke`) --------
+    // Synthetic session-scale workloads from `coordinator::loadgen`: run
+    // the generated script under the indexed scheduler hot path and the
+    // historical full-sort reference bookkeeping, assert the reports
+    // byte-identical, and record the scheduler-overhead ladder at each
+    // rung of the session-count ladder. The `scale` block holds simulated
+    // quantities only so CI can diff it across PALLAS_THREADS; overhead
+    // ns/round, rounds/s, and the indexed-vs-reference speedup land in
+    // `scale_host`.
+    if let Some(label) = args.get("loadgen") {
+        let preset = LoadPreset::from_label(label).ok_or_else(|| {
+            anyhow::anyhow!("--loadgen must be steady|flash|diurnal, got '{label}'")
+        })?;
+        let n_sessions = args.get_usize("loadgen-sessions", 10_000).max(1);
+        let seed = args.get_u64("loadgen-seed", 42);
+        // Admission budget sized from the preset's target concurrency:
+        // the scheduler charges a cold stream span/10 bytes per frame at
+        // the default stream FPS, so this budget keeps roughly
+        // `target_concurrency` mean-demand streams admitted at once.
+        let fallback_demand_bytes_per_s =
+            server.shared.prep.layout.total_span_bytes() as f64 / 10.0 * DEFAULT_STREAM_FPS;
+        let budget_for = |lg: &LoadGen| {
+            lg.target_concurrency.map(|tc| tc as f64 * fallback_demand_bytes_per_s / 1e9)
+        };
+        // Session-count ladder up to the requested scale.
+        let mut ladder: Vec<usize> =
+            [100, 1_000, n_sessions].iter().map(|&k| k.min(n_sessions)).collect();
+        ladder.dedup();
+        println!(
+            "\nscale harness: '{}' preset, {} sessions (seed {}), ladder {:?}",
+            preset.label(),
+            n_sessions,
+            seed,
+            ladder
+        );
+
+        let mut det_rungs = Json::obj();
+        let mut host_rungs = Json::obj();
+        for &n in &ladder {
+            let lg = LoadGen::preset(preset, n, seed);
+            let script = lg.generate();
+            let budget = budget_for(&lg);
+            let (rep_idx, oh_idx) =
+                scale_run(&server, &script, SchedPolicy::Dwfq, budget, SchedImpl::Indexed);
+            let (rep_ref, oh_ref) =
+                scale_run(&server, &script, SchedPolicy::Dwfq, budget, SchedImpl::ReferenceSort);
+            assert_eq!(
+                rep_idx.simulated_projection(),
+                rep_ref.simulated_projection(),
+                "indexed scheduler diverged from the full-sort reference (N={n})"
+            );
+            let rounds = rep_idx.rounds.max(1) as f64;
+            let sum_idx: f64 = oh_idx.iter().sum();
+            let sum_ref: f64 = oh_ref.iter().sum();
+            let speedup = sum_ref / sum_idx.max(1.0);
+            println!(
+                "  N={n:>6}  rounds {:>5}  peak-live {:>4}  sched overhead \
+                 {:>9.1} → {:>8.1} ns/round  ({speedup:.2}x)  [{:.2} s host]",
+                rep_idx.rounds,
+                rep_idx.peak_live,
+                sum_ref / rounds,
+                sum_idx / rounds,
+                rep_idx.wall_s
+            );
+            det_rungs = det_rungs.set(
+                &format!("n{n}"),
+                Json::obj()
+                    .set("sessions", n)
+                    .set("rounds", rep_idx.rounds)
+                    .set("total_frames", rep_idx.total_frames)
+                    .set("peak_live", rep_idx.peak_live)
+                    .set("deadline_miss_rate", rep_idx.deadline_miss_rate)
+                    .set("fairness", rep_idx.fairness())
+                    .set("admission_wait_rounds_pctl", rep_idx.admission_wait_rounds.to_json())
+                    .set(
+                        "report_digest_fnv1a64",
+                        format!("{:016x}", fnv1a64(&rep_idx.simulated_projection())),
+                    ),
+            );
+            host_rungs = host_rungs.set(
+                &format!("n{n}"),
+                Json::obj()
+                    .set("wall_s_indexed", rep_idx.wall_s)
+                    .set("wall_s_reference", rep_ref.wall_s)
+                    .set("rounds_per_s", rep_idx.rounds as f64 / rep_idx.wall_s.max(1e-12))
+                    .set("sched_overhead_ns_per_round_indexed", sum_idx / rounds)
+                    .set("sched_overhead_ns_per_round_reference", sum_ref / rounds)
+                    .set("sched_overhead_indexed_pctl", LatencyLadder::of(&oh_idx).to_json())
+                    .set(
+                        "sched_overhead_reference_pctl",
+                        LatencyLadder::of(&oh_ref).to_json(),
+                    )
+                    .set("speedup_vs_reference", speedup),
+            );
+        }
+
+        // Every policy at the smallest rung: full reports (the CI diff
+        // surface) plus the byte-identity gate per policy.
+        let n0 = ladder[0];
+        let lg0 = LoadGen::preset(preset, n0, seed);
+        let script0 = lg0.generate();
+        let budget0 = budget_for(&lg0);
+        let mut policies = Json::obj();
+        for policy in SchedPolicy::ALL {
+            let (idx, _) = scale_run(&server, &script0, policy, budget0, SchedImpl::Indexed);
+            let (refr, _) =
+                scale_run(&server, &script0, policy, budget0, SchedImpl::ReferenceSort);
+            assert_eq!(
+                idx.simulated_projection(),
+                refr.simulated_projection(),
+                "indexed scheduler diverged from the full-sort reference ({} @ N={n0})",
+                policy.label()
+            );
+            println!(
+                "  {:<12} N={n0:>4}  miss-rate {:.3}  fairness {:.3}  \
+                 admission wait p50/p99 {:.1}/{:.1} rounds",
+                policy.label(),
+                idx.deadline_miss_rate,
+                idx.fairness(),
+                idx.admission_wait_rounds.p50,
+                idx.admission_wait_rounds.p99
+            );
+            policies = policies.set(policy.label(), idx.to_json());
+        }
+
+        let scale_det = Json::obj()
+            .set("preset", preset.label())
+            .set("loadgen", LoadGen::preset(preset, n_sessions, seed).component().to_json())
+            .set("ladder", det_rungs)
+            .set("policies_at_smallest", policies);
+        let scale_host = Json::obj().set("ladder", host_rungs);
+        let mut metrics = Registry::new();
+        metrics.deterministic = Component::new().set("scale", scale_det.clone());
+        metrics.host = Component::new().set("scale_host", scale_host.clone());
+        let record = Json::obj()
+            .set("gaussians", server.shared.scene.len())
+            .set("width", width)
+            .set("height", height)
+            .set("threads", threads)
+            .set("loadgen_preset", preset.label())
+            .set("loadgen_sessions", n_sessions)
+            .set("loadgen_seed", seed)
+            .set("scale", scale_det)
+            .set("scale_host", scale_host)
+            .set("metrics", metrics.to_json());
+        write_bench_json("BENCH_server.json", &record)?;
+        println!("\nwrote BENCH_server.json (scale block only)");
         write_trace(trace_out.as_deref(), trace_sink.as_ref())?;
         return Ok(());
     }

@@ -1,0 +1,386 @@
+//! `coordinator::loadgen` — seeded synthetic session-load generation.
+//!
+//! The scale harness needs scripts with thousands of joins and leaves
+//! whose *shape* resembles real serving traffic — steady trickles, flash
+//! crowds slamming the admission queue, diurnal waves — while staying
+//! byte-reproducible: the same seed always generates the same
+//! [`SessionScript`], so every scale benchmark, CI smoke diff, and
+//! cross-thread determinism assertion replays the identical workload.
+//! Everything draws from the repo's own splitmix64-seeded
+//! [`Rng`](crate::util::Rng) (xoshiro256**) — no `rand`, no wall clock.
+//!
+//! A generated script is ordinary [`SessionScript`] data: it round-trips
+//! exactly through [`SessionScript::to_json`] / `from_json` (the
+//! unit-test contract), so a generated 10k-session workload can be dumped
+//! to disk, versioned, and replayed with `multi_viewer --session-script`
+//! like any hand-written script. `multi_viewer --loadgen <preset>` drives
+//! the built-in [`LoadPreset`]s end to end and reports through
+//! `obs::registry`, with flash-crowd admit/defer instants visible in the
+//! `obs::trace` stream when tracing is on.
+
+use crate::camera::ViewCondition;
+use crate::obs::Component;
+use crate::util::Rng;
+
+use super::session::{SessionScript, SessionSpec};
+
+/// The arrival process: how many sessions join at each round boundary.
+/// All rates are expected joins per round; draws are Poisson (Knuth
+/// sampler), so arrivals are bursty at small rates the way independent
+/// viewers are.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson arrivals at `rate` joins/round.
+    Steady { rate: f64 },
+    /// Poisson arrivals at `base_rate`, plus `burst_sessions` joining in
+    /// one round at `burst_round` — the admission-control stress case
+    /// (the burst oversubscribes any finite DRAM budget, so the queue's
+    /// defer/admit instants become visible in the trace).
+    FlashCrowd { base_rate: f64, burst_round: usize, burst_sessions: usize },
+    /// Sinusoidal rate between `trough_rate` and `peak_rate` with the
+    /// given period — the day/night wave, starting at the trough.
+    Diurnal { trough_rate: f64, peak_rate: f64, period_rounds: usize },
+}
+
+impl ArrivalProcess {
+    /// Expected joins per round at `round`.
+    fn rate_at(&self, round: usize) -> f64 {
+        match *self {
+            ArrivalProcess::Steady { rate } => rate,
+            ArrivalProcess::FlashCrowd { base_rate, .. } => base_rate,
+            ArrivalProcess::Diurnal { trough_rate, peak_rate, period_rounds } => {
+                let period = period_rounds.max(1) as f64;
+                let phase = std::f64::consts::TAU * (round as f64) / period;
+                trough_rate + (peak_rate - trough_rate) * 0.5 * (1.0 - phase.cos())
+            }
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Steady { .. } => "steady",
+            ArrivalProcess::FlashCrowd { .. } => "flash_crowd",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+        }
+    }
+}
+
+/// The built-in workload presets `multi_viewer --loadgen` accepts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadPreset {
+    /// Steady trickle; no admission pressure.
+    Steady,
+    /// Flash crowd: 40% of the sessions arrive in one round.
+    Flash,
+    /// Diurnal wave over a 64-round period.
+    Diurnal,
+}
+
+impl LoadPreset {
+    pub const ALL: [LoadPreset; 3] = [LoadPreset::Steady, LoadPreset::Flash, LoadPreset::Diurnal];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            LoadPreset::Steady => "steady",
+            LoadPreset::Flash => "flash",
+            LoadPreset::Diurnal => "diurnal",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<LoadPreset> {
+        LoadPreset::ALL.into_iter().find(|p| p.label() == s)
+    }
+}
+
+/// A deterministic synthetic workload generator. Build one with
+/// [`LoadGen::new`] or [`LoadGen::preset`], tweak the public knobs, and
+/// call [`LoadGen::generate`].
+#[derive(Debug, Clone)]
+pub struct LoadGen {
+    /// RNG seed — the workload's identity: same seed, same script.
+    pub seed: u64,
+    /// Total sessions the script joins.
+    pub n_sessions: usize,
+    pub arrival: ArrivalProcess,
+    /// Mean frames a session renders (its spec's `frames`); log-normal
+    /// jittered, clamped to `[1, 4 × dwell_mean_frames]`.
+    pub dwell_mean_frames: usize,
+    /// Log-normal sigma of the dwell jitter (0 = every session renders
+    /// exactly the mean).
+    pub dwell_sigma: f32,
+    /// Rounds a session lingers after its last frame before its explicit
+    /// leave (it occupies a ring slot but renders nothing — mostly-idle
+    /// membership, the 10k-session memory story). Every generated session
+    /// leaves explicitly, so live state is bounded by concurrency, not by
+    /// total session count.
+    pub linger_rounds: usize,
+    /// Weights of the `[Static, Average, Extreme]` view-condition mix.
+    pub condition_mix: [f64; 3],
+    /// Fraction of sessions carrying a frame deadline (`target_fps` drawn
+    /// from 30/60/120); the rest are throughput streams EDF orders last.
+    pub deadline_fraction: f32,
+    /// Fraction of deadline sessions at double DWFQ weight.
+    pub heavy_weight_fraction: f32,
+    /// Suggested concurrent-stream capacity for the driver: the
+    /// admission budget that keeps roughly this many mean-demand streams
+    /// admitted at once (`None` = run unbudgeted). Presets with bursts
+    /// set it so deferral actually happens.
+    pub target_concurrency: Option<usize>,
+}
+
+impl LoadGen {
+    /// A steady workload with neutral knobs (see field docs).
+    pub fn new(n_sessions: usize, seed: u64) -> LoadGen {
+        LoadGen {
+            seed,
+            n_sessions,
+            arrival: ArrivalProcess::Steady { rate: (n_sessions as f64 / 64.0).max(1.0) },
+            dwell_mean_frames: 3,
+            dwell_sigma: 0.35,
+            linger_rounds: 2,
+            condition_mix: [0.3, 0.5, 0.2],
+            deadline_fraction: 0.5,
+            heavy_weight_fraction: 0.25,
+            target_concurrency: None,
+        }
+    }
+
+    /// One of the built-in presets at the given scale.
+    pub fn preset(preset: LoadPreset, n_sessions: usize, seed: u64) -> LoadGen {
+        let mut lg = LoadGen::new(n_sessions, seed);
+        match preset {
+            LoadPreset::Steady => {}
+            LoadPreset::Flash => {
+                let burst = (n_sessions * 2) / 5;
+                lg.arrival = ArrivalProcess::FlashCrowd {
+                    base_rate: (n_sessions as f64 / 96.0).max(1.0),
+                    burst_round: 8,
+                    burst_sessions: burst,
+                };
+                // Tight enough that the burst visibly queues.
+                lg.target_concurrency = Some((n_sessions / 20).clamp(4, 256));
+            }
+            LoadPreset::Diurnal => {
+                let peak = (n_sessions as f64 / 24.0).max(2.0);
+                lg.arrival = ArrivalProcess::Diurnal {
+                    trough_rate: peak / 8.0,
+                    peak_rate: peak,
+                    period_rounds: 64,
+                };
+            }
+        }
+        lg
+    }
+
+    /// Generate the script: joins drawn round by round from the arrival
+    /// process until `n_sessions` have arrived, each with a spec from the
+    /// dwell/mix distributions and an explicit leave at
+    /// `join + frames + linger_rounds`. Deterministic in `seed` (and only
+    /// `seed`): the generator never consults the clock.
+    pub fn generate(&self) -> SessionScript {
+        let mut rng = Rng::new(self.seed ^ 0x10AD_6E4E_5E55_1045);
+        let mut script = SessionScript::new();
+        let mut emitted = 0usize;
+        let mut round = 0usize;
+        // Safety valve for degenerate rates: past the cap the remainder
+        // arrives at once (the script stays exactly n_sessions joins).
+        let round_cap = 512 + self.n_sessions * 64;
+        while emitted < self.n_sessions {
+            let burst = match self.arrival {
+                ArrivalProcess::FlashCrowd { burst_round, burst_sessions, .. }
+                    if round == burst_round =>
+                {
+                    burst_sessions
+                }
+                _ => 0,
+            };
+            let mut k = burst + poisson(&mut rng, self.arrival.rate_at(round));
+            if round >= round_cap {
+                k = self.n_sessions - emitted;
+            }
+            for _ in 0..k.min(self.n_sessions - emitted) {
+                let spec = self.draw_spec(&mut rng);
+                let leave = round + spec.frames + self.linger_rounds.max(1);
+                script = script.join_at(round, spec).leave_at(leave, emitted);
+                emitted += 1;
+            }
+            round += 1;
+        }
+        script
+    }
+
+    /// One session spec from the dwell / condition / deadline / weight
+    /// distributions.
+    fn draw_spec(&self, rng: &mut Rng) -> SessionSpec {
+        let condition = match pick(rng, &self.condition_mix) {
+            0 => ViewCondition::Static,
+            1 => ViewCondition::Average,
+            _ => ViewCondition::Extreme,
+        };
+        let mean = self.dwell_mean_frames.max(1);
+        let frames = if self.dwell_sigma > 0.0 {
+            let f = rng.log_normal((mean as f32).ln(), self.dwell_sigma);
+            (f.round() as usize).clamp(1, mean * 4)
+        } else {
+            mean
+        };
+        let mut spec = SessionSpec::stream(condition, frames);
+        if rng.chance(self.deadline_fraction) {
+            spec.target_fps = [30.0, 60.0, 120.0][rng.below(3)];
+            if rng.chance(self.heavy_weight_fraction) {
+                spec.weight = 2.0;
+            }
+        }
+        spec
+    }
+
+    /// Registry [`Component`] describing the generated workload's
+    /// parameters (all deterministic — part of the BENCH scale block).
+    pub fn component(&self) -> Component {
+        let mut c = Component::new()
+            .set("seed", self.seed)
+            .set("n_sessions", self.n_sessions)
+            .set("arrival", self.arrival.label())
+            .set("dwell_mean_frames", self.dwell_mean_frames)
+            .set("dwell_sigma", self.dwell_sigma as f64)
+            .set("linger_rounds", self.linger_rounds)
+            .set("deadline_fraction", self.deadline_fraction as f64);
+        if let Some(tc) = self.target_concurrency {
+            c = c.set("target_concurrency", tc);
+        }
+        c
+    }
+}
+
+/// Knuth's Poisson sampler (exact for the small per-round rates used
+/// here; rates are clamped so the rejection loop stays bounded).
+fn poisson(rng: &mut Rng, rate: f64) -> usize {
+    if rate <= 0.0 {
+        return 0;
+    }
+    let l = (-rate.min(30.0)).exp();
+    let mut k = 0usize;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.f64();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Weighted index draw (weights need not be normalized; non-positive
+/// total falls back to index 0).
+fn pick(rng: &mut Rng, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().filter(|w| w.is_finite() && **w > 0.0).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut x = rng.f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        if w.is_finite() && w > 0.0 {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+    }
+    weights.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::session::SessionEvent;
+
+    #[test]
+    fn same_seed_generates_identical_scripts() {
+        for preset in LoadPreset::ALL {
+            let a = LoadGen::preset(preset, 200, 7).generate();
+            let b = LoadGen::preset(preset, 200, 7).generate();
+            assert_eq!(
+                a.to_json().pretty(),
+                b.to_json().pretty(),
+                "preset {}",
+                preset.label()
+            );
+            let c = LoadGen::preset(preset, 200, 8).generate();
+            assert_ne!(
+                a.to_json().pretty(),
+                c.to_json().pretty(),
+                "different seeds must differ ({})",
+                preset.label()
+            );
+        }
+    }
+
+    #[test]
+    fn generated_scripts_round_trip_through_json() {
+        let script = LoadGen::preset(LoadPreset::Flash, 300, 42).generate();
+        let text = script.to_json().pretty();
+        let parsed = SessionScript::from_json_str(&text).expect("generated script parses");
+        assert_eq!(parsed.to_json().pretty(), text);
+    }
+
+    #[test]
+    fn every_session_joins_once_and_leaves_strictly_later() {
+        for preset in LoadPreset::ALL {
+            let n = 500;
+            let script = LoadGen::preset(preset, n, 3).generate();
+            assert_eq!(script.n_sessions(), n, "{}", preset.label());
+            let mut join_round = vec![None; n];
+            let mut leave_round = vec![None; n];
+            let mut next_id = 0usize;
+            for ev in &script.events {
+                match ev {
+                    SessionEvent::JoinAt { frame, .. } => {
+                        join_round[next_id] = Some(*frame);
+                        next_id += 1;
+                    }
+                    SessionEvent::LeaveAt { frame, session } => {
+                        assert!(leave_round[*session].is_none(), "duplicate leave");
+                        leave_round[*session] = Some(*frame);
+                    }
+                }
+            }
+            for id in 0..n {
+                let j = join_round[id].expect("join exists");
+                let l = leave_round[id].expect("leave exists");
+                assert!(l > j, "session {id}: leave {l} not after join {j}");
+            }
+            // Bounded live set: peak concurrency is well below the total.
+            assert!(script.peak_concurrency() < n, "{}", preset.label());
+        }
+    }
+
+    #[test]
+    fn flash_preset_bursts_at_the_configured_round() {
+        let lg = LoadGen::preset(LoadPreset::Flash, 500, 11);
+        let ArrivalProcess::FlashCrowd { burst_round, burst_sessions, .. } = lg.arrival else {
+            panic!("flash preset must use FlashCrowd arrivals");
+        };
+        assert!(lg.target_concurrency.is_some());
+        let script = lg.generate();
+        let at_burst = script
+            .events
+            .iter()
+            .filter(|e| matches!(e, SessionEvent::JoinAt { frame, .. } if *frame == burst_round))
+            .count();
+        assert!(
+            at_burst >= burst_sessions,
+            "expected ≥{burst_sessions} joins at round {burst_round}, got {at_burst}"
+        );
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates_between_trough_and_peak() {
+        let arrival =
+            ArrivalProcess::Diurnal { trough_rate: 1.0, peak_rate: 9.0, period_rounds: 64 };
+        assert!((arrival.rate_at(0) - 1.0).abs() < 1e-9);
+        assert!((arrival.rate_at(32) - 9.0).abs() < 1e-9);
+        assert!((arrival.rate_at(64) - 1.0).abs() < 1e-9);
+        let mid = arrival.rate_at(16);
+        assert!(mid > 1.0 && mid < 9.0);
+    }
+}

@@ -20,16 +20,18 @@
 
 pub mod app;
 pub mod config;
+pub mod loadgen;
 pub(crate) mod rounds;
 pub mod server;
 pub mod session;
 
 pub use app::{App, DynamicSequenceStats, SequenceReport};
 pub use config::ExperimentConfig;
+pub use loadgen::{ArrivalProcess, LoadGen, LoadPreset};
 pub use server::{
     ContendedMemReport, RenderServer, ServerReport, SharedScene, ViewerMemStats, ViewerSpec,
 };
 pub use session::{
-    SchedPolicy, SessionBatchReport, SessionEvent, SessionReport, SessionScheduler,
+    SchedImpl, SchedPolicy, SessionBatchReport, SessionEvent, SessionReport, SessionScheduler,
     SessionScript, SessionSpec,
 };

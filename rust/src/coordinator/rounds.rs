@@ -310,6 +310,14 @@ impl RoundEngine {
             sys.horizon_ns()
         };
 
+        // Idle round (a stream awaiting a future join): the barrier above
+        // already advanced the epoch; skip the worker-pool round-trip. At
+        // 10k-session churn scale most rounds trail off with long idle
+        // stretches, so this is on the scheduler's hot path.
+        if jobs.is_empty() {
+            return Vec::new();
+        }
+
         if !self.two_phase {
             let out: Vec<RoundOutcome> = jobs
                 .iter_mut()

@@ -274,23 +274,29 @@ impl ServerReport {
 /// [`MemorySystem`]: per-viewer port statistics (in `port_ids` order,
 /// `(cull, blend)` per viewer), Jain fairness over per-viewer busy time,
 /// channel utilization, and the per-frame simulated stage-latency
-/// percentiles collected by the caller. Shared by the contended batch
-/// paths and the [`super::session::SessionScheduler`] so the roll-ups
-/// cannot drift apart — which is what makes the session scheduler's
-/// round-robin report bit-comparable to `render_batch_contended`.
+/// percentiles collected by the caller. `viewer_ids` labels the rows
+/// (parallel to `port_ids`); `None` labels them positionally — the batch
+/// paths' viewer numbering. Shared by the contended batch paths and the
+/// [`super::session::SessionScheduler`] so the roll-ups cannot drift
+/// apart — which is what makes the session scheduler's round-robin report
+/// bit-comparable to `render_batch_contended`.
 pub(crate) fn contended_rollup(
     sys: &Arc<Mutex<MemorySystem>>,
     port_ids: &[RoundPorts],
+    viewer_ids: Option<&[usize]>,
     outstanding: usize,
     pre_latency: &[f64],
     blend_latency: &[f64],
 ) -> ContendedMemReport {
+    if let Some(ids) = viewer_ids {
+        debug_assert_eq!(ids.len(), port_ids.len(), "viewer_ids must parallel port_ids");
+    }
     let sys = sys.lock().expect("memory system lock poisoned");
     let rows: Vec<ViewerMemStats> = port_ids
         .iter()
         .enumerate()
         .map(|(i, ports)| ViewerMemStats {
-            viewer: i,
+            viewer: viewer_ids.map_or(i, |ids| ids[i]),
             preprocess: sys.port_stage_stats(ports.cull, MemStage::Preprocess),
             blend: sys.port_stage_stats(ports.blend, MemStage::Blend),
             update: ports.update.map(|uid| sys.port_stage_stats(uid, MemStage::Update)),
@@ -539,8 +545,14 @@ impl RenderServer {
             })
             .collect();
 
-        let contended =
-            contended_rollup(sys, port_ids, config.mem.outstanding, &pre_latency, &blend_latency);
+        let contended = contended_rollup(
+            sys,
+            port_ids,
+            None,
+            config.mem.outstanding,
+            &pre_latency,
+            &blend_latency,
+        );
 
         let wall_s = t0.elapsed().as_secs_f64();
         let total_frames: usize = specs.iter().map(|s| s.frames).sum();

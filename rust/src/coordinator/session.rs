@@ -61,6 +61,7 @@ use crate::obs::{Component, LatencyLadder, Track};
 use crate::pipeline::{FramePipeline, SessionState};
 use crate::render::ReferenceRenderer;
 use crate::util::json::Json;
+use crate::util::KeyedMinHeap;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -454,6 +455,32 @@ impl SchedPolicy {
     }
 }
 
+/// Which bookkeeping implementation [`SessionScheduler::run`] uses. The
+/// two produce **byte-identical** [`SessionBatchReport`] JSON for every
+/// script, policy, and host thread count (the `session_scheduler` gate
+/// tests enforce it); they differ only in per-round cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedImpl {
+    /// Round-indexed script events, an O(1)-removal issue ring, and keyed
+    /// min-heaps with lazy invalidation for DWFQ/EDF — per-round cost
+    /// scales with the sessions that actually changed, not the total
+    /// session count. The default.
+    Indexed,
+    /// The historical path: per-round event scans, `Vec::retain` ring
+    /// maintenance, and a full policy sort every round — kept as the
+    /// measurable baseline for the `scale` BENCH speedup.
+    ReferenceSort,
+}
+
+impl SchedImpl {
+    pub fn label(self) -> &'static str {
+        match self {
+            SchedImpl::Indexed => "indexed",
+            SchedImpl::ReferenceSort => "reference_sort",
+        }
+    }
+}
+
 /// Final report of one session's lifetime in the stream.
 #[derive(Debug, Clone)]
 pub struct SessionReport {
@@ -529,12 +556,19 @@ pub struct SessionBatchReport {
     /// Scheduling rounds driven (frame epochs on the shared system).
     pub rounds: usize,
     pub total_frames: usize,
+    /// Most frames any single round issued (the stream's peak concurrent
+    /// render load).
+    pub peak_live: usize,
     /// Host wall-clock of the run (not part of the simulated projection).
     pub wall_s: f64,
     /// Missed-deadline fraction across all deadline-bearing frames.
     pub deadline_miss_rate: f64,
     /// Frame-latency percentiles across every session frame.
     pub frame_latency_pctl: LatencyLadder,
+    /// Admission-queue wait percentiles: rounds each session spent
+    /// deferred by the DRAM budget before admission (0 everywhere without
+    /// a budget).
+    pub admission_wait_rounds: LatencyLadder,
     pub sessions: Vec<SessionReport>,
     /// The shared-memory roll-up, structurally identical to the batch
     /// path's `contended_mem` block.
@@ -554,8 +588,10 @@ impl SessionBatchReport {
             .set("policy", self.policy.label())
             .set("rounds", self.rounds)
             .set("total_frames", self.total_frames)
+            .set("peak_live", self.peak_live)
             .set("deadline_miss_rate", self.deadline_miss_rate)
             .set("frame_latency_ns_pctl", self.frame_latency_pctl)
+            .set("admission_wait_rounds_pctl", self.admission_wait_rounds)
             .set("fairness", self.fairness())
             .list("sessions", self.sessions.iter().map(SessionReport::component))
             .set("contended_mem", self.contended.component())
@@ -623,10 +659,20 @@ pub struct SessionScheduler<'a> {
     /// Admission budget (bytes/s of estimated DRAM demand); `None` admits
     /// every join immediately.
     pub dram_budget_bytes_per_s: Option<f64>,
+    /// Bookkeeping implementation ([`SchedImpl::Indexed`] by default);
+    /// byte-identical reports either way.
+    pub sched_impl: SchedImpl,
+    /// Whether to retain every session's detached pipeline state for
+    /// [`SessionScheduler::take_detached`] (the default). Off, departed
+    /// sessions free their working set immediately unless a later join
+    /// warm-starts from them.
+    collect_detached: bool,
     /// Detached pipeline states collected by the last [`SessionScheduler::run`].
     detached: Vec<(usize, SessionState)>,
     /// States seeded for the next run's `resume_from` joins.
     seeded: Vec<(usize, SessionState)>,
+    /// Host ns of scheduler bookkeeping per round of the last run.
+    last_overhead_ns: Vec<f64>,
 }
 
 impl RenderServer {
@@ -636,8 +682,11 @@ impl RenderServer {
             server: self,
             policy,
             dram_budget_bytes_per_s: None,
+            sched_impl: SchedImpl::Indexed,
+            collect_detached: true,
             detached: Vec::new(),
             seeded: Vec::new(),
+            last_overhead_ns: Vec::new(),
         }
     }
 
@@ -662,6 +711,40 @@ impl<'a> SessionScheduler<'a> {
     pub fn dram_budget_gbps(mut self, gbps: f64) -> SessionScheduler<'a> {
         self.dram_budget_bytes_per_s = Some(gbps * 1e9);
         self
+    }
+
+    /// Select the bookkeeping implementation (see [`SchedImpl`]).
+    pub fn with_sched_impl(mut self, imp: SchedImpl) -> SessionScheduler<'a> {
+        self.sched_impl = imp;
+        self
+    }
+
+    /// Run on the historical per-round-scan + full-sort path — the
+    /// measurable baseline of the indexed hot path (byte-identical
+    /// reports, superlinear round overhead).
+    pub fn with_reference_order(self) -> SessionScheduler<'a> {
+        self.with_sched_impl(SchedImpl::ReferenceSort)
+    }
+
+    /// Don't collect detached pipeline states: a departed session's
+    /// working set is dropped at its leave round instead of being parked
+    /// for [`SessionScheduler::take_detached`] (donors that a later
+    /// `warm_from` join names are still retained, with their pooled
+    /// `FrameCtx` scratch trimmed). This is what keeps a 10k-session
+    /// churn script's memory bounded by *peak concurrency*, not total
+    /// session count. Reports are unaffected.
+    pub fn discard_detached(mut self) -> SessionScheduler<'a> {
+        self.collect_detached = false;
+        self
+    }
+
+    /// Host nanoseconds of scheduler bookkeeping per round of the last
+    /// [`SessionScheduler::run`]: event application, admission, issue
+    /// ordering, and outcome accounting — render/engine time excluded.
+    /// Host-measured, so never part of any report JSON; the `scale` BENCH
+    /// block aggregates it.
+    pub fn last_overhead_ns(&self) -> &[f64] {
+        &self.last_overhead_ns
     }
 
     /// Take the detached per-session pipeline states the last
@@ -736,18 +819,20 @@ impl<'a> SessionScheduler<'a> {
                 SessionEvent::LeaveAt { frame, session } => leaves.push((*frame, *session)),
             }
         }
-        for &(frame, session) in &leaves {
-            assert!(session < joins.len(), "leave for unknown session {session}");
-            assert!(
-                frame > joins[session].0,
-                "session {session} leaves at round {frame}, on or before its join round {}",
-                joins[session].0
-            );
-            assert_eq!(
-                leaves.iter().filter(|&&(_, s)| s == session).count(),
-                1,
-                "session {session} leaves twice"
-            );
+        // One-pass validation: the `seen` bitset replaces the former
+        // O(L²) duplicate-leave scan.
+        {
+            let mut seen = vec![false; joins.len()];
+            for &(frame, session) in &leaves {
+                assert!(session < joins.len(), "leave for unknown session {session}");
+                assert!(
+                    frame > joins[session].0,
+                    "session {session} leaves at round {frame}, on or before its join round {}",
+                    joins[session].0
+                );
+                assert!(!seen[session], "session {session} leaves twice");
+                seen[session] = true;
+            }
         }
         let last_event_round = joins
             .iter()
@@ -756,18 +841,59 @@ impl<'a> SessionScheduler<'a> {
             .max()
             .unwrap_or(0);
 
+        let indexed = self.sched_impl == SchedImpl::Indexed;
+        // Donors a later cold-start join warm-starts from: their retained
+        // state must survive the leave even in discard-detached mode.
+        let mut warm_needed = vec![false; joins.len()];
+        for (_, spec) in &joins {
+            if spec.resume_from.is_none() {
+                if let Some(d) = spec.warm_from {
+                    if let Some(slot) = warm_needed.get_mut(d) {
+                        *slot = true;
+                    }
+                }
+            }
+        }
+
+        // Event index (indexed mode): events stable-sorted by round, with
+        // monotone cursors — each event is visited exactly once over the
+        // whole run instead of once per round. Stability preserves the
+        // reference semantics within a round: ids ascending for joins
+        // (session ids are join-ordered), script order for leaves.
+        let mut joins_by_round: Vec<(usize, usize)> = Vec::new();
+        let mut leaves_by_round: Vec<(usize, usize)> = Vec::new();
+        if indexed {
+            joins_by_round = joins.iter().enumerate().map(|(id, &(f, _))| (f, id)).collect();
+            joins_by_round.sort_by_key(|&(f, _)| f);
+            leaves_by_round = leaves.clone();
+            leaves_by_round.sort_by_key(|&(f, _)| f);
+        }
+        let mut join_cursor = 0usize;
+        let mut leave_cursor = 0usize;
+
         let mut sessions: Vec<Option<ViewerSession<'a>>> =
             (0..joins.len()).map(|_| None).collect();
-        let mut ring: Vec<usize> = Vec::new(); // admitted, not-left, join order
+        let mut ring: Vec<usize> = Vec::new(); // reference: admitted, not-left, join order
+        // Indexed equivalents of the ring scans: an O(1)-removal linked
+        // ring with identical traversal order, the DWFQ/EDF keyed heap,
+        // and a maintained renderable-member count.
+        let mut ring2 = LinkedRing::new(joins.len());
+        let mut heap = KeyedMinHeap::new();
+        let mut renderable_count = 0usize;
         let mut pending: VecDeque<usize> = VecDeque::new();
         let mut pre_latency: Vec<f64> = Vec::new();
         let mut blend_latency: Vec<f64> = Vec::new();
         let mut admitted_demand = 0.0f64;
         let mut measured_bytes = 0.0f64;
         let mut measured_frames = 0u64;
+        let mut fire: Vec<usize> = Vec::new(); // this round's event ids (reused)
+        let mut order: Vec<usize> = Vec::new(); // this round's issue order (reused)
+        let mut overhead_ns: Vec<f64> = Vec::new();
+        let mut peak_live = 0usize;
 
         let mut round = 0usize;
         loop {
+            let t_round = Instant::now();
             // Simulated timestamp this round's lifecycle instants anchor
             // to: the shared system's horizon entering the round —
             // deterministic across host thread counts.
@@ -780,17 +906,42 @@ impl<'a> SessionScheduler<'a> {
             // 1 — departures scheduled this round (before joins, so a
             // leaver's bandwidth is released to the admission check). The
             // session record always exists here: its join round is
-            // strictly earlier (validated above).
-            for &(frame, id) in &leaves {
-                if frame != round {
-                    continue;
+            // strictly earlier (validated above). The indexed path reads
+            // this round's slice of the event index; the reference path
+            // re-scans every leave event.
+            fire.clear();
+            if indexed {
+                while leave_cursor < leaves_by_round.len()
+                    && leaves_by_round[leave_cursor].0 == round
+                {
+                    fire.push(leaves_by_round[leave_cursor].1);
+                    leave_cursor += 1;
                 }
+            } else {
+                fire.extend(
+                    leaves.iter().filter(|&&(frame, _)| frame == round).map(|&(_, id)| id),
+                );
+            }
+            for &id in &fire {
                 let s = sessions[id].as_mut().expect("leave validated against join round");
+                let was_renderable = s.renderable();
+                let was_pending = s.admitted_round.is_none();
                 s.left_round = Some(round);
                 admitted_demand -= s.demand_bytes_per_s;
                 s.demand_bytes_per_s = 0.0;
                 if let Some(pipeline) = s.pipeline.take() {
-                    s.retained = Some(pipeline.detach_session());
+                    if self.collect_detached || warm_needed[id] {
+                        let mut state = pipeline.detach_session();
+                        if !self.collect_detached {
+                            // Retained only as a warm-start donor: its AII
+                            // intervals matter, its pooled FrameCtx scratch
+                            // does not — trim it so parked donors don't hold
+                            // peak working set.
+                            state.trim_scratch();
+                        }
+                        s.retained = Some(state);
+                    }
+                    // else: the pipeline (and its FrameCtx pools) drops here.
                     let mut sys_l =
                         engine.sys().lock().expect("memory system lock poisoned");
                     if let Some(ports) = s.ports {
@@ -802,11 +953,28 @@ impl<'a> SessionScheduler<'a> {
                     }
                 }
                 let detached = s.retained.is_some();
-                ring.retain(|&x| x != id);
-                // A session deferred past its own leave never streams: drop
-                // it from the admission queue too, or a later round would
-                // admit a departed viewer and leak its bandwidth demand.
-                pending.retain(|&x| x != id);
+                if indexed {
+                    if was_pending {
+                        // Deferred past its own leave: close out the defer
+                        // count arithmetically (the reference incremented it
+                        // once per pending round, i.e. rounds join..round)
+                        // and let the queue entry go stale — admission pops
+                        // dead heads lazily.
+                        s.deferred_rounds = round - s.joined_round;
+                    }
+                    ring2.remove(id);
+                    if was_renderable {
+                        renderable_count -= 1;
+                        heap.remove(id);
+                    }
+                } else {
+                    ring.retain(|&x| x != id);
+                    // A session deferred past its own leave never streams:
+                    // drop it from the admission queue too, or a later round
+                    // would admit a departed viewer and leak its bandwidth
+                    // demand.
+                    pending.retain(|&x| x != id);
+                }
                 lifecycle_instant(
                     &engine,
                     Track::Viewer(id),
@@ -817,10 +985,24 @@ impl<'a> SessionScheduler<'a> {
             }
 
             // 2 — arrivals scheduled this round enter the wait queue.
-            for (id, (frame, spec)) in joins.iter().enumerate() {
-                if *frame != round {
-                    continue;
+            fire.clear();
+            if indexed {
+                while join_cursor < joins_by_round.len() && joins_by_round[join_cursor].0 == round
+                {
+                    fire.push(joins_by_round[join_cursor].1);
+                    join_cursor += 1;
                 }
+            } else {
+                fire.extend(
+                    joins
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &(frame, _))| frame == round)
+                        .map(|(id, _)| id),
+                );
+            }
+            for &id in &fire {
+                let spec = &joins[id].1;
                 let traj = scene_trajectory_from(
                     &shared.scene,
                     &server.config,
@@ -862,6 +1044,16 @@ impl<'a> SessionScheduler<'a> {
 
             // 3 — admission control (join order; work-conserving).
             while let Some(&cand) = pending.front() {
+                // Indexed mode leaves departed-while-pending entries in the
+                // queue (leave is O(1)); they are popped here, lazily —
+                // always before any admission decision, so `pending` is
+                // never non-empty with only dead entries after this loop.
+                if indexed
+                    && sessions[cand].as_ref().is_some_and(|s| s.left_round.is_some())
+                {
+                    pending.pop_front();
+                    continue;
+                }
                 let est_bytes_per_frame = if measured_frames > 0 {
                     measured_bytes / measured_frames as f64
                 } else {
@@ -879,9 +1071,12 @@ impl<'a> SessionScheduler<'a> {
                     // release the reservation.
                     if s.traj.is_empty() { 0.0 } else { est_bytes_per_frame * fps }
                 };
-                let stream_busy = ring
-                    .iter()
-                    .any(|&id| sessions[id].as_ref().is_some_and(ViewerSession::renderable));
+                let stream_busy = if indexed {
+                    renderable_count > 0
+                } else {
+                    ring.iter()
+                        .any(|&id| sessions[id].as_ref().is_some_and(ViewerSession::renderable))
+                };
                 let fits = match self.dram_budget_bytes_per_s {
                     None => true,
                     Some(budget) => admitted_demand + demand <= budget || !stream_busy,
@@ -943,7 +1138,20 @@ impl<'a> SessionScheduler<'a> {
                 s.admitted_round = Some(round);
                 s.demand_bytes_per_s = demand;
                 admitted_demand += demand;
-                ring.push(cand);
+                if indexed {
+                    // Rounds spent deferred = join-to-admission distance
+                    // (the reference incremented once per deferred round).
+                    s.deferred_rounds = round - s.joined_round;
+                    ring2.push_back(cand);
+                    if s.renderable() {
+                        renderable_count += 1;
+                        if self.policy != SchedPolicy::RoundRobin {
+                            heap.update(cand, policy_key(self.policy, s));
+                        }
+                    }
+                } else {
+                    ring.push(cand);
+                }
                 lifecycle_instant(
                     &engine,
                     Track::Viewer(cand),
@@ -955,56 +1163,136 @@ impl<'a> SessionScheduler<'a> {
                     ],
                 );
             }
-            for &id in &pending {
-                if let Some(s) = sessions[id].as_mut() {
-                    s.deferred_rounds += 1;
+            if indexed {
+                // The reference's per-round defer bookkeeping is folded
+                // into the arithmetic above; only the trace instants remain
+                // (same stream: dead queue entries were never emitted by
+                // the reference either).
+                if engine.tracer().is_some() {
+                    for &id in &pending {
+                        if sessions[id].as_ref().is_some_and(|s| s.left_round.is_none()) {
+                            lifecycle_instant(
+                                &engine,
+                                Track::Scheduler,
+                                "defer",
+                                round_t,
+                                vec![
+                                    ("session", Json::from(id)),
+                                    ("round", Json::from(round)),
+                                ],
+                            );
+                        }
+                    }
                 }
-                lifecycle_instant(
-                    &engine,
-                    Track::Scheduler,
-                    "defer",
-                    round_t,
-                    vec![("session", Json::from(id)), ("round", Json::from(round))],
-                );
+            } else {
+                for &id in &pending {
+                    if let Some(s) = sessions[id].as_mut() {
+                        s.deferred_rounds += 1;
+                    }
+                    lifecycle_instant(
+                        &engine,
+                        Track::Scheduler,
+                        "defer",
+                        round_t,
+                        vec![("session", Json::from(id)), ("round", Json::from(round))],
+                    );
+                }
             }
 
             // 4 — stream end?
-            let renderable = ring
-                .iter()
-                .any(|&id| sessions[id].as_ref().is_some_and(ViewerSession::renderable));
+            let renderable = if indexed {
+                renderable_count > 0
+            } else {
+                ring.iter()
+                    .any(|&id| sessions[id].as_ref().is_some_and(ViewerSession::renderable))
+            };
             if !renderable && pending.is_empty() && round >= last_event_round {
+                overhead_ns.push(t_round.elapsed().as_secs_f64() * 1e9);
                 break;
             }
 
             // 5 — policy-ordered round through the shared engine (which
             // takes the frame-epoch barrier; an idle round awaiting a
             // future join still advances the epoch).
-            let order = issue_order(self.policy, round, &ring, &sessions);
-            let mut rank = vec![usize::MAX; sessions.len()];
-            for (i, &id) in order.iter().enumerate() {
-                rank[id] = i;
-            }
-            let mut jobs: Vec<RoundJob<'_, '_>> = Vec::with_capacity(order.len());
-            for (id, slot) in sessions.iter_mut().enumerate() {
-                let Some(s) = slot.as_mut() else { continue };
-                // Round-robin keeps completed sessions in the issue order
-                // (rotation parity with the batch path); they are skipped
-                // here, at render time.
-                if rank[id] == usize::MAX || !s.renderable() {
-                    continue;
+            let mut jobs: Vec<RoundJob<'_, '_>> = Vec::new();
+            if indexed {
+                match self.policy {
+                    SchedPolicy::RoundRobin => {
+                        // Ring traversal = admission order = the reference
+                        // ring; the same `(round + k) mod n` rotation.
+                        ring2.collect_into(&mut order);
+                        if !order.is_empty() {
+                            let n = order.len();
+                            order.rotate_left(round % n);
+                        }
+                    }
+                    // Ascending (key, id) straight off the heap — the exact
+                    // order the reference's full sort produces. The drain
+                    // empties the queue; rendered-and-still-renderable
+                    // sessions re-enter below with their fresh keys.
+                    _ => heap.drain_ordered_into(&mut order),
                 }
-                let (cam, t) = s.traj[s.cursor];
-                jobs.push(RoundJob {
-                    key: id,
-                    cam,
-                    t,
-                    render: s.spec.psnr_every > 0 && s.cursor % s.spec.psnr_every == 0,
-                    ports: s.ports.expect("renderable session has ports"),
-                    pipeline: s.pipeline.as_mut().expect("renderable session has a pipeline"),
-                });
+                jobs.reserve(order.len());
+                let base = sessions.as_mut_ptr();
+                for &id in &order {
+                    // SAFETY: `order` holds distinct session ids (the ring
+                    // is a permutation of admitted live sessions; the heap
+                    // pops each live id at most once per drain), so each
+                    // iteration borrows a *different* `sessions` element,
+                    // and the Vec is never resized while the borrows live.
+                    let slot = unsafe { &mut *base.add(id) };
+                    let Some(s) = slot.as_mut() else { continue };
+                    if !s.renderable() {
+                        continue;
+                    }
+                    let (cam, t) = s.traj[s.cursor];
+                    jobs.push(RoundJob {
+                        key: id,
+                        cam,
+                        t,
+                        render: s.spec.psnr_every > 0 && s.cursor % s.spec.psnr_every == 0,
+                        ports: s.ports.expect("renderable session has ports"),
+                        pipeline: s
+                            .pipeline
+                            .as_mut()
+                            .expect("renderable session has a pipeline"),
+                    });
+                }
+            } else {
+                order = issue_order(self.policy, round, &ring, &sessions);
+                let mut rank = vec![usize::MAX; sessions.len()];
+                for (i, &id) in order.iter().enumerate() {
+                    rank[id] = i;
+                }
+                jobs.reserve(order.len());
+                for (id, slot) in sessions.iter_mut().enumerate() {
+                    let Some(s) = slot.as_mut() else { continue };
+                    // Round-robin keeps completed sessions in the issue order
+                    // (rotation parity with the batch path); they are skipped
+                    // here, at render time.
+                    if rank[id] == usize::MAX || !s.renderable() {
+                        continue;
+                    }
+                    let (cam, t) = s.traj[s.cursor];
+                    jobs.push(RoundJob {
+                        key: id,
+                        cam,
+                        t,
+                        render: s.spec.psnr_every > 0 && s.cursor % s.spec.psnr_every == 0,
+                        ports: s.ports.expect("renderable session has ports"),
+                        pipeline: s
+                            .pipeline
+                            .as_mut()
+                            .expect("renderable session has a pipeline"),
+                    });
+                }
+                jobs.sort_by_key(|j| rank[j.key]);
             }
-            jobs.sort_by_key(|j| rank[j.key]);
-            for out in engine.run_round(&shared.scene, &reference, jobs) {
+            peak_live = peak_live.max(jobs.len());
+            let pre_ns = t_round.elapsed().as_secs_f64() * 1e9;
+            let outcomes = engine.run_round(&shared.scene, &reference, jobs);
+            let t_post = Instant::now();
+            for out in outcomes {
                 let s = sessions[out.key].as_mut().expect("outcome for a live session");
                 let r = &out.result;
                 pre_latency.push(r.latency.preprocess_ns);
@@ -1031,17 +1319,27 @@ impl<'a> SessionScheduler<'a> {
                     // the batch path until it leaves or the stream ends).
                     admitted_demand -= s.demand_bytes_per_s;
                     s.demand_bytes_per_s = 0.0;
+                    if indexed {
+                        renderable_count -= 1;
+                    }
+                } else if indexed && self.policy != SchedPolicy::RoundRobin {
+                    // Re-key only the sessions that rendered this round —
+                    // the indexed replacement for the per-round full sort.
+                    heap.update(out.key, policy_key(self.policy, s));
                 }
             }
+            overhead_ns.push(pre_ns + t_post.elapsed().as_secs_f64() * 1e9);
             round += 1;
         }
 
-        self.assemble(sessions, round, &engine, pre_latency, blend_latency, t0)
+        self.last_overhead_ns = overhead_ns;
+        self.assemble(sessions, round, &engine, pre_latency, blend_latency, peak_live, t0)
     }
 
     /// Final report assembly (per-session reports + the shared roll-up),
     /// also collecting every session's detached pipeline state for
-    /// [`SessionScheduler::take_detached`].
+    /// [`SessionScheduler::take_detached`] (unless the scheduler runs
+    /// [`SessionScheduler::discard_detached`]).
     #[allow(clippy::too_many_arguments)]
     fn assemble(
         &mut self,
@@ -1050,6 +1348,7 @@ impl<'a> SessionScheduler<'a> {
         engine: &RoundEngine,
         pre_latency: Vec<f64>,
         blend_latency: Vec<f64>,
+        peak_live: usize,
         t0: Instant,
     ) -> SessionBatchReport {
         let scene = &self.server.shared.scene;
@@ -1059,22 +1358,31 @@ impl<'a> SessionScheduler<'a> {
         // sessions rendered nothing and own no ports).
         let port_ids: Vec<RoundPorts> =
             sessions.iter().flatten().filter_map(|s| s.ports).collect();
-        let mut contended =
-            contended_rollup(sys, &port_ids, config.mem.outstanding, &pre_latency, &blend_latency);
-        // Re-attribute the positional viewer rows to session ids (identical
-        // when every session was admitted — the batch-compatible case).
+        // Session ids owning those ports, in the same order, so the roll-up
+        // labels its viewer rows directly (identical to the old positional
+        // re-attribution pass, without it).
         let admitted_ids: Vec<usize> = sessions
             .iter()
             .enumerate()
             .filter(|(_, s)| s.as_ref().is_some_and(|s| s.ports.is_some()))
             .map(|(id, _)| id)
             .collect();
-        for (row, &id) in contended.viewers.iter_mut().zip(&admitted_ids) {
-            row.viewer = id;
-        }
+        let contended = contended_rollup(
+            sys,
+            &port_ids,
+            Some(&admitted_ids),
+            config.mem.outstanding,
+            &pre_latency,
+            &blend_latency,
+        );
+        // Row index by session id — the per-session lookup below used to
+        // re-scan the row list per session (O(n²) at 10k sessions).
+        let row_of: std::collections::BTreeMap<usize, usize> =
+            contended.viewers.iter().enumerate().map(|(i, v)| (v.viewer, i)).collect();
 
         let mut reports = Vec::with_capacity(sessions.len());
         let mut all_latency: Vec<f64> = Vec::new();
+        let mut admission_waits: Vec<f64> = Vec::new();
         let mut missed_total = 0u64;
         let mut deadline_frames = 0u64;
         let mut total_frames = 0usize;
@@ -1083,15 +1391,20 @@ impl<'a> SessionScheduler<'a> {
             let Some(mut s) = slot else { continue };
             // Persist the session's pipeline state for a future run: an
             // explicitly-departed session detached at its leave round; a
-            // session still live at stream end detaches here.
-            if let Some(state) = s.retained.take() {
-                detached.push((id, state));
-            } else if let Some(pipeline) = s.pipeline.take() {
-                detached.push((id, pipeline.detach_session()));
+            // session still live at stream end detaches here. In
+            // discard-detached mode nothing is parked — states exist only
+            // while a `warm_from` donor needs them.
+            if self.collect_detached {
+                if let Some(state) = s.retained.take() {
+                    detached.push((id, state));
+                } else if let Some(pipeline) = s.pipeline.take() {
+                    detached.push((id, pipeline.detach_session()));
+                }
             }
             let frames = s.cursor;
             total_frames += frames;
             all_latency.extend_from_slice(&s.latency);
+            admission_waits.push(s.deferred_rounds as f64);
             if s.spec.target_fps > 0.0 {
                 missed_total += s.missed;
                 deadline_frames += frames as u64;
@@ -1102,11 +1415,9 @@ impl<'a> SessionScheduler<'a> {
                 config.dcim.area_mm2,
                 scene.dynamic,
             );
-            let mem = contended
-                .viewers
-                .iter()
-                .find(|v| v.viewer == id)
-                .cloned()
+            let mem = row_of
+                .get(&id)
+                .map(|&i| contended.viewers[i].clone())
                 .unwrap_or_else(|| ViewerMemStats {
                     viewer: id,
                     preprocess: Default::default(),
@@ -1145,6 +1456,7 @@ impl<'a> SessionScheduler<'a> {
             policy: self.policy,
             rounds,
             total_frames,
+            peak_live,
             wall_s: t0.elapsed().as_secs_f64(),
             deadline_miss_rate: if deadline_frames > 0 {
                 missed_total as f64 / deadline_frames as f64
@@ -1152,6 +1464,7 @@ impl<'a> SessionScheduler<'a> {
                 0.0
             },
             frame_latency_pctl: LatencyLadder::of(&all_latency),
+            admission_wait_rounds: LatencyLadder::of(&admission_waits),
             sessions: reports,
             contended,
         };
@@ -1177,11 +1490,32 @@ fn lifecycle_instant(
     }
 }
 
-/// The policy-ordered issue list of one round. Round-robin rotates the
-/// whole ring (completed sessions are skipped at render time, preserving
-/// the batch path's `(round + k) mod n` arithmetic); DWFQ and EDF sort the
-/// renderable sessions by their keys with session-id tie-breaks — every
-/// input is simulated state, so the order is deterministic.
+/// The per-policy scheduling key (ascending issues first). Shared by the
+/// sort-based reference and the indexed keyed heap, so the two orderings
+/// cannot drift. Round-robin never consults a key (its order is the ring
+/// rotation).
+fn policy_key(policy: SchedPolicy, s: &ViewerSession<'_>) -> f64 {
+    match policy {
+        SchedPolicy::RoundRobin => 0.0,
+        SchedPolicy::Dwfq => s.busy_ns / s.spec.weight.max(1e-9),
+        SchedPolicy::Edf => (s.cursor + 1) as f64 * s.spec.deadline_ns(),
+    }
+}
+
+/// Ascending `(key, session id)` via `f64::total_cmp`: a NaN key orders
+/// deterministically after `+inf` instead of collapsing the comparison to
+/// `Equal` (which would silently defeat the id tie-break and leave the
+/// issue order at the sort algorithm's mercy).
+fn key_order(a: (f64, usize), b: (f64, usize)) -> std::cmp::Ordering {
+    a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+}
+
+/// The policy-ordered issue list of one round — the sort-based reference
+/// path. Round-robin rotates the whole ring (completed sessions are
+/// skipped at render time, preserving the batch path's `(round + k) mod n`
+/// arithmetic); DWFQ and EDF sort the renderable sessions by
+/// [`policy_key`] with session-id tie-breaks — every input is simulated
+/// state, so the order is deterministic.
 fn issue_order(
     policy: SchedPolicy,
     round: usize,
@@ -1195,25 +1529,14 @@ fn issue_order(
         SchedPolicy::RoundRobin => {
             (0..ring.len()).map(|k| ring[(round + k) % ring.len()]).collect()
         }
-        SchedPolicy::Dwfq => {
-            let key = |id: usize| {
-                let s = sessions[id].as_ref().expect("ring holds live sessions");
-                s.busy_ns / s.spec.weight.max(1e-9)
-            };
-            sorted_by_key(ring, sessions, key)
-        }
-        SchedPolicy::Edf => {
-            let key = |id: usize| {
-                let s = sessions[id].as_ref().expect("ring holds live sessions");
-                (s.cursor + 1) as f64 * s.spec.deadline_ns()
-            };
-            sorted_by_key(ring, sessions, key)
-        }
+        _ => sorted_by_key(ring, sessions, |id| {
+            policy_key(policy, sessions[id].as_ref().expect("ring holds live sessions"))
+        }),
     }
 }
 
 /// Renderable ring members sorted ascending by `key`, ties broken by
-/// session id.
+/// session id ([`key_order`]).
 fn sorted_by_key(
     ring: &[usize],
     sessions: &[Option<ViewerSession<'_>>],
@@ -1224,13 +1547,78 @@ fn sorted_by_key(
         .copied()
         .filter(|&id| sessions[id].as_ref().is_some_and(ViewerSession::renderable))
         .collect();
-    ids.sort_by(|&a, &b| {
-        key(a)
-            .partial_cmp(&key(b))
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
+    ids.sort_by(|&a, &b| key_order((key(a), a), (key(b), b)));
     ids
+}
+
+/// An array-backed doubly-linked list over session ids with O(1)
+/// membership, O(1) push-back, and O(1) *order-preserving* removal — the
+/// indexed replacement for the reference scheduler's `Vec` ring, whose
+/// `retain`-based removal is O(ring) per leave. Traversal order is
+/// insertion order, exactly like push + retain, so the round-robin
+/// rotation arithmetic lands on the same sessions.
+struct LinkedRing {
+    /// `next[id]` / `prev[id]`; index `n` is the sentinel closing the
+    /// cycle. `ABSENT` marks non-members.
+    next: Vec<usize>,
+    prev: Vec<usize>,
+    len: usize,
+}
+
+const ABSENT: usize = usize::MAX;
+
+impl LinkedRing {
+    fn new(n: usize) -> LinkedRing {
+        let mut next = vec![ABSENT; n + 1];
+        let mut prev = vec![ABSENT; n + 1];
+        next[n] = n; // empty cycle: sentinel points at itself
+        prev[n] = n;
+        LinkedRing { next, prev, len: 0 }
+    }
+
+    fn sentinel(&self) -> usize {
+        self.next.len() - 1
+    }
+
+    fn contains(&self, id: usize) -> bool {
+        self.next[id] != ABSENT
+    }
+
+    fn push_back(&mut self, id: usize) {
+        debug_assert!(!self.contains(id), "ring already holds {id}");
+        let s = self.sentinel();
+        let tail = self.prev[s];
+        self.next[tail] = id;
+        self.prev[id] = tail;
+        self.next[id] = s;
+        self.prev[s] = id;
+        self.len += 1;
+    }
+
+    /// Unlink `id` (no-op if absent), preserving the order of the rest.
+    fn remove(&mut self, id: usize) {
+        if !self.contains(id) {
+            return;
+        }
+        let (p, n) = (self.prev[id], self.next[id]);
+        self.next[p] = n;
+        self.prev[n] = p;
+        self.next[id] = ABSENT;
+        self.prev[id] = ABSENT;
+        self.len -= 1;
+    }
+
+    /// Members in insertion order, into a reused buffer.
+    fn collect_into(&self, into: &mut Vec<usize>) {
+        into.clear();
+        into.reserve(self.len);
+        let s = self.sentinel();
+        let mut cur = self.next[s];
+        while cur != s {
+            into.push(cur);
+            cur = self.next[cur];
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1412,5 +1800,58 @@ mod tests {
             }
             other => panic!("expected JoinAt, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn sched_impl_labels_are_stable() {
+        assert_eq!(SchedImpl::Indexed.label(), "indexed");
+        assert_eq!(SchedImpl::ReferenceSort.label(), "reference_sort");
+    }
+
+    #[test]
+    fn key_order_is_total_over_nan_keys() {
+        use std::cmp::Ordering;
+        // NaN orders after +inf under total_cmp — never Equal to a real
+        // key, so the id tie-break is reserved for true key ties.
+        assert_eq!(key_order((f64::NAN, 0), (f64::INFINITY, 1)), Ordering::Greater);
+        assert_eq!(key_order((1.0, 5), (f64::NAN, 0)), Ordering::Less);
+        assert_eq!(key_order((f64::NAN, 2), (f64::NAN, 7)), Ordering::Less);
+        assert_eq!(key_order((3.5, 9), (3.5, 4)), Ordering::Greater);
+        // A full sort with NaN keys is deterministic: NaNs sink to the
+        // end, id-ordered.
+        let mut items = vec![(f64::NAN, 4), (2.0, 1), (f64::NAN, 3), (f64::INFINITY, 0)];
+        items.sort_by(|&a, &b| key_order(a, b));
+        let ids: Vec<usize> = items.iter().map(|&(_, id)| id).collect();
+        assert_eq!(ids, vec![1, 0, 3, 4]);
+    }
+
+    #[test]
+    fn linked_ring_preserves_insertion_order_across_removals() {
+        let mut ring = LinkedRing::new(6);
+        let mut got = Vec::new();
+        ring.collect_into(&mut got);
+        assert!(got.is_empty());
+
+        for id in [3, 0, 5, 1, 4] {
+            ring.push_back(id);
+        }
+        ring.collect_into(&mut got);
+        assert_eq!(got, vec![3, 0, 5, 1, 4]);
+        assert_eq!(ring.len, 5);
+
+        ring.remove(5); // middle
+        ring.remove(3); // head
+        ring.remove(4); // tail
+        ring.remove(2); // never inserted: no-op
+        ring.collect_into(&mut got);
+        assert_eq!(got, vec![0, 1]);
+        assert_eq!(ring.len, 2);
+        assert!(ring.contains(0) && ring.contains(1));
+        assert!(!ring.contains(5));
+
+        // Re-insertion goes to the back, like Vec push after retain.
+        ring.push_back(5);
+        ring.collect_into(&mut got);
+        assert_eq!(got, vec![0, 1, 5]);
     }
 }

@@ -309,4 +309,43 @@ impl FrameCtx {
         caps.extend(self.cull.scratch_capacities());
         caps
     }
+
+    /// Release the pooled scratch capacity of a *parked* context. The
+    /// pools exist to amortize allocation across a stream's frames; a
+    /// detached session that is only being retained (e.g. as a
+    /// `warm_from` AII donor in a 10k-session churn script) pays their
+    /// peak working set for nothing. Only per-frame-refilled buffers are
+    /// touched — carried semantic state (`temporal`, `cull_reuse`,
+    /// `prefetcher`, the connection graph, the pooled cull output) and
+    /// the tile-/block-indexed outer lengths are preserved, so a trimmed
+    /// context that *is* later resumed re-grows its pools on the next
+    /// frame and renders bit-identically, just without the warm capacity.
+    pub fn trim_scratch(&mut self) {
+        fn trim<T>(v: &mut Vec<T>) {
+            v.clear();
+            v.shrink_to_fit();
+        }
+        fn trim_inner<T>(v: &mut [Vec<T>]) {
+            for inner in v.iter_mut() {
+                trim(inner);
+            }
+        }
+        trim(&mut self.splats);
+        trim_inner(&mut self.bins);
+        trim_inner(&mut self.block_tiles);
+        trim_inner(&mut self.block_items);
+        trim_inner(&mut self.sorted_bins);
+        trim(&mut self.tile_order);
+        trim(&mut self.block_scratch);
+        trim(&mut self.depth_scratch);
+        trim(&mut self.depth_boundaries);
+        for ws in self.workers.iter_mut() {
+            *ws = WorkerScratch::default();
+        }
+        trim(&mut self.pair_base);
+        trim(&mut self.seg_stats);
+        trim(&mut self.seg_misses);
+        trim(&mut self.miss_order);
+        self.image = None;
+    }
 }

@@ -1122,6 +1122,20 @@ impl SessionState {
             SortEngine::Conventional => 0,
         }
     }
+
+    /// Release the pooled per-frame scratch of a *parked* state (the
+    /// context pools and the rasterizer's render scratch). Semantic
+    /// carried state — temporal deltas, cull reuse, prefetcher history,
+    /// AII interval posteriori, early-termination calibration — is
+    /// untouched, so a trimmed state still donates warm AII intervals
+    /// and still resumes bit-identically; it just re-grows its pools on
+    /// the first frame after resume. A scheduler retaining thousands of
+    /// departed sessions calls this so parked states hold O(semantic
+    /// state), not O(peak frame working set).
+    pub fn trim_scratch(&mut self) {
+        self.ctx.trim_scratch();
+        self.blend_stage.render_scratch.trim();
+    }
 }
 
 #[cfg(test)]

@@ -46,6 +46,13 @@ impl RenderScratch {
         }
     }
 
+    /// Release the pooled capacity (parked-session trimming — see
+    /// `FrameCtx::trim_scratch`). Everything here is refilled per frame,
+    /// so a later frame just re-grows the pools.
+    pub fn trim(&mut self) {
+        *self = RenderScratch::default();
+    }
+
     /// Capacities of the pooled buffers (zero-allocation contract probes).
     pub fn capacities(&self) -> Vec<usize> {
         vec![

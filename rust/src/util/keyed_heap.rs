@@ -1,0 +1,238 @@
+//! A keyed min-heap with lazy invalidation — the indexed priority
+//! structure behind the session scheduler's DWFQ/EDF issue order.
+//!
+//! The scheduler needs, every round, the ascending `(key, id)` order of
+//! the *renderable* sessions — and only sessions that rendered this round
+//! change their key. A full sort re-pays `O(n log n)` over the whole ring
+//! (including completed-but-not-departed members it then filters out);
+//! this heap pays `O(log n)` per re-keyed member instead, and stale
+//! entries left behind by re-keys and removals are skipped lazily at pop
+//! time via per-id generation stamps.
+//!
+//! Ordering contract: entries pop in ascending `f64::total_cmp` key
+//! order, ties broken by ascending id — **exactly** the comparator of the
+//! sort-based reference (`coordinator::session::key_order`), including
+//! NaN keys (which `total_cmp` places after `+inf`, deterministically).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One heap entry. `gen` stamps the insertion; an entry is live only
+/// while it matches the id's current generation.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    key: f64,
+    id: usize,
+    gen: u64,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    /// Inverted on purpose: `BinaryHeap` is a max-heap, so "greater"
+    /// here means smaller `(key, id)` — pops come out ascending. The
+    /// generation tie-break only keeps `Ord` total (at most one
+    /// generation per id is ever live).
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .key
+            .total_cmp(&self.key)
+            .then(other.id.cmp(&self.id))
+            .then(other.gen.cmp(&self.gen))
+    }
+}
+
+/// Keyed min-heap over `usize` ids with `f64` keys and O(1) lazy removal.
+#[derive(Debug, Default)]
+pub struct KeyedMinHeap {
+    heap: BinaryHeap<Entry>,
+    /// Current generation per id; bumped on every update/remove so older
+    /// heap entries for the id turn stale.
+    gen: Vec<u64>,
+    /// Whether the id is currently a live member.
+    live: Vec<bool>,
+    len: usize,
+}
+
+impl KeyedMinHeap {
+    pub fn new() -> KeyedMinHeap {
+        KeyedMinHeap::default()
+    }
+
+    /// Live member count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        self.live.get(id).copied().unwrap_or(false)
+    }
+
+    fn ensure(&mut self, id: usize) {
+        if id >= self.gen.len() {
+            self.gen.resize(id + 1, 0);
+            self.live.resize(id + 1, false);
+        }
+    }
+
+    /// Insert `id` with `key`, or re-key it if already a member. The old
+    /// entry (if any) is invalidated lazily, not searched for.
+    pub fn update(&mut self, id: usize, key: f64) {
+        self.ensure(id);
+        self.gen[id] += 1;
+        if !self.live[id] {
+            self.live[id] = true;
+            self.len += 1;
+        }
+        self.heap.push(Entry { key, id, gen: self.gen[id] });
+    }
+
+    /// Remove `id` from the queue (no-op if absent). O(1): the heap entry
+    /// goes stale and is discarded whenever it surfaces.
+    pub fn remove(&mut self, id: usize) {
+        if self.contains(id) {
+            self.gen[id] += 1;
+            self.live[id] = false;
+            self.len -= 1;
+        }
+    }
+
+    /// Pop the minimum live `(id, key)` (ascending `total_cmp` key, ties
+    /// by ascending id), discarding stale entries on the way.
+    pub fn pop(&mut self) -> Option<(usize, f64)> {
+        while let Some(e) = self.heap.pop() {
+            if self.live.get(e.id).copied().unwrap_or(false) && self.gen[e.id] == e.gen {
+                self.live[e.id] = false;
+                self.len -= 1;
+                return Some((e.id, e.key));
+            }
+        }
+        None
+    }
+
+    /// Drain every live member into `into` in ascending `(key, id)` order
+    /// (the queue is empty afterwards — the caller re-inserts whichever
+    /// members remain eligible with their fresh keys).
+    pub fn drain_ordered_into(&mut self, into: &mut Vec<usize>) {
+        into.clear();
+        while let Some((id, _)) = self.pop() {
+            into.push(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// The sort-based reference order: ascending (total_cmp key, id).
+    fn reference_order(pairs: &[(usize, f64)]) -> Vec<usize> {
+        let mut ids: Vec<usize> = pairs.iter().map(|&(id, _)| id).collect();
+        let key = |id: usize| pairs.iter().find(|&&(i, _)| i == id).unwrap().1;
+        ids.sort_by(|&a, &b| key(a).total_cmp(&key(b)).then(a.cmp(&b)));
+        ids
+    }
+
+    #[test]
+    fn drains_in_ascending_key_then_id_order() {
+        let mut h = KeyedMinHeap::new();
+        for &(id, key) in &[(3usize, 2.0f64), (0, 5.0), (7, 2.0), (1, 0.5)] {
+            h.update(id, key);
+        }
+        let mut out = Vec::new();
+        h.drain_ordered_into(&mut out);
+        assert_eq!(out, vec![1, 3, 7, 0]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn update_rekeys_and_remove_invalidates_lazily() {
+        let mut h = KeyedMinHeap::new();
+        h.update(0, 1.0);
+        h.update(1, 2.0);
+        h.update(2, 3.0);
+        h.update(0, 10.0); // re-key: old entry goes stale
+        h.remove(1);
+        assert_eq!(h.len(), 2);
+        assert!(!h.contains(1));
+        let mut out = Vec::new();
+        h.drain_ordered_into(&mut out);
+        assert_eq!(out, vec![2, 0]);
+        // Removing an absent id is a no-op.
+        h.remove(17);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn nan_keys_order_after_infinity_deterministically() {
+        let mut h = KeyedMinHeap::new();
+        h.update(4, f64::NAN);
+        h.update(2, f64::INFINITY);
+        h.update(9, 1.0);
+        h.update(5, f64::NAN);
+        let mut out = Vec::new();
+        h.drain_ordered_into(&mut out);
+        // total_cmp places positive NaN after +inf; NaN ties break by id.
+        assert_eq!(out, vec![9, 2, 4, 5]);
+    }
+
+    #[test]
+    fn randomized_drain_matches_sort_reference() {
+        let mut rng = Rng::new(0xC1A0);
+        for case in 0..50u64 {
+            let mut r = rng.fork(case);
+            let n = 1 + r.below(40);
+            let mut pairs: Vec<(usize, f64)> = (0..n)
+                .map(|id| {
+                    let key = match r.below(10) {
+                        0 => f64::INFINITY,
+                        1 => f64::NAN,
+                        _ => r.f64() * 1e9,
+                    };
+                    (id, key)
+                })
+                .collect();
+            // Duplicate keys to exercise the id tie-break.
+            if n > 2 {
+                let k = pairs[0].1;
+                pairs[n / 2].1 = k;
+            }
+            let mut h = KeyedMinHeap::new();
+            for &(id, key) in &pairs {
+                h.update(id, key);
+            }
+            // Churn: re-key a third, remove a few, re-add one.
+            for &(id, _) in pairs.iter().filter(|&&(id, _)| id % 3 == 0) {
+                let fresh = r.f64() * 1e9;
+                h.update(id, fresh);
+                if let Some(p) = pairs.iter_mut().find(|p| p.0 == id) {
+                    p.1 = fresh;
+                }
+            }
+            if n > 4 {
+                h.remove(1);
+                pairs.retain(|&(id, _)| id != 1);
+            }
+            let mut got = Vec::new();
+            h.drain_ordered_into(&mut got);
+            assert_eq!(got, reference_order(&pairs), "case {case}");
+        }
+    }
+}

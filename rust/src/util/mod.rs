@@ -6,9 +6,11 @@
 
 pub mod cli;
 pub mod json;
+pub mod keyed_heap;
 pub mod proptest;
 pub mod rng;
 pub mod timer;
 
+pub use keyed_heap::KeyedMinHeap;
 pub use rng::Rng;
 pub use timer::Timer;

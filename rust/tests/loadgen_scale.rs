@@ -1,0 +1,174 @@
+//! Scale-harness integration contract (`coordinator::loadgen` + the
+//! indexed scheduler hot path):
+//!
+//! 1. **Generated workloads are schedulable** — a flash-crowd preset
+//!    script streams to completion under an admission budget, reports
+//!    byte-identically between the indexed and full-sort reference
+//!    bookkeeping, across host thread counts, and for every policy.
+//! 2. **5k-event churn** — a 5000-event one-frame-per-session script
+//!    (the mostly-idle 10k-session shape, scaled down) validates in one
+//!    pass and streams every session exactly once with detached-state
+//!    collection off.
+//! 3. **Issue-order property** — over randomized scripts (random joins,
+//!    leaves, weights, deadlines, budgets), the indexed DWFQ/EDF keyed
+//!    heaps emit the exact issue order of the full-sort reference: the
+//!    whole report is byte-identical, policy by policy.
+
+use gaucim::camera::ViewCondition;
+use gaucim::coordinator::session::DEFAULT_STREAM_FPS;
+use gaucim::coordinator::{
+    LoadGen, LoadPreset, RenderServer, SchedPolicy, SessionScript, SessionSpec,
+};
+use gaucim::pipeline::PipelineConfig;
+use gaucim::scene::synth::{SceneKind, SynthParams};
+use gaucim::util::Rng;
+
+fn server(threads: usize) -> RenderServer {
+    let scene = SynthParams::new(SceneKind::DynamicLarge, 800).with_seed(17).generate();
+    let config = PipelineConfig::paper(true).with_resolution(96, 54).with_threads(threads);
+    RenderServer::new(scene, config)
+}
+
+/// The admission budget the scale harness derives from a preset's
+/// `target_concurrency` (the scheduler's own cold-stream demand estimate).
+fn budget_gbps(server: &RenderServer, lg: &LoadGen) -> Option<f64> {
+    let fallback_demand =
+        server.shared.prep.layout.total_span_bytes() as f64 / 10.0 * DEFAULT_STREAM_FPS;
+    lg.target_concurrency.map(|tc| tc as f64 * fallback_demand / 1e9)
+}
+
+#[test]
+fn flash_crowd_preset_streams_identically_across_impls_and_threads() {
+    let mut lg = LoadGen::preset(LoadPreset::Flash, 40, 9);
+    lg.dwell_mean_frames = 2;
+    let script = lg.generate();
+    assert_eq!(script.n_sessions(), 40);
+    let budget = budget_gbps(&server(1), &lg);
+
+    // Byte-identity across bookkeeping implementations and thread counts
+    // under DWFQ (the keyed-heap policy the harness ladders).
+    let reference = {
+        let server = server(1);
+        let mut sched = server.sessions(SchedPolicy::Dwfq).with_reference_order();
+        if let Some(g) = budget {
+            sched = sched.dram_budget_gbps(g);
+        }
+        sched.run(&script)
+    };
+    for threads in [1, 4] {
+        let server = server(threads);
+        let mut sched = server.sessions(SchedPolicy::Dwfq).discard_detached();
+        if let Some(g) = budget {
+            sched = sched.dram_budget_gbps(g);
+        }
+        let rep = sched.run(&script);
+        assert_eq!(
+            reference.simulated_projection(),
+            rep.simulated_projection(),
+            "indexed flash-crowd stream diverged at threads={threads}"
+        );
+    }
+
+    // The burst oversubscribes the budget, so admission actually defers.
+    assert!(
+        reference.admission_wait_rounds.p99 > 0.0,
+        "flash-crowd preset must exercise the admission queue"
+    );
+    // Every policy agrees between implementations on the same workload.
+    for policy in SchedPolicy::ALL {
+        let server = server(1);
+        let a = server.sessions(policy).run(&script).simulated_projection();
+        let b = server.sessions(policy).with_reference_order().run(&script).simulated_projection();
+        assert_eq!(a, b, "{} diverged between bookkeeping implementations", policy.label());
+    }
+}
+
+#[test]
+fn five_thousand_event_churn_script_streams_every_session_once() {
+    // 2500 sessions × (join + leave) = 5000 events, one frame each,
+    // staggered so the live set stays tiny — the mostly-idle churn shape.
+    // Validation is one pass over the events; discard_detached keeps the
+    // run's memory bounded by the (tiny) peak concurrency.
+    let n = 2500;
+    let mut script = SessionScript::new();
+    for i in 0..n {
+        script = script
+            .join_at(i, SessionSpec::stream(ViewCondition::Static, 1))
+            .leave_at(i + 2, i);
+    }
+    let server = server(1);
+    let rep = server.sessions(SchedPolicy::RoundRobin).discard_detached().run(&script);
+    assert_eq!(rep.total_frames, n);
+    assert_eq!(rep.sessions.len(), n);
+    assert!(rep.sessions.iter().all(|s| s.frames == 1));
+    assert!(rep.peak_live <= 3, "staggered script must keep the live set tiny");
+    assert!(rep.rounds >= n, "staggered joins stretch the stream");
+}
+
+/// A randomized-but-valid join/leave script: random join rounds, dwell
+/// lengths, deadlines, weights, and optional leaves (always strictly
+/// after the join).
+fn random_script(rng: &mut Rng) -> SessionScript {
+    let n = rng.range_usize(2, 6);
+    let mut script = SessionScript::new();
+    let mut joins = Vec::new();
+    for _ in 0..n {
+        let join = rng.below(3);
+        let frames = rng.range_usize(1, 3);
+        let mut spec = SessionSpec::stream(
+            [ViewCondition::Static, ViewCondition::Average, ViewCondition::Extreme]
+                [rng.below(3)],
+            frames,
+        );
+        if join > 0 && rng.chance(0.5) {
+            spec = spec.with_start(join);
+        }
+        if rng.chance(0.6) {
+            spec = spec.with_deadline_fps([30.0, 60.0, 120.0][rng.below(3)]);
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_weight(2.0);
+        }
+        script = script.join_at(join, spec);
+        joins.push((join, frames));
+    }
+    for (id, &(join, frames)) in joins.iter().enumerate() {
+        if rng.chance(0.5) {
+            script = script.leave_at(join + 1 + rng.below(frames + 2), id);
+        }
+    }
+    script
+}
+
+#[test]
+fn randomized_scripts_issue_in_exact_reference_order() {
+    let mut rng = Rng::new(0x5CA1E);
+    for case in 0..5 {
+        let mut case_rng = rng.fork(case);
+        let script = random_script(&mut case_rng);
+        let server = server(1);
+        let fallback_demand =
+            server.shared.prep.layout.total_span_bytes() as f64 / 10.0 * DEFAULT_STREAM_FPS;
+        let budget =
+            if case_rng.chance(0.4) { Some(fallback_demand * 1.5 / 1e9) } else { None };
+        for policy in SchedPolicy::ALL {
+            let run = |reference: bool| {
+                let mut sched = server.sessions(policy);
+                if reference {
+                    sched = sched.with_reference_order();
+                }
+                if let Some(g) = budget {
+                    sched = sched.dram_budget_gbps(g);
+                }
+                sched.run(&script).simulated_projection()
+            };
+            assert_eq!(
+                run(false),
+                run(true),
+                "case {case}: indexed {} diverged from the full-sort reference\nscript: {}",
+                policy.label(),
+                script.to_json().pretty()
+            );
+        }
+    }
+}

@@ -23,6 +23,12 @@
 //! 8. **Cross-run persistence** — `take_detached` / `seed_detached` +
 //!    `SessionSpec::resume_from` continue a departed stream bit-identically
 //!    in a later scheduler run, at any thread count.
+//! 9. **Indexed bookkeeping** — the indexed hot path (event index, linked
+//!    ring, keyed heaps) is byte-identical to the full-sort reference for
+//!    every policy and thread count; `discard_detached` frees departed
+//!    working sets without changing a single statistic; script validation
+//!    is one pass (a 5000-event duplicate leave is caught before any
+//!    frame renders).
 
 use gaucim::camera::ViewCondition;
 use gaucim::coordinator::{
@@ -366,6 +372,77 @@ fn tiny_dram_budget_defers_joins_but_stays_work_conserving() {
     let free = server.render_sessions(&script, SchedPolicy::RoundRobin);
     assert_eq!(free.sessions[1].admitted_round, 0);
     assert_eq!(free.rounds, 2);
+}
+
+#[test]
+fn indexed_bookkeeping_matches_reference_sort_byte_for_byte() {
+    // The scale-harness acceptance gate: the indexed hot path (event
+    // index + linked ring + keyed heaps) must reproduce the historical
+    // per-round-scan + full-sort bookkeeping byte-for-byte — the full
+    // SessionBatchReport JSON, across host thread counts, for every
+    // policy, over a join/leave stream.
+    let script = join_leave_script();
+    for policy in SchedPolicy::ALL {
+        let reference = {
+            let server = server(1);
+            server.sessions(policy).with_reference_order().run(&script).simulated_projection()
+        };
+        for threads in [1, 4, 8] {
+            let server = server(threads);
+            assert_eq!(
+                reference,
+                server.sessions(policy).run(&script).simulated_projection(),
+                "indexed {} diverged from the full-sort reference at threads={threads}",
+                policy.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn discarding_detached_state_never_changes_reports() {
+    // `discard_detached` frees departed sessions' working sets (the
+    // 10k-session memory contract) but must not perturb a single reported
+    // statistic, and must leave nothing for `take_detached`.
+    let script = join_leave_script();
+    let server = server(1);
+    for policy in SchedPolicy::ALL {
+        let keep = server.sessions(policy).run(&script).simulated_projection();
+        let mut sched = server.sessions(policy).discard_detached();
+        let dropped = sched.run(&script).simulated_projection();
+        assert_eq!(keep, dropped, "{} report changed under discard_detached", policy.label());
+        assert!(sched.take_detached().is_empty(), "discard mode must park no state");
+    }
+
+    // Donors a later join warm-starts from are still retained in discard
+    // mode — the warm handoff must keep working.
+    let frames = 3;
+    let base = SessionSpec::stream(ViewCondition::Static, frames);
+    let warm_script = SessionScript::new()
+        .join_at(0, base.clone())
+        .leave_at(frames, 0)
+        .join_at(frames, base.with_warm_from(0));
+    let rep = server.sessions(SchedPolicy::RoundRobin).discard_detached().run(&warm_script);
+    assert!(rep.sessions[1].warm_started, "warm_from donor must survive discard mode");
+    assert_eq!(rep.sessions[1].aii_interval_hit_rate, 1.0);
+}
+
+#[test]
+#[should_panic(expected = "leaves twice")]
+fn duplicate_leave_in_a_5000_event_script_is_caught_in_one_pass() {
+    // Regression for the former O(L²) duplicate-leave scan: validation of
+    // a 5000-event script is a single pass over the leaves (a bitset),
+    // so the duplicate at the very end is caught immediately — before a
+    // single frame renders.
+    let n = 2500;
+    let mut script = SessionScript::new();
+    for i in 0..n {
+        script = script
+            .join_at(i, SessionSpec::stream(ViewCondition::Static, 1))
+            .leave_at(i + 2, i);
+    }
+    script = script.leave_at(n + 2, 0);
+    server(1).render_sessions(&script, SchedPolicy::RoundRobin);
 }
 
 #[test]
